@@ -1,0 +1,218 @@
+"""AOT pipeline: lower every (model, tp, M, kind) variant to HLO text and
+write ``artifacts/manifest.json``.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` serialized
+protos): jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the rust side's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, here, at build time. The rust binary loads the artifacts
+and never calls back into python.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.dequant_matmul import (
+    dequant_matmul_naive_gidx,
+    dequant_matmul_ordered,
+)
+
+MANIFEST_VERSION = 2
+
+# Model zoo (must match rust/src/model/config.rs).
+MODELS = {
+    # name: (K1, N1, N2, group_size, act)
+    "llama-scaled": (512, 1792, 512, 32, "identity"),
+    "granite-scaled": (512, 2048, 512, 32, "identity"),
+    "tiny": (256, 1024, 256, 32, "gelu"),
+}
+
+# Artifact matrix (kept in sync with DESIGN.md E11/E15).
+MLP_VARIANTS = [
+    # (model, tp list, m list)
+    ("llama-scaled", (1, 2, 4, 8), (1, 2, 4, 8, 16)),
+    ("granite-scaled", (1, 2, 4), (1, 4, 16)),
+    ("tiny", (1, 2), (1, 2, 4, 8)),
+]
+KERNEL_VARIANTS = [
+    # (model, m) for the single-GEMM kernel artifacts (ordered + naive)
+    ("llama-scaled", 1),
+    ("llama-scaled", 16),
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_desc(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def mlp_specs(model, tp, m, kind):
+    """Build (argument specs, manifest input descriptors) for one variant."""
+    k1, n1, n2, g, _act = MODELS[model]
+    n1_loc = n1 // tp
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    stage1 = [
+        ("x", (m, k1), f32),
+        ("p1", (k1,), i32),
+        ("qw1", (k1 // 8, n1_loc), u32),
+        ("s1", (k1 // g, n1_loc), f32),
+        ("z1", (k1 // g, n1_loc), f32),
+    ]
+    stage2 = [
+        ("y1", (m, n1_loc), f32),
+        ("qw2", (n1_loc // 8, n2), u32),
+        ("s2", (n1_loc // g, n2), f32),
+        ("z2", (n1_loc // g, n2), f32),
+    ]
+    if kind == "stage1":
+        args = stage1
+    elif kind == "stage2":
+        args = stage2
+    elif kind == "fused":
+        args = stage1 + stage2[1:]  # fused takes x, not y1
+    else:
+        raise ValueError(kind)
+    specs = [spec(s, d) for (_, s, d) in args]
+    descs = [input_desc(n, s, str(jnp.dtype(d))) for (n, s, d) in args]
+    return specs, descs
+
+
+def mlp_fn(model, kind):
+    k1, n1, n2, g, act = MODELS[model]
+    if kind == "stage1":
+        return functools.partial(M.mlp_stage1, group_size=g, act=act)
+    if kind == "stage2":
+        return functools.partial(M.mlp_stage2, group_size=g)
+    if kind == "fused":
+        return functools.partial(M.mlp_fused, group_size=g, act=act)
+    raise ValueError(kind)
+
+
+def kernel_specs(model, m, kind):
+    k1, n1, _n2, g, _ = MODELS[model]
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    args = [
+        ("x", (m, k1), f32),
+        ("qw", (k1 // 8, n1), u32),
+        ("s", (k1 // g, n1), f32),
+        ("z", (k1 // g, n1), f32),
+    ]
+    if kind == "kernel_naive":
+        args.append(("gidx", (k1,), i32))
+    specs = [spec(s, d) for (_, s, d) in args]
+    descs = [input_desc(n, s, str(jnp.dtype(d))) for (n, s, d) in args]
+    return specs, descs
+
+
+def kernel_fn(model, kind):
+    _k1, _n1, _n2, g, _ = MODELS[model]
+    if kind == "kernel_ordered":
+        return functools.partial(dequant_matmul_ordered, group_size=g)
+    if kind == "kernel_naive":
+        return dequant_matmul_naive_gidx
+    raise ValueError(kind)
+
+
+def lower_one(fn, specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="substring filter on artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    todo = []
+    for model, tps, ms in MLP_VARIANTS:
+        for tp in tps:
+            for m in ms:
+                for kind in ("stage1", "stage2", "fused"):
+                    name = f"{model}_{kind}_tp{tp}_m{m}"
+                    todo.append((name, model, tp, m, kind, "mlp"))
+    for model, m in KERNEL_VARIANTS:
+        for kind in ("kernel_ordered", "kernel_naive"):
+            name = f"{model}_{kind}_m{m}"
+            todo.append((name, model, 1, m, kind, "kernel"))
+
+    t_start = time.time()
+    for i, (name, model, tp, m, kind, family) in enumerate(todo):
+        if args.only and args.only not in name:
+            continue
+        if family == "mlp":
+            specs, descs = mlp_specs(model, tp, m, kind)
+            fn = mlp_fn(model, kind)
+        else:
+            specs, descs = kernel_specs(model, m, kind)
+            fn = kernel_fn(model, kind)
+        text = to_hlo_text(lower_one(fn, specs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        k1, n1, n2, g, act = MODELS[model]
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "model": model,
+                "tp": tp,
+                "m": m,
+                "k1": k1,
+                "n1": n1,
+                "n2": n2,
+                "group_size": g,
+                "act": act,
+                "inputs": descs,
+            }
+        )
+        print(
+            f"[{i + 1}/{len(todo)}] {name} ({len(text)} chars, "
+            f"{time.time() - t_start:.1f}s elapsed)",
+            file=sys.stderr,
+        )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "generated_by": "python -m compile.aot",
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json to {args.out} "
+        f"in {time.time() - t_start:.1f}s",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

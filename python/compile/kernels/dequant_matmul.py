@@ -1,0 +1,164 @@
+"""Layer-1 Pallas kernels: fused grouped-int4 dequantize + matmul.
+
+Two load schedules, mirroring the paper's Figures 1-2 (and the rust host
+engine in ``rust/src/gemm/fused.rs``):
+
+* ``dequant_matmul_ordered`` -- requires the Algorithm-1 (monotone
+  ``g_idx``) layout. The grid walks K in group-size tiles, so each tile
+  touches exactly one (scales, zeros) row: metadata is fetched into VMEM
+  once per group and reused for the whole tile. This is the ExllamaV2
+  schedule the paper deploys.
+* ``dequant_matmul_naive_gidx`` -- takes the *unordered* Eq.-3 ``g_idx``
+  as a tensor and gathers each channel's metadata row individually: the
+  access pattern act_order induces when Algorithm 1 is skipped.
+
+Hardware adaptation (DESIGN.md section 6): the paper's GPU kernel tiles for
+L2/smem residency of the metadata; on TPU the analogue is the HBM->VMEM
+BlockSpec schedule. The ordered kernel's BlockSpecs are written so that
+scales/zeros blocks are indexed by the K-grid coordinate -- one VMEM-resident
+metadata row per grid step, dequantized weights feed the MXU as an (G, N)
+bf16/f32 tile matmul. ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot run Mosaic custom-calls (see /opt/xla-example/README.md); on a real
+TPU the same code lowers to Mosaic.
+
+Packing convention matches the rust side (``quant/pack.rs`` /AutoGPTQ):
+8 x 4-bit values per uint32, packed along K, low nibble = lowest row.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Values packed per uint32 word at 4 bits.
+PER_WORD = 8
+
+
+def unpack_int4(qw):
+    """Unpack uint32 words (Kw, N) -> int4 values (Kw*8, N), low nibble first.
+
+    Used inside the kernels and exported for tests.
+    """
+    kw, n = qw.shape
+    shifts = (jnp.arange(PER_WORD, dtype=jnp.uint32) * 4)[None, :, None]
+    vals = (qw[:, None, :] >> shifts) & jnp.uint32(0xF)
+    return vals.reshape(kw * PER_WORD, n)
+
+
+def _ordered_kernel(x_ref, qw_ref, s_ref, z_ref, o_ref, *, group_size):
+    """One grid step: dequantize one K-group tile and accumulate its GEMM.
+
+    Block shapes (VMEM residency per step):
+      x_ref  : (M, G)        activation tile
+      qw_ref : (G/8, N)      packed weight tile
+      s_ref  : (1, N)        this group's scales   <- loaded ONCE per group
+      z_ref  : (1, N)        this group's zeros    <- loaded ONCE per group
+      o_ref  : (M, N)        accumulator (revisited every step)
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = unpack_int4(qw_ref[...]).astype(jnp.float32)  # (G, N)
+    w = s_ref[0, :][None, :] * (vals - z_ref[0, :][None, :])  # (G, N)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+    del group_size  # shape-only parameter
+
+
+def dequant_matmul_ordered(x, qw, scales, zeros, *, group_size, interpret=True):
+    """``x @ dequant(qw)`` with the Algorithm-1 (ordered g_idx) schedule.
+
+    Args:
+      x:      (M, K) f32 activations (already ``X[:, P]``-permuted).
+      qw:     (K//8, N) uint32 packed weights, rows gathered by Algorithm 1.
+      scales: (K//group_size, N) f32 per-group scales.
+      zeros:  (K//group_size, N) f32 per-group zero points.
+    Returns:
+      (M, N) f32.
+    """
+    m, k = x.shape
+    n = qw.shape[1]
+    assert qw.shape[0] * PER_WORD == k, (qw.shape, k)
+    assert k % group_size == 0
+    ngroups = k // group_size
+    assert scales.shape == (ngroups, n), (scales.shape, (ngroups, n))
+    assert zeros.shape == (ngroups, n)
+    gw = group_size // PER_WORD  # packed words per group
+
+    return pl.pallas_call(
+        functools.partial(_ordered_kernel, group_size=group_size),
+        grid=(ngroups,),
+        in_specs=[
+            pl.BlockSpec((m, group_size), lambda g: (0, g)),
+            pl.BlockSpec((gw, n), lambda g: (g, 0)),
+            pl.BlockSpec((1, n), lambda g: (g, 0)),
+            pl.BlockSpec((1, n), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, qw, scales, zeros)
+
+
+def _naive_kernel(x_ref, qw_ref, s_ref, z_ref, gidx_ref, o_ref):
+    """Single-step kernel with per-channel metadata gathers (naive load)."""
+    vals = unpack_int4(qw_ref[...]).astype(jnp.float32)  # (K, N)
+    gidx = gidx_ref[...]  # (K,) int32, unordered
+    s = jnp.take(s_ref[...], gidx, axis=0)  # (K, N) gather per channel
+    z = jnp.take(z_ref[...], gidx, axis=0)
+    w = s * (vals - z)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def dequant_matmul_naive_gidx(x, qw, scales, zeros, gidx, *, interpret=True):
+    """``x @ dequant(qw)`` with an arbitrary (unordered) ``g_idx``.
+
+    The Eq.-3 access pattern: each channel dereferences its own metadata
+    row. Correct for any permutation; pays the locality penalty the paper
+    describes.
+    """
+    m, k = x.shape
+    n = qw.shape[1]
+    assert qw.shape[0] * PER_WORD == k
+    assert gidx.shape == (k,)
+
+    return pl.pallas_call(
+        _naive_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, qw, scales, zeros, gidx.astype(jnp.int32))
+
+
+def vmem_estimate_ordered(m, k, n, group_size, dtype_bytes=4):
+    """Estimated VMEM working set (bytes) per grid step of the ordered
+    kernel -- the L1 perf diagnostic recorded in EXPERIMENTS.md section Perf
+    (interpret mode gives no real TPU timings).
+    """
+    x_tile = m * group_size * dtype_bytes
+    qw_tile = (group_size // PER_WORD) * n * 4
+    meta = 2 * n * dtype_bytes
+    out = m * n * dtype_bytes
+    deq = group_size * n * dtype_bytes  # dequantized tile before the MXU
+    return x_tile + qw_tile + meta + out + deq
+
+
+def metadata_loads_ordered(k, group_size):
+    """Metadata (scales,zeros) row loads for one pass: one per group."""
+    return k // group_size
+
+
+def metadata_loads_naive(gidx):
+    """Metadata row loads for the naive schedule: one per channel whose
+    group differs from its predecessor's (matches
+    ``rust/src/quant/gidx.rs::metadata_loads``)."""
+    import numpy as np
+
+    g = np.asarray(gidx)
+    if g.size == 0:
+        return 0
+    return int(1 + (g[1:] != g[:-1]).sum())

@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis in ``python/tests``), mirroring the rust-side oracle
+(``rust/src/quant/gptq.rs::dequantize`` + dense matmul).
+"""
+
+import jax.numpy as jnp
+
+PER_WORD = 8
+
+
+def ref_unpack_int4(qw):
+    """Unpack uint32 words (Kw, N) -> (Kw*8, N) int values, low nibble first."""
+    kw, n = qw.shape
+    out = []
+    for i in range(PER_WORD):
+        out.append((qw >> jnp.uint32(4 * i)) & jnp.uint32(0xF))
+    stacked = jnp.stack(out, axis=1)  # (Kw, 8, N): row k = word k//8, nibble k%8
+    return stacked.reshape(kw * PER_WORD, n)
+
+
+def ref_pack_int4(vals):
+    """Pack integer values (K, N) -> (K//8, N) uint32, matching
+    rust/src/quant/pack.rs (low nibble = lowest row)."""
+    k, n = vals.shape
+    assert k % PER_WORD == 0
+    v = vals.astype(jnp.uint32).reshape(k // PER_WORD, PER_WORD, n)
+    out = jnp.zeros((k // PER_WORD, n), dtype=jnp.uint32)
+    for i in range(PER_WORD):
+        out = out | (v[:, i, :] << jnp.uint32(4 * i))
+    return out
+
+
+def ref_dequant(qw, scales, zeros, gidx):
+    """Dequantize packed weights: w[k,n] = s[g[k],n] * (q[k,n] - z[g[k],n])."""
+    vals = ref_unpack_int4(qw).astype(jnp.float32)
+    s = scales[gidx]  # (K, N)
+    z = zeros[gidx]
+    return s * (vals - z)
+
+
+def ref_dequant_matmul(x, qw, scales, zeros, gidx):
+    """x @ dequant(qw) -- the oracle for both kernel schedules."""
+    return x @ ref_dequant(qw, scales, zeros, gidx)

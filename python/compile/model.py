@@ -1,0 +1,74 @@
+"""Layer-2 JAX model: per-rank MLP computations over the Pallas kernels.
+
+Three entry points, mirroring the deployment split the paper forces:
+
+* ``mlp_stage1`` -- Column-TP half: ``act(X[:, P1] @ deq(W1_shard))``.
+  Used by BOTH algorithms (the weights fed differ: the naive deployment
+  feeds ``W1[P1,:]`` shards, the TP-aware one ``W1[P1,P2]`` shards).
+* ``mlp_stage2`` -- Row-TP half: ``Y1_local @ deq(W2_shard)``. The naive
+  algorithm must return to the host between the stages for the
+  AllGather -> reorder -> chunk sequence, so stage1/stage2 are separate
+  executables.
+* ``mlp_fused`` -- the TP-Aware fast path: with no communication between
+  the layers, the whole rank-local MLP lowers into ONE executable (one
+  launch on the request path; XLA fuses the inter-stage activation).
+
+All functions are shape-specialized and AOT-lowered by ``aot.py``; the
+permutation ``P1`` is a runtime input (i32) so the same artifact serves any
+checkpoint. Weights arrive pre-sharded, in the Algorithm-1 (ordered g_idx)
+layout, metadata sliced per rank -- the rust executor prepares these once
+at load time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.dequant_matmul import dequant_matmul_ordered
+
+
+def apply_activation(y, act):
+    """Elementwise nonlinearity (commutes with column permutations)."""
+    if act == "identity":
+        return y
+    if act == "gelu":
+        return (
+            0.5
+            * y
+            * (1.0 + jnp.tanh(0.7978845608 * (y + 0.044715 * y * y * y)))
+        )
+    if act == "silu":
+        return y / (1.0 + jnp.exp(-y))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def mlp_stage1(x, p1, qw1, s1, z1, *, group_size, act, interpret=True):
+    """Column-TP stage: ``act((X[:, P1]) @ deq(W1_shard))``.
+
+    Args:
+      x:   (M, K1) f32 raw input activations.
+      p1:  (K1,) i32 -- Algorithm-1 permutation of layer 1.
+      qw1: (K1//8, N1/tp) uint32 packed shard.
+      s1, z1: (K1//G, N1/tp) f32 metadata shard.
+    """
+    xp = jnp.take(x, p1, axis=1)
+    y = dequant_matmul_ordered(
+        xp, qw1, s1, z1, group_size=group_size, interpret=interpret
+    )
+    return apply_activation(y, act)
+
+
+def mlp_stage2(y1, qw2, s2, z2, *, group_size, interpret=True):
+    """Row-TP stage: ``Y1_local @ deq(W2_shard)`` (partial sum; the host
+    AllReduces across ranks)."""
+    return dequant_matmul_ordered(
+        y1, qw2, s2, z2, group_size=group_size, interpret=interpret
+    )
+
+
+def mlp_fused(
+    x, p1, qw1, s1, z1, qw2, s2, z2, *, group_size, act, interpret=True
+):
+    """The TP-Aware rank-local MLP as one fused executable."""
+    y1 = mlp_stage1(
+        x, p1, qw1, s1, z1, group_size=group_size, act=act, interpret=interpret
+    )
+    return mlp_stage2(y1, qw2, s2, z2, group_size=group_size, interpret=interpret)

@@ -1,0 +1,143 @@
+"""L2 model tests: per-rank MLP stages, the fused TP-aware path, and the
+full Algorithm-2 vs Algorithm-3 equivalence simulated in numpy/jax.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels.ref import ref_dequant, ref_pack_int4
+
+SETTINGS = settings(max_examples=10, deadline=None)
+
+
+def make_layer(rng, k, n, g):
+    """A synthetic Algorithm-1-layout quantized layer + its dense dequant."""
+    vals = rng.integers(0, 16, size=(k, n)).astype(np.uint32)
+    qw = ref_pack_int4(jnp.asarray(vals))
+    s = jnp.asarray(rng.uniform(0.01, 0.2, size=(k // g, n)).astype(np.float32))
+    z = jnp.asarray(rng.integers(0, 16, size=(k // g, n)).astype(np.float32))
+    gidx = jnp.repeat(jnp.arange(k // g, dtype=jnp.int32), g)
+    dense = ref_dequant(qw, s, z, gidx)
+    return qw, s, z, dense
+
+
+class TestActivations:
+    def test_identity(self):
+        y = jnp.array([[1.0, -2.0]])
+        np.testing.assert_array_equal(
+            np.asarray(M.apply_activation(y, "identity")), np.asarray(y)
+        )
+
+    def test_gelu_and_silu_fixed_points(self):
+        y = jnp.array([[0.0, 10.0]])
+        for act in ("gelu", "silu"):
+            out = np.asarray(M.apply_activation(y, act))
+            assert abs(out[0, 0]) < 1e-6
+            assert abs(out[0, 1] - 10.0) < 1e-2
+
+    def test_unknown_activation_raises(self):
+        with pytest.raises(ValueError):
+            M.apply_activation(jnp.zeros((1, 1)), "relu6")
+
+
+class TestStages:
+    def test_stage1_applies_p1_gather(self):
+        rng = np.random.default_rng(0)
+        k, n, g, m = 32, 16, 8, 2
+        qw, s, z, dense = make_layer(rng, k, n, g)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        p1 = jnp.asarray(rng.permutation(k).astype(np.int32))
+        out = M.mlp_stage1(x, p1, qw, s, z, group_size=g, act="identity")
+        ref = x[:, p1] @ dense
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+    def test_fused_equals_stage_composition(self):
+        rng = np.random.default_rng(1)
+        k1, n1, n2, g, m = 32, 64, 32, 8, 3
+        qw1, s1, z1, _ = make_layer(rng, k1, n1, g)
+        qw2, s2, z2, _ = make_layer(rng, n1, n2, g)
+        x = jnp.asarray(rng.normal(size=(m, k1)).astype(np.float32))
+        p1 = jnp.asarray(rng.permutation(k1).astype(np.int32))
+        y1 = M.mlp_stage1(x, p1, qw1, s1, z1, group_size=g, act="gelu")
+        y2 = M.mlp_stage2(y1, qw2, s2, z2, group_size=g)
+        fused = M.mlp_fused(
+            x, p1, qw1, s1, z1, qw2, s2, z2, group_size=g, act="gelu"
+        )
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(y2), atol=1e-4)
+
+
+class TestAlgorithmEquivalence:
+    """The paper's Algorithms 2 and 3 simulated over the L2 stages, with
+    column/row sharding and collectives done in numpy: TP-aware output must
+    equal the naive output for every TP width."""
+
+    @SETTINGS
+    @given(tp=st.sampled_from([1, 2, 4]), m=st.integers(1, 4), seed=st.integers(0, 2**31))
+    def test_naive_equals_tp_aware(self, tp, m, seed):
+        rng = np.random.default_rng(seed)
+        k1, n1, n2, g = 32, 64, 32, 8
+        # Dense "checkpoints" for W1[P1,:] and W2[P2,:] layouts.
+        qw1, s1, z1, w1r = make_layer(rng, k1, n1, g)  # = W1[P1, :]
+        qw2, s2, z2, w2r = make_layer(rng, n1, n2, g)  # = W2[P2, :]
+        p1 = rng.permutation(k1).astype(np.int32)
+        p2 = rng.permutation(n1).astype(np.int32)
+        x = jnp.asarray(rng.normal(size=(m, k1)).astype(np.float32))
+        w1r_np, w2r_np = np.asarray(w1r), np.asarray(w2r)
+
+        def col_shard(mat, r):
+            w = mat.shape[1] // tp
+            return mat[:, r * w : (r + 1) * w]
+
+        def row_shard(mat, r):
+            w = mat.shape[0] // tp
+            return mat[r * w : (r + 1) * w, :]
+
+        xp = np.asarray(x)[:, p1]
+        # --- Algorithm 2 (naive): shard W1[P1,:], gather, reorder, chunk.
+        y1_shards = [xp @ col_shard(w1r_np, r) for r in range(tp)]
+        y1_global = np.concatenate(y1_shards, axis=1)
+        y1_p2 = y1_global[:, p2]
+        y2 = sum(
+            col_shard(y1_p2, r) @ row_shard(w2r_np, r) for r in range(tp)
+        )
+        # --- Algorithm 3 (tp-aware): shard W1[P1,P2]; no gather.
+        w1_aligned = w1r_np[:, p2]
+        y2_aware = sum(
+            (xp @ col_shard(w1_aligned, r)) @ row_shard(w2r_np, r)
+            for r in range(tp)
+        )
+        np.testing.assert_allclose(y2_aware, y2, atol=1e-3)
+
+    def test_stage_artifacts_compose_to_fused_per_rank(self):
+        """Per-rank: running stage1+stage2 on TP-aware-prepared shards
+        equals the fused artifact (what the rust engine relies on)."""
+        rng = np.random.default_rng(7)
+        k1, n1, n2, g, m, tp = 32, 64, 32, 8, 2, 2
+        qw1, s1, z1, w1r = make_layer(rng, k1, n1, g)
+        qw2f, s2f, z2f, w2r = make_layer(rng, n1, n2, g)
+        p1 = jnp.asarray(rng.permutation(k1).astype(np.int32))
+        x = jnp.asarray(rng.normal(size=(m, k1)).astype(np.float32))
+        n1_loc = n1 // tp
+        for r in range(tp):
+            # Column shard of layer 1 (packed cols + metadata cols).
+            qw1_r = qw1[:, r * n1_loc : (r + 1) * n1_loc]
+            s1_r = s1[:, r * n1_loc : (r + 1) * n1_loc]
+            z1_r = z1[:, r * n1_loc : (r + 1) * n1_loc]
+            # Row shard of layer 2 (packed rows + metadata group rows).
+            qw2_r = qw2f[r * n1_loc // 8 : (r + 1) * n1_loc // 8, :]
+            s2_r = s2f[r * n1_loc // g : (r + 1) * n1_loc // g, :]
+            z2_r = z2f[r * n1_loc // g : (r + 1) * n1_loc // g, :]
+            fused = M.mlp_fused(
+                x, p1, qw1_r, s1_r, z1_r, qw2_r, s2_r, z2_r,
+                group_size=g, act="identity",
+            )
+            y1 = M.mlp_stage1(
+                x, p1, qw1_r, s1_r, z1_r, group_size=g, act="identity"
+            )
+            staged = M.mlp_stage2(y1, qw2_r, s2_r, z2_r, group_size=g)
+            np.testing.assert_allclose(
+                np.asarray(fused), np.asarray(staged), atol=1e-4
+            )

@@ -1,0 +1,187 @@
+//! Ablations (DESIGN.md E14) over the design choices the paper fixes:
+//!
+//! A. Quantized (int4) deployment — the regime the title is about — with
+//!    and without Algorithm 1 (ordered vs unordered g_idx), modeled.
+//! B. Group size sweep: metadata overhead vs locality penalty.
+//! C. Fabric sweep: NVLink3 / NVLink4 / PCIe4 — where the TP-aware win
+//!    goes as interconnect gets slower (it grows).
+//! D. Batch scaling beyond the paper's M=16 (crossover behaviour).
+//! E. act_order on/off quantization-quality vs deployment-cost tradeoff
+//!    (measured quantizer, host).
+//!
+//! Run: `cargo bench --bench ablation_bench`
+
+use tpaware::quant::gptq::{hessian, hessian_loss, quantize_gptq, quantize_rtn, GptqConfig};
+use tpaware::simkernel::gemm_model::WeightDtype;
+use tpaware::simkernel::gpu::{GpuSpec, A100, H100};
+use tpaware::simkernel::pipeline::{mlp_latency, Algo, LLAMA_70B};
+use tpaware::tensor::Matrix;
+use tpaware::util::prng::Xoshiro256;
+use tpaware::util::table::Table;
+
+fn main() {
+    let mut csv = String::from("ablation,key,naive_ms,aware_ms,speedup\n");
+
+    // --- A: int4 deployment, with/without Algorithm 1 ------------------
+    let mut t = Table::new(
+        "A. Quantized int4 deployment (Llama-70B, A100, M=16, G=128)",
+        &["TP", "variant", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
+    );
+    let dtype = WeightDtype::Int4 { group_size: 128 };
+    for tp in [2usize, 4, 8] {
+        for (variant, unordered) in [("Alg.1 ordered g_idx", false), ("raw act_order g_idx", true)]
+        {
+            let n = mlp_latency(&A100, LLAMA_70B, 16, tp, Algo::Naive, dtype, unordered)
+                .total_ms();
+            let a = mlp_latency(&A100, LLAMA_70B, 16, tp, Algo::TpAware, dtype, unordered)
+                .total_ms();
+            t.row(vec![
+                tp.to_string(),
+                variant.into(),
+                format!("{n:.3}"),
+                format!("{a:.3}"),
+                format!("{:.2}x", n / a),
+            ]);
+            csv.push_str(&format!("int4,{tp}-{unordered},{n:.4},{a:.4},{:.3}\n", n / a));
+        }
+    }
+    println!("{}", t.render());
+
+    // --- B: group size sweep --------------------------------------------
+    let mut t = Table::new(
+        "B. Group size sweep (int4, TP=8, M=16, A100, TP-Aware)",
+        &["G", "weight+meta MB", "latency (ms)", "unordered-g_idx penalty (ms)"],
+    );
+    for g in [32usize, 64, 128, 256] {
+        let d = WeightDtype::Int4 { group_size: g };
+        let bytes = d.weight_bytes(8192, 28672) + d.weight_bytes(28672, 8192);
+        let lat = mlp_latency(&A100, LLAMA_70B, 16, 8, Algo::TpAware, d, false).total_ms();
+        let pen = mlp_latency(&A100, LLAMA_70B, 16, 8, Algo::TpAware, d, true)
+            .reload_penalty_s
+            * 1e3;
+        t.row(vec![
+            g.to_string(),
+            format!("{:.1}", bytes / 1e6),
+            format!("{lat:.3}"),
+            format!("{pen:.3}"),
+        ]);
+        csv.push_str(&format!("groupsize,{g},{lat:.4},,\n"));
+    }
+    println!("{}", t.render());
+
+    // --- C: fabric sweep --------------------------------------------------
+    let mut t = Table::new(
+        "C. Fabric sweep (Llama-70B, TP=8, M=16, FP16): slower fabric → bigger win",
+        &["fabric", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
+    );
+    let pcie_gpu = GpuSpec {
+        name: "A100-PCIe",
+        fabric: tpaware::tp::interconnect::PCIE4,
+        ..A100
+    };
+    for gpu in [H100, A100, pcie_gpu] {
+        let n = mlp_latency(&gpu, LLAMA_70B, 16, 8, Algo::Naive, WeightDtype::F16, false)
+            .total_ms();
+        let a = mlp_latency(&gpu, LLAMA_70B, 16, 8, Algo::TpAware, WeightDtype::F16, false)
+            .total_ms();
+        t.row(vec![
+            format!("{} / {}", gpu.name, gpu.fabric.name),
+            format!("{n:.3}"),
+            format!("{a:.3}"),
+            format!("{:.2}x", n / a),
+        ]);
+        csv.push_str(&format!("fabric,{},{n:.4},{a:.4},{:.3}\n", gpu.fabric.name, n / a));
+    }
+    println!("{}", t.render());
+
+    // --- D: batch scaling --------------------------------------------------
+    let mut t = Table::new(
+        "D. Batch scaling beyond the paper (Llama-70B, TP=8, A100, FP16)",
+        &["M", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
+    );
+    for m in [1usize, 16, 64, 256, 1024, 4096] {
+        let n =
+            mlp_latency(&A100, LLAMA_70B, m, 8, Algo::Naive, WeightDtype::F16, false).total_ms();
+        let a = mlp_latency(&A100, LLAMA_70B, m, 8, Algo::TpAware, WeightDtype::F16, false)
+            .total_ms();
+        t.row(vec![
+            m.to_string(),
+            format!("{n:.3}"),
+            format!("{a:.3}"),
+            format!("{:.2}x", n / a),
+        ]);
+        csv.push_str(&format!("batch,{m},{n:.4},{a:.4},{:.3}\n", n / a));
+    }
+    println!("{}", t.render());
+    println!(
+        "(the removed AllGather + reorder traffic scales with M too, so the modeled\n\
+         win persists beyond the paper's M=16; the paper measures the decode regime\n\
+         M<=16 where fixed sync overheads dominate)\n"
+    );
+
+    // --- E: act_order quality/cost tradeoff (measured quantizer) ---------
+    let mut rng = Xoshiro256::new(11);
+    let (k, n, g) = (128usize, 64usize, 32usize);
+    let w = Matrix::randn(k, n, &mut rng);
+    let mut ch: Vec<f32> = (0..k)
+        .map(|i| 0.05 + 4.0 * (i as f32 / k as f32).powi(2))
+        .collect();
+    rng.shuffle(&mut ch);
+    let calib = Matrix::from_fn(256, k, |_, c| rng.normal() * ch[c]);
+    let h = hessian(&calib, 0.01);
+    let mut t = Table::new(
+        "E. act_order: quality vs deployment cost (measured quantizer, K=128 N=64 G=32)",
+        &["config", "hessian loss", "g_idx ordered", "metadata loads"],
+    );
+    let rtn = quantize_rtn(
+        &w,
+        &GptqConfig {
+            group_size: g,
+            act_order: false,
+            ..Default::default()
+        },
+    );
+    t.row(vec![
+        "RTN".into(),
+        format!("{:.4}", hessian_loss(&w, &rtn.dequantize(), &h)),
+        "true".into(),
+        rtn.gidx.metadata_loads().to_string(),
+    ]);
+    for act_order in [false, true] {
+        let q = quantize_gptq(
+            &w,
+            &calib,
+            &GptqConfig {
+                group_size: g,
+                act_order,
+                ..Default::default()
+            },
+        );
+        let loss = hessian_loss(&w, &q.dequantize(), &h);
+        t.row(vec![
+            format!("GPTQ act_order={act_order}"),
+            format!("{loss:.4}"),
+            format!("{}", q.gidx.is_ordered()),
+            q.gidx.metadata_loads().to_string(),
+        ]);
+        if act_order {
+            let (_, qo) = q.reorder();
+            t.row(vec![
+                "GPTQ act_order + Alg.1".into(),
+                format!("{loss:.4}"),
+                "true".into(),
+                qo.gidx.metadata_loads().to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "→ act_order improves quantization quality; Algorithm 1 recovers the\n\
+         locality; the TP-Aware transform recovers the communication. That chain\n\
+         is the paper.\n"
+    );
+
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/ablation_bench.csv", csv).ok();
+    println!("CSV written to bench_results/ablation_bench.csv");
+}

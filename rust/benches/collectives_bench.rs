@@ -1,0 +1,138 @@
+//! Collectives bench (DESIGN.md E13): measured shared-memory collectives
+//! (thread ranks) vs the modeled NVLink fabrics, across rank counts and
+//! payload sizes — the communication term the TP-Aware algorithm deletes.
+//!
+//! Run: `cargo bench --bench collectives_bench`
+
+use tpaware::simkernel::comm_model;
+use tpaware::simkernel::gpu::{A100, H100};
+use tpaware::tp::collectives::CollectiveGroup;
+use tpaware::tp::interconnect::PCIE4;
+use tpaware::tp::topology::Topology;
+use tpaware::util::table::Table;
+
+fn measured_collective(tp: usize, elems: usize, allgather: bool, iters: usize) -> f64 {
+    let group = CollectiveGroup::new(tp);
+    let comms = std::sync::Arc::new(std::sync::Mutex::new(group.ranks()));
+    let topo = Topology::new(tp);
+    // Collectives require every rank to make the SAME number of calls
+    // (mismatched counts deadlock on the barrier, exactly like NCCL), so
+    // the iteration count is fixed across ranks and rank 0 is timed.
+    let out = topo.run_spmd(move |rank| {
+        let comm = comms.lock().unwrap()[rank].clone();
+        let payload = vec![rank as f32; elems];
+        for _ in 0..3 {
+            // warmup, all ranks
+            if allgather {
+                comm.all_gather(&payload);
+            } else {
+                comm.all_reduce_sum(&payload);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            if allgather {
+                comm.all_gather(&payload);
+            } else {
+                comm.all_reduce_sum(&payload);
+            }
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+    });
+    out[0]
+}
+
+fn main() {
+    let iters = if std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1") {
+        10
+    } else {
+        50
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!("({cores} hardware thread(s); TP ranks time-slice when cores < ranks)\n");
+    let tps: Vec<usize> = vec![2, 4, 8];
+
+    let mut csv = String::from("op,tp,bytes,measured_ms,a100_model_ms,h100_model_ms,pcie_model_ms\n");
+    for (op, allgather) in [("allgather", true), ("allreduce", false)] {
+        let mut t = Table::new(
+            &format!("{op}: measured thread ranks vs modeled fabrics"),
+            &[
+                "TP",
+                "payload/rank",
+                "measured (ms)",
+                "A100 NVLink3 (ms)",
+                "H100 NVLink4 (ms)",
+                "PCIe4 (ms)",
+            ],
+        );
+        for &tp in &tps {
+            for elems in [1024usize, 16 * 1024, 256 * 1024] {
+                let bytes = elems * 4;
+                let measured = measured_collective(tp, elems, allgather, iters);
+                let (a, h) = if allgather {
+                    (
+                        comm_model::allgather_s(&A100, bytes, tp) * 1e3,
+                        comm_model::allgather_s(&H100, bytes, tp) * 1e3,
+                    )
+                } else {
+                    (
+                        comm_model::allreduce_s(&A100, bytes, tp) * 1e3,
+                        comm_model::allreduce_s(&H100, bytes, tp) * 1e3,
+                    )
+                };
+                let pcie = if allgather {
+                    PCIE4.allgather_s(bytes, tp) * 1e3
+                } else {
+                    PCIE4.allreduce_s(bytes, tp) * 1e3
+                };
+                t.row(vec![
+                    tp.to_string(),
+                    format!("{} KiB", bytes / 1024),
+                    format!("{measured:.4}"),
+                    format!("{a:.4}"),
+                    format!("{h:.4}"),
+                    format!("{pcie:.4}"),
+                ]);
+                csv.push_str(&format!(
+                    "{op},{tp},{bytes},{measured:.5},{a:.5},{h:.5},{pcie:.5}\n"
+                ));
+            }
+        }
+        println!("{}", t.render());
+    }
+
+    // The specific AllGather the paper deletes, at paper scale (modeled).
+    let mut t = Table::new(
+        "The deleted AllGather: Y1 shard (M=16, f16) at Llama-70B N1=28672",
+        &["TP", "shard bytes", "A100 (ms)", "H100 (ms)", "% of naive MLP latency (A100)"],
+    );
+    for tp in [2usize, 4, 8] {
+        let shard = 16 * (28672 / tp) * 2;
+        let a = comm_model::allgather_s(&A100, shard, tp) * 1e3;
+        let h = comm_model::allgather_s(&H100, shard, tp) * 1e3;
+        let naive = tpaware::simkernel::pipeline::mlp_latency(
+            &A100,
+            tpaware::simkernel::pipeline::LLAMA_70B,
+            16,
+            tp,
+            tpaware::simkernel::pipeline::Algo::Naive,
+            tpaware::simkernel::gemm_model::WeightDtype::F16,
+            false,
+        )
+        .total_ms();
+        t.row(vec![
+            tp.to_string(),
+            shard.to_string(),
+            format!("{a:.3}"),
+            format!("{h:.3}"),
+            format!("{:.0}%", 100.0 * a / naive),
+        ]);
+    }
+    println!("{}", t.render());
+
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/collectives_bench.csv", csv).ok();
+    println!("CSV written to bench_results/collectives_bench.csv");
+}

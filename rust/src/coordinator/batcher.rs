@@ -1,0 +1,189 @@
+//! Bucketed dynamic batching.
+//!
+//! Artifacts are compiled for fixed M buckets (1, 2, 4, 8, 16 — the
+//! paper's batch sweep); the batcher forms decode batches that map onto
+//! those buckets: it waits up to `max_wait` for a fuller bucket, never
+//! exceeds `max_batch`, and preserves FIFO order. Padding (when a batch
+//! lands between buckets) happens in the executor; the batcher's job is to
+//! make that rare.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherCfg {
+    /// Largest batch the engine accepts (largest compiled bucket).
+    pub max_batch: usize,
+    /// How long to hold a partial batch hoping for more arrivals.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Round `n` up to the next compiled bucket (power of two up to
+/// `max_batch`).
+pub fn bucket_for(n: usize, max_batch: usize) -> usize {
+    debug_assert!(n > 0 && n <= max_batch);
+    let mut b = 1;
+    while b < n {
+        b *= 2;
+    }
+    b.min(max_batch)
+}
+
+/// A FIFO batcher over generic items (the scheduler uses sequence ids).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherCfg,
+    queue: VecDeque<T>,
+    oldest_at: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherCfg) -> Batcher<T> {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            oldest_at: None,
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.queue.is_empty() {
+            self.oldest_at = Some(Instant::now());
+        }
+        self.queue.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop a batch if policy says go: either a full `max_batch` is ready,
+    /// or the oldest item has waited `max_wait`. FIFO order is preserved.
+    pub fn pop_batch(&mut self) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.cfg.max_batch;
+        let expired = self
+            .oldest_at
+            .map(|t| t.elapsed() >= self.cfg.max_wait)
+            .unwrap_or(false);
+        if !full && !expired {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).collect();
+        self.oldest_at = if self.queue.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        Some(batch)
+    }
+
+    /// Drain everything immediately (shutdown).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.oldest_at = None;
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherCfg {
+        BatcherCfg {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        assert_eq!(bucket_for(1, 16), 1);
+        assert_eq!(bucket_for(2, 16), 2);
+        assert_eq!(bucket_for(3, 16), 4);
+        assert_eq!(bucket_for(5, 16), 8);
+        assert_eq!(bucket_for(9, 16), 16);
+        assert_eq!(bucket_for(16, 16), 16);
+        // Caps at max_batch even when rounding would exceed it.
+        assert_eq!(bucket_for(5, 8), 8);
+    }
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let mut b = Batcher::new(cfg(4, 1000));
+        for i in 0..4 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_batch(), Some(vec![0, 1, 2, 3]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = Batcher::new(cfg(4, 50));
+        b.push(1);
+        assert_eq!(b.pop_batch(), None); // not full, not expired
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(b.pop_batch(), Some(vec![1]));
+    }
+
+    #[test]
+    fn never_exceeds_max_batch_and_keeps_fifo() {
+        let mut b = Batcher::new(cfg(2, 0));
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_batch(), Some(vec![0, 1]));
+        assert_eq!(b.pop_batch(), Some(vec![2, 3]));
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(b.pop_batch(), Some(vec![4]));
+        assert_eq!(b.pop_batch(), None);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(cfg(8, 1000));
+        b.push("a");
+        b.push("b");
+        assert_eq!(b.drain_all(), vec!["a", "b"]);
+        assert!(b.is_empty());
+    }
+
+    /// No starvation: with a steady arrival stream faster than the
+    /// deadline, every item is eventually emitted in order.
+    #[test]
+    fn no_starvation_under_streaming_arrivals() {
+        let mut b = Batcher::new(cfg(4, 5));
+        let mut emitted = Vec::new();
+        for wave in 0..10 {
+            b.push(wave * 2);
+            b.push(wave * 2 + 1);
+            if let Some(batch) = b.pop_batch() {
+                emitted.extend(batch);
+            }
+            std::thread::sleep(Duration::from_millis(6));
+        }
+        if let Some(batch) = b.pop_batch() {
+            emitted.extend(batch);
+        }
+        emitted.extend(b.drain_all());
+        assert_eq!(emitted, (0..20).collect::<Vec<_>>());
+    }
+}

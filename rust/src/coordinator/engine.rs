@@ -1,0 +1,386 @@
+//! The TP execution engine: persistent rank threads + collectives.
+//!
+//! One worker thread per tensor-parallel rank, alive for the engine's
+//! lifetime (thread-per-GPU analogue). Each worker owns either
+//!
+//! * a [`RankMlpExecutor`] — PJRT executables compiled from
+//!   `artifacts/*.hlo.txt` with device-resident weights (the production
+//!   path: python never runs here), or
+//! * the host fallback — [`LayerShard::forward`] fused-dequant GEMMs
+//!   (used when artifacts are absent, and as a cross-check oracle).
+//!
+//! A job is broadcast to all ranks; they execute SPMD with real
+//! collectives between them (AllGather for the naive algorithm's
+//! inter-layer step, AllReduce for the Row-TP epilogue); rank 0 returns
+//! the reduced result.
+
+use crate::model::config::Activation;
+use crate::model::mlp::all_gather_cols;
+use crate::model::weights::DeployedMlp;
+use crate::quant::perm;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::executor::RankMlpExecutor;
+use crate::simkernel::pipeline::Algo;
+use crate::tensor::Matrix;
+use crate::tp::collectives::{CollectiveGroup, CommStats, RankComm};
+use crate::tp::sharding::chunk_cols;
+use anyhow::{anyhow, Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Which compute backend rank workers use.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineBackend {
+    /// Pure-rust fused-dequant GEMMs (no artifacts needed).
+    Host,
+    /// PJRT executables from the AOT artifacts directory, keyed by the
+    /// manifest model name (e.g. "tiny", "llama-scaled").
+    Pjrt { model: String },
+}
+
+enum Job {
+    Mlp {
+        layer: usize,
+        x: Arc<Matrix>,
+    },
+    Stop,
+}
+
+/// Handle to the rank pool.
+pub struct TpEngine {
+    algo: Algo,
+    tp: usize,
+    n_layers: usize,
+    senders: Vec<mpsc::Sender<Job>>,
+    reply: mpsc::Receiver<Result<Matrix>>,
+    handles: Vec<JoinHandle<()>>,
+    group: Arc<CollectiveGroup>,
+}
+
+struct WorkerCtx {
+    rank: usize,
+    comm: RankComm,
+    act: Activation,
+    /// Per-layer deployment metadata (perms + host shards).
+    layers: Arc<Vec<DeployedMlp>>,
+    /// PJRT executor (None → host backend).
+    exec: Option<RankMlpExecutor>,
+}
+
+impl WorkerCtx {
+    fn run_mlp(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
+        let d = &self.layers[layer];
+        match (&self.exec, d.algo) {
+            (Some(exec), Algo::TpAware) => {
+                let partial = exec.run_fused(layer, x)?;
+                let reduced = self.comm.all_reduce_sum(&partial.data);
+                Ok(Matrix::from_vec(partial.rows, partial.cols, reduced))
+            }
+            (Some(exec), Algo::Naive) => {
+                let y1_local = exec.run_stage1(layer, x)?;
+                let y1_global = all_gather_cols(&self.comm, &y1_local);
+                let y1_p2 = perm::apply_cols(&y1_global, &d.p2);
+                let chunk = chunk_cols(&y1_p2, d.tp, self.rank);
+                let partial = exec.run_stage2(layer, &chunk)?;
+                let reduced = self.comm.all_reduce_sum(&partial.data);
+                Ok(Matrix::from_vec(partial.rows, partial.cols, reduced))
+            }
+            (None, _) => {
+                // Host backend: the same dataflow via the fused-dequant
+                // host kernels (run_rank owns the phase logic).
+                let (out, _) = crate::model::mlp::run_rank(
+                    d, self.rank, &self.comm, x, self.act,
+                );
+                Ok(out)
+            }
+        }
+    }
+}
+
+impl TpEngine {
+    /// Start the rank pool.
+    ///
+    /// `layers` — one deployment per MLP layer (all must share algo + tp).
+    /// For `EngineBackend::Pjrt`, `manifest` locates the compiled
+    /// artifacts for `model`.
+    pub fn start(
+        backend: EngineBackend,
+        layers: Vec<DeployedMlp>,
+        act: Activation,
+        manifest: Option<&Manifest>,
+    ) -> Result<TpEngine> {
+        let first = layers
+            .first()
+            .ok_or_else(|| anyhow!("engine needs at least one layer"))?;
+        let algo = first.algo;
+        let tp = first.tp.size;
+        if !layers.iter().all(|d| d.algo == algo && d.tp.size == tp) {
+            return Err(anyhow!("all layers must share algo and tp"));
+        }
+        let n_layers = layers.len();
+        let layers = Arc::new(layers);
+        let group = Arc::new(CollectiveGroup::new(tp));
+        let (reply_tx, reply_rx) = mpsc::channel();
+
+        // For PJRT, compile on the main thread? No: PjrtContext is not
+        // Send — each worker builds its own executor. The manifest data is
+        // cloneable and Send.
+        let manifest = match &backend {
+            EngineBackend::Pjrt { .. } => Some(
+                manifest
+                    .ok_or_else(|| anyhow!("PJRT backend requires a manifest"))?
+                    .clone(),
+            ),
+            EngineBackend::Host => None,
+        };
+
+        let mut senders = Vec::with_capacity(tp);
+        let mut handles = Vec::with_capacity(tp);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for rank in 0..tp {
+            let (tx, rx) = mpsc::channel::<Job>();
+            senders.push(tx);
+            let comm = group.rank(rank);
+            let layers = layers.clone();
+            let backend = backend.clone();
+            let manifest = manifest.clone();
+            let reply_tx = reply_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-rank-{rank}"))
+                .spawn(move || {
+                    let exec = match &backend {
+                        EngineBackend::Host => None,
+                        EngineBackend::Pjrt { model } => {
+                            let built = (|| -> Result<RankMlpExecutor> {
+                                let m = manifest.as_ref().unwrap();
+                                let mut e = RankMlpExecutor::new(m, model, algo, tp, rank)
+                                    .context("building rank executor")?;
+                                for d in layers.iter() {
+                                    e.add_layer(d)?;
+                                }
+                                Ok(e)
+                            })();
+                            match built {
+                                Ok(e) => {
+                                    let _ = ready_tx.send(Ok(()));
+                                    Some(e)
+                                }
+                                Err(err) => {
+                                    let _ = ready_tx.send(Err(err));
+                                    return;
+                                }
+                            }
+                        }
+                    };
+                    if exec.is_none() {
+                        let _ = ready_tx.send(Ok(()));
+                    }
+                    let ctx = WorkerCtx {
+                        rank,
+                        comm,
+                        act,
+                        layers,
+                        exec,
+                    };
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            Job::Stop => break,
+                            Job::Mlp { layer, x } => {
+                                let out = ctx.run_mlp(layer, &x);
+                                if rank == 0 {
+                                    let _ = reply_tx.send(out);
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawning engine rank thread");
+            handles.push(handle);
+        }
+        // Wait for all ranks to come up (PJRT compilation happens here).
+        for _ in 0..tp {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("rank died during startup"))??;
+        }
+        Ok(TpEngine {
+            algo,
+            tp,
+            n_layers,
+            senders,
+            reply: reply_rx,
+            handles,
+            group,
+        })
+    }
+
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Communication traffic since start/reset.
+    pub fn comm_stats(&self) -> CommStats {
+        self.group.stats()
+    }
+    pub fn reset_comm_stats(&self) {
+        self.group.reset_stats()
+    }
+
+    /// Execute layer `layer`'s MLP on activation `x` across all ranks;
+    /// blocks until the reduced output is back.
+    pub fn mlp(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
+        if layer >= self.n_layers {
+            return Err(anyhow!("layer {layer} out of range"));
+        }
+        let x = Arc::new(x.clone());
+        for tx in &self.senders {
+            tx.send(Job::Mlp {
+                layer,
+                x: x.clone(),
+            })
+            .map_err(|_| anyhow!("engine rank died"))?;
+        }
+        self.reply
+            .recv()
+            .map_err(|_| anyhow!("engine reply channel closed"))?
+    }
+
+    /// Stop all rank threads.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Stop);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp::run_mlp_sequential;
+    use crate::model::weights::{deploy_quantized, gen_checkpoint};
+    use crate::quant::gptq::GptqConfig;
+    use crate::simkernel::pipeline::MlpShape;
+    use crate::tp::topology::Topology;
+    use crate::util::prng::Xoshiro256;
+
+    fn cfg() -> GptqConfig {
+        GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        }
+    }
+
+    fn shape() -> MlpShape {
+        MlpShape {
+            k1: 32,
+            n1: 64,
+            n2: 32,
+        }
+    }
+
+    #[test]
+    fn host_engine_matches_sequential_oracle() {
+        let mut rng = Xoshiro256::new(1);
+        let x = Matrix::randn(3, 32, &mut rng);
+        for algo in [Algo::Naive, Algo::TpAware] {
+            let layers: Vec<DeployedMlp> = (0..2)
+                .map(|i| {
+                    deploy_quantized(
+                        &gen_checkpoint(shape(), 10 + i),
+                        &cfg(),
+                        algo,
+                        Topology::new(2),
+                    )
+                })
+                .collect();
+            let expect: Vec<Matrix> = layers
+                .iter()
+                .map(|d| run_mlp_sequential(d, &x, Activation::Gelu))
+                .collect();
+            let engine = TpEngine::start(
+                EngineBackend::Host,
+                layers,
+                Activation::Gelu,
+                None,
+            )
+            .unwrap();
+            for (i, e) in expect.iter().enumerate() {
+                let got = engine.mlp(i, &x).unwrap();
+                assert!(got.max_abs_diff(e) < 1e-5, "layer {i}");
+            }
+            engine.shutdown();
+        }
+    }
+
+    #[test]
+    fn engine_comm_accounting_differs_by_algo() {
+        let mut rng = Xoshiro256::new(2);
+        let x = Matrix::randn(2, 32, &mut rng);
+        let mk = |algo| {
+            TpEngine::start(
+                EngineBackend::Host,
+                vec![deploy_quantized(
+                    &gen_checkpoint(shape(), 20),
+                    &cfg(),
+                    algo,
+                    Topology::new(4),
+                )],
+                Activation::Identity,
+                None,
+            )
+            .unwrap()
+        };
+        let naive = mk(Algo::Naive);
+        naive.mlp(0, &x).unwrap();
+        let ns = naive.comm_stats();
+        naive.shutdown();
+        let aware = mk(Algo::TpAware);
+        aware.mlp(0, &x).unwrap();
+        let aas = aware.comm_stats();
+        aware.shutdown();
+        assert_eq!(ns.allgather_calls, 1);
+        assert_eq!(aas.allgather_calls, 0);
+        assert!(aas.total_bytes() < ns.total_bytes());
+    }
+
+    #[test]
+    fn engine_rejects_mixed_layers() {
+        let a = deploy_quantized(&gen_checkpoint(shape(), 1), &cfg(), Algo::Naive, Topology::new(2));
+        let b = deploy_quantized(
+            &gen_checkpoint(shape(), 2),
+            &cfg(),
+            Algo::TpAware,
+            Topology::new(2),
+        );
+        assert!(TpEngine::start(
+            EngineBackend::Host,
+            vec![a, b],
+            Activation::Identity,
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn out_of_range_layer_errors() {
+        let d = deploy_quantized(&gen_checkpoint(shape(), 3), &cfg(), Algo::TpAware, Topology::new(1));
+        let engine =
+            TpEngine::start(EngineBackend::Host, vec![d], Activation::Identity, None).unwrap();
+        let mut rng = Xoshiro256::new(4);
+        let x = Matrix::randn(1, 32, &mut rng);
+        assert!(engine.mlp(5, &x).is_err());
+        engine.shutdown();
+    }
+}

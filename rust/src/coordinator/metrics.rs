@@ -1,0 +1,202 @@
+//! Serving metrics: counters and log-bucketed latency histograms,
+//! exportable as JSON for the server's `metrics` endpoint and the benches.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-bucketed latency histogram (microsecond domain, ~2× buckets).
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) µs; 0 handled as bucket 0.
+    buckets: Mutex<Vec<u64>>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Mutex::new(vec![0; 40]),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets.lock().unwrap()[idx] += 1;
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn observe_ms(&self, ms: f64) {
+        self.observe_us((ms * 1000.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let buckets = self.buckets.lock().unwrap();
+        let total: u64 = buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", (self.count() as usize).into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", (self.quantile_us(0.5) as usize).into()),
+            ("p95_us", (self.quantile_us(0.95) as usize).into()),
+            ("p99_us", (self.quantile_us(0.99) as usize).into()),
+            (
+                "max_us",
+                (self.max_us.load(Ordering::Relaxed) as usize).into(),
+            ),
+        ])
+    }
+}
+
+/// All serving metrics, shared across threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_received: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub engine_steps: AtomicU64,
+    pub batch_occupancy_sum: AtomicU64,
+    /// Time-to-first-token.
+    pub ttft: Histogram,
+    /// End-to-end request latency.
+    pub e2e: Histogram,
+    /// Per-decode-step engine latency.
+    pub step: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Mean decode batch occupancy (tokens per step).
+    pub fn mean_occupancy(&self) -> f64 {
+        let steps = self.engine_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / steps as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "requests_received",
+                (self.requests_received.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "requests_completed",
+                (self.requests_completed.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "tokens_generated",
+                (self.tokens_generated.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "engine_steps",
+                (self.engine_steps.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("mean_batch_occupancy", self.mean_occupancy().into()),
+            ("ttft", self.ttft.to_json()),
+            ("e2e", self.e2e.to_json()),
+            ("step", self.step.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_statistics() {
+        let h = Histogram::default();
+        for us in [100u64, 200, 400, 800, 1600] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 620.0).abs() < 1.0);
+        assert!(h.quantile_us(0.5) >= 200);
+        assert!(h.quantile_us(1.0) >= 1600);
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_huge() {
+        let h = Histogram::default();
+        h.observe_us(0);
+        h.observe_us(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let h = Histogram::default();
+        for i in 1..1000u64 {
+            h.observe_us(i);
+        }
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.quantile_us(0.95) <= h.quantile_us(0.99));
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_received);
+        Metrics::add(&m.tokens_generated, 7);
+        m.ttft.observe_ms(1.5);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_received").as_usize(), Some(1));
+        assert_eq!(j.get("tokens_generated").as_usize(), Some(7));
+        assert_eq!(j.get("ttft").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let m = Metrics::default();
+        Metrics::add(&m.engine_steps, 2);
+        Metrics::add(&m.batch_occupancy_sum, 12);
+        assert_eq!(m.mean_occupancy(), 6.0);
+    }
+}

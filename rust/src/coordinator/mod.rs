@@ -1,0 +1,25 @@
+//! L3 serving coordinator — the layer the paper's deployment scheme lives
+//! in (vLLM-router-style composition, scaled to this testbed).
+//!
+//! * [`request`] — request/response types and sequence state.
+//! * [`batcher`] — bucketed dynamic batching (M ∈ {1,2,4,8,16} to match
+//!   the compiled artifact buckets and the paper's M sweep).
+//! * [`router`] — replica routing policies (round-robin, least-loaded,
+//!   session-affinity).
+//! * [`engine`] — the TP execution engine: persistent rank threads, each
+//!   owning a PJRT executor (or the host fallback), collectives between
+//!   them; plus the serving engine that drives the tiny transformer.
+//! * [`scheduler`] — continuous-batching decode scheduler.
+//! * [`server`] — TCP line-JSON serving front end + client.
+//! * [`metrics`] — counters/histograms surfaced by the server and benches.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{EngineBackend, TpEngine};
+pub use request::{Request, Response};

@@ -1,0 +1,104 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (byte-level tokenizer upstream).
+    pub prompt: Vec<u32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    /// Arrival time (set by the server).
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Time to first generated token, milliseconds.
+    pub ttft_ms: f64,
+    /// Total request latency, milliseconds.
+    pub total_ms: f64,
+}
+
+/// Per-sequence decode state owned by the scheduler.
+#[derive(Debug)]
+pub struct SeqState {
+    pub req: Request,
+    /// Tokens generated so far.
+    pub generated: Vec<u32>,
+    /// Next token to feed (last prompt token or last generated).
+    pub next_token: u32,
+    /// Prompt tokens not yet consumed (fed one per step — simple
+    /// incremental prefill; the decode path is what the paper measures).
+    pub pending_prompt: Vec<u32>,
+    pub first_token_at: Option<Instant>,
+    pub kv: crate::model::transformer::KvCache,
+}
+
+impl SeqState {
+    pub fn new(req: Request, n_layers: usize) -> SeqState {
+        let mut pending: Vec<u32> = req.prompt.clone();
+        pending.reverse(); // pop() from the back = consume front
+        let first = pending.pop().unwrap_or(0);
+        SeqState {
+            req,
+            generated: Vec::new(),
+            next_token: first,
+            pending_prompt: pending,
+            first_token_at: None,
+            kv: crate::model::transformer::KvCache::new(n_layers),
+        }
+    }
+
+    /// True when in the prefill phase.
+    pub fn prefilling(&self) -> bool {
+        !self.pending_prompt.is_empty()
+    }
+
+    /// True when generation is complete.
+    pub fn done(&self) -> bool {
+        !self.prefilling() && self.generated.len() >= self.req.max_new
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_state_consumes_prompt_in_order() {
+        let r = Request::new(1, vec![10, 11, 12], 2);
+        let mut s = SeqState::new(r, 2);
+        assert_eq!(s.next_token, 10);
+        assert!(s.prefilling());
+        assert_eq!(s.pending_prompt.pop(), Some(11));
+        assert_eq!(s.pending_prompt.pop(), Some(12));
+        assert!(!s.prefilling());
+        assert!(!s.done());
+        s.generated.extend([1, 2]);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn empty_prompt_starts_at_zero() {
+        let s = SeqState::new(Request::new(2, vec![], 1), 1);
+        assert_eq!(s.next_token, 0);
+        assert!(!s.prefilling());
+    }
+}

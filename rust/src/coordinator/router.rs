@@ -1,0 +1,136 @@
+//! Replica routing — the front-door component of a serving deployment
+//! (vllm-project/router-style). Routes requests across engine replicas;
+//! in this testbed replicas are in-process engines, but the policies are
+//! the production ones.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict rotation.
+    RoundRobin,
+    /// Pick the replica with the fewest outstanding requests.
+    LeastOutstanding,
+    /// Hash the session key so a conversation sticks to one replica
+    /// (KV-cache affinity).
+    SessionAffinity,
+}
+
+/// Router over `n` replicas.
+#[derive(Debug)]
+pub struct Router {
+    policy: Policy,
+    rr_next: AtomicUsize,
+    outstanding: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(policy: Policy, replicas: usize) -> Router {
+        assert!(replicas > 0);
+        Router {
+            policy,
+            rr_next: AtomicUsize::new(0),
+            outstanding: (0..replicas).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Choose a replica for a request with session key `session`.
+    /// The caller must later call [`Router::complete`] with the index.
+    pub fn route(&self, session: u64) -> usize {
+        let idx = match self.policy {
+            Policy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.replicas()
+            }
+            Policy::LeastOutstanding => {
+                let mut best = 0;
+                let mut best_load = u64::MAX;
+                for (i, o) in self.outstanding.iter().enumerate() {
+                    let l = o.load(Ordering::Relaxed);
+                    if l < best_load {
+                        best = i;
+                        best_load = l;
+                    }
+                }
+                best
+            }
+            Policy::SessionAffinity => {
+                // SplitMix-style avalanche of the session key.
+                let mut z = session.wrapping_add(0x9E3779B97F4A7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+                (z ^ (z >> 31)) as usize % self.replicas()
+            }
+        };
+        self.outstanding[idx].fetch_add(1, Ordering::Relaxed);
+        idx
+    }
+
+    /// Mark a request complete on `replica`.
+    pub fn complete(&self, replica: usize) {
+        self.outstanding[replica].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current outstanding counts (diagnostics).
+    pub fn loads(&self) -> Vec<u64> {
+        self.outstanding
+            .iter()
+            .map(|o| o.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_rotates() {
+        let r = Router::new(Policy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(i)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_balances() {
+        let r = Router::new(Policy::LeastOutstanding, 2);
+        let a = r.route(0); // 0
+        let b = r.route(1); // 1 (0 busy)
+        assert_ne!(a, b);
+        r.complete(a);
+        // replica a is now idle again → next pick goes there.
+        assert_eq!(r.route(2), a);
+    }
+
+    #[test]
+    fn session_affinity_is_sticky_and_spread() {
+        let r = Router::new(Policy::SessionAffinity, 4);
+        for s in 0..50u64 {
+            let first = r.route(s);
+            r.complete(first);
+            assert_eq!(r.route(s), first, "session {s} moved replicas");
+            r.complete(first);
+        }
+        // Different sessions should hit more than one replica.
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..32u64 {
+            seen.insert(r.route(s * 7919 + 13));
+        }
+        assert!(seen.len() >= 3, "affinity hash too clustered: {seen:?}");
+    }
+
+    #[test]
+    fn loads_track_outstanding() {
+        let r = Router::new(Policy::RoundRobin, 2);
+        r.route(0);
+        r.route(1);
+        r.route(2);
+        assert_eq!(r.loads().iter().sum::<u64>(), 3);
+        r.complete(0);
+        assert_eq!(r.loads().iter().sum::<u64>(), 2);
+    }
+}

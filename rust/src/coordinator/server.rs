@@ -1,0 +1,390 @@
+//! TCP serving front end: newline-delimited JSON over a socket, a
+//! scheduler thread running the continuous-batching loop, and a matching
+//! client used by the examples and the serving bench.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"id": 1, "prompt": [3, 7, 9], "max_new": 8}`
+//!   ← `{"id": 1, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8}`
+//!   → `{"cmd": "metrics"}`            ← the metrics JSON
+//!   → `{"cmd": "shutdown"}`           ← `{"ok": true}` and server exit
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response, SeqState};
+use crate::coordinator::scheduler::Scheduler;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// A submitted request with its reply channel.
+struct Submission {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+}
+
+/// The serving server: owns the scheduler thread and the TCP acceptor.
+pub struct Server {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    sched_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn response_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("id", (r.id as usize).into()),
+        (
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|&t| (t as usize).into()).collect()),
+        ),
+        ("ttft_ms", r.ttft_ms.into()),
+        ("total_ms", r.total_ms.into()),
+    ])
+}
+
+impl Server {
+    /// Start serving on `addr` (use port 0 for an OS-assigned port; the
+    /// bound address is in `server.addr`).
+    pub fn start(addr: &str, scheduler: Scheduler) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?.to_string();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
+        let metrics = scheduler.metrics.clone();
+
+        // Scheduler thread: continuous batching over live submissions.
+        let sched_shutdown = shutdown.clone();
+        let sched_handle = std::thread::Builder::new()
+            .name("scheduler".into())
+            .spawn(move || {
+                let n_layers = scheduler.model.cfg.n_layers;
+                let mut active: Vec<SeqState> = Vec::new();
+                let mut replies: Vec<(u64, mpsc::Sender<Response>)> = Vec::new();
+                loop {
+                    // Admit new work (never beyond 4× max_batch in flight).
+                    while active.len() < scheduler.max_batch * 4 {
+                        match sub_rx.try_recv() {
+                            Ok(sub) => {
+                                Metrics::inc(&scheduler.metrics.requests_received);
+                                replies.push((sub.req.id, sub.reply));
+                                active.push(SeqState::new(sub.req, n_layers));
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => break,
+                        }
+                    }
+                    if active.is_empty() {
+                        if sched_shutdown.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Idle: block briefly for the next submission.
+                        match sub_rx.recv_timeout(Duration::from_millis(10)) {
+                            Ok(sub) => {
+                                Metrics::inc(&scheduler.metrics.requests_received);
+                                replies.push((sub.req.id, sub.reply));
+                                active.push(SeqState::new(sub.req, n_layers));
+                            }
+                            Err(_) => continue,
+                        }
+                    }
+                    scheduler.step(&mut active);
+                    for resp in scheduler.retire(&mut active) {
+                        if let Some(pos) =
+                            replies.iter().position(|(id, _)| *id == resp.id)
+                        {
+                            let (_, tx) = replies.swap_remove(pos);
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+                if let Some(engine) = scheduler.engine {
+                    engine.shutdown();
+                }
+            })
+            .expect("spawning scheduler thread");
+
+        // Acceptor thread: one handler thread per connection.
+        let accept_shutdown = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("acceptor".into())
+            .spawn(move || {
+                let next_id = Arc::new(AtomicU64::new(1));
+                loop {
+                    if accept_shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let sub_tx = sub_tx.clone();
+                            let metrics = metrics.clone();
+                            let shutdown = accept_shutdown.clone();
+                            let next_id = next_id.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(
+                                    stream, sub_tx, metrics, shutdown, next_id,
+                                );
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawning acceptor thread");
+
+        Ok(Server {
+            addr: bound,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            sched_handle: Some(sched_handle),
+        })
+    }
+
+    /// Signal shutdown and join the threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    sub_tx: mpsc::Sender<Submission>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let msg = match json::parse(trimmed) {
+            Ok(m) => m,
+            Err(e) => {
+                writeln!(out, "{}", Json::obj(vec![("error", format!("{e}").into())]))?;
+                continue;
+            }
+        };
+        match msg.get("cmd").as_str() {
+            Some("metrics") => {
+                writeln!(out, "{}", metrics.to_json())?;
+                continue;
+            }
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::Relaxed);
+                writeln!(out, "{}", Json::obj(vec![("ok", true.into())]))?;
+                return Ok(());
+            }
+            Some(other) => {
+                writeln!(
+                    out,
+                    "{}",
+                    Json::obj(vec![("error", format!("unknown cmd {other}").into())])
+                )?;
+                continue;
+            }
+            None => {}
+        }
+        // A generation request.
+        let prompt: Vec<u32> = msg
+            .get("prompt")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|t| t.as_usize()).map(|t| t as u32).collect())
+            .unwrap_or_default();
+        let max_new = msg.get("max_new").as_usize().unwrap_or(8);
+        let id = msg
+            .get("id")
+            .as_usize()
+            .map(|v| v as u64)
+            .unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        sub_tx
+            .send(Submission {
+                req: Request::new(id, prompt, max_new),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("scheduler gone"))?;
+        let resp = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler dropped request"))?;
+        writeln!(out, "{}", response_json(&resp))?;
+    }
+}
+
+/// Blocking client for the examples and the serving bench.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to server")?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        writeln!(self.writer, "{msg}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(json::parse(line.trim()).context("parsing server reply")?)
+    }
+
+    /// Generate `max_new` tokens from `prompt`.
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Response> {
+        let msg = Json::obj(vec![
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| (t as usize).into()).collect()),
+            ),
+            ("max_new", max_new.into()),
+        ]);
+        let r = self.roundtrip(&msg)?;
+        if let Some(err) = r.get("error").as_str() {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(Response {
+            id: r.get("id").as_usize().unwrap_or(0) as u64,
+            tokens: r
+                .get("tokens")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|t| t.as_usize())
+                        .map(|t| t as u32)
+                        .collect()
+                })
+                .unwrap_or_default(),
+            ttft_ms: r.get("ttft_ms").as_f64().unwrap_or(0.0),
+            total_ms: r.get("total_ms").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Fetch server metrics.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![("cmd", "metrics".into())]))
+    }
+
+    /// Ask the server to shut down.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.roundtrip(&Json::obj(vec![("cmd", "shutdown".into())]))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::transformer::Transformer;
+    use crate::simkernel::pipeline::Algo;
+    use crate::tp::topology::Topology;
+
+    fn tiny_scheduler() -> Scheduler {
+        let cfg = ModelConfig {
+            name: "unit".into(),
+            d_model: 32,
+            d_ff: 64,
+            n_layers: 2,
+            n_heads: 4,
+            vocab: 64,
+            max_seq: 64,
+            activation: crate::model::config::Activation::Gelu,
+            group_size: 8,
+        };
+        let model = Arc::new(Transformer::synthesize(
+            &cfg,
+            Algo::TpAware,
+            Topology::new(2),
+            7,
+        ));
+        Scheduler::new(model, None, Arc::new(Metrics::default()), 4)
+    }
+
+    #[test]
+    fn serve_generate_metrics_shutdown() {
+        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let addr = server.addr.clone();
+
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.generate(&[1, 2, 3], 5).unwrap();
+        assert_eq!(r.tokens.len(), 5);
+        assert!(r.total_ms > 0.0);
+
+        // Responses must match direct generation on the same model.
+        let sched = tiny_scheduler();
+        let expect = sched.model.generate(&[1, 2, 3], 5);
+        assert_eq!(r.tokens, expect);
+
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("requests_completed").as_usize(), Some(1));
+        assert_eq!(m.get("tokens_generated").as_usize(), Some(5));
+
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_are_batched() {
+        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let addr = server.addr.clone();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.generate(&[i as u32 + 1, 2], 4).unwrap()
+                })
+            })
+            .collect();
+        let resps: Vec<Response> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(resps.len(), 4);
+        for r in &resps {
+            assert_eq!(r.tokens.len(), 4);
+        }
+        let mut c = Client::connect(&addr).unwrap();
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("requests_completed").as_usize(), Some(4));
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_json_gets_error_reply() {
+        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let addr = server.addr.clone();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = stream;
+        writeln!(out, "this is not json").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        server.stop();
+    }
+}

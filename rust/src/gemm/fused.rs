@@ -1,0 +1,233 @@
+//! Fused dequantize + GEMM over packed GPTQ weights — the host analogue of
+//! the ExllamaV2 kernel the paper builds on.
+//!
+//! Two load schedules are provided, mirroring the paper's Figures 1–2:
+//!
+//! * [`dequant_matmul_naive`] — walks channels in storage order with an
+//!   arbitrary (possibly unordered) `g_idx`, dereferencing the group's
+//!   scales/zeros per channel. With `act_order` this thrashes whatever
+//!   cache level holds the metadata.
+//! * [`dequant_matmul_ordered`] — requires the Algorithm-1 layout
+//!   (monotone `g_idx`): hoists one (scale, zero) fetch per group and
+//!   streams `G` channels against it.
+//!
+//! Both compute `X(M×K) · Ŵ(K×N)` without materializing `Ŵ`.
+
+use crate::quant::gptq::QuantizedLinear;
+use crate::tensor::Matrix;
+
+/// Fused dequant+GEMM with per-channel metadata dereference (naive load).
+/// Correct for any `g_idx`, ordered or not.
+pub fn dequant_matmul_naive(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    let (m, k, n) = (x.rows, q.k(), q.n());
+    assert_eq!(x.cols, k, "GEMM shape mismatch");
+    let mut c = Matrix::zeros(m, n);
+    let per = q.packed.per_word();
+    let bits = q.bits;
+    let mask = (1u32 << bits) - 1;
+    for kk in 0..k {
+        // Metadata dereference per channel — the access pattern the paper
+        // calls out as sub-optimal under act_order.
+        let g = q.gidx.idx[kk] as usize;
+        let srow = q.scales.row(g);
+        let zrow = q.zeros.row(g);
+        let wrow = &q.packed.words[(kk / per) * n..(kk / per + 1) * n];
+        let shift = ((kk % per) as u32) * bits;
+        for i in 0..m {
+            let xv = x.at(i, kk);
+            if xv == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for nn in 0..n {
+                let qv = (wrow[nn] >> shift) & mask;
+                crow[nn] += xv * (srow[nn] * (qv as f32 - zrow[nn]));
+            }
+        }
+    }
+    c
+}
+
+/// Fused dequant+GEMM assuming the Algorithm-1 (ordered) layout: metadata
+/// is fetched once per group and reused for all `G` channels of the group.
+/// Panics in debug builds if `g_idx` is not monotone.
+pub fn dequant_matmul_ordered(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    debug_assert!(
+        q.gidx.is_ordered(),
+        "ordered schedule requires Algorithm-1 layout"
+    );
+    let (m, k, n) = (x.rows, q.k(), q.n());
+    assert_eq!(x.cols, k, "GEMM shape mismatch");
+    let g_size = q.gidx.group_size;
+    let mut c = Matrix::zeros(m, n);
+    let per = q.packed.per_word();
+    let bits = q.bits;
+    let mask = (1u32 << bits) - 1;
+    // Small batches: materializing the dequant slab costs more than it
+    // saves (each dequantized value is used only M times). Below this
+    // threshold, fuse dequant directly into the accumulation loop while
+    // still fetching metadata once per group (perf pass §Perf iter 4).
+    const SLAB_MIN_M: usize = 3;
+    if m < SLAB_MIN_M {
+        // Flat channel loop (same shape as the naive kernel, so the only
+        // difference left is the metadata access pattern): with an ordered
+        // layout the group id (read from g_idx — row shards carry globally
+        // offset group ids!) changes only every G channels, so the
+        // scales/zeros row pointer stays hot in L1 between changes.
+        for kk in 0..k {
+            let g = q.gidx.idx[kk] as usize;
+            let srow = q.scales.row(g);
+            let zrow = q.zeros.row(g);
+            let wrow = &q.packed.words[(kk / per) * n..(kk / per + 1) * n];
+            let shift = ((kk % per) as u32) * bits;
+            for i in 0..m {
+                let xv = x.at(i, kk);
+                if xv == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for nn in 0..n {
+                    let qv = (wrow[nn] >> shift) & mask;
+                    crow[nn] += xv * (srow[nn] * (qv as f32 - zrow[nn]));
+                }
+            }
+        }
+        return c;
+    }
+    // Scratch holding the dequantized group slab (G×N) — stays hot in cache.
+    let mut slab = vec![0.0f32; g_size * n];
+    for g0 in (0..k).step_by(g_size) {
+        let g = q.gidx.idx[g0] as usize;
+        let srow = q.scales.row(g);
+        let zrow = q.zeros.row(g);
+        // Dequantize the whole group once.
+        for (gi, kk) in (g0..g0 + g_size).enumerate() {
+            let wrow = &q.packed.words[(kk / per) * n..(kk / per + 1) * n];
+            let shift = ((kk % per) as u32) * bits;
+            let drow = &mut slab[gi * n..(gi + 1) * n];
+            for nn in 0..n {
+                let qv = (wrow[nn] >> shift) & mask;
+                drow[nn] = srow[nn] * (qv as f32 - zrow[nn]);
+            }
+        }
+        // GEMM against the dequantized slab.
+        for i in 0..m {
+            let crow = c.row_mut(i);
+            for (gi, kk) in (g0..g0 + g_size).enumerate() {
+                let xv = x.at(i, kk);
+                if xv == 0.0 {
+                    continue;
+                }
+                let drow = &slab[gi * n..(gi + 1) * n];
+                for nn in 0..n {
+                    crow[nn] += xv * drow[nn];
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::naive::matmul;
+    use crate::quant::gptq::{quantize_gptq, quantize_rtn, GptqConfig};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn naive_schedule_matches_dense_oracle() {
+        forall("fused naive == X · dequant(W)", 20, |g| {
+            let k = 16 * (1 + g.below(4));
+            let n = 4 + g.below(20);
+            let m = 1 + g.below(5);
+            let w = crate::tensor::Matrix::randn(k, n, g);
+            let x = crate::tensor::Matrix::randn(m, k, g);
+            let xc = crate::tensor::Matrix::randn(32, k, g);
+            let cfg = GptqConfig {
+                group_size: 16,
+                act_order: true,
+                ..Default::default()
+            };
+            let q = quantize_gptq(&w, &xc, &cfg);
+            let expect = matmul(&x, &q.dequantize());
+            let got = dequant_matmul_naive(&x, &q);
+            assert!(got.max_abs_diff(&expect) < 1e-3, "{}", got.max_abs_diff(&expect));
+        });
+    }
+
+    #[test]
+    fn ordered_schedule_matches_naive_on_reordered_layout() {
+        forall("fused ordered == fused naive ∘ Alg.1", 20, |g| {
+            let k = 8 * (1 + g.below(6));
+            let n = 4 + g.below(16);
+            let m = 1 + g.below(4);
+            let w = crate::tensor::Matrix::randn(k, n, g);
+            let x = crate::tensor::Matrix::randn(m, k, g);
+            let xc = crate::tensor::Matrix::randn(32, k, g);
+            let cfg = GptqConfig {
+                group_size: 8,
+                act_order: true,
+                ..Default::default()
+            };
+            let q = quantize_gptq(&w, &xc, &cfg);
+            let (p, q_opt) = q.reorder();
+            // Feed the permuted activations, as the deployment would.
+            let xp = crate::quant::perm::apply_cols(&x, &p);
+            let got = dequant_matmul_ordered(&xp, &q_opt);
+            let expect = dequant_matmul_naive(&x, &q);
+            assert!(got.max_abs_diff(&expect) < 1e-3);
+        });
+    }
+
+    /// Regression (§Perf iter 3 bug): a row shard's ordered g_idx carries
+    /// *globally offset* group ids; the small-M fused path must read them
+    /// from g_idx, not recompute k/G locally.
+    #[test]
+    fn ordered_small_m_respects_row_shard_group_offsets() {
+        use crate::tp::sharding::row_shard_quant;
+        use crate::tp::topology::Topology;
+        let mut g = Xoshiro256::new(2);
+        let w = crate::tensor::Matrix::randn(64, 8, &mut g);
+        let xc = crate::tensor::Matrix::randn(32, 64, &mut g);
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        };
+        let (_, q_opt) = quantize_gptq(&w, &xc, &cfg).reorder();
+        let topo = Topology::new(4);
+        for rank in 1..4 {
+            let shard = row_shard_quant(&q_opt, topo, rank);
+            assert!(shard.gidx.idx[0] > 0, "shard group ids must be offset");
+            for m in [1usize, 2, 4] {
+                // m=1,2 take the flat fused path; m=4 the slab path.
+                let x = crate::tensor::Matrix::randn(m, 16, &mut g);
+                let got = dequant_matmul_ordered(&x, &shard);
+                let expect = matmul(&x, &shard.dequantize());
+                assert!(
+                    got.max_abs_diff(&expect) < 1e-3,
+                    "rank={rank} m={m} diff={}",
+                    got.max_abs_diff(&expect)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ordered_works_on_rtn_naive_gidx() {
+        let mut g = Xoshiro256::new(1);
+        let w = crate::tensor::Matrix::randn(32, 8, &mut g);
+        let x = crate::tensor::Matrix::randn(2, 32, &mut g);
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: false,
+            ..Default::default()
+        };
+        let q = quantize_rtn(&w, &cfg);
+        let a = dequant_matmul_ordered(&x, &q);
+        let b = dequant_matmul_naive(&x, &q);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+}

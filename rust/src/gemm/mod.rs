@@ -1,0 +1,17 @@
+//! Host GEMM engine — the CPU stand-in for the paper's FP16/ExllamaV2 CUDA
+//! kernels.
+//!
+//! * [`naive`] — straightforward and cache-blocked f32 matmuls; the
+//!   correctness oracle for everything else (and the measured-mode compute
+//!   when PJRT artifacts are not loaded).
+//! * [`fused`] — fused dequantize+GEMM over packed GPTQ weights with the
+//!   two load schedules the paper contrasts: `naive` (walk channels in
+//!   storage order with an unordered `g_idx`, re-fetching metadata) and
+//!   `ordered` (Algorithm 1 layout, one metadata fetch per group). The
+//!   measured time difference between the two on CPU is the cache-locality
+//!   analogue of the paper's GPU observation.
+
+pub mod fused;
+pub mod naive;
+
+pub use naive::matmul;

@@ -1,0 +1,141 @@
+//! Dense f32 GEMM: a simple ikj kernel plus a cache-blocked variant used on
+//! larger shapes. Both are exact (no fast-math reassociation surprises
+//! beyond f32 addition order, which tests account for with tolerances).
+
+use crate::tensor::Matrix;
+
+/// `C = A(M×K) · B(K×N)` — ikj loop order (row-major friendly).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for kk in 0..k {
+            let av = arow[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Cache-blocked GEMM (block sizes tuned for ~32 KiB L1).
+pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+    const BK: usize = 64;
+    const BN: usize = 256;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for n0 in (0..n).step_by(BN) {
+            let n1 = (n0 + BN).min(n);
+            for i in 0..m {
+                let arow = a.row(i);
+                let crow = &mut c.row_mut(i)[n0..n1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[n0..n1];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += av * bj;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `y = x · Wᵀ` convenience for row vectors (used by the host attention path).
+pub fn matvec(w: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(w.cols, x.len());
+    (0..w.rows)
+        .map(|r| {
+            w.row(r)
+                .iter()
+                .zip(x)
+                .map(|(a, b)| a * b)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn matmul_identity() {
+        let mut g = Xoshiro256::new(1);
+        let a = Matrix::randn(3, 5, &mut g);
+        let id = Matrix::from_fn(5, 5, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert!(matmul(&a, &id).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        forall("blocked == naive", 20, |g| {
+            let (m, k, n) = (1 + g.below(8), 1 + g.below(96), 1 + g.below(300));
+            let a = Matrix::randn(m, k, g);
+            let b = Matrix::randn(k, n, g);
+            let d = matmul(&a, &b).max_abs_diff(&matmul_blocked(&a, &b));
+            assert!(d < 1e-3, "diff {d}");
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut g = Xoshiro256::new(2);
+        let w = Matrix::randn(4, 6, &mut g);
+        let x: Vec<f32> = g.normal_vec(6);
+        let xm = Matrix::from_vec(1, 6, x.clone());
+        let via_mm = matmul(&xm, &w.transpose());
+        let via_mv = matvec(&w, &x);
+        for i in 0..4 {
+            assert!((via_mm.at(0, i) - via_mv[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_distributes_over_block_columns() {
+        // Column-TP premise: [A·B1 | A·B2] == A·[B1|B2].
+        let mut g = Xoshiro256::new(3);
+        let a = Matrix::randn(3, 8, &mut g);
+        let b = Matrix::randn(8, 10, &mut g);
+        let b1 = b.slice_cols(0, 4);
+        let b2 = b.slice_cols(4, 10);
+        let cat = Matrix::hcat(&[&matmul(&a, &b1), &matmul(&a, &b2)]);
+        assert!(cat.max_abs_diff(&matmul(&a, &b)) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_sums_over_row_shards() {
+        // Row-TP premise: A·B == Σ_r A[:,shard_r]·B[shard_r,:].
+        let mut g = Xoshiro256::new(4);
+        let a = Matrix::randn(3, 8, &mut g);
+        let b = Matrix::randn(8, 5, &mut g);
+        let partial = matmul(&a.slice_cols(0, 4), &b.slice_rows(0, 4))
+            .add(&matmul(&a.slice_cols(4, 8), &b.slice_rows(4, 8)));
+        assert!(partial.max_abs_diff(&matmul(&a, &b)) < 1e-5);
+    }
+}

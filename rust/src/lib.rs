@@ -1,0 +1,45 @@
+//! # tpaware — TP-Aware Dequantization
+//!
+//! A reproduction of *"TP-Aware Dequantization"* (Hoque, Yang, Srivatsa,
+//! Ganti — IBM T.J. Watson Research Center, 2024) as a three-layer
+//! rust + JAX + Pallas serving stack.
+//!
+//! The paper's contribution is an offline weight-reordering scheme for
+//! GPTQ-quantized (`act_order=True`) models deployed with Megatron-style
+//! tensor parallelism: by permuting the *columns* of the Column-TP weight
+//! `W1` with the *row* permutation `P2` of the subsequent Row-TP weight
+//! `W2`, the intermediate activation `Y1` emerges already aligned for the
+//! second GEMM and the inter-layer **AllGather disappears** (Algorithm 3,
+//! "TP-Aware Algorithm" vs Algorithm 2, "Naive Algorithm").
+//!
+//! Layer map (see `DESIGN.md` for the full inventory):
+//!
+//! * [`quant`] — GPTQ quantizer, int4 packing, group-index algebra
+//!   (Eq. 1 / Eq. 3 / Algorithm 1), permutation algebra.
+//! * [`gemm`] — host dequant + GEMM engine (the ExllamaV2 stand-in).
+//! * [`tp`] — thread-per-rank tensor-parallel runtime: topology,
+//!   byte-moving collectives, interconnect profiles.
+//! * [`model`] — model configs (Llama-70B / Granite-20B problem sizes,
+//!   tiny serving model), sharded MLP implementing Algorithms 2 and 3,
+//!   attention, transformer, KV cache.
+//! * [`simkernel`] — A100/H100 hardware profiles and the calibrated cost
+//!   models that regenerate the paper's tables and figures.
+//! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` produced by
+//!   the python AOT path and executes them on the request path.
+//! * [`coordinator`] — the L3 serving system: router, dynamic batcher,
+//!   scheduler, TP engine, metrics.
+//! * [`util`] — offline-friendly foundations: argparse, JSON, PRNG,
+//!   bench timer/statistics, table rendering.
+
+pub mod coordinator;
+pub mod gemm;
+pub mod tensor;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod simkernel;
+pub mod tp;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

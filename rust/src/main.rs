@@ -1,0 +1,418 @@
+//! `tpaware` — launcher CLI for the TP-Aware Dequantization stack.
+//!
+//! Subcommands:
+//!   serve       start the serving server (tiny transformer, TP MLPs)
+//!   client      send a generation request to a running server
+//!   tables      print the paper's tables from the calibrated model
+//!   measure     measured-mode Alg.2 vs Alg.3 on thread ranks (host/PJRT)
+//!   quantize    quantize a synthetic checkpoint and report error stats
+//!   validate    run the cross-layer validation suite (PJRT vs host oracle)
+
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::coordinator::server::{Client, Server};
+use tpaware::model::config::ModelConfig;
+use tpaware::model::transformer::Transformer;
+use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
+use tpaware::quant::gptq::{hessian, hessian_loss, quantize_gptq, quantize_rtn, GptqConfig};
+use tpaware::runtime::artifact::Manifest;
+use tpaware::simkernel::gemm_model::WeightDtype;
+use tpaware::simkernel::gpu::GpuSpec;
+use tpaware::simkernel::pipeline::{self, Algo, MlpShape};
+use tpaware::simkernel::paper_data;
+use tpaware::tensor::Matrix;
+use tpaware::tp::topology::Topology;
+use tpaware::util::argparse::{ArgError, Command};
+use tpaware::util::prng::Xoshiro256;
+use tpaware::util::table::Table;
+use tpaware::util::timer::{bench, BenchCfg};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            if let Some(ArgError::Help(h)) = e.downcast_ref::<ArgError>() {
+                println!("{h}");
+                0
+            } else {
+                eprintln!("error: {e:#}");
+                1
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "tpaware — TP-Aware Dequantization (Hoque et al. 2024) reproduction
+
+Usage: tpaware <subcommand> [flags]
+
+Subcommands:
+  serve      start the serving server
+  client     send a request to a running server
+  tables     regenerate the paper's tables (modeled A100/H100)
+  measure    measured Alg.2 vs Alg.3 on this machine's thread ranks
+  quantize   GPTQ a synthetic layer; report error statistics
+  validate   cross-layer validation: PJRT artifacts vs host oracle
+
+Run `tpaware <subcommand> --help` for flags.
+"
+    .to_string()
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "tables" => cmd_tables(rest),
+        "measure" => cmd_measure(rest),
+        "quantize" => cmd_quantize(rest),
+        "validate" => cmd_validate(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n\n{}", usage()),
+    }
+}
+
+fn parse_algo(s: &str) -> Result<Algo> {
+    match s {
+        "naive" => Ok(Algo::Naive),
+        "tp-aware" | "tp_aware" | "aware" => Ok(Algo::TpAware),
+        _ => Err(anyhow!("algo must be 'naive' or 'tp-aware'")),
+    }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = Command::new("serve", "start the serving server")
+        .flag("addr", "127.0.0.1:7411", "listen address")
+        .flag("model", "tiny", "model config (tiny)")
+        .flag("tp", "2", "tensor-parallel width")
+        .flag("algo", "tp-aware", "deployment algorithm: naive | tp-aware")
+        .flag("backend", "pjrt", "mlp backend: pjrt | host")
+        .flag("max-batch", "8", "largest decode batch")
+        .flag("seed", "42", "weight synthesis seed")
+        .flag("artifacts", "artifacts", "artifacts directory");
+    let a = spec.parse(args)?;
+    let cfg = ModelConfig::by_name(a.get("model"))
+        .ok_or_else(|| anyhow!("unknown model '{}'", a.get("model")))?;
+    let tp = Topology::new(a.usize("tp")?);
+    let algo = parse_algo(a.get("algo"))?;
+    let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, a.u64("seed")?));
+    eprintln!(
+        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}",
+        cfg.name, cfg.n_layers, cfg.d_model, cfg.d_ff, tp.size
+    );
+    let engine = match a.get("backend") {
+        "host" => Some(TpEngine::start(
+            EngineBackend::Host,
+            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
+            cfg.activation,
+            None,
+        )?),
+        "pjrt" => {
+            let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
+            Some(TpEngine::start(
+                EngineBackend::Pjrt {
+                    model: cfg.name.clone(),
+                },
+                model.blocks.iter().map(|b| b.mlp.clone()).collect(),
+                cfg.activation,
+                Some(&manifest),
+            )?)
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+    eprintln!("engine up ({} backend)", a.get("backend"));
+    let scheduler = Scheduler::new(
+        model,
+        engine,
+        Arc::new(Metrics::default()),
+        a.usize("max-batch")?,
+    );
+    let server = Server::start(a.get("addr"), scheduler)?;
+    println!("listening on {}", server.addr);
+    // Serve until a client sends {"cmd":"shutdown"}.
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+}
+
+fn cmd_client(args: &[String]) -> Result<()> {
+    let spec = Command::new("client", "send a generation request")
+        .flag("addr", "127.0.0.1:7411", "server address")
+        .flag("prompt", "1,2,3", "comma-separated prompt token ids")
+        .flag("max-new", "8", "tokens to generate")
+        .switch("metrics", "fetch metrics instead")
+        .switch("shutdown", "ask the server to shut down");
+    let a = spec.parse(args)?;
+    let mut c = Client::connect(a.get("addr"))?;
+    if a.on("metrics") {
+        println!("{}", c.metrics()?.to_pretty());
+        return Ok(());
+    }
+    if a.on("shutdown") {
+        c.shutdown()?;
+        println!("shutdown sent");
+        return Ok(());
+    }
+    let prompt: Vec<u32> = a
+        .get("prompt")
+        .split(',')
+        .map(|t| t.trim().parse::<u32>().map_err(|_| anyhow!("bad token")))
+        .collect::<Result<_>>()?;
+    let r = c.generate(&prompt, a.usize("max-new")?)?;
+    println!(
+        "id={} tokens={:?} ttft={:.2}ms total={:.2}ms",
+        r.id, r.tokens, r.ttft_ms, r.total_ms
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &[String]) -> Result<()> {
+    let spec = Command::new("tables", "regenerate the paper's tables (modeled)")
+        .flag("model", "all", "llama-70b | granite-20b | all")
+        .flag("gpu", "all", "a100 | h100 | all")
+        .flag("tp", "1,2,4,8", "TP widths");
+    let a = spec.parse(args)?;
+    let models: Vec<&str> = match a.get("model") {
+        "all" => vec!["llama-70b", "granite-20b"],
+        m => vec![Box::leak(m.to_string().into_boxed_str())],
+    };
+    let gpus: Vec<&str> = match a.get("gpu") {
+        "all" => vec!["a100", "h100"],
+        g => vec![Box::leak(g.to_string().into_boxed_str())],
+    };
+    for model in &models {
+        let shape = MlpShape::by_name(model).ok_or_else(|| anyhow!("bad model"))?;
+        for gpu_name in &gpus {
+            let gpu = GpuSpec::by_name(gpu_name).ok_or_else(|| anyhow!("bad gpu"))?;
+            for &tp in &a.usize_list("tp")? {
+                print!("{}", render_table(model, shape, &gpu, gpu_name, tp));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Render one modeled latency table, with the paper's numbers inline.
+fn render_table(
+    model: &str,
+    shape: MlpShape,
+    gpu: &GpuSpec,
+    gpu_name: &str,
+    tp: usize,
+) -> String {
+    let paper = paper_data::find(model, gpu_name, tp);
+    let mut t = Table::new(
+        &format!("{model} TP={tp} {}", gpu.name),
+        &[
+            "M",
+            "K1,N1,N2",
+            "Naive (ms)",
+            "TP-Aware (ms)",
+            "Speedup",
+            "Paper naive",
+            "Paper aware",
+            "Paper speedup",
+        ],
+    );
+    let mut speedups = Vec::new();
+    for (i, &m) in [1usize, 2, 4, 8, 16].iter().enumerate() {
+        let naive =
+            pipeline::mlp_latency(gpu, shape, m, tp, Algo::Naive, WeightDtype::F16, false)
+                .total_ms();
+        let aware =
+            pipeline::mlp_latency(gpu, shape, m, tp, Algo::TpAware, WeightDtype::F16, false)
+                .total_ms();
+        speedups.push(naive / aware);
+        let (pn, pa) = paper
+            .map(|p| {
+                let r = p.rows[i];
+                (format!("{:.3}", r.1), format!("{:.3}", r.2))
+            })
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        let ps = paper
+            .map(|p| format!("{:.2}x", p.rows[i].1 / p.rows[i].2))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            m.to_string(),
+            format!("({}, {}, {})", shape.k1, shape.n1, shape.n2),
+            format!("{naive:.3}"),
+            format!("{aware:.3}"),
+            format!("{:.2}x", naive / aware),
+            pn,
+            pa,
+            ps,
+        ]);
+    }
+    let avg: f64 = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let paper_avg = paper
+        .and_then(|p| p.avg_speedup)
+        .map(|s| format!(" (paper: {s:.2}x)"))
+        .unwrap_or_default();
+    format!("{}\nAverage speedup: {avg:.2}x{paper_avg}\n\n", t.render())
+}
+
+fn cmd_measure(args: &[String]) -> Result<()> {
+    let spec = Command::new("measure", "measured Alg.2 vs Alg.3 on thread ranks")
+        .flag("model", "llama-scaled", "llama-scaled | granite-scaled | tiny")
+        .flag("tp", "1,2,4", "TP widths")
+        .flag("m", "1,4,16", "batch sizes")
+        .flag("seed", "7", "weight seed");
+    let a = spec.parse(args)?;
+    let cfg = ModelConfig::by_name(a.get("model"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let shape = cfg.mlp_shape();
+    let qcfg = GptqConfig {
+        group_size: cfg.group_size,
+        act_order: true,
+        ..Default::default()
+    };
+    let ckpt = gen_checkpoint(shape, a.u64("seed")?);
+    println!(
+        "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}",
+        shape.k1, shape.n1, shape.n2, cfg.group_size
+    );
+    let mut t = Table::new(
+        "Measured (thread ranks, fused-dequant host kernels)",
+        &["TP", "M", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
+    );
+    for &tp in &a.usize_list("tp")? {
+        let topo = Topology::new(tp);
+        let dn = deploy_quantized(&ckpt, &qcfg, Algo::Naive, topo);
+        let da = deploy_quantized(&ckpt, &qcfg, Algo::TpAware, topo);
+        for &m in &a.usize_list("m")? {
+            let mut rng = Xoshiro256::new(99);
+            let x = Matrix::randn(m, shape.k1, &mut rng);
+            let bcfg = BenchCfg::quick().from_env();
+            let gn = tpaware::tp::collectives::CollectiveGroup::new(tp);
+            let sn = bench(&bcfg, || {
+                tpaware::model::mlp::run_mlp_with_group(
+                    &dn,
+                    &x,
+                    cfg.activation,
+                    &gn,
+                );
+            });
+            let ga = tpaware::tp::collectives::CollectiveGroup::new(tp);
+            let sa = bench(&bcfg, || {
+                tpaware::model::mlp::run_mlp_with_group(
+                    &da,
+                    &x,
+                    cfg.activation,
+                    &ga,
+                );
+            });
+            t.row(vec![
+                tp.to_string(),
+                m.to_string(),
+                format!("{:.3}", sn.mean_ms()),
+                format!("{:.3}", sa.mean_ms()),
+                format!("{:.2}x", sn.mean_ns / sa.mean_ns),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_quantize(args: &[String]) -> Result<()> {
+    let spec = Command::new("quantize", "GPTQ a synthetic layer")
+        .flag("k", "128", "input features")
+        .flag("n", "64", "output features")
+        .flag("group-size", "32", "quantization group size")
+        .flag("seed", "1", "seed")
+        .switch("no-act-order", "disable act_order");
+    let a = spec.parse(args)?;
+    let (k, n, g) = (a.usize("k")?, a.usize("n")?, a.usize("group-size")?);
+    let mut rng = Xoshiro256::new(a.u64("seed")?);
+    let w = Matrix::randn(k, n, &mut rng);
+    let calib = Matrix::from_fn(2 * k, k, |_, c| {
+        rng.normal() * (0.1 + 2.0 * (c as f32 / k as f32))
+    });
+    let h = hessian(&calib, 0.01);
+    let cfg = GptqConfig {
+        group_size: g,
+        act_order: !a.on("no-act-order"),
+        ..Default::default()
+    };
+    let q = quantize_gptq(&w, &calib, &cfg);
+    let rtn = quantize_rtn(&w, &cfg);
+    let gptq_loss = hessian_loss(&w, &q.dequantize(), &h);
+    let rtn_loss = hessian_loss(&w, &rtn.dequantize(), &h);
+    println!("GPTQ quantization report  (K={k}, N={n}, G={g}, act_order={})", cfg.act_order);
+    println!("  hessian-weighted loss: gptq {gptq_loss:.4}  rtn {rtn_loss:.4}  (ratio {:.3})", gptq_loss / rtn_loss);
+    println!("  g_idx ordered: {}", q.gidx.is_ordered());
+    println!("  metadata loads (naive walk): {} / ordered: {}", q.gidx.metadata_loads(), q.gidx.num_groups());
+    let (p, q_opt) = q.reorder();
+    println!("  after Algorithm 1: ordered={} loads={}", q_opt.gidx.is_ordered(), q_opt.gidx.metadata_loads());
+    println!("  P[0..8] = {:?}", &p[..8.min(p.len())]);
+    println!("  bytes: packed+meta {} (fp16 would be {})", q.nbytes(), k * n * 2);
+    Ok(())
+}
+
+fn cmd_validate(args: &[String]) -> Result<()> {
+    let spec = Command::new("validate", "PJRT artifacts vs host oracle")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "tiny", "manifest model name")
+        .flag("tp", "2", "TP width");
+    let a = spec.parse(args)?;
+    let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
+    let cfg = ModelConfig::by_name(a.get("model"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let tp = Topology::new(a.usize("tp")?);
+    let shape = cfg.mlp_shape();
+    let qcfg = GptqConfig {
+        group_size: cfg.group_size,
+        act_order: true,
+        ..Default::default()
+    };
+    let ckpt = gen_checkpoint(shape, 5);
+    let mut failures = 0;
+    for algo in [Algo::TpAware, Algo::Naive] {
+        let d = deploy_quantized(&ckpt, &qcfg, algo, tp);
+        let engine = TpEngine::start(
+            EngineBackend::Pjrt {
+                model: cfg.name.clone(),
+            },
+            vec![d.clone()],
+            cfg.activation,
+            Some(&manifest),
+        )?;
+        for m in manifest.m_buckets(&cfg.name, "fused", tp.size) {
+            let mut rng = Xoshiro256::new(m as u64);
+            let x = Matrix::randn(m, shape.k1, &mut rng);
+            let got = engine.mlp(0, &x)?;
+            let expect =
+                tpaware::model::mlp::run_mlp_sequential(&d, &x, cfg.activation);
+            let diff = got.max_abs_diff(&expect);
+            let ok = diff < 1e-3;
+            println!(
+                "{algo:?} tp={} m={m}: max|Δ| = {diff:.2e} {}",
+                tp.size,
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+        engine.shutdown();
+    }
+    if failures > 0 {
+        bail!("{failures} validation failures");
+    }
+    println!("all validations passed");
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Model layer: configurations, synthetic checkpoints, the TP-deployed
+//! MLP executing the paper's Algorithms 2 & 3, and the tiny serving
+//! transformer.
+//!
+//! * [`config`] — model/problem-size configurations and activations.
+//! * [`weights`] — synthetic checkpoint generation, GPTQ quantization,
+//!   Algorithm-1 reordering, the TP-aware `W1[P1, P2]` offline transform,
+//!   and per-rank sharding (dense and quantized).
+//! * [`mlp`] — runtime execution of Algorithm 2 (Naive: AllGather +
+//!   reorder + chunk) and Algorithm 3 (TP-Aware: no inter-layer comm)
+//!   over real rank threads, with per-phase timing.
+//! * [`transformer`] — the end-to-end serving model: MHA + KV cache +
+//!   quantized TP MLPs.
+
+pub mod config;
+pub mod mlp;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{Activation, ModelConfig};
+pub use transformer::{KvCache, Transformer};
+pub use weights::{DeployedMlp, LayerShard};

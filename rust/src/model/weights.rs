@@ -1,0 +1,333 @@
+//! Synthetic checkpoint generation and offline deployment preparation.
+//!
+//! The paper's checkpoints (Llama-70B / Granite-20B GPTQ exports) are not
+//! available here; latency-wise only shapes/dtypes/orderings matter (see
+//! DESIGN.md substitution table), so weights are generated synthetically,
+//! quantized by our GPTQ implementation, and then prepared for deployment
+//! exactly as the paper describes:
+//!
+//! 1. quantize `W1`, `W2` with `act_order=True` → unordered `g_idx` (Eq. 3);
+//! 2. Algorithm 1 (`reorder`) each layer offline → `P1`, `P2` and
+//!    locality-ordered layouts;
+//! 3. **Naive deployment** (Algorithm 2): column-shard `W1[P1, :]`,
+//!    row-shard `W2[P2, :]`; runtime pays AllGather + reorder + chunk.
+//! 4. **TP-Aware deployment** (Algorithm 3): additionally gather `W1`'s
+//!    columns by `P2` *offline* — column-shard `W1[P1, P2]` — so the
+//!    runtime pays nothing between the layers.
+//!
+//! Both deployments also exist in a dense-FP16-style variant
+//! ([`LayerShard::Dense`]) because the paper benchmarks FP16 GEMMs "to
+//! demonstrate the communication benefit" in isolation.
+
+use crate::gemm::fused::{dequant_matmul_naive, dequant_matmul_ordered};
+use crate::gemm::naive::matmul_blocked;
+use crate::quant::gptq::{quantize_gptq, GptqConfig, QuantizedLinear};
+use crate::quant::pack::pack;
+use crate::quant::perm;
+use crate::simkernel::pipeline::{Algo, MlpShape};
+use crate::tensor::Matrix;
+use crate::tp::sharding::{col_shard, col_shard_quant, row_shard, row_shard_quant};
+use crate::tp::topology::Topology;
+use crate::util::prng::Xoshiro256;
+
+/// Gather the columns of a quantized layer by `p` (metadata moves with the
+/// column) — the quantized version of the paper's `W1[:, P2]` transform.
+pub fn permute_cols_quant(q: &QuantizedLinear, p: &[u32]) -> QuantizedLinear {
+    assert_eq!(p.len(), q.n());
+    let (k, n) = (q.k(), q.n());
+    let mut vals = vec![0u32; k * n];
+    for kk in 0..k {
+        for (j, &src) in p.iter().enumerate() {
+            vals[kk * n + j] = q.packed.get(kk, src as usize);
+        }
+    }
+    QuantizedLinear {
+        packed: pack(&vals, k, n, q.bits),
+        scales: perm::apply_cols(&q.scales, p),
+        zeros: perm::apply_cols(&q.zeros, p),
+        gidx: q.gidx.clone(),
+        phi: q.phi.clone(),
+        bits: q.bits,
+    }
+}
+
+/// One rank's shard of one linear layer, dense or quantized.
+#[derive(Clone, Debug)]
+pub enum LayerShard {
+    /// FP16-style dense weights (stored f32 host-side).
+    Dense(Matrix),
+    /// GPTQ weights in the Algorithm-1 (ordered `g_idx`) layout.
+    Quant(QuantizedLinear),
+}
+
+impl LayerShard {
+    /// `x @ W` for this shard.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            LayerShard::Dense(w) => matmul_blocked(x, w),
+            LayerShard::Quant(q) => {
+                if q.gidx.is_ordered() {
+                    dequant_matmul_ordered(x, q)
+                } else {
+                    dequant_matmul_naive(x, q)
+                }
+            }
+        }
+    }
+
+    /// Input features.
+    pub fn k(&self) -> usize {
+        match self {
+            LayerShard::Dense(w) => w.rows,
+            LayerShard::Quant(q) => q.k(),
+        }
+    }
+
+    /// Output features.
+    pub fn n(&self) -> usize {
+        match self {
+            LayerShard::Dense(w) => w.cols,
+            LayerShard::Quant(q) => q.n(),
+        }
+    }
+
+    /// Weight bytes this shard streams per GEMM (for roofline accounting).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            LayerShard::Dense(w) => w.data.len() * 2, // modeled as f16
+            LayerShard::Quant(q) => q.nbytes(),
+        }
+    }
+}
+
+/// A deployable, sharded two-layer MLP with its permutation metadata.
+#[derive(Clone, Debug)]
+pub struct DeployedMlp {
+    pub algo: Algo,
+    pub tp: Topology,
+    /// First-layer row permutation (Algorithm 1 of `W1`).
+    pub p1: Vec<u32>,
+    /// Second-layer row permutation (Algorithm 1 of `W2`).
+    pub p2: Vec<u32>,
+    /// Per-rank column shards of `W1[P1, :]` (naive) or `W1[P1, P2]`
+    /// (tp-aware).
+    pub w1_shards: Vec<LayerShard>,
+    /// Per-rank row shards of `W2[P2, :]`.
+    pub w2_shards: Vec<LayerShard>,
+}
+
+/// An unquantized synthetic MLP checkpoint plus calibration data.
+#[derive(Clone, Debug)]
+pub struct MlpCheckpoint {
+    pub shape: MlpShape,
+    pub w1: Matrix,
+    pub w2: Matrix,
+    /// Calibration activations for the first layer (`S × K1`).
+    pub calib: Matrix,
+}
+
+/// Generate a synthetic MLP checkpoint with skewed channel statistics
+/// (so `act_order` has real signal, as with real LLM activations).
+pub fn gen_checkpoint(shape: MlpShape, seed: u64) -> MlpCheckpoint {
+    let mut rng = Xoshiro256::new(seed);
+    let w1 = Matrix::randn(shape.k1, shape.n1, &mut rng);
+    let w2 = Matrix::randn(shape.n1, shape.n2, &mut rng);
+    // Channel scales spanning ~2 orders of magnitude, shuffled.
+    let mut ch: Vec<f32> = (0..shape.k1)
+        .map(|i| 0.1 + 3.0 * (i as f32 / shape.k1 as f32).powi(2))
+        .collect();
+    rng.shuffle(&mut ch);
+    let s = 2 * shape.k1.min(128);
+    let calib = Matrix::from_fn(s, shape.k1, |_, c| rng.normal() * ch[c]);
+    MlpCheckpoint {
+        shape,
+        w1,
+        w2,
+        calib,
+    }
+}
+
+/// Quantize both layers with `act_order` GPTQ and apply Algorithm 1,
+/// returning the reordered layers and their permutations
+/// `(P1, W1[P1,:], P2, W2[P2,:])`.
+pub fn quantize_and_reorder(
+    ckpt: &MlpCheckpoint,
+    cfg: &GptqConfig,
+) -> (Vec<u32>, QuantizedLinear, Vec<u32>, QuantizedLinear) {
+    let q1 = quantize_gptq(&ckpt.w1, &ckpt.calib, cfg);
+    let (p1, q1r) = q1.reorder();
+    // Calibration for W2: propagate the calibration batch through layer 1.
+    let y1 = matmul_blocked(&ckpt.calib, &q1.dequantize());
+    let q2 = quantize_gptq(&ckpt.w2, &y1, cfg);
+    let (p2, q2r) = q2.reorder();
+    (p1, q1r, p2, q2r)
+}
+
+/// Prepare a quantized deployment for `algo` at tensor-parallel width `tp`.
+pub fn deploy_quantized(
+    ckpt: &MlpCheckpoint,
+    cfg: &GptqConfig,
+    algo: Algo,
+    tp: Topology,
+) -> DeployedMlp {
+    let (p1, q1r, p2, q2r) = quantize_and_reorder(ckpt, cfg);
+    let w1_full = match algo {
+        Algo::Naive => q1r,
+        // The paper's offline transform: W1[P1, P2].
+        Algo::TpAware => permute_cols_quant(&q1r, &p2),
+    };
+    let w1_shards = (0..tp.size)
+        .map(|r| LayerShard::Quant(col_shard_quant(&w1_full, tp, r)))
+        .collect();
+    let w2_shards = (0..tp.size)
+        .map(|r| LayerShard::Quant(row_shard_quant(&q2r, tp, r)))
+        .collect();
+    DeployedMlp {
+        algo,
+        tp,
+        p1,
+        p2,
+        w1_shards,
+        w2_shards,
+    }
+}
+
+/// Prepare a dense (FP16-style) deployment: same permutation plumbing as
+/// the quantized path — the paper benchmarks this configuration — with
+/// `P1`/`P2` taken from the quantizer so the orderings are realistic.
+pub fn deploy_dense(
+    ckpt: &MlpCheckpoint,
+    cfg: &GptqConfig,
+    algo: Algo,
+    tp: Topology,
+) -> DeployedMlp {
+    let (p1, q1r, p2, q2r) = quantize_and_reorder(ckpt, cfg);
+    // Dense weights in the same reordered layouts the kernels would see.
+    let w1r = q1r.dequantize(); // = W1̂[P1, :]
+    let w2r = q2r.dequantize(); // = W2̂[P2, :]
+    let w1_full = match algo {
+        Algo::Naive => w1r,
+        Algo::TpAware => perm::apply_cols(&w1r, &p2),
+    };
+    let w1_shards = (0..tp.size)
+        .map(|r| LayerShard::Dense(col_shard(&w1_full, tp, r)))
+        .collect();
+    let w2_shards = (0..tp.size)
+        .map(|r| LayerShard::Dense(row_shard(&w2r, tp, r)))
+        .collect();
+    DeployedMlp {
+        algo,
+        tp,
+        p1,
+        p2,
+        w1_shards,
+        w2_shards,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_shape() -> MlpShape {
+        MlpShape {
+            k1: 32,
+            n1: 64,
+            n2: 32,
+        }
+    }
+
+    fn cfg() -> GptqConfig {
+        GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn permute_cols_quant_matches_dense_gather() {
+        let ckpt = gen_checkpoint(small_shape(), 1);
+        let q = quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg());
+        let mut rng = Xoshiro256::new(2);
+        let p = rng.permutation(q.n());
+        let permuted = permute_cols_quant(&q, &p);
+        let expect = perm::apply_cols(&q.dequantize(), &p);
+        assert!(permuted.dequantize().max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn deployments_have_consistent_shard_shapes() {
+        let ckpt = gen_checkpoint(small_shape(), 3);
+        let tp = Topology::new(4);
+        for algo in [Algo::Naive, Algo::TpAware] {
+            let d = deploy_quantized(&ckpt, &cfg(), algo, tp);
+            assert_eq!(d.w1_shards.len(), 4);
+            for s in &d.w1_shards {
+                assert_eq!(s.k(), 32);
+                assert_eq!(s.n(), 16);
+            }
+            for s in &d.w2_shards {
+                assert_eq!(s.k(), 16);
+                assert_eq!(s.n(), 32);
+            }
+            assert!(perm::is_permutation(&d.p1));
+            assert!(perm::is_permutation(&d.p2));
+        }
+    }
+
+    #[test]
+    fn tp_aware_w1_shards_equal_naive_shards_of_colpermuted_w1() {
+        // Shard-consistency lemma: col-shard(W1[P1,P2], r) ==
+        // (col-shards of W1[P1,:] recombined)[:, P2] sliced at r.
+        let ckpt = gen_checkpoint(small_shape(), 4);
+        let tp = Topology::new(2);
+        let naive = deploy_dense(&ckpt, &cfg(), Algo::Naive, tp);
+        let aware = deploy_dense(&ckpt, &cfg(), Algo::TpAware, tp);
+        // Reassemble the naive W1 and apply P2 globally.
+        let parts: Vec<Matrix> = naive
+            .w1_shards
+            .iter()
+            .map(|s| match s {
+                LayerShard::Dense(m) => m.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        let full = Matrix::hcat(&refs);
+        let full_p2 = perm::apply_cols(&full, &naive.p2);
+        for r in 0..2 {
+            let (lo, hi) = tp.shard_range(full.cols, r);
+            let expect = full_p2.slice_cols(lo, hi);
+            match &aware.w1_shards[r] {
+                LayerShard::Dense(m) => assert!(m.max_abs_diff(&expect) < 1e-6),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn layer_shard_forward_dense_vs_quant_agree_on_dequantized_weights() {
+        let ckpt = gen_checkpoint(small_shape(), 5);
+        let q = quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg());
+        let (_, qr) = q.reorder();
+        let dense = LayerShard::Dense(qr.dequantize());
+        let quant = LayerShard::Quant(qr.clone());
+        let mut rng = Xoshiro256::new(6);
+        let x = Matrix::randn(3, 32, &mut rng);
+        let a = dense.forward(&x);
+        let b = quant.forward(&x);
+        assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn quant_shard_bytes_smaller_than_dense() {
+        let ckpt = gen_checkpoint(small_shape(), 7);
+        let tp = Topology::new(2);
+        let qd = deploy_quantized(&ckpt, &cfg(), Algo::TpAware, tp);
+        let dd = deploy_dense(&ckpt, &cfg(), Algo::TpAware, tp);
+        // 4-bit + metadata < 16-bit dense. (Tiny shapes have relatively
+        // more metadata; still a clear win.)
+        assert!(qd.w1_shards[0].nbytes() < dd.w1_shards[0].nbytes());
+    }
+}

@@ -1,0 +1,205 @@
+//! Group-index arrays — Equations 1 & 3 and Algorithm 1 of the paper.
+//!
+//! The group index array `g_idx` relates each of the `K` input channels
+//! (rows of the `K×N` weight) to its quantization group, whose metadata
+//! (scale, zero) is shared by `group_size` channels:
+//!
+//! * Eq. 1 (`naive`):      `g_idx[i] = i / G` — monotone by construction.
+//! * Eq. 3 (`act_order`):  `g_idx[i] = φ(i) / G` for a salience permutation
+//!   φ — *unordered*, so a kernel walking rows in storage order keeps
+//!   re-loading different groups' metadata.
+//! * Algorithm 1 (`reorder`): `P = argsort(g_idx)`; gathering by `P` makes
+//!   `g_idx` monotone again (ExllamaV2's trick), at the price of having to
+//!   feed the layer `X[:, P]` — which is what creates the TP communication
+//!   problem the paper solves.
+
+use crate::quant::perm;
+
+/// A group index array together with its group size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupIndex {
+    /// `g_idx[i]` = group of input channel `i`; length `K`.
+    pub idx: Vec<u32>,
+    /// Channels per group (`G`).
+    pub group_size: usize,
+}
+
+impl GroupIndex {
+    /// Eq. 1 — the naive (monotone) group index array.
+    pub fn naive(k: usize, group_size: usize) -> GroupIndex {
+        assert!(group_size > 0 && k % group_size == 0, "K must be a multiple of G");
+        GroupIndex {
+            idx: (0..k).map(|i| (i / group_size) as u32).collect(),
+            group_size,
+        }
+    }
+
+    /// Eq. 3 — the `act_order` group index array induced by permutation φ:
+    /// `g_idx[i] = φ(i) / G`. `phi[i]` is the *quantization-order position*
+    /// of channel `i` (channels quantized earlier land in earlier groups).
+    pub fn act_order(phi: &[u32], group_size: usize) -> GroupIndex {
+        assert!(perm::is_permutation(phi), "φ must be a permutation");
+        assert!(group_size > 0 && phi.len() % group_size == 0);
+        GroupIndex {
+            idx: phi.iter().map(|&p| p / group_size as u32).collect(),
+            group_size,
+        }
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.idx.len() / self.group_size
+    }
+
+    /// Length `K`.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// True iff `g_idx` is non-decreasing (the data-local layout).
+    pub fn is_ordered(&self) -> bool {
+        self.idx.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    /// Algorithm 1 (`reorder`): returns `(P, g_idx_optimized)` where
+    /// `P = argsort(g_idx)` (stable) and `g_idx_optimized = g_idx[P]` is
+    /// monotone with every group's channels contiguous.
+    pub fn reorder(&self) -> (Vec<u32>, GroupIndex) {
+        let p = perm::argsort(&self.idx);
+        let sorted = perm::apply_vec(&self.idx, &p);
+        (
+            p,
+            GroupIndex {
+                idx: sorted,
+                group_size: self.group_size,
+            },
+        )
+    }
+
+    /// Metadata-load count for a kernel that walks channels in storage
+    /// order and re-loads (scale, zero) whenever the group id *changes*
+    /// between consecutive channels. This is the locality statistic behind
+    /// Figures 1–2: ordered layouts load each group once
+    /// (`num_groups` loads), the act_order layout loads up to `K` times.
+    pub fn metadata_loads(&self) -> usize {
+        if self.idx.is_empty() {
+            return 0;
+        }
+        1 + self
+            .idx
+            .windows(2)
+            .filter(|w| w[0] != w[1])
+            .count()
+    }
+
+    /// Run-length histogram of consecutive equal group ids (diagnostics for
+    /// the locality model: mean run length == G ⇔ perfectly ordered).
+    pub fn run_lengths(&self) -> Vec<usize> {
+        let mut runs = Vec::new();
+        let mut cur = 0usize;
+        for i in 0..self.idx.len() {
+            cur += 1;
+            if i + 1 == self.idx.len() || self.idx[i + 1] != self.idx[i] {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn naive_matches_eq1() {
+        let g = GroupIndex::naive(8, 4);
+        assert_eq!(g.idx, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert!(g.is_ordered());
+        assert_eq!(g.num_groups(), 2);
+        assert_eq!(g.metadata_loads(), 2);
+    }
+
+    #[test]
+    fn act_order_with_identity_degenerates_to_naive() {
+        // DESIGN.md invariant: Eq. 3 with φ = id equals Eq. 1.
+        let k = 64;
+        let id: Vec<u32> = (0..k as u32).collect();
+        assert_eq!(
+            GroupIndex::act_order(&id, 8),
+            GroupIndex::naive(k, 8)
+        );
+    }
+
+    #[test]
+    fn act_order_is_generally_unordered() {
+        let mut rng = Xoshiro256::new(2);
+        let phi = rng.permutation(256);
+        let g = GroupIndex::act_order(&phi, 16);
+        assert!(!g.is_ordered());
+        // Far more metadata (re)loads than groups.
+        assert!(g.metadata_loads() > 4 * g.num_groups());
+    }
+
+    #[test]
+    fn reorder_postconditions() {
+        forall("Alg.1 output is monotone permutation-gather", 100, |rng| {
+            let groups = 1 + rng.below(16);
+            let gsize = 1 + rng.below(8);
+            let k = groups * gsize;
+            let phi = rng.permutation(k);
+            let g = GroupIndex::act_order(&phi, gsize);
+            let (p, sorted) = g.reorder();
+            assert!(perm::is_permutation(&p));
+            assert!(sorted.is_ordered());
+            assert_eq!(perm::apply_vec(&g.idx, &p), sorted.idx);
+            // Each group appears exactly G consecutive times.
+            assert!(sorted.run_lengths().iter().all(|&r| r == gsize));
+            // Minimal metadata loads after reorder.
+            assert_eq!(sorted.metadata_loads(), sorted.num_groups());
+        });
+    }
+
+    #[test]
+    fn reorder_of_ordered_is_identity() {
+        let g = GroupIndex::naive(32, 8);
+        let (p, sorted) = g.reorder();
+        assert_eq!(p, perm::identity(32));
+        assert_eq!(sorted, g);
+    }
+
+    #[test]
+    fn metadata_loads_bounds() {
+        forall("num_groups <= loads <= K", 50, |rng| {
+            let groups = 1 + rng.below(8);
+            let gsize = 1 + rng.below(8);
+            let k = groups * gsize;
+            let phi = rng.permutation(k);
+            let g = GroupIndex::act_order(&phi, gsize);
+            let loads = g.metadata_loads();
+            assert!(loads >= g.num_groups());
+            assert!(loads <= k);
+        });
+    }
+
+    #[test]
+    fn run_lengths_sum_to_k() {
+        let mut rng = Xoshiro256::new(4);
+        let phi = rng.permutation(96);
+        let g = GroupIndex::act_order(&phi, 8);
+        assert_eq!(g.run_lengths().iter().sum::<usize>(), 96);
+    }
+
+    #[test]
+    #[should_panic(expected = "K must be a multiple of G")]
+    fn naive_rejects_ragged_groups() {
+        GroupIndex::naive(10, 4);
+    }
+}

@@ -1,0 +1,26 @@
+//! Quantization substrate: GPTQ, int4 packing, group-index algebra and the
+//! permutation machinery behind the paper's Algorithms 1–3.
+//!
+//! * [`gidx`] — group index arrays: Eq. 1 (naive), Eq. 3 (`act_order`),
+//!   Algorithm 1 (`reorder` = argsort → monotone `g_idx` + permutation `P`),
+//!   plus the locality statistics (metadata reload counts) that motivate it.
+//! * [`perm`] — permutation algebra: invert/compose/argsort, row/col
+//!   application, and the **TP-aware transform** (permute `W1`'s columns by
+//!   `P2`) that is the paper's key contribution.
+//! * [`pack`] — bit-packing of 4-bit (and general `b`-bit) integer weights
+//!   into `u32` words, matching the GPTQ on-disk convention.
+//! * [`gptq`] — the quantizer itself: Hessian accumulation from calibration
+//!   activations, `act_order` salience ordering, sequential column
+//!   quantization with error feedback through the Cholesky-inverted Hessian
+//!   (the actual GPTQ algorithm, not round-to-nearest).
+//! * [`dequant`] — host-side dequantization oracle used by tests and by the
+//!   host GEMM engine.
+
+pub mod dequant;
+pub mod gidx;
+pub mod gptq;
+pub mod pack;
+pub mod perm;
+
+pub use gidx::GroupIndex;
+pub use gptq::{GptqConfig, QuantizedLinear};

@@ -1,0 +1,148 @@
+//! Bit-packing of quantized integer weights into `u32` words, following the
+//! GPTQ/AutoGPTQ on-disk convention: values are packed along the K (input
+//! channel) dimension, least-significant nibble first, `32 / bits` values
+//! per word.
+//!
+//! For the default 4-bit case a `K×N` integer weight becomes a
+//! `(K/8)×N` `u32` matrix.
+
+/// Packed quantized weight buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedWeights {
+    /// Packed words, row-major `(k / per_word) × n`.
+    pub words: Vec<u32>,
+    /// Logical (unpacked) rows — `K`.
+    pub k: usize,
+    /// Columns — `N`.
+    pub n: usize,
+    /// Bits per value (2, 4 or 8).
+    pub bits: u32,
+}
+
+impl PackedWeights {
+    /// Values stored per `u32` word.
+    pub fn per_word(&self) -> usize {
+        (32 / self.bits) as usize
+    }
+
+    /// Packed row count `K / per_word`.
+    pub fn packed_rows(&self) -> usize {
+        self.k / self.per_word()
+    }
+
+    /// Extract the value at logical position `(k, n)`.
+    #[inline]
+    pub fn get(&self, k: usize, n: usize) -> u32 {
+        let per = self.per_word();
+        let word = self.words[(k / per) * self.n + n];
+        let shift = (k % per) as u32 * self.bits;
+        (word >> shift) & ((1 << self.bits) - 1)
+    }
+
+    /// Total heap bytes of the packed representation.
+    pub fn nbytes(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
+/// Pack integer values `q` (row-major `k × n`, each `< 2^bits`) into words.
+///
+/// `k` must be a multiple of `32 / bits`.
+pub fn pack(q: &[u32], k: usize, n: usize, bits: u32) -> PackedWeights {
+    assert!(matches!(bits, 2 | 4 | 8), "supported bit widths: 2/4/8");
+    let per = (32 / bits) as usize;
+    assert_eq!(q.len(), k * n, "value buffer size mismatch");
+    assert_eq!(k % per, 0, "K must be a multiple of {per} for {bits}-bit packing");
+    let mask = (1u32 << bits) - 1;
+    let mut words = vec![0u32; (k / per) * n];
+    for kk in 0..k {
+        let word_row = kk / per;
+        let shift = (kk % per) as u32 * bits;
+        for nn in 0..n {
+            let v = q[kk * n + nn];
+            debug_assert!(v <= mask, "value {v} exceeds {bits}-bit range");
+            words[word_row * n + nn] |= (v & mask) << shift;
+        }
+    }
+    PackedWeights { words, k, n, bits }
+}
+
+/// Unpack back to a row-major `k × n` value buffer.
+pub fn unpack(p: &PackedWeights) -> Vec<u32> {
+    let mut q = vec![0u32; p.k * p.n];
+    for kk in 0..p.k {
+        for nn in 0..p.n {
+            q[kk * p.n + nn] = p.get(kk, nn);
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn pack_unpack_roundtrip_4bit() {
+        forall("unpack(pack(x)) == x (4-bit)", 50, |g| {
+            let k = 8 * (1 + g.below(8));
+            let n = 1 + g.below(16);
+            let q: Vec<u32> = (0..k * n).map(|_| g.below(16) as u32).collect();
+            let p = pack(&q, k, n, 4);
+            assert_eq!(unpack(&p), q);
+            assert_eq!(p.packed_rows(), k / 8);
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_2_and_8_bit() {
+        forall("roundtrip 2/8-bit", 30, |g| {
+            for bits in [2u32, 8] {
+                let per = (32 / bits) as usize;
+                let k = per * (1 + g.below(4));
+                let n = 1 + g.below(8);
+                let q: Vec<u32> = (0..k * n).map(|_| g.below(1 << bits) as u32).collect();
+                assert_eq!(unpack(&pack(&q, k, n, bits)), q);
+            }
+        });
+    }
+
+    #[test]
+    fn layout_matches_gptq_convention() {
+        // 8 rows of a single column, 4-bit: first row in the low nibble.
+        let q: Vec<u32> = (0..8).collect();
+        let p = pack(&q, 8, 1, 4);
+        assert_eq!(p.words.len(), 1);
+        assert_eq!(p.words[0], 0x7654_3210);
+    }
+
+    #[test]
+    fn get_addresses_columns_independently() {
+        // 8 rows × 2 cols: col 0 = k, col 1 = 15 - k.
+        let mut q = Vec::new();
+        for k in 0..8u32 {
+            q.push(k);
+            q.push(15 - k);
+        }
+        let p = pack(&q, 8, 2, 4);
+        for k in 0..8 {
+            assert_eq!(p.get(k, 0), k as u32);
+            assert_eq!(p.get(k, 1), 15 - k as u32);
+        }
+    }
+
+    #[test]
+    fn nbytes_is_quarter_of_byte_per_value_4bit() {
+        let q = vec![0u32; 64 * 32];
+        let p = pack(&q, 64, 32, 4);
+        // 64*32 values at 4 bits = 1024 bytes.
+        assert_eq!(p.nbytes(), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 8")]
+    fn pack_rejects_ragged_k() {
+        pack(&vec![0u32; 5 * 3], 5, 3, 4);
+    }
+}

@@ -1,0 +1,274 @@
+//! Permutation algebra.
+//!
+//! Conventions (used consistently across the crate):
+//!
+//! * A permutation is a `Vec<u32>` `p` of length `n` containing each of
+//!   `0..n` exactly once.
+//! * "Applying" `p` to a sequence `x` means **gathering**: `y[i] = x[p[i]]`
+//!   — i.e. `y = x[p]` in numpy notation, matching the paper's `X[:, P]`.
+//! * [`apply_rows`]`(m, p)` = `m[p, :]`, [`apply_cols`]`(m, p)` = `m[:, p]`.
+//!
+//! The paper's Algorithm 3 insight, in this vocabulary: with
+//! `W1' = W1[P1, P2]` (rows gathered by `P1`, columns by `P2`) and
+//! `X' = X[:, P1]`, the product `Y1 = X' @ W1'` satisfies
+//! `Y1 = (X @ W1_orig… )[:, P2]` — i.e. `Y1` is *already* in `P2` order, so
+//! the Row-TP layer `W2[P2, :]` consumes it without any global reorder.
+//! [`tp_aware_align_w1`] implements exactly that offline transform, and the
+//! shard-consistency lemma (column shards of `W1[:, P2]` equal what each
+//! rank needs) is property-tested below.
+
+use crate::tensor::Matrix;
+
+/// True iff `p` contains each of `0..p.len()` exactly once.
+pub fn is_permutation(p: &[u32]) -> bool {
+    let n = p.len();
+    let mut seen = vec![false; n];
+    for &v in p {
+        let v = v as usize;
+        if v >= n || seen[v] {
+            return false;
+        }
+        seen[v] = true;
+    }
+    true
+}
+
+/// The identity permutation of length `n`.
+pub fn identity(n: usize) -> Vec<u32> {
+    (0..n as u32).collect()
+}
+
+/// Stable argsort of an arbitrary key slice: returns `p` with
+/// `keys[p[0]] <= keys[p[1]] <= …` (torch.argsort of the paper's Alg. 1).
+pub fn argsort<T: PartialOrd>(keys: &[T]) -> Vec<u32> {
+    let mut idx = identity(keys.len());
+    idx.sort_by(|&a, &b| {
+        keys[a as usize]
+            .partial_cmp(&keys[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Argsort descending (used for salience ordering in `act_order`).
+pub fn argsort_desc<T: PartialOrd>(keys: &[T]) -> Vec<u32> {
+    let mut idx = identity(keys.len());
+    idx.sort_by(|&a, &b| {
+        keys[b as usize]
+            .partial_cmp(&keys[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Inverse permutation: `inv[p[i]] = i`, so `x[p][inv] = x`.
+pub fn invert(p: &[u32]) -> Vec<u32> {
+    debug_assert!(is_permutation(p));
+    let mut inv = vec![0u32; p.len()];
+    for (i, &v) in p.iter().enumerate() {
+        inv[v as usize] = i as u32;
+    }
+    inv
+}
+
+/// Composition under gather semantics: applying `compose(p, q)` is the same
+/// as applying `q` first, then `p`:  `x[compose(p,q)] == (x[q])[p]`.
+/// Wait — careful: with gather semantics `(x[q])[p][i] = x[q[p[i]]]`, so
+/// `compose(p, q)[i] = q[p[i]]`.
+pub fn compose(p: &[u32], q: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(p.len(), q.len());
+    p.iter().map(|&i| q[i as usize]).collect()
+}
+
+/// Gather a vector: `y[i] = x[p[i]]`.
+pub fn apply_vec<T: Copy>(x: &[T], p: &[u32]) -> Vec<T> {
+    debug_assert_eq!(x.len(), p.len());
+    p.iter().map(|&i| x[i as usize]).collect()
+}
+
+/// Scatter a vector (inverse of gather): `y[p[i]] = x[i]`.
+pub fn scatter_vec<T: Copy + Default>(x: &[T], p: &[u32]) -> Vec<T> {
+    debug_assert_eq!(x.len(), p.len());
+    let mut y = vec![T::default(); x.len()];
+    for (i, &dst) in p.iter().enumerate() {
+        y[dst as usize] = x[i];
+    }
+    y
+}
+
+/// Row gather: `out = m[p, :]`.
+pub fn apply_rows(m: &Matrix, p: &[u32]) -> Matrix {
+    debug_assert_eq!(m.rows, p.len());
+    m.select_rows(p)
+}
+
+/// Column gather: `out = m[:, p]`.
+pub fn apply_cols(m: &Matrix, p: &[u32]) -> Matrix {
+    debug_assert_eq!(m.cols, p.len());
+    m.select_cols(p)
+}
+
+/// The paper's TP-aware offline transform (Algorithm 3 preparation):
+/// given the locality-reordered first-layer weight `W1[P1, :]` (rows already
+/// gathered by `P1`) and the second layer's row permutation `P2`, gather
+/// `W1`'s **columns** by `P2` so that `Y1 = X[:, P1] @ W1[P1, P2]` comes out
+/// pre-aligned for `W2[P2, :]` and the inter-layer AllGather disappears.
+pub fn tp_aware_align_w1(w1_rowperm: &Matrix, p2: &[u32]) -> Matrix {
+    apply_cols(w1_rowperm, p2)
+}
+
+/// Restriction of a global column permutation to one rank's column shard
+/// under Column-TP: rank `r` of `size` owns global columns
+/// `[r*n_per, (r+1)*n_per)`. Returns the local gather indices the rank
+/// would need — **only valid when the permutation maps the shard onto
+/// itself**; returns `None` otherwise. (This is exactly why the Naive
+/// Algorithm needs an AllGather: a global `P2` almost never preserves
+/// shard boundaries.)
+pub fn restrict_to_shard(p: &[u32], rank: usize, size: usize) -> Option<Vec<u32>> {
+    let n = p.len();
+    assert_eq!(n % size, 0, "permutation length must divide evenly");
+    let n_per = n / size;
+    let lo = (rank * n_per) as u32;
+    let hi = lo + n_per as u32;
+    let shard = &p[lo as usize..hi as usize];
+    if shard.iter().all(|&v| v >= lo && v < hi) {
+        Some(shard.iter().map(|&v| v - lo).collect())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn identity_is_permutation() {
+        assert!(is_permutation(&identity(10)));
+        assert!(is_permutation(&[]));
+    }
+
+    #[test]
+    fn rejects_non_permutations() {
+        assert!(!is_permutation(&[0, 0]));
+        assert!(!is_permutation(&[1, 2]));
+        assert!(!is_permutation(&[0, 3, 1]));
+    }
+
+    #[test]
+    fn argsort_sorts_keys() {
+        let keys = [3.0f32, 1.0, 2.0];
+        assert_eq!(argsort(&keys), vec![1, 2, 0]);
+        assert_eq!(argsort_desc(&keys), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn argsort_is_stable() {
+        let keys = [1.0f32, 0.0, 1.0, 0.0];
+        assert_eq!(argsort(&keys), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn invert_roundtrip_property() {
+        forall("x[p][invert(p)] == x", 100, |g: &mut Xoshiro256| {
+            let n = 1 + g.below(128);
+            let p = g.permutation(n);
+            let x: Vec<u32> = (0..n as u32).map(|i| i * 7 + 3).collect();
+            let y = apply_vec(&x, &p);
+            let back = apply_vec(&y, &invert(&p));
+            assert_eq!(back, x);
+        });
+    }
+
+    #[test]
+    fn scatter_is_inverse_of_gather() {
+        forall("scatter(gather(x,p),p) == x", 100, |g: &mut Xoshiro256| {
+            let n = 1 + g.below(64);
+            let p = g.permutation(n);
+            let x: Vec<u32> = (0..n as u32).collect();
+            assert_eq!(scatter_vec(&apply_vec(&x, &p), &p), x);
+        });
+    }
+
+    #[test]
+    fn compose_matches_sequential_application() {
+        forall("x[compose(p,q)] == x[q][p]", 100, |g: &mut Xoshiro256| {
+            let n = 1 + g.below(64);
+            let p = g.permutation(n);
+            let q = g.permutation(n);
+            let x: Vec<u32> = (0..n as u32).map(|i| i * 13).collect();
+            let via_compose = apply_vec(&x, &compose(&p, &q));
+            let sequential = apply_vec(&apply_vec(&x, &q), &p);
+            assert_eq!(via_compose, sequential);
+        });
+    }
+
+    #[test]
+    fn row_and_col_gather_agree_with_scalar_definition() {
+        let mut g = Xoshiro256::new(1);
+        let m = Matrix::randn(5, 4, &mut g);
+        let pr = g.permutation(5);
+        let pc = g.permutation(4);
+        let mr = apply_rows(&m, &pr);
+        let mc = apply_cols(&m, &pc);
+        for i in 0..5 {
+            for j in 0..4 {
+                assert_eq!(mr.at(i, j), m.at(pr[i] as usize, j));
+                assert_eq!(mc.at(i, j), m.at(i, pc[j] as usize));
+            }
+        }
+    }
+
+    /// The algebraic heart of the paper: Y1 = X[:,P1] @ W1[P1,P2] equals
+    /// (X @ W1)[:, P2]. Verified numerically over random cases.
+    #[test]
+    fn tp_aware_alignment_identity() {
+        use crate::gemm::naive::matmul;
+        forall("X[:,P1]@W1[P1,P2] == (X@W1)[:,P2]", 30, |g: &mut Xoshiro256| {
+            let (m, k, n) = (1 + g.below(4), 8 + g.below(16), 8 + g.below(16));
+            let x = Matrix::randn(m, k, g);
+            let w1 = Matrix::randn(k, n, g);
+            let p1 = g.permutation(k);
+            let p2 = g.permutation(n);
+            // Left side: the TP-aware data layout.
+            let xp = apply_cols(&x, &p1);
+            let w1p = tp_aware_align_w1(&apply_rows(&w1, &p1), &p2);
+            let y_tp = matmul(&xp, &w1p);
+            // Right side: unpermuted GEMM, then a global column reorder.
+            let y_ref = apply_cols(&matmul(&x, &w1), &p2);
+            assert!(
+                y_tp.max_abs_diff(&y_ref) < 1e-4,
+                "max diff {}",
+                y_tp.max_abs_diff(&y_ref)
+            );
+        });
+    }
+
+    #[test]
+    fn restrict_to_shard_detects_boundary_crossing() {
+        // Shard-preserving permutation on 4 elements, 2 ranks.
+        let p = vec![1u32, 0, 3, 2];
+        assert_eq!(restrict_to_shard(&p, 0, 2), Some(vec![1, 0]));
+        assert_eq!(restrict_to_shard(&p, 1, 2), Some(vec![1, 0]));
+        // Boundary-crossing permutation.
+        let q = vec![2u32, 0, 3, 1];
+        assert_eq!(restrict_to_shard(&q, 0, 2), None);
+    }
+
+    #[test]
+    fn random_global_permutation_rarely_shard_local() {
+        // Sanity for the paper's premise: a random P2 crosses shard
+        // boundaries (so the naive algorithm genuinely needs an AllGather).
+        let mut g = Xoshiro256::new(9);
+        let mut crossings = 0;
+        for _ in 0..50 {
+            let p = g.permutation(64);
+            if restrict_to_shard(&p, 0, 4).is_none() {
+                crossings += 1;
+            }
+        }
+        assert!(crossings >= 49, "crossings={crossings}");
+    }
+}

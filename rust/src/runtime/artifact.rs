@@ -1,0 +1,258 @@
+//! `artifacts/manifest.json` parsing and artifact lookup.
+//!
+//! The manifest is the contract between `python/compile/aot.py` (which
+//! writes it) and the rust executors (which consume it). Version-checked:
+//! a stale artifacts directory fails loudly, pointing at `make artifacts`.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest schema version this binary understands (see aot.py).
+pub const SUPPORTED_VERSION: i64 = 2;
+
+/// One input tensor declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "stage1" | "stage2" | "fused" | "kernel_ordered" | "kernel_naive".
+    pub kind: String,
+    pub model: String,
+    pub tp: usize,
+    pub m: usize,
+    pub k1: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub group_size: usize,
+    pub act: String,
+    pub inputs: Vec<InputDesc>,
+}
+
+impl ArtifactEntry {
+    /// Expected output shape (rows, cols) of the single f32 output.
+    pub fn out_shape(&self) -> (usize, usize) {
+        match self.kind.as_str() {
+            "stage1" => (self.m, self.n1 / self.tp),
+            "stage2" | "fused" => (self.m, self.n2),
+            "kernel_ordered" | "kernel_naive" => (self.m, self.n1),
+            other => panic!("unknown artifact kind {other}"),
+        }
+    }
+}
+
+/// The parsed manifest with lookup indices.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_entry(j: &Json) -> Result<ArtifactEntry> {
+    let field = |k: &str| -> Result<&Json> {
+        let v = j.get(k);
+        if *v == Json::Null {
+            bail!("manifest entry missing field '{k}'");
+        }
+        Ok(v)
+    };
+    let s = |k: &str| -> Result<String> {
+        Ok(field(k)?
+            .as_str()
+            .ok_or_else(|| anyhow!("field '{k}' not a string"))?
+            .to_string())
+    };
+    let u = |k: &str| -> Result<usize> {
+        field(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("field '{k}' not a non-negative integer"))
+    };
+    let inputs = field("inputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("inputs not an array"))?
+        .iter()
+        .map(|i| {
+            Ok(InputDesc {
+                name: i
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("input missing name"))?
+                    .to_string(),
+                shape: i
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: i
+                    .get("dtype")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("input missing dtype"))?
+                    .to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArtifactEntry {
+        name: s("name")?,
+        file: s("file")?,
+        kind: s("kind")?,
+        model: s("model")?,
+        tp: u("tp")?,
+        m: u("m")?,
+        k1: u("k1")?,
+        n1: u("n1")?,
+        n2: u("n2")?,
+        group_size: u("group_size")?,
+        act: s("act")?,
+        inputs,
+    })
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .as_i64()
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != SUPPORTED_VERSION {
+            bail!(
+                "manifest version {version} != supported {SUPPORTED_VERSION}; \
+                 re-run `make artifacts`"
+            );
+        }
+        let entries = root
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Locate one artifact.
+    pub fn find(&self, model: &str, kind: &str, tp: usize, m: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.model == model && e.kind == kind && e.tp == tp && e.m == m)
+            .ok_or_else(|| {
+                anyhow!("no artifact for model={model} kind={kind} tp={tp} m={m}")
+            })
+    }
+
+    /// All M buckets available for (model, kind, tp), ascending.
+    pub fn m_buckets(&self, model: &str, kind: &str, tp: usize) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.model == model && e.kind == kind && e.tp == tp)
+            .map(|e| e.m)
+            .collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// Default artifacts directory (env override `TPAWARE_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TPAWARE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, version: i64) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = format!(
+            r#"{{
+  "version": {version},
+  "entries": [
+    {{
+      "name": "tiny_fused_tp2_m4", "file": "tiny_fused_tp2_m4.hlo.txt",
+      "kind": "fused", "model": "tiny", "tp": 2, "m": 4,
+      "k1": 256, "n1": 1024, "n2": 256, "group_size": 32, "act": "gelu",
+      "inputs": [
+        {{"name": "x", "shape": [4, 256], "dtype": "float32"}},
+        {{"name": "p1", "shape": [256], "dtype": "int32"}}
+      ]
+    }},
+    {{
+      "name": "tiny_stage1_tp2_m1", "file": "tiny_stage1_tp2_m1.hlo.txt",
+      "kind": "stage1", "model": "tiny", "tp": 2, "m": 1,
+      "k1": 256, "n1": 1024, "n2": 256, "group_size": 32, "act": "gelu",
+      "inputs": []
+    }}
+  ]
+}}"#
+        );
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("tpaware_manifest_ok");
+        write_manifest(&dir, SUPPORTED_VERSION);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("tiny", "fused", 2, 4).unwrap();
+        assert_eq!(e.out_shape(), (4, 256));
+        assert_eq!(e.inputs[0].shape, vec![4, 256]);
+        assert_eq!(m.m_buckets("tiny", "stage1", 2), vec![1]);
+        assert!(m.find("tiny", "fused", 4, 4).is_err());
+    }
+
+    #[test]
+    fn stage1_out_shape_is_sharded() {
+        let dir = std::env::temp_dir().join("tpaware_manifest_shape");
+        write_manifest(&dir, SUPPORTED_VERSION);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.find("tiny", "stage1", 2, 1).unwrap();
+        assert_eq!(e.out_shape(), (1, 512)); // N1/tp
+    }
+
+    #[test]
+    fn version_mismatch_fails_loudly() {
+        let dir = std::env::temp_dir().join("tpaware_manifest_ver");
+        write_manifest(&dir, 1);
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("re-run `make artifacts`"));
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

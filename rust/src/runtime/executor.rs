@@ -1,0 +1,321 @@
+//! Per-rank MLP executor: compiled artifacts + persistent weight buffers.
+//!
+//! One `RankMlpExecutor` lives on each TP rank thread (its `PjrtContext`
+//! must not cross threads). At load time it compiles the rank's
+//! executables — `fused` for the TP-Aware deployment, `stage1`/`stage2`
+//! for the Naive one — for every available M bucket, and uploads each MLP
+//! layer's shard weights once as device buffers. On the request path only
+//! the activation tensor is uploaded per call.
+//!
+//! Batch padding: requests are padded with zero rows up to the smallest
+//! compiled M bucket and the output truncated — the standard bucketed
+//! dynamic-batching contract (the batcher aims for exact buckets; padding
+//! makes stragglers correct, not just fast).
+
+use crate::model::weights::{DeployedMlp, LayerShard};
+use crate::quant::gptq::QuantizedLinear;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::pjrt::{Executable, PjrtContext};
+use crate::simkernel::pipeline::Algo;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Device-resident weights for one MLP layer on one rank.
+struct LayerBuffers {
+    p1: xla::PjRtBuffer,
+    qw1: xla::PjRtBuffer,
+    s1: xla::PjRtBuffer,
+    z1: xla::PjRtBuffer,
+    qw2: xla::PjRtBuffer,
+    s2: xla::PjRtBuffer,
+    z2: xla::PjRtBuffer,
+}
+
+/// Executables + weights for one rank of one model.
+pub struct RankMlpExecutor {
+    ctx: PjrtContext,
+    pub rank: usize,
+    pub tp: usize,
+    pub algo: Algo,
+    pub model: String,
+    /// M-bucket → executable.
+    fused: BTreeMap<usize, Executable>,
+    stage1: BTreeMap<usize, Executable>,
+    stage2: BTreeMap<usize, Executable>,
+    layers: Vec<LayerBuffers>,
+    n1_local: usize,
+    n2: usize,
+}
+
+/// Slice the *local* metadata rows out of a row-sharded quantized layer
+/// (which carries the full, globally-indexed metadata table): with an
+/// ordered `g_idx` a rank's groups are contiguous, exactly what the L2
+/// artifact signature (`s2: (N1/tp/G, N2)`) expects.
+pub fn local_metadata(q: &QuantizedLinear) -> Result<(Matrix, Matrix)> {
+    if !q.gidx.is_ordered() {
+        bail!("row shard metadata slicing requires the Algorithm-1 layout");
+    }
+    let g = q.gidx.group_size;
+    if q.k() % g != 0 {
+        bail!("shard K {} not a multiple of group size {g}", q.k());
+    }
+    let n_local = q.k() / g;
+    let g0 = q.gidx.idx[0] as usize;
+    let expect_last = g0 + n_local - 1;
+    let last = *q.gidx.idx.last().unwrap() as usize;
+    if last != expect_last {
+        bail!("shard groups not contiguous: first={g0} last={last}");
+    }
+    Ok((
+        q.scales.slice_rows(g0, g0 + n_local),
+        q.zeros.slice_rows(g0, g0 + n_local),
+    ))
+}
+
+fn quant_shard(shard: &LayerShard) -> Result<&QuantizedLinear> {
+    match shard {
+        LayerShard::Quant(q) => Ok(q),
+        LayerShard::Dense(_) => bail!("PJRT executor requires quantized shards"),
+    }
+}
+
+impl RankMlpExecutor {
+    /// Compile this rank's executables for every M bucket in the manifest.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        algo: Algo,
+        tp: usize,
+        rank: usize,
+    ) -> Result<RankMlpExecutor> {
+        let ctx = PjrtContext::cpu()?;
+        let mut fused = BTreeMap::new();
+        let mut stage1 = BTreeMap::new();
+        let mut stage2 = BTreeMap::new();
+        let kinds: &[&str] = match algo {
+            Algo::TpAware => &["fused"],
+            Algo::Naive => &["stage1", "stage2"],
+        };
+        let mut n1_local = 0;
+        let mut n2 = 0;
+        for kind in kinds {
+            let buckets = manifest.m_buckets(model, kind, tp);
+            if buckets.is_empty() {
+                bail!("no artifacts for model={model} kind={kind} tp={tp}");
+            }
+            for m in buckets {
+                let e = manifest.find(model, kind, tp, m)?;
+                n1_local = e.n1 / e.tp;
+                n2 = e.n2;
+                let exe = ctx
+                    .load_hlo(&manifest.path_of(e), e.out_shape())
+                    .with_context(|| format!("loading {}", e.name))?;
+                match *kind {
+                    "fused" => fused.insert(m, exe),
+                    "stage1" => stage1.insert(m, exe),
+                    "stage2" => stage2.insert(m, exe),
+                    _ => unreachable!(),
+                };
+            }
+        }
+        Ok(RankMlpExecutor {
+            ctx,
+            rank,
+            tp,
+            algo,
+            model: model.to_string(),
+            fused,
+            stage1,
+            stage2,
+            layers: Vec::new(),
+            n1_local,
+            n2,
+        })
+    }
+
+    /// Upload one MLP layer's shard weights for this rank; returns the
+    /// layer index to use in `run_*`.
+    pub fn add_layer(&mut self, d: &DeployedMlp) -> Result<usize> {
+        if d.algo != self.algo || d.tp.size != self.tp {
+            bail!("deployment (algo/tp) does not match executor");
+        }
+        let q1 = quant_shard(&d.w1_shards[self.rank])?;
+        let q2 = quant_shard(&d.w2_shards[self.rank])?;
+        if q1.n() != self.n1_local || q2.n() != self.n2 {
+            bail!(
+                "shard shapes ({}, {}) do not match artifacts ({}, {})",
+                q1.n(),
+                q2.n(),
+                self.n1_local,
+                self.n2
+            );
+        }
+        let (s2, z2) = local_metadata(q2)?;
+        let p1_i32: Vec<i32> = d.p1.iter().map(|&v| v as i32).collect();
+        let ng1 = q1.scales.rows;
+        let buffers = LayerBuffers {
+            p1: self.ctx.upload_i32(&p1_i32, &[p1_i32.len()])?,
+            qw1: self.ctx.upload_u32(
+                &q1.packed.words,
+                &[q1.packed.packed_rows(), q1.n()],
+            )?,
+            s1: self.ctx.upload_f32(&q1.scales.data, &[ng1, q1.n()])?,
+            z1: self.ctx.upload_f32(&q1.zeros.data, &[ng1, q1.n()])?,
+            qw2: self.ctx.upload_u32(
+                &q2.packed.words,
+                &[q2.packed.packed_rows(), q2.n()],
+            )?,
+            s2: self.ctx.upload_f32(&s2.data, &[s2.rows, s2.cols])?,
+            z2: self.ctx.upload_f32(&z2.data, &[z2.rows, z2.cols])?,
+        };
+        self.layers.push(buffers);
+        Ok(self.layers.len() - 1)
+    }
+
+    /// Available M buckets (ascending) for this rank's primary kind.
+    pub fn buckets(&self) -> Vec<usize> {
+        let map = match self.algo {
+            Algo::TpAware => &self.fused,
+            Algo::Naive => &self.stage1,
+        };
+        map.keys().copied().collect()
+    }
+
+    /// Smallest compiled bucket that fits `m` rows.
+    pub fn bucket_for(&self, m: usize) -> Result<usize> {
+        self.buckets()
+            .into_iter()
+            .find(|&b| b >= m)
+            .ok_or_else(|| anyhow!("batch {m} exceeds largest compiled bucket"))
+    }
+
+    /// Upload `x` padded with zero rows to `bucket` — without an extra
+    /// host copy when `x` is already bucket-sized (§Perf iter 5).
+    fn upload_padded(&self, x: &Matrix, bucket: usize) -> Result<xla::PjRtBuffer> {
+        if x.rows == bucket {
+            return self.ctx.upload_matrix(x);
+        }
+        let mut padded = Matrix::zeros(bucket, x.cols);
+        padded.data[..x.rows * x.cols].copy_from_slice(&x.data);
+        self.ctx.upload_matrix(&padded)
+    }
+
+    fn run_with(
+        &self,
+        exe_map: &BTreeMap<usize, Executable>,
+        layer: usize,
+        x: &Matrix,
+        stage2_only: bool,
+    ) -> Result<Matrix> {
+        let m = x.rows;
+        let bucket = self.bucket_for(m)?;
+        let exe = exe_map
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("bucket {bucket} not compiled for this kind"))?;
+        let xb = self.upload_padded(x, bucket)?;
+        let lb = self
+            .layers
+            .get(layer)
+            .ok_or_else(|| anyhow!("layer {layer} not loaded"))?;
+        let out = if stage2_only {
+            exe.run(&[&xb, &lb.qw2, &lb.s2, &lb.z2])?
+        } else if self.algo == Algo::TpAware {
+            exe.run(&[
+                &xb, &lb.p1, &lb.qw1, &lb.s1, &lb.z1, &lb.qw2, &lb.s2, &lb.z2,
+            ])?
+        } else {
+            exe.run(&[&xb, &lb.p1, &lb.qw1, &lb.s1, &lb.z1])?
+        };
+        Ok(if out.rows == m {
+            out
+        } else {
+            out.slice_rows(0, m)
+        })
+    }
+
+    /// TP-Aware fast path: the entire rank-local MLP in one launch.
+    /// Returns this rank's *partial* `M×N2` output (caller AllReduces).
+    pub fn run_fused(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
+        if self.algo != Algo::TpAware {
+            bail!("run_fused requires a TP-Aware deployment");
+        }
+        self.run_with(&self.fused, layer, x, false)
+    }
+
+    /// Naive stage 1: `act(X[:,P1] @ deq(W1_shard))` → `M × N1/tp`.
+    pub fn run_stage1(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
+        if self.algo != Algo::Naive {
+            bail!("run_stage1 requires a Naive deployment");
+        }
+        self.run_with(&self.stage1, layer, x, false)
+    }
+
+    /// Naive stage 2: `Y1_chunk @ deq(W2_shard)` → partial `M × N2`.
+    pub fn run_stage2(&self, layer: usize, y1_local: &Matrix) -> Result<Matrix> {
+        if self.algo != Algo::Naive {
+            bail!("run_stage2 requires a Naive deployment");
+        }
+        self.run_with(&self.stage2, layer, y1_local, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{deploy_quantized, gen_checkpoint};
+    use crate::quant::gptq::GptqConfig;
+    use crate::simkernel::pipeline::MlpShape;
+    use crate::tp::topology::Topology;
+
+    #[test]
+    fn local_metadata_slices_contiguous_groups() {
+        let ckpt = gen_checkpoint(
+            MlpShape {
+                k1: 32,
+                n1: 64,
+                n2: 32,
+            },
+            1,
+        );
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        };
+        let d = deploy_quantized(&ckpt, &cfg, Algo::TpAware, Topology::new(2));
+        for r in 0..2 {
+            let q2 = match &d.w2_shards[r] {
+                LayerShard::Quant(q) => q,
+                _ => unreachable!(),
+            };
+            let (s2, z2) = local_metadata(q2).unwrap();
+            // 32 local rows / G=8 → 4 group rows.
+            assert_eq!((s2.rows, s2.cols), (4, 32));
+            assert_eq!((z2.rows, z2.cols), (4, 32));
+            // Row r's groups start at r * 4.
+            assert_eq!(s2.row(0), q2.scales.row(r * 4));
+        }
+    }
+
+    #[test]
+    fn local_metadata_rejects_unordered() {
+        let ckpt = gen_checkpoint(
+            MlpShape {
+                k1: 32,
+                n1: 64,
+                n2: 32,
+            },
+            2,
+        );
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        };
+        let q = crate::quant::gptq::quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg);
+        // Unreordered act_order layer: unordered gidx must be rejected.
+        assert!(!q.gidx.is_ordered());
+        assert!(local_metadata(&q).is_err());
+    }
+}

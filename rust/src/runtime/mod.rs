@@ -1,0 +1,25 @@
+//! PJRT runtime bridge — the AOT boundary.
+//!
+//! Python lowers every model variant to HLO **text** once (`make
+//! artifacts`); this module loads those artifacts and executes them on the
+//! request path. Python is never invoked at runtime.
+//!
+//! * [`pjrt`] — thin safe wrapper over the `xla` crate: client, HLO-text
+//!   loading (the xla_extension 0.5.1 proto-id gotcha is why text, not
+//!   serialized protos), host↔device buffers, execution.
+//! * [`artifact`] — `artifacts/manifest.json` parsing and artifact lookup.
+//! * [`executor`] — per-rank MLP executors: persistent weight buffers +
+//!   compiled executables per (kind, M-bucket), batch padding, and the
+//!   metadata shard slicing that matches the L2 artifact signatures.
+//!
+//! Threading: `PjRtClient` is `Rc`-based (not `Send`), so each TP rank
+//! thread owns its own client and executables — the same isolation as the
+//! paper's one-process-per-GPU deployment.
+
+pub mod artifact;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use executor::RankMlpExecutor;
+pub use pjrt::{Executable, PjrtContext};

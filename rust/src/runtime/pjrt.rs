@@ -1,0 +1,141 @@
+//! Thin safe wrapper over the `xla` crate's PJRT bindings.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes `HloModuleProto`s
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects
+//! (`proto.id() <= INT_MAX`); `HloModuleProto::from_text_file` re-parses
+//! and reassigns ids, so text round-trips cleanly (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU context (client). One per rank thread — `PjRtClient` is
+/// `Rc`-based and must not cross threads.
+pub struct PjrtContext {
+    pub client: xla::PjRtClient,
+}
+
+/// A compiled executable plus its expected output shape.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// (rows, cols) of the single (tupled) f32 output.
+    pub out_shape: (usize, usize),
+}
+
+impl PjrtContext {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtContext> {
+        Ok(PjrtContext {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &Path, out_shape: (usize, usize)) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path_str}"))?;
+        Ok(Executable { exe, out_shape })
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a u32 tensor (packed weights).
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor (permutations).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a matrix as a 2-D f32 buffer.
+    pub fn upload_matrix(&self, m: &Matrix) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&m.data, &[m.rows, m.cols])
+    }
+}
+
+impl Executable {
+    /// Execute with device buffers (weights stay resident across calls)
+    /// and return the single f32 matrix output.
+    pub fn run<B: std::borrow::Borrow<xla::PjRtBuffer>>(&self, args: &[B]) -> Result<Matrix> {
+        let outs = self.exe.execute_b(args).context("PJRT execute")?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().context("unwrapping output tuple")?;
+        let data: Vec<f32> = out.to_vec().context("reading f32 output")?;
+        let (rows, cols) = self.out_shape;
+        if data.len() != rows * cols {
+            return Err(anyhow!(
+                "output size mismatch: got {} values, expected {}x{}",
+                data.len(),
+                rows,
+                cols
+            ));
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    /// A tiny hand-written HLO module: f32[2,2] add — validates the whole
+    /// load→compile→execute path without the python artifacts.
+    const ADD_HLO: &str = r#"
+HloModule tiny_add, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main {
+  a = f32[2,2]{1,0} parameter(0)
+  b = f32[2,2]{1,0} parameter(1)
+  s = f32[2,2]{1,0} add(a, b)
+  ROOT t = (f32[2,2]{1,0}) tuple(s)
+}
+"#;
+
+    #[test]
+    fn load_compile_execute_roundtrip() {
+        let dir = std::env::temp_dir().join("tpaware_pjrt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add.hlo.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(ADD_HLO.as_bytes()).unwrap();
+        drop(f);
+
+        let ctx = PjrtContext::cpu().unwrap();
+        let exe = ctx.load_hlo(&path, (2, 2)).unwrap();
+        let a = ctx.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let b = ctx.upload_f32(&[10.0, 20.0, 30.0, 40.0], &[2, 2]).unwrap();
+        let out = exe.run(&[&a, &b]).unwrap();
+        assert_eq!(out.data, vec![11.0, 22.0, 33.0, 44.0]);
+        // Buffers are reusable across calls.
+        let out2 = exe.run(&[&a, &a]).unwrap();
+        assert_eq!(out2.data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let ctx = PjrtContext::cpu().unwrap();
+        let err = match ctx.load_hlo(Path::new("/nonexistent/x.hlo.txt"), (1, 1)) {
+            Err(e) => e,
+            Ok(_) => panic!("expected load failure"),
+        };
+        assert!(format!("{err:#}").contains("parsing HLO text"));
+    }
+}

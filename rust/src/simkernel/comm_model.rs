@@ -1,0 +1,78 @@
+//! Collective timing = fabric ring model + per-collective fixed overhead.
+//!
+//! [`crate::tp::interconnect::Fabric`] gives the pure wire/ring time; real
+//! deployments additionally pay a fixed cost per collective for NCCL
+//! kernel launch and the host-side synchronization of the eager dispatch
+//! loop. That constant comes from the [`crate::simkernel::gpu::GpuSpec`]
+//! calibration.
+
+use crate::simkernel::gpu::GpuSpec;
+
+/// Fixed + rank-scaled overhead of issuing and synchronizing one
+/// collective on a `ranks`-wide communicator.
+pub fn coll_overhead_s(gpu: &GpuSpec, ranks: usize) -> f64 {
+    gpu.coll_overhead_s + gpu.coll_scale_s * 2.0 * (1.0 - 2.0 / ranks as f64).max(0.0)
+}
+
+/// AllGather of a per-rank shard of `shard_bytes` across `ranks`.
+pub fn allgather_s(gpu: &GpuSpec, shard_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    gpu.fabric.allgather_s(shard_bytes, ranks) + coll_overhead_s(gpu, ranks)
+}
+
+/// AllReduce of a per-rank payload of `payload_bytes` across `ranks`.
+pub fn allreduce_s(gpu: &GpuSpec, payload_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    gpu.fabric.allreduce_s(payload_bytes, ranks) + coll_overhead_s(gpu, ranks)
+}
+
+/// Straggler / rank-convergence penalty of a *blocking* global sync point
+/// inserted between dependent kernels (the naive algorithm's mid-layer
+/// AllGather): `min(s0, s0 · 2(1 − 2/p))` — ≈0 at p=2, saturating at s0
+/// (calibrated from the paper's flat naive-latency rows at TP≥4).
+pub fn straggler_s(gpu: &GpuSpec, ranks: usize) -> f64 {
+    if ranks <= 2 {
+        return 0.0;
+    }
+    (gpu.straggler_s0 * 2.0 * (1.0 - 2.0 / ranks as f64)).min(gpu.straggler_s0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::gpu::{A100, H100};
+
+    #[test]
+    fn single_rank_free() {
+        assert_eq!(allgather_s(&A100, 1 << 20, 1), 0.0);
+        assert_eq!(allreduce_s(&A100, 1 << 20, 1), 0.0);
+        assert_eq!(straggler_s(&A100, 1), 0.0);
+    }
+
+    #[test]
+    fn overhead_floor_applies() {
+        // Even a 4-byte collective costs at least the fixed overhead.
+        assert!(allreduce_s(&A100, 4, 2) >= A100.coll_overhead_s);
+    }
+
+    #[test]
+    fn straggler_monotone_and_saturating() {
+        let s4 = straggler_s(&A100, 4);
+        let s8 = straggler_s(&A100, 8);
+        let s64 = straggler_s(&A100, 64);
+        assert!(straggler_s(&A100, 2) == 0.0);
+        // Grows from p=2, saturates at the cap s0 (p≥4 for this shape).
+        assert!(s4 > 0.0);
+        assert!(s4 <= s8 && s8 <= s64);
+        assert_eq!(s64, A100.straggler_s0);
+    }
+
+    #[test]
+    fn h100_collectives_cheaper() {
+        assert!(allreduce_s(&H100, 1 << 20, 8) < allreduce_s(&A100, 1 << 20, 8));
+    }
+}

@@ -1,0 +1,122 @@
+//! Dequantization-locality cost model (the paper's Figures 1–2 argument,
+//! quantified).
+//!
+//! A grouped-quantized GEMM kernel streams the packed weights once; the
+//! metadata (scales, zeros) stream depends on the `g_idx` layout:
+//!
+//! * ordered (Eq. 1 / Algorithm 1): one metadata fetch per group —
+//!   `ceil(K/G)` fetches of `2·N` f16 values; negligible extra traffic.
+//! * naive-with-act_order (Eq. 3): a fetch whenever consecutive channels
+//!   belong to different groups. For a random φ almost every channel
+//!   switches groups, so the kernel re-streams metadata ~`K` times — a
+//!   `G×` amplification of metadata traffic, plus reduced L2 hit rates.
+//!
+//! The model turns a `g_idx` (or its reload statistic) into extra HBM
+//! bytes and converts those to time through the GPU profile.
+
+use crate::quant::gidx::GroupIndex;
+use crate::simkernel::gpu::GpuSpec;
+
+/// Metadata traffic (bytes) for one pass over a `K×N` weight with the
+/// given `g_idx`, assuming a 1-group metadata working set (the kernel
+/// register/smem residency ExllamaV2 relies on).
+pub fn metadata_bytes(gidx: &GroupIndex, n: usize) -> f64 {
+    // scales + zeros per fetched group: 2 vectors × N × f16.
+    gidx.metadata_loads() as f64 * 2.0 * n as f64 * 2.0
+}
+
+/// Metadata traffic for the ideal ordered layout (one load per group).
+pub fn metadata_bytes_ordered(k: usize, group_size: usize, n: usize) -> f64 {
+    (k as f64 / group_size as f64).ceil() * 2.0 * n as f64 * 2.0
+}
+
+/// Worst-case metadata traffic (reload on every channel).
+pub fn metadata_bytes_worst(k: usize, n: usize) -> f64 {
+    k as f64 * 2.0 * n as f64 * 2.0
+}
+
+/// Extra kernel time due to metadata reloads relative to the ordered
+/// layout, seconds. Uncoalesced metadata fetches go through the gather
+/// bandwidth, not the streaming bandwidth.
+pub fn reload_penalty_s(gpu: &GpuSpec, gidx: &GroupIndex, n: usize) -> f64 {
+    let actual = metadata_bytes(gidx, n);
+    let ideal = metadata_bytes_ordered(gidx.len(), gidx.group_size, n);
+    (actual - ideal).max(0.0) / gpu.gather_bw()
+}
+
+/// Expected reload penalty for a *random* act_order permutation at paper
+/// scale (E[loads] ≈ K·(1 − 1/G) + K/G for large K), without materializing
+/// the permutation.
+pub fn expected_reload_penalty_s(
+    gpu: &GpuSpec,
+    k: usize,
+    group_size: usize,
+    n: usize,
+) -> f64 {
+    let g = group_size as f64;
+    let expected_loads = k as f64 * (1.0 - 1.0 / g) + k as f64 / g;
+    let actual = expected_loads * 2.0 * n as f64 * 2.0;
+    let ideal = metadata_bytes_ordered(k, group_size, n);
+    (actual - ideal).max(0.0) / gpu.gather_bw()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::gpu::A100;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn ordered_layout_has_zero_penalty() {
+        let g = GroupIndex::naive(8192, 128);
+        assert_eq!(reload_penalty_s(&A100, &g, 28672), 0.0);
+    }
+
+    #[test]
+    fn act_order_layout_pays_roughly_g_times_metadata() {
+        let mut rng = Xoshiro256::new(1);
+        let phi = rng.permutation(4096);
+        let g = GroupIndex::act_order(&phi, 128);
+        let naive_bytes = metadata_bytes(&g, 1024);
+        let ordered_bytes = metadata_bytes_ordered(4096, 128, 1024);
+        let ratio = naive_bytes / ordered_bytes;
+        assert!(ratio > 64.0 && ratio <= 128.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn expected_matches_sampled_within_tolerance() {
+        let mut rng = Xoshiro256::new(2);
+        let k = 8192;
+        let gs = 128;
+        let n = 1024;
+        let phi = rng.permutation(k);
+        let g = GroupIndex::act_order(&phi, gs);
+        let sampled = reload_penalty_s(&A100, &g, n);
+        let expected = expected_reload_penalty_s(&A100, k, gs, n);
+        let rel = (sampled - expected).abs() / expected;
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn penalty_meaningful_at_paper_scale() {
+        // Llama-70B up_proj with a random act_order: the reload penalty is
+        // a real fraction of the GEMM time — the paper's motivation.
+        let t = expected_reload_penalty_s(&A100, 8192, 128, 28672);
+        let gemm = crate::simkernel::gemm_model::gemm_s(
+            &A100,
+            16,
+            8192,
+            28672,
+            crate::simkernel::gemm_model::WeightDtype::Int4 { group_size: 128 },
+        );
+        assert!(t > 0.1 * gemm, "penalty {t} vs gemm {gemm}");
+    }
+
+    #[test]
+    fn worst_case_bounds_everything() {
+        let mut rng = Xoshiro256::new(3);
+        let phi = rng.permutation(1024);
+        let g = GroupIndex::act_order(&phi, 32);
+        assert!(metadata_bytes(&g, 64) <= metadata_bytes_worst(1024, 64));
+    }
+}

@@ -1,0 +1,104 @@
+//! Roofline GEMM timing.
+//!
+//! At the paper's batch sizes (M ≤ 16) an FP16 GEMM against a
+//! `K×N` weight is overwhelmingly HBM-bound: arithmetic intensity is
+//! ~M FLOP/byte, far below the A100's ~150 FLOP/byte ridge. The model is
+//! therefore `max(bytes/eff_bw, flops/peak) + dispatch`, with bytes
+//! counting the weight stream plus activations in/out.
+
+use crate::simkernel::gpu::GpuSpec;
+
+/// Data type of the streamed weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightDtype {
+    /// FP16 dense weights (the paper's benchmark configuration).
+    F16,
+    /// GPTQ 4-bit packed weights + per-group metadata.
+    Int4 {
+        /// Quantization group size (metadata granularity).
+        group_size: usize,
+    },
+}
+
+impl WeightDtype {
+    /// Bytes to stream a `k×n` weight once (including quant metadata).
+    pub fn weight_bytes(&self, k: usize, n: usize) -> f64 {
+        match *self {
+            WeightDtype::F16 => (k * n * 2) as f64,
+            WeightDtype::Int4 { group_size } => {
+                let q = (k * n) as f64 / 2.0; // 4 bits/value
+                let groups = (k as f64 / group_size as f64).ceil();
+                let meta = groups * n as f64 * 2.0 * 2.0; // scales+zeros, f16
+                q + meta
+            }
+        }
+    }
+}
+
+/// Latency of one `M×K · K×N` GEMM on `gpu`, seconds.
+pub fn gemm_s(gpu: &GpuSpec, m: usize, k: usize, n: usize, dtype: WeightDtype) -> f64 {
+    let weight_bytes = dtype.weight_bytes(k, n);
+    // Activations: read M×K, write M×N (f16).
+    let act_bytes = (m * k * 2 + m * n * 2) as f64;
+    let mem_s = (weight_bytes + act_bytes) / gpu.eff_bw();
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let compute_s = flops / gpu.fp16_flops;
+    mem_s.max(compute_s) + gpu.op_overhead_s
+}
+
+/// Arithmetic intensity (FLOP per byte) — diagnostic for the roofline.
+pub fn arithmetic_intensity(m: usize, k: usize, n: usize, dtype: WeightDtype) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let bytes = dtype.weight_bytes(k, n) + (m * k * 2 + m * n * 2) as f64;
+    flops / bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::gpu::{A100, H100};
+
+    #[test]
+    fn small_m_is_memory_bound() {
+        // At M=16 the paper's shapes sit far below the compute roofline.
+        let ai = arithmetic_intensity(16, 8192, 28672, WeightDtype::F16);
+        let ridge = A100.fp16_flops / A100.eff_bw();
+        assert!(ai < ridge / 5.0, "ai={ai} ridge={ridge}");
+    }
+
+    #[test]
+    fn latency_nearly_flat_in_m_when_memory_bound() {
+        // The paper's tables show ~constant latency across M=1..16.
+        let t1 = gemm_s(&A100, 1, 8192, 28672, WeightDtype::F16);
+        let t16 = gemm_s(&A100, 16, 8192, 28672, WeightDtype::F16);
+        assert!((t16 - t1) / t1 < 0.02, "t1={t1} t16={t16}");
+    }
+
+    #[test]
+    fn int4_streams_fewer_bytes_than_f16() {
+        let f16 = WeightDtype::F16.weight_bytes(8192, 8192);
+        let i4 = WeightDtype::Int4 { group_size: 128 }.weight_bytes(8192, 8192);
+        assert!(i4 < f16 / 3.0, "i4={i4} f16={f16}");
+        // And is therefore faster end to end.
+        let tf = gemm_s(&A100, 8, 8192, 8192, WeightDtype::F16);
+        let ti = gemm_s(&A100, 8, 8192, 8192, WeightDtype::Int4 { group_size: 128 });
+        assert!(ti < tf);
+    }
+
+    #[test]
+    fn h100_beats_a100() {
+        let a = gemm_s(&A100, 16, 8192, 28672, WeightDtype::F16);
+        let h = gemm_s(&H100, 16, 8192, 28672, WeightDtype::F16);
+        assert!(h < a);
+    }
+
+    #[test]
+    fn huge_m_becomes_compute_bound() {
+        let m = 65536;
+        let flops = 2.0 * m as f64 * 8192.0 * 8192.0;
+        let t = gemm_s(&A100, m, 8192, 8192, WeightDtype::F16);
+        // Within 30% of pure compute time (memory fully hidden).
+        assert!(t < 1.3 * flops / A100.fp16_flops + A100.op_overhead_s);
+        assert!(t >= flops / A100.fp16_flops);
+    }
+}

@@ -1,0 +1,247 @@
+//! Dense row-major f32 matrices — the host-side tensor type shared by the
+//! quantizer, the host GEMM engine, the TP runtime and the tests.
+//!
+//! Deliberately minimal: the heavy math on the request path runs inside the
+//! PJRT executables; this type exists for substrates (quantization, oracle
+//! GEMMs, collectives payloads) and for verification.
+
+use crate::util::prng::Xoshiro256;
+
+/// A dense row-major `rows × cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing buffer (len must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "matrix buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal random matrix (synthetic weights / activations).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Matrix {
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// Select rows by index: `out[i] = self[idx[i]]`.
+    pub fn select_rows(&self, idx: &[u32]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &src) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(src as usize));
+        }
+        out
+    }
+
+    /// Select columns by index: `out[:, j] = self[:, idx[j]]`.
+    pub fn select_cols(&self, idx: &[u32]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c as usize];
+            }
+        }
+        out
+    }
+
+    /// Horizontal slice of columns `[lo, hi)`.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Matrix::zeros(self.rows, hi - lo);
+        for r in 0..self.rows {
+            out.row_mut(r)
+                .copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
+    /// Vertical slice of rows `[lo, hi)`.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix::from_vec(
+            hi - lo,
+            self.cols,
+            self.data[lo * self.cols..hi * self.cols].to_vec(),
+        )
+    }
+
+    /// Concatenate matrices left-to-right (same row count).
+    pub fn hcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|p| p.rows == rows));
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            let dst = out.row_mut(r);
+            let mut off = 0;
+            for p in parts {
+                dst[off..off + p.cols].copy_from_slice(p.row(r));
+                off += p.cols;
+            }
+        }
+        out
+    }
+
+    /// Concatenate matrices top-to-bottom (same column count).
+    pub fn vcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        assert!(parts.iter().all(|p| p.cols == cols));
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Elementwise sum with another matrix.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Relative error ‖a−b‖F / ‖b‖F (b taken as reference).
+    pub fn rel_err(&self, reference: &Matrix) -> f32 {
+        let num = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        num / reference.fro_norm().max(1e-20)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_at() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut g = Xoshiro256::new(3);
+        let m = Matrix::randn(4, 7, &mut g);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn select_rows_and_cols() {
+        let m = Matrix::from_fn(3, 3, |r, c| (r * 3 + c) as f32);
+        let r = m.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(r.row(1), &[0.0, 1.0, 2.0]);
+        let c = m.select_cols(&[1, 1, 0]);
+        assert_eq!(c.row(0), &[1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn hcat_vcat_roundtrip_slices() {
+        let m = Matrix::from_fn(4, 6, |r, c| (r * 6 + c) as f32);
+        let left = m.slice_cols(0, 2);
+        let right = m.slice_cols(2, 6);
+        assert_eq!(Matrix::hcat(&[&left, &right]), m);
+        let top = m.slice_rows(0, 1);
+        let bot = m.slice_rows(1, 4);
+        assert_eq!(Matrix::vcat(&[&top, &bot]), m);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let mut g = Xoshiro256::new(5);
+        let m = Matrix::randn(5, 5, &mut g);
+        assert_eq!(m.rel_err(&m), 0.0);
+        assert_eq!(m.max_abs_diff(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix buffer size mismatch")]
+    fn from_vec_checks_len() {
+        Matrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

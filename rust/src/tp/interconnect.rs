@@ -1,0 +1,143 @@
+//! Interconnect fabric profiles and ring-collective timing formulas.
+//!
+//! The measured path moves real bytes between thread ranks; this module
+//! supplies what that path cannot: the *time* those collectives take on
+//! the paper's fabrics. Profiles are calibrated against public DGX specs
+//! and NCCL ring-collective cost models:
+//!
+//! * AllGather over `p` ranks, shard of `s` bytes per rank:
+//!   `t = (p-1) · (α + s/β)`
+//! * AllReduce over `p` ranks, payload `s` bytes per rank:
+//!   `t = 2(p-1) · (α + (s/p)/β)`
+//!
+//! where `α` is per-step latency (link + kernel launch) and `β` the
+//! per-GPU unidirectional bandwidth actually achieved by NCCL (busbw).
+
+/// A point-to-point fabric profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fabric {
+    pub name: &'static str,
+    /// Achievable per-GPU unidirectional bandwidth, bytes/second.
+    pub bw_bytes_per_s: f64,
+    /// Per-step latency in seconds (link latency + launch overhead).
+    pub alpha_s: f64,
+}
+
+/// NVLink3 / NVSwitch as in an A100 DGX (300 GB/s/GPU peak; ~240 GB/s
+/// achieved busbw; ~8 µs per-step effective latency incl. launch).
+pub const NVLINK3_A100: Fabric = Fabric {
+    name: "nvlink3-a100",
+    bw_bytes_per_s: 240.0e9,
+    alpha_s: 8.0e-6,
+};
+
+/// NVLink4 / NVSwitch as in an H100 DGX (450 GB/s/GPU peak; ~360 GB/s
+/// achieved; lower per-step latency on Hopper NVSwitch — calibrated
+/// against the paper's H100 TP=8 TP-Aware rows).
+pub const NVLINK4_H100: Fabric = Fabric {
+    name: "nvlink4-h100",
+    bw_bytes_per_s: 360.0e9,
+    alpha_s: 3.0e-6,
+};
+
+/// PCIe 4.0 x16 fallback fabric (for the ablation bench).
+pub const PCIE4: Fabric = Fabric {
+    name: "pcie4",
+    bw_bytes_per_s: 24.0e9,
+    alpha_s: 12.0e-6,
+};
+
+impl Fabric {
+    /// Ring AllGather time: every rank contributes `shard_bytes`.
+    pub fn allgather_s(&self, shard_bytes: usize, ranks: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        (ranks - 1) as f64 * (self.alpha_s + shard_bytes as f64 / self.bw_bytes_per_s)
+    }
+
+    /// Ring AllReduce time over a per-rank payload of `payload_bytes`.
+    pub fn allreduce_s(&self, payload_bytes: usize, ranks: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        2.0 * (ranks - 1) as f64
+            * (self.alpha_s + (payload_bytes as f64 / ranks as f64) / self.bw_bytes_per_s)
+    }
+
+    /// Broadcast (tree) time for `bytes` to `ranks-1` peers.
+    pub fn broadcast_s(&self, bytes: usize, ranks: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let steps = (ranks as f64).log2().ceil();
+        steps * (self.alpha_s + bytes as f64 / self.bw_bytes_per_s)
+    }
+
+    /// Look up a fabric by name (CLI).
+    pub fn by_name(name: &str) -> Option<Fabric> {
+        match name {
+            "nvlink3-a100" | "a100" => Some(NVLINK3_A100),
+            "nvlink4-h100" | "h100" => Some(NVLINK4_H100),
+            "pcie4" | "pcie" => Some(PCIE4),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(NVLINK3_A100.allgather_s(1 << 20, 1), 0.0);
+        assert_eq!(NVLINK3_A100.allreduce_s(1 << 20, 1), 0.0);
+        assert_eq!(NVLINK3_A100.broadcast_s(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn allgather_grows_with_ranks() {
+        let s = 4 << 20;
+        let t2 = NVLINK3_A100.allgather_s(s, 2);
+        let t4 = NVLINK3_A100.allgather_s(s, 4);
+        let t8 = NVLINK3_A100.allgather_s(s, 8);
+        assert!(t2 < t4 && t4 < t8);
+    }
+
+    #[test]
+    fn h100_faster_than_a100_than_pcie() {
+        let s = 16 << 20;
+        let a = NVLINK3_A100.allreduce_s(s, 8);
+        let h = NVLINK4_H100.allreduce_s(s, 8);
+        let p = PCIE4.allreduce_s(s, 8);
+        assert!(h < a && a < p);
+    }
+
+    #[test]
+    fn latency_term_dominates_tiny_payloads() {
+        // A 4-byte allgather at TP=8 should cost ≈ 7α.
+        let t = NVLINK3_A100.allgather_s(4, 8);
+        assert!((t - 7.0 * NVLINK3_A100.alpha_s).abs() / t < 0.01);
+    }
+
+    /// Sanity-check the modeled AllGather cost against the paper's
+    /// measured gap. Llama-70B, TP=8, M=16: Y1 shard is 16×3584 f16 values
+    /// (~115 KB); the paper's naive-vs-TP-aware gap at TP=8/A100 is
+    /// ~0.23 ms, which includes the gather, the global reorder and the
+    /// re-shard. Our pure-fabric AllGather should be the same order of
+    /// magnitude but smaller than the total gap.
+    #[test]
+    fn modeled_allgather_magnitude_plausible() {
+        let shard_bytes = 16 * (28672 / 8) * 2;
+        let t = NVLINK3_A100.allgather_s(shard_bytes, 8);
+        assert!(t > 10.0e-6 && t < 250.0e-6, "t = {t}");
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert_eq!(Fabric::by_name("a100").unwrap().name, "nvlink3-a100");
+        assert_eq!(Fabric::by_name("h100").unwrap().name, "nvlink4-h100");
+        assert!(Fabric::by_name("infiniband").is_none());
+    }
+}

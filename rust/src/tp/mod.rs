@@ -1,0 +1,24 @@
+//! Tensor-parallel runtime — the NCCL/multi-GPU stand-in.
+//!
+//! The paper's testbed is an 8-GPU DGX node; here each "GPU" is a worker
+//! thread and the fabric is shared memory, but the *dataflow* is identical:
+//! SPMD ranks, column/row-sharded weights, and byte-moving collectives with
+//! the same semantics as NCCL's (AllGather concatenates shard-major,
+//! AllReduce sums). A calibrated interconnect model supplies the *timing*
+//! of each collective on real fabrics (NVLink3/NVLink4/PCIe) so the
+//! modeled-mode benches can reproduce the paper's latency tables.
+//!
+//! * [`topology`] — rank groups and SPMD launch helpers.
+//! * [`collectives`] — AllGather / AllReduce / ReduceScatter / Broadcast /
+//!   Barrier over shared slots, with traffic accounting.
+//! * [`sharding`] — Column-TP / Row-TP shard math for dense and quantized
+//!   weights (including metadata sharding).
+//! * [`interconnect`] — fabric profiles + ring-collective timing formulas.
+
+pub mod collectives;
+pub mod interconnect;
+pub mod sharding;
+pub mod topology;
+
+pub use collectives::{CollectiveGroup, CommStats};
+pub use topology::Topology;

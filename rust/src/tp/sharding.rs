@@ -1,0 +1,193 @@
+//! Megatron-style shard math for dense and quantized weights.
+//!
+//! Column-TP (the paper's first MLP linear, `up_proj`): `W1 (K1×N1)` is
+//! split column-wise; every rank sees the full input `X (M×K1)` and
+//! produces `Y1_local (M×N1/p)`.
+//!
+//! Row-TP (`down_proj`): `W2 (N1×N2)` is split row-wise; rank `r` consumes
+//! the activation columns matching its row block and the partial products
+//! are AllReduce-summed.
+//!
+//! For quantized layers the metadata shards with the weight: a column
+//! shard takes the same column slice of scales/zeros; a row shard takes
+//! the row slice of the packed weights and `g_idx` but keeps the full
+//! metadata table (groups are indexed globally — with an unordered
+//! `g_idx` a row shard can reference any group).
+
+use crate::quant::gidx::GroupIndex;
+use crate::quant::gptq::QuantizedLinear;
+use crate::quant::pack::pack;
+use crate::tensor::Matrix;
+use crate::tp::topology::Topology;
+
+/// Dense column shard: `m[:, lo..hi]` for `rank` of `topo`.
+pub fn col_shard(m: &Matrix, topo: Topology, rank: usize) -> Matrix {
+    let (lo, hi) = topo.shard_range(m.cols, rank);
+    m.slice_cols(lo, hi)
+}
+
+/// Dense row shard: `m[lo..hi, :]` for `rank` of `topo`.
+pub fn row_shard(m: &Matrix, topo: Topology, rank: usize) -> Matrix {
+    let (lo, hi) = topo.shard_range(m.rows, rank);
+    m.slice_rows(lo, hi)
+}
+
+/// Column shard of a quantized layer (Column-TP): slices packed weights
+/// and metadata columns; `g_idx` (a per-input-channel array) is shared.
+pub fn col_shard_quant(q: &QuantizedLinear, topo: Topology, rank: usize) -> QuantizedLinear {
+    let (lo, hi) = topo.shard_range(q.n(), rank);
+    let n_local = hi - lo;
+    let mut vals = vec![0u32; q.k() * n_local];
+    for kk in 0..q.k() {
+        for (j, nn) in (lo..hi).enumerate() {
+            vals[kk * n_local + j] = q.packed.get(kk, nn);
+        }
+    }
+    QuantizedLinear {
+        packed: pack(&vals, q.k(), n_local, q.bits),
+        scales: q.scales.slice_cols(lo, hi),
+        zeros: q.zeros.slice_cols(lo, hi),
+        gidx: q.gidx.clone(),
+        phi: q.phi.clone(),
+        bits: q.bits,
+    }
+}
+
+/// Row shard of a quantized layer (Row-TP): slices packed weight rows and
+/// `g_idx`; keeps the full metadata table (globally indexed groups).
+///
+/// Requires the shard boundary to fall on a packing boundary
+/// (`K/p` divisible by the per-word packing factor), which all paper
+/// shapes satisfy.
+pub fn row_shard_quant(q: &QuantizedLinear, topo: Topology, rank: usize) -> QuantizedLinear {
+    let (lo, hi) = topo.shard_range(q.k(), rank);
+    let k_local = hi - lo;
+    let per = q.packed.per_word();
+    assert_eq!(
+        lo % per,
+        0,
+        "row shard boundary must align with the packing factor"
+    );
+    let mut vals = vec![0u32; k_local * q.n()];
+    for (i, kk) in (lo..hi).enumerate() {
+        for nn in 0..q.n() {
+            vals[i * q.n() + nn] = q.packed.get(kk, nn);
+        }
+    }
+    QuantizedLinear {
+        packed: pack(&vals, k_local, q.n(), q.bits),
+        scales: q.scales.clone(),
+        zeros: q.zeros.clone(),
+        gidx: GroupIndex {
+            idx: q.gidx.idx[lo..hi].to_vec(),
+            group_size: q.gidx.group_size,
+        },
+        phi: q.phi[lo..hi].to_vec(),
+        bits: q.bits,
+    }
+}
+
+/// Chunk a dense activation along columns: `x[:, rank·w..(rank+1)·w]` —
+/// Line 4 of the paper's Algorithm 2.
+pub fn chunk_cols(x: &Matrix, topo: Topology, rank: usize) -> Matrix {
+    col_shard(x, topo, rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::fused::dequant_matmul_naive;
+    use crate::gemm::naive::matmul;
+    use crate::quant::gptq::{quantize_gptq, GptqConfig};
+    use crate::util::prng::Xoshiro256;
+
+    fn quantized_layer(k: usize, n: usize, seed: u64) -> QuantizedLinear {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Matrix::randn(k, n, &mut rng);
+        let xc = Matrix::from_fn(64, k, |_, c| rng.normal() * (0.2 + c as f32 / k as f32));
+        quantize_gptq(
+            &w,
+            &xc,
+            &GptqConfig {
+                group_size: 8,
+                act_order: true,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn dense_shards_reassemble() {
+        let mut rng = Xoshiro256::new(1);
+        let m = Matrix::randn(6, 8, &mut rng);
+        let t = Topology::new(4);
+        let cols: Vec<Matrix> = (0..4).map(|r| col_shard(&m, t, r)).collect();
+        let refs: Vec<&Matrix> = cols.iter().collect();
+        assert_eq!(Matrix::hcat(&refs), m);
+        let rows: Vec<Matrix> = (0..2).map(|r| row_shard(&m, Topology::new(2), r)).collect();
+        let refs: Vec<&Matrix> = rows.iter().collect();
+        assert_eq!(Matrix::vcat(&refs), m);
+    }
+
+    #[test]
+    fn col_shard_quant_dequantizes_to_column_slice() {
+        let q = quantized_layer(32, 16, 2);
+        let t = Topology::new(4);
+        let full = q.dequantize();
+        for rank in 0..4 {
+            let shard = col_shard_quant(&q, t, rank);
+            let (lo, hi) = t.shard_range(16, rank);
+            assert!(shard.dequantize().max_abs_diff(&full.slice_cols(lo, hi)) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_shard_quant_dequantizes_to_row_slice() {
+        let q = quantized_layer(32, 12, 3);
+        let t = Topology::new(2);
+        let full = q.dequantize();
+        for rank in 0..2 {
+            let shard = row_shard_quant(&q, t, rank);
+            let (lo, hi) = t.shard_range(32, rank);
+            assert!(shard.dequantize().max_abs_diff(&full.slice_rows(lo, hi)) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn column_tp_partial_products_concatenate() {
+        // X @ W == hcat_r(X @ W_shard_r) for a quantized layer.
+        let q = quantized_layer(16, 8, 4);
+        let mut rng = Xoshiro256::new(5);
+        let x = Matrix::randn(3, 16, &mut rng);
+        let t = Topology::new(2);
+        let full = dequant_matmul_naive(&x, &q);
+        let parts: Vec<Matrix> = (0..2)
+            .map(|r| dequant_matmul_naive(&x, &col_shard_quant(&q, t, r)))
+            .collect();
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        assert!(Matrix::hcat(&refs).max_abs_diff(&full) < 1e-5);
+    }
+
+    #[test]
+    fn row_tp_partial_products_sum() {
+        // X @ W == Σ_r X[:, shard_r] @ W_shard_r for a quantized layer.
+        let q = quantized_layer(32, 8, 6);
+        let mut rng = Xoshiro256::new(7);
+        let x = Matrix::randn(2, 32, &mut rng);
+        let t = Topology::new(4);
+        let full = dequant_matmul_naive(&x, &q);
+        let mut acc = Matrix::zeros(2, 8);
+        for r in 0..4 {
+            let xs = chunk_cols(&x, t, r);
+            acc = acc.add(&dequant_matmul_naive(&xs, &row_shard_quant(&q, t, r)));
+        }
+        assert!(acc.max_abs_diff(&full) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn uneven_quant_shard_panics() {
+        let q = quantized_layer(16, 9, 8);
+        col_shard_quant(&q, Topology::new(2), 0);
+    }
+}

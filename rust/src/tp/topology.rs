@@ -1,0 +1,100 @@
+//! Rank topology and SPMD launch helpers.
+
+use std::thread;
+
+/// A tensor-parallel topology: `size` ranks within one node.
+///
+/// The paper evaluates TP ∈ {1, 2, 4, 8} inside a single DGX node; this
+/// type captures that configuration plus the derived shard arithmetic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of tensor-parallel ranks.
+    pub size: usize,
+}
+
+impl Topology {
+    pub fn new(size: usize) -> Topology {
+        assert!(size > 0, "topology needs at least one rank");
+        Topology { size }
+    }
+
+    /// Shard width for a dimension of `dim` elements; requires even split
+    /// (all paper shapes divide evenly for TP ∈ {1,2,4,8}).
+    pub fn shard_width(&self, dim: usize) -> usize {
+        assert_eq!(
+            dim % self.size,
+            0,
+            "dimension {dim} does not divide across {} ranks",
+            self.size
+        );
+        dim / self.size
+    }
+
+    /// Column range `[lo, hi)` owned by `rank` for a dimension of `dim`.
+    pub fn shard_range(&self, dim: usize, rank: usize) -> (usize, usize) {
+        let w = self.shard_width(dim);
+        (rank * w, (rank + 1) * w)
+    }
+
+    /// Run `f(rank)` on `size` OS threads and collect results in rank order.
+    /// Panics in any rank propagate to the caller (failed ranks must not be
+    /// silently dropped — mirrors a NCCL abort).
+    pub fn run_spmd<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = (0..self.size)
+            .map(|rank| {
+                let f = f.clone();
+                thread::Builder::new()
+                    .name(format!("tp-rank-{rank}"))
+                    .spawn(move || f(rank))
+                    .expect("failed to spawn rank thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_arithmetic() {
+        let t = Topology::new(4);
+        assert_eq!(t.shard_width(28672), 7168);
+        assert_eq!(t.shard_range(8192, 3), (6144, 8192));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn uneven_shard_panics() {
+        Topology::new(3).shard_width(8);
+    }
+
+    #[test]
+    fn spmd_collects_in_rank_order() {
+        let t = Topology::new(8);
+        let out = t.run_spmd(|rank| rank * 10);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn spmd_threads_run_concurrently() {
+        // All ranks must be alive at once for collectives to make sense:
+        // have every rank wait on a shared barrier.
+        let t = Topology::new(4);
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+        let out = t.run_spmd(move |rank| {
+            barrier.wait();
+            rank
+        });
+        assert_eq!(out.len(), 4);
+    }
+}

@@ -1,0 +1,293 @@
+//! Declarative CLI parsing for the launcher binary (no clap offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required flags, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One flag specification.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub is_switch: bool,
+}
+
+/// A declarative command parser.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed flag values.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Positional arguments (after flags).
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    /// `--help` was requested; message contains the rendered help.
+    #[error("{0}")]
+    Help(String),
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// A `--name <value>` flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default),
+            required: false,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A required `--name <value>` flag.
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            required: true,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            required: false,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let head = if f.is_switch {
+                format!("  --{}", f.name)
+            } else {
+                format!("  --{} <v>", f.name)
+            };
+            let default = match (&f.default, f.required) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<28}{}{default}\n", f.help));
+        }
+        s
+    }
+
+    /// Parse a token stream (not including the subcommand name itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(ArgError::Help(self.help_text()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                if spec.is_switch {
+                    args.switches.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for f in &self.flags {
+            if f.is_switch {
+                args.switches.entry(f.name.to_string()).or_insert(false);
+            } else if !args.values.contains_key(f.name) {
+                match f.default {
+                    Some(d) => {
+                        args.values.insert(f.name.to_string(), d.to_string());
+                    }
+                    None if f.required => {
+                        return Err(ArgError::MissingRequired(f.name.to_string()))
+                    }
+                    None => {}
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn on(&self, name: &str) -> bool {
+        *self.switches.get(name).unwrap_or(&false)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError::Invalid(name.to_string(), self.get(name).to_string()))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError::Invalid(name.to_string(), self.get(name).to_string()))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError::Invalid(name.to_string(), self.get(name).to_string()))
+    }
+
+    /// Parse a comma-separated usize list, e.g. `--tp 1,2,4,8`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, ArgError> {
+        self.get(name)
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| ArgError::Invalid(name.to_string(), t.to_string()))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+fn to_strings(toks: &[&str]) -> Vec<String> {
+    toks.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the server")
+            .flag("port", "7070", "listen port")
+            .required("model", "model name")
+            .switch("verbose", "chatty logging")
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = cmd().parse(&to_strings(&["--model", "tiny"])).unwrap();
+        assert_eq!(a.get("port"), "7070");
+        assert_eq!(a.get("model"), "tiny");
+        assert!(!a.on("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_and_switch() {
+        let a = cmd()
+            .parse(&to_strings(&["--model=tiny", "--port=9", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.usize("port").unwrap(), 9);
+        assert!(a.on("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(
+            cmd().parse(&[]),
+            Err(ArgError::MissingRequired(f)) if f == "model"
+        ));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            cmd().parse(&to_strings(&["--model", "m", "--nope", "1"])),
+            Err(ArgError::Unknown(f)) if f == "nope"
+        ));
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        match cmd().parse(&to_strings(&["--help"])) {
+            Err(ArgError::Help(h)) => {
+                assert!(h.contains("--port"));
+                assert!(h.contains("[default: 7070]"));
+                assert!(h.contains("[required]"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let c = Command::new("b", "x").flag("tp", "1,2,4,8", "ranks");
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.usize_list("tp").unwrap(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd()
+            .parse(&to_strings(&["--model", "m", "pos1", "pos2"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

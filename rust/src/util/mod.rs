@@ -1,0 +1,24 @@
+//! Offline-friendly foundations.
+//!
+//! The build environment has no network access and a minimal vendored crate
+//! set (no clap / serde / rand / criterion), so this module provides the
+//! small, well-tested pieces a serving framework normally pulls from crates:
+//!
+//! * [`argparse`] — declarative CLI flag parsing for the launcher binary.
+//! * [`json`] — a JSON value type, parser and serializer (artifact
+//!   manifests, bench result dumps, server wire protocol).
+//! * [`prng`] — deterministic SplitMix64 / xoshiro256** generators for
+//!   synthetic weights and workloads.
+//! * [`timer`] — measurement harness: warmup/iteration loops, robust
+//!   statistics (mean/median/p95/stddev), used by all `benches/`.
+//! * [`table`] — markdown/ASCII table + ASCII chart rendering so benches
+//!   can print the paper's tables and figures verbatim.
+//! * [`proptest_lite`] — a tiny property-testing driver (randomized cases
+//!   with seed reporting on failure) used across module tests.
+
+pub mod argparse;
+pub mod json;
+pub mod proptest_lite;
+pub mod prng;
+pub mod table;
+pub mod timer;

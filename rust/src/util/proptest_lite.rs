@@ -1,0 +1,101 @@
+//! A tiny property-testing driver (proptest is not in the offline crate
+//! set). Runs a property over many seeded random cases and, on failure,
+//! reports the seed so the case can be replayed deterministically.
+//!
+//! Usage:
+//! ```no_run
+//! use tpaware::util::proptest_lite::forall;
+//! use tpaware::util::prng::Xoshiro256;
+//! forall("perm roundtrip", 200, |g: &mut Xoshiro256| {
+//!     let n = 1 + g.below(64);
+//!     let p = g.permutation(n);
+//!     let inv = tpaware::quant::perm::invert(&p);
+//!     let id = tpaware::quant::perm::compose(&p, &inv);
+//!     assert!(id.iter().enumerate().all(|(i, &v)| v as usize == i));
+//! });
+//! ```
+
+use crate::util::prng::Xoshiro256;
+
+/// Number of cases can be scaled globally via `TPAWARE_PROPTEST_CASES`.
+fn scaled_cases(cases: usize) -> usize {
+    match std::env::var("TPAWARE_PROPTEST_CASES") {
+        Ok(v) => v.parse().unwrap_or(cases),
+        Err(_) => cases,
+    }
+}
+
+/// Run `prop` over `cases` random generators, each seeded deterministically.
+/// Panics (with the failing seed in the message) if any case panics.
+pub fn forall<F: Fn(&mut Xoshiro256) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    let base_seed: u64 = match std::env::var("TPAWARE_PROPTEST_SEED") {
+        Ok(v) => v.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..scaled_cases(cases) {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Xoshiro256::new(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 TPAWARE_PROPTEST_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("trivial", 50, |g| {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 3, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always fails"));
+        assert!(msg.contains("TPAWARE_PROPTEST_SEED"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        use std::sync::Mutex;
+        let seen1 = Mutex::new(Vec::new());
+        forall("collect", 5, |g| {
+            seen1.lock().unwrap().push(g.next_u64());
+        });
+        let seen2 = Mutex::new(Vec::new());
+        forall("collect", 5, |g| {
+            seen2.lock().unwrap().push(g.next_u64());
+        });
+        assert_eq!(*seen1.lock().unwrap(), *seen2.lock().unwrap());
+    }
+}

@@ -1,0 +1,171 @@
+//! Table and chart rendering for benches.
+//!
+//! The paper reports 28 tables and 4 figures; the bench binaries print each
+//! one in markdown (tables) and as ASCII line/bar series plus CSV (figures)
+//! so results can be diffed against the paper and replotted.
+
+/// A simple column-aligned table with a title, rendered as markdown.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render as a markdown table with padded columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A named series for ASCII charts (the paper's figures).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    /// (x label, y value)
+    pub points: Vec<(String, f64)>,
+}
+
+/// Render grouped horizontal bar chart: one group per x label, one bar per
+/// series — mirrors the paper's latency/speedup bar figures.
+pub fn bar_chart(title: &str, series: &[Series], unit: &str, width: usize) -> String {
+    let mut out = format!("### {title}\n\n");
+    let max = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.1))
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let name_w = series.iter().map(|s| s.name.len()).max().unwrap_or(0);
+    let nlabels = series.first().map(|s| s.points.len()).unwrap_or(0);
+    for li in 0..nlabels {
+        let label = &series[0].points[li].0;
+        out.push_str(&format!("{label}\n"));
+        for s in series {
+            let (_, y) = &s.points[li];
+            let bars = ((y / max) * width as f64).round() as usize;
+            out.push_str(&format!(
+                "  {:<name_w$} {:>8.3} {unit} |{}\n",
+                s.name,
+                y,
+                "█".repeat(bars.max(if *y > 0.0 { 1 } else { 0 })),
+            ));
+        }
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["M", "latency"]);
+        t.row(vec!["1".into(), "0.5".into()]);
+        t.row(vec!["16".into(), "0.7".into()]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| M "));
+        assert!(r.contains("| 16 |"));
+        assert_eq!(r.matches('\n').count(), 6); // title, blank, header, sep, 2 rows
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["v,w".into()]);
+        assert!(t.to_csv().contains("\"v,w\""));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_width() {
+        let s = vec![
+            Series {
+                name: "naive".into(),
+                points: vec![("TP=2".into(), 0.5), ("TP=8".into(), 0.5)],
+            },
+            Series {
+                name: "tp-aware".into(),
+                points: vec![("TP=2".into(), 0.25), ("TP=8".into(), 0.1)],
+            },
+        ];
+        let c = bar_chart("Latency", &s, "ms", 40);
+        assert!(c.contains("TP=2"));
+        assert!(c.contains("naive"));
+        // max bar is full width
+        assert!(c.contains(&"█".repeat(40)));
+    }
+}

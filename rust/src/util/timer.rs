@@ -1,0 +1,193 @@
+//! Measurement harness used by all benches (criterion is not in the
+//! offline crate set, and `cargo bench` targets use `harness = false`).
+//!
+//! Provides warmup + timed iteration loops with robust summary statistics,
+//! and a tiny `black_box` shim to stop the optimizer from deleting work.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from proving a value unused.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Summary statistics over a set of per-iteration timings.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Stats {
+    pub fn from_ns(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |q: f64| -> f64 {
+            let idx = ((n as f64 - 1.0) * q).round() as usize;
+            samples[idx]
+        };
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            stddev_ns: var.sqrt(),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+            p95_ns: pct(0.95),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    /// Render like `0.483 ms ±0.012 (n=50)`.
+    pub fn display_ms(&self) -> String {
+        format!(
+            "{:.3} ms ±{:.3} (n={})",
+            self.mean_ms(),
+            self.stddev_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchCfg {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even if over budget).
+    pub min_iters: usize,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl BenchCfg {
+    /// Quick config for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_iters: 200,
+            min_iters: 3,
+        }
+    }
+
+    /// Honor `TPAWARE_BENCH_FAST=1` to shrink budgets in CI/test runs.
+    pub fn from_env(self) -> Self {
+        if std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                warmup: Duration::from_millis(10),
+                measure: Duration::from_millis(50),
+                max_iters: 50,
+                min_iters: 2,
+            }
+        } else {
+            self
+        }
+    }
+}
+
+/// Run `f` under warmup/measure budgets and return statistics.
+pub fn bench<F: FnMut()>(cfg: &BenchCfg, mut f: F) -> Stats {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || samples.len() < cfg.min_iters)
+        && samples.len() < cfg.max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    Stats::from_ns(samples)
+}
+
+/// Time a single invocation (for coarse, long-running cases).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_ns(vec![100.0; 10]);
+        assert_eq!(s.mean_ns, 100.0);
+        assert_eq!(s.median_ns, 100.0);
+        assert_eq!(s.stddev_ns, 0.0);
+        assert_eq!(s.min_ns, 100.0);
+        assert_eq!(s.max_ns, 100.0);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_ns((1..=100).map(|i| i as f64).collect());
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns);
+        assert!(s.p95_ns <= s.max_ns);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let cfg = BenchCfg {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(1),
+            max_iters: 100,
+            min_iters: 5,
+        };
+        let mut count = 0usize;
+        let s = bench(&cfg, || {
+            count += 1;
+            black_box(count);
+        });
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT integration tests — the AOT boundary under test: python-lowered
+//! Pallas artifacts executing rust-quantized weights must reproduce the
+//! rust host oracle exactly (within f32 tolerance), for every artifact
+//! bucket and both algorithms.
+//!
+//! These tests require `make artifacts`; they skip (with a note) when the
+//! artifacts directory is absent so `cargo test` stays green in a fresh
+//! checkout.
+
+use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::model::config::ModelConfig;
+use tpaware::model::mlp::run_mlp_sequential;
+use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
+use tpaware::quant::gptq::GptqConfig;
+use tpaware::runtime::artifact::Manifest;
+use tpaware::simkernel::pipeline::Algo;
+use tpaware::tensor::Matrix;
+use tpaware::tp::topology::Topology;
+use tpaware::util::prng::Xoshiro256;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn qcfg(g: usize) -> GptqConfig {
+    GptqConfig {
+        group_size: g,
+        act_order: true,
+        ..Default::default()
+    }
+}
+
+/// Every tiny fused artifact bucket × both algorithms × both TP widths
+/// agrees with the host oracle.
+#[test]
+fn pjrt_engine_matches_host_oracle_all_buckets() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let cfg = ModelConfig::tiny();
+    let shape = cfg.mlp_shape();
+    let ckpt = gen_checkpoint(shape, 77);
+    for tp in [1usize, 2] {
+        for algo in [Algo::TpAware, Algo::Naive] {
+            let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), algo, Topology::new(tp));
+            let engine = TpEngine::start(
+                EngineBackend::Pjrt {
+                    model: cfg.name.clone(),
+                },
+                vec![d.clone()],
+                cfg.activation,
+                Some(&manifest),
+            )
+            .unwrap();
+            for m in manifest.m_buckets(&cfg.name, "fused", tp) {
+                let mut rng = Xoshiro256::new(m as u64 + 1);
+                let x = Matrix::randn(m, shape.k1, &mut rng);
+                let got = engine.mlp(0, &x).unwrap();
+                let expect = run_mlp_sequential(&d, &x, cfg.activation);
+                let diff = got.max_abs_diff(&expect);
+                assert!(diff < 2e-3, "algo={algo:?} tp={tp} m={m} diff={diff}");
+            }
+            engine.shutdown();
+        }
+    }
+}
+
+/// Batch padding: a batch of 3 runs on the M=4 bucket, truncated output
+/// equals exactly the oracle on 3 rows.
+#[test]
+fn pjrt_padding_to_bucket_is_transparent() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let cfg = ModelConfig::tiny();
+    let shape = cfg.mlp_shape();
+    let ckpt = gen_checkpoint(shape, 78);
+    let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::TpAware, Topology::new(2));
+    let engine = TpEngine::start(
+        EngineBackend::Pjrt {
+            model: cfg.name.clone(),
+        },
+        vec![d.clone()],
+        cfg.activation,
+        Some(&manifest),
+    )
+    .unwrap();
+    for odd_m in [3usize, 5, 7] {
+        let mut rng = Xoshiro256::new(odd_m as u64);
+        let x = Matrix::randn(odd_m, shape.k1, &mut rng);
+        let got = engine.mlp(0, &x).unwrap();
+        assert_eq!(got.rows, odd_m);
+        let expect = run_mlp_sequential(&d, &x, cfg.activation);
+        assert!(got.max_abs_diff(&expect) < 2e-3, "m={odd_m}");
+    }
+    engine.shutdown();
+}
+
+/// Oversized batches fail loudly, not wrongly.
+#[test]
+fn pjrt_oversized_batch_is_an_error() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let cfg = ModelConfig::tiny();
+    let shape = cfg.mlp_shape();
+    let ckpt = gen_checkpoint(shape, 79);
+    let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::TpAware, Topology::new(2));
+    let engine = TpEngine::start(
+        EngineBackend::Pjrt {
+            model: cfg.name.clone(),
+        },
+        vec![d],
+        cfg.activation,
+        Some(&manifest),
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::new(1);
+    let x = Matrix::randn(64, shape.k1, &mut rng); // > largest bucket (8)
+    assert!(engine.mlp(0, &x).is_err());
+    engine.shutdown();
+}
+
+/// Multi-layer PJRT engine: per-layer weight buffers stay distinct.
+#[test]
+fn pjrt_multi_layer_weights_do_not_mix() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let cfg = ModelConfig::tiny();
+    let shape = cfg.mlp_shape();
+    let layers: Vec<_> = (0..3)
+        .map(|i| {
+            deploy_quantized(
+                &gen_checkpoint(shape, 100 + i),
+                &qcfg(cfg.group_size),
+                Algo::TpAware,
+                Topology::new(2),
+            )
+        })
+        .collect();
+    let engine = TpEngine::start(
+        EngineBackend::Pjrt {
+            model: cfg.name.clone(),
+        },
+        layers.clone(),
+        cfg.activation,
+        Some(&manifest),
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::new(2);
+    let x = Matrix::randn(2, shape.k1, &mut rng);
+    for (i, d) in layers.iter().enumerate() {
+        let got = engine.mlp(i, &x).unwrap();
+        let expect = run_mlp_sequential(d, &x, cfg.activation);
+        assert!(got.max_abs_diff(&expect) < 2e-3, "layer {i}");
+    }
+    // Layers are genuinely different weights → different outputs.
+    let y0 = engine.mlp(0, &x).unwrap();
+    let y1 = engine.mlp(1, &x).unwrap();
+    assert!(y0.max_abs_diff(&y1) > 1e-2);
+    engine.shutdown();
+}
+
+/// llama-scaled artifacts run the naive staged path correctly too.
+#[test]
+fn pjrt_llama_scaled_naive_stages() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let cfg = ModelConfig::llama_scaled();
+    let shape = cfg.mlp_shape();
+    let ckpt = gen_checkpoint(shape, 55);
+    let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::Naive, Topology::new(4));
+    let engine = TpEngine::start(
+        EngineBackend::Pjrt {
+            model: cfg.name.clone(),
+        },
+        vec![d.clone()],
+        cfg.activation,
+        Some(&manifest),
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::new(3);
+    let x = Matrix::randn(4, shape.k1, &mut rng);
+    let got = engine.mlp(0, &x).unwrap();
+    let expect = run_mlp_sequential(&d, &x, cfg.activation);
+    assert!(got.max_abs_diff(&expect) < 5e-3, "{}", got.max_abs_diff(&expect));
+    // The naive engine paid its AllGather.
+    assert_eq!(engine.comm_stats().allgather_calls, 1);
+    engine.shutdown();
+}

@@ -1,0 +1,264 @@
+//! System integration tests that need no AOT artifacts: the full
+//! quantize → reorder → deploy → execute chain over thread ranks, the
+//! serving stack over TCP, and cross-module invariants.
+
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::request::Request;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::coordinator::server::{Client, Server};
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::mlp::{run_mlp, run_mlp_sequential};
+use tpaware::model::transformer::{KvCache, Transformer};
+use tpaware::model::weights::{deploy_dense, deploy_quantized, gen_checkpoint};
+use tpaware::quant::gptq::GptqConfig;
+use tpaware::simkernel::pipeline::{Algo, MlpShape};
+use tpaware::tensor::Matrix;
+use tpaware::tp::topology::Topology;
+use tpaware::util::prng::Xoshiro256;
+use tpaware::util::proptest_lite::forall;
+
+fn qcfg(g: usize) -> GptqConfig {
+    GptqConfig {
+        group_size: g,
+        act_order: true,
+        ..Default::default()
+    }
+}
+
+fn unit_model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "unit".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+        activation: Activation::Gelu,
+        group_size: 8,
+    }
+}
+
+/// Property over random shapes/TP: Algorithm 2 ≡ Algorithm 3 on real
+/// threads, dense and quantized.
+#[test]
+fn property_alg2_equals_alg3() {
+    forall("Alg.2 == Alg.3 across shapes", 15, |g: &mut Xoshiro256| {
+        // groups even so every tp ∈ {1,2,4} shards N1 on pack + group
+        // boundaries (N1/tp must divide by 8 and by the group size).
+        let groups = 2 * (1 + g.below(2));
+        let gsize = 8;
+        let k1 = groups * gsize;
+        let n1 = 2 * k1;
+        let shape = MlpShape { k1, n1, n2: k1 };
+        let tp = [1usize, 2, 4][g.below(3)];
+        let m = 1 + g.below(5);
+        let ckpt = gen_checkpoint(shape, g.next_u64());
+        let x = Matrix::randn(m, k1, g);
+        let dn = deploy_quantized(&ckpt, &qcfg(gsize), Algo::Naive, Topology::new(tp));
+        let da = deploy_quantized(&ckpt, &qcfg(gsize), Algo::TpAware, Topology::new(tp));
+        let (yn, _) = run_mlp(&dn, &x, Activation::Silu);
+        let (ya, _) = run_mlp(&da, &x, Activation::Silu);
+        assert!(
+            yn.max_abs_diff(&ya) < 1e-3,
+            "tp={tp} m={m} diff={}",
+            yn.max_abs_diff(&ya)
+        );
+    });
+}
+
+/// Dense and quantized deployments use identical permutation plumbing:
+/// their outputs differ only by quantization error (bounded, small).
+#[test]
+fn dense_and_quant_deployments_close() {
+    let shape = MlpShape {
+        k1: 32,
+        n1: 64,
+        n2: 32,
+    };
+    let ckpt = gen_checkpoint(shape, 3);
+    let mut rng = Xoshiro256::new(4);
+    let x = Matrix::randn(2, 32, &mut rng);
+    for algo in [Algo::Naive, Algo::TpAware] {
+        let dq = deploy_quantized(&ckpt, &qcfg(8), algo, Topology::new(2));
+        let dd = deploy_dense(&ckpt, &qcfg(8), algo, Topology::new(2));
+        let (yq, _) = run_mlp(&dq, &x, Activation::Identity);
+        let (yd, _) = run_mlp(&dd, &x, Activation::Identity);
+        // Dense deployment dequantizes the same integers → must be ~equal.
+        assert!(yq.max_abs_diff(&yd) < 1e-3);
+    }
+}
+
+/// TP width is transparent: every TP gives the unsharded result.
+#[test]
+fn tp_width_transparency() {
+    let shape = MlpShape {
+        k1: 64,
+        n1: 128,
+        n2: 64,
+    };
+    let ckpt = gen_checkpoint(shape, 5);
+    let mut rng = Xoshiro256::new(6);
+    let x = Matrix::randn(3, 64, &mut rng);
+    let base = run_mlp_sequential(
+        &deploy_quantized(&ckpt, &qcfg(16), Algo::TpAware, Topology::new(1)),
+        &x,
+        Activation::Gelu,
+    );
+    for tp in [2usize, 4, 8] {
+        let d = deploy_quantized(&ckpt, &qcfg(16), Algo::TpAware, Topology::new(tp));
+        let (y, _) = run_mlp(&d, &x, Activation::Gelu);
+        assert!(y.max_abs_diff(&base) < 1e-3, "tp={tp}");
+    }
+}
+
+/// Full-model equivalence across deployments, through the *TP engine*
+/// (persistent rank threads), not just the sequential path.
+#[test]
+fn transformer_generation_invariant_under_deployment() {
+    let cfg = unit_model_cfg();
+    let base = Transformer::synthesize(&cfg, Algo::Naive, Topology::new(1), 9);
+    let prompt = [5u32, 9, 13];
+    let reference = base.generate(&prompt, 6);
+    for (algo, tp) in [(Algo::Naive, 2), (Algo::TpAware, 2), (Algo::TpAware, 4)] {
+        let model = base.redeploy(algo, Topology::new(tp));
+        let engine = TpEngine::start(
+            EngineBackend::Host,
+            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
+            cfg.activation,
+            None,
+        )
+        .unwrap();
+        // Generate via engine-backed decode steps.
+        let mut cache = vec![KvCache::new(cfg.n_layers)];
+        let mut last = 0u32;
+        for &t in &prompt {
+            let logits = model.decode_step_mlp(&[t], &mut cache, &mut |l, x| {
+                engine.mlp(l, x).unwrap()
+            });
+            last = tpaware::model::transformer::argmax(logits.row(0));
+        }
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            got.push(last);
+            let logits = model.decode_step_mlp(&[last], &mut cache, &mut |l, x| {
+                engine.mlp(l, x).unwrap()
+            });
+            last = tpaware::model::transformer::argmax(logits.row(0));
+        }
+        engine.shutdown();
+        assert_eq!(got, reference, "algo={algo:?} tp={tp}");
+    }
+}
+
+/// The serving stack end to end over TCP with an engine-backed scheduler.
+#[test]
+fn tcp_serving_with_host_engine() {
+    let cfg = unit_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 21));
+    let engine = TpEngine::start(
+        EngineBackend::Host,
+        model.blocks.iter().map(|b| b.mlp.clone()).collect(),
+        cfg.activation,
+        None,
+    )
+    .unwrap();
+    let expected = model.generate(&[7, 3], 5);
+    let scheduler = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 4);
+    let server = Server::start("127.0.0.1:0", scheduler).unwrap();
+    let addr = server.addr.clone();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.generate(&[7, 3], 5).unwrap();
+    assert_eq!(r.tokens, expected);
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("requests_completed").as_usize(), Some(1));
+    c.shutdown().unwrap();
+    server.stop();
+}
+
+/// Offline scheduler under heavy concurrency: many requests, bounded
+/// batches, all complete, deterministic per-sequence results.
+#[test]
+fn scheduler_bulk_consistency() {
+    let cfg = unit_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 33));
+    let sched = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 8);
+    let reqs: Vec<Request> = (0..24)
+        .map(|i| Request::new(i, vec![(i % 50) as u32 + 1], 3))
+        .collect();
+    let resps = sched.run_all(reqs);
+    assert_eq!(resps.len(), 24);
+    // Same prompt → same tokens, regardless of batch placement.
+    for i in 0..24u64 {
+        let twin = (i + 50) % 50; // same (i % 50) bucket
+        let a = &resps[i as usize];
+        let b = resps.iter().find(|r| r.id == twin).unwrap();
+        if i % 50 == twin % 50 {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+}
+
+/// Multi-replica deployment: a router in front of two serving replicas
+/// (each its own scheduler + TCP server). Same prompt → same tokens from
+/// either replica; least-outstanding routing balances load.
+#[test]
+fn router_across_two_server_replicas() {
+    use tpaware::coordinator::router::{Policy, Router};
+    let cfg = unit_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 77));
+    let mk_server = || {
+        let sched = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
+        Server::start("127.0.0.1:0", sched).unwrap()
+    };
+    let s1 = mk_server();
+    let s2 = mk_server();
+    let addrs = [s1.addr.clone(), s2.addr.clone()];
+    let router = Router::new(Policy::LeastOutstanding, 2);
+
+    let expect = model.generate(&[4, 2], 5);
+    let mut hit = [0usize; 2];
+    // Route all requests first (outstanding counts accumulate, so
+    // least-outstanding alternates), then run them.
+    let picks: Vec<usize> = (0..6u64).map(|s| router.route(s)).collect();
+    for &replica in &picks {
+        hit[replica] += 1;
+        let mut c = Client::connect(&addrs[replica]).unwrap();
+        let r = c.generate(&[4, 2], 5).unwrap();
+        assert_eq!(r.tokens, expect, "replica {replica} diverged");
+        router.complete(replica);
+    }
+    assert_eq!(hit, [3, 3], "least-outstanding must balance: {hit:?}");
+    for (s, addr) in [s1, s2].into_iter().zip(addrs) {
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        s.stop();
+    }
+}
+
+/// Comm accounting at the model level: per decode step, the naive model
+/// pays n_layers AllGathers, the TP-aware model zero.
+#[test]
+fn model_level_comm_accounting() {
+    let cfg = unit_model_cfg();
+    for (algo, expect_ag) in [(Algo::Naive, 2usize), (Algo::TpAware, 0)] {
+        let model = Transformer::synthesize(&cfg, algo, Topology::new(2), 11);
+        let engine = TpEngine::start(
+            EngineBackend::Host,
+            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
+            cfg.activation,
+            None,
+        )
+        .unwrap();
+        let mut cache = vec![KvCache::new(cfg.n_layers)];
+        engine.reset_comm_stats();
+        model.decode_step_mlp(&[1], &mut cache, &mut |l, x| engine.mlp(l, x).unwrap());
+        let stats = engine.comm_stats();
+        assert_eq!(stats.allgather_calls, expect_ag, "algo={algo:?}");
+        assert_eq!(stats.allreduce_calls, cfg.n_layers);
+        engine.shutdown();
+    }
+}
