@@ -12,7 +12,7 @@ use tpaware::tensor::Matrix;
 use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tpaware::Result<()> {
     let (k, n, g) = (128usize, 64usize, 32usize);
     let mut rng = Xoshiro256::new(3);
     let w = Matrix::randn(k, n, &mut rng);
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         "RTN".into(),
         format!("{rtn_loss:.4}"),
         "1.00x".into(),
-        format!("{}", rtn.gidx.is_ordered()),
+        rtn.gidx.is_ordered().to_string(),
         rtn.gidx.metadata_loads().to_string(),
     ]);
 
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             format!("GPTQ act_order={act_order}"),
             format!("{loss:.4}"),
             format!("{:.2}x", loss / rtn_loss),
-            format!("{}", q.gidx.is_ordered()),
+            q.gidx.is_ordered().to_string(),
             q.gidx.metadata_loads().to_string(),
         ]);
         if act_order {
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
                 "  + Algorithm 1".into(),
                 format!("{loss:.4}"),
                 format!("{:.2}x", loss / rtn_loss),
-                format!("{}", q_opt.gidx.is_ordered()),
+                q_opt.gidx.is_ordered().to_string(),
                 q_opt.gidx.metadata_loads().to_string(),
             ]);
             println!("Algorithm 1 permutation P[0..12] = {:?}", &p[..12]);

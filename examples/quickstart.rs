@@ -20,7 +20,7 @@ use tpaware::tp::collectives::CollectiveGroup;
 use tpaware::tp::topology::Topology;
 use tpaware::util::prng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tpaware::Result<()> {
     // --- 1. Quantize with act_order GPTQ -------------------------------
     let shape = MlpShape {
         k1: 128,

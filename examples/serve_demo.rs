@@ -18,7 +18,7 @@ use tpaware::simkernel::pipeline::Algo;
 use tpaware::tp::topology::Topology;
 use tpaware::util::prng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tpaware::Result<()> {
     let cfg = ModelConfig::tiny();
     let tp = Topology::new(2);
     let algo = Algo::TpAware;
@@ -28,9 +28,11 @@ fn main() -> anyhow::Result<()> {
     );
     let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, 42));
 
-    // Prefer the PJRT backend (the production path); fall back to host.
+    // Prefer the PJRT backend (the production path); fall back to host
+    // when artifacts are missing or this build has only the stubbed xla
+    // facade (which cannot start a PJRT client).
     let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
-    let (engine, backend_name) = match Manifest::load(&Manifest::default_dir()) {
+    let (engine, backend_name) = match Manifest::load_for_pjrt() {
         Ok(manifest) => (
             TpEngine::start(
                 EngineBackend::Pjrt {
@@ -43,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             "pjrt",
         ),
         Err(e) => {
-            eprintln!("note: artifacts unavailable ({e}); using host backend");
+            eprintln!("note: PJRT unavailable ({e}); using host backend");
             (
                 TpEngine::start(EngineBackend::Host, layers, cfg.activation, None)?,
                 "host",
@@ -65,12 +67,12 @@ fn main() -> anyhow::Result<()> {
     let handles: Vec<_> = (0..CLIENTS)
         .map(|i| {
             let addr = addr.clone();
-            std::thread::spawn(move || -> anyhow::Result<_> {
+            std::thread::spawn(move || -> tpaware::Result<_> {
                 let mut rng = Xoshiro256::new(1000 + i as u64);
                 let prompt: Vec<u32> =
                     (0..4 + rng.below(4)).map(|_| rng.below(512) as u32).collect();
                 let mut c = Client::connect(&addr)?;
-                Ok(c.generate(&prompt, MAX_NEW)?)
+                c.generate(&prompt, MAX_NEW)
             })
         })
         .collect();

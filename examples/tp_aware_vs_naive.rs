@@ -19,7 +19,7 @@ use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
 use tpaware::util::timer::{bench, BenchCfg};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tpaware::Result<()> {
     let cfg = ModelConfig::llama_scaled();
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
@@ -67,8 +67,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.render());
 
-    // --- PJRT engine sweep (needs `make artifacts`) ----------------------
-    match Manifest::load(&Manifest::default_dir()) {
+    // --- PJRT engine sweep (needs `make artifacts` + real xla build) -----
+    match Manifest::load_for_pjrt() {
         Err(e) => println!("(skipping PJRT sweep: {e})"),
         Ok(manifest) => {
             let mut t = Table::new(
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             );
             for tp in [1usize, 2, 4] {
                 let topo = Topology::new(tp);
-                let mk_engine = |algo| -> anyhow::Result<TpEngine> {
+                let mk_engine = |algo| -> tpaware::Result<TpEngine> {
                     TpEngine::start(
                         EngineBackend::Pjrt {
                             model: cfg.name.clone(),
@@ -120,8 +120,9 @@ fn main() -> anyhow::Result<()> {
             println!("{}", t.render());
             println!(
                 "note: on CPU thread-ranks the AllGather is shared-memory and cheap;\n\
-                 the latency win here is the removed reorder/chunk/launches. The paper's\n\
-                 full 1.8x appears in the modeled A100/H100 tables (`cargo bench --bench paper_tables`)."
+                 the latency win here is the removed reorder/chunk/launches. The\n\
+                 paper's full 1.8x appears in the modeled A100/H100 tables\n\
+                 (`cargo bench --bench paper_tables`)."
             );
         }
     }

@@ -101,14 +101,24 @@ def mlp_specs(model, tp, m, kind):
     return specs, descs
 
 
+def _named_partial(fn, **kwargs):
+    """A partial that keeps ``fn``'s ``__name__``: jax names the lowered
+    HLO module after the jitted callable (``jit_<name>``), and a bare
+    ``functools.partial`` has no name, which would produce
+    ``jit__unnamed_wrapped_function_`` modules in the artifacts."""
+    p = functools.partial(fn, **kwargs)
+    functools.update_wrapper(p, fn)
+    return p
+
+
 def mlp_fn(model, kind):
     k1, n1, n2, g, act = MODELS[model]
     if kind == "stage1":
-        return functools.partial(M.mlp_stage1, group_size=g, act=act)
+        return _named_partial(M.mlp_stage1, group_size=g, act=act)
     if kind == "stage2":
-        return functools.partial(M.mlp_stage2, group_size=g)
+        return _named_partial(M.mlp_stage2, group_size=g)
     if kind == "fused":
-        return functools.partial(M.mlp_fused, group_size=g, act=act)
+        return _named_partial(M.mlp_fused, group_size=g, act=act)
     raise ValueError(kind)
 
 
@@ -131,7 +141,7 @@ def kernel_specs(model, m, kind):
 def kernel_fn(model, kind):
     _k1, _n1, _n2, g, _ = MODELS[model]
     if kind == "kernel_ordered":
-        return functools.partial(dequant_matmul_ordered, group_size=g)
+        return _named_partial(dequant_matmul_ordered, group_size=g)
     if kind == "kernel_naive":
         return dequant_matmul_naive_gidx
     raise ValueError(kind)

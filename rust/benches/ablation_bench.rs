@@ -161,7 +161,7 @@ fn main() {
         t.row(vec![
             format!("GPTQ act_order={act_order}"),
             format!("{loss:.4}"),
-            format!("{}", q.gidx.is_ordered()),
+            q.gidx.is_ordered().to_string(),
             q.gidx.metadata_loads().to_string(),
         ]);
         if act_order {

@@ -52,9 +52,10 @@ fn main() {
         .map(|p| p.get())
         .unwrap_or(1);
     println!("({cores} hardware thread(s); TP ranks time-slice when cores < ranks)\n");
-    let tps: Vec<usize> = vec![2, 4, 8];
+    let tps = [2usize, 4, 8];
 
-    let mut csv = String::from("op,tp,bytes,measured_ms,a100_model_ms,h100_model_ms,pcie_model_ms\n");
+    let mut csv =
+        String::from("op,tp,bytes,measured_ms,a100_model_ms,h100_model_ms,pcie_model_ms\n");
     for (op, allgather) in [("allgather", true), ("allreduce", false)] {
         let mut t = Table::new(
             &format!("{op}: measured thread ranks vs modeled fabrics"),

@@ -69,8 +69,9 @@ fn main() {
     }
     println!("{}", t.render());
 
-    // PJRT kernel artifacts (ordered vs naive-gidx), if built.
-    match Manifest::load(&Manifest::default_dir()) {
+    // PJRT kernel artifacts (ordered vs naive-gidx), if built and a real
+    // PJRT runtime is linked (the stub facade cannot execute them).
+    match Manifest::load_for_pjrt() {
         Err(e) => println!("(skipping PJRT kernel sweep: {e})"),
         Ok(manifest) => {
             let ctx = PjrtContext::cpu().expect("pjrt client");

@@ -86,7 +86,13 @@ fn host_sweep(cfg: &ModelConfig, tps: &[usize], ms: &[usize], csv: &mut String) 
     println!("{}", t.render());
 }
 
-fn pjrt_sweep(cfg: &ModelConfig, manifest: &Manifest, tps: &[usize], ms: &[usize], csv: &mut String) {
+fn pjrt_sweep(
+    cfg: &ModelConfig,
+    manifest: &Manifest,
+    tps: &[usize],
+    ms: &[usize],
+    csv: &mut String,
+) {
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
         group_size: cfg.group_size,
@@ -149,7 +155,7 @@ fn main() {
     let cores = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
-    let tps: Vec<usize> = vec![1, 2, 4];
+    let tps = [1usize, 2, 4];
     println!(
         "({cores} hardware thread(s): with fewer cores than ranks, TP>1 rows are\n\
          time-sliced — read them for correctness + communication accounting; the\n\
@@ -160,7 +166,7 @@ fn main() {
         host_sweep(&cfg, &tps, &[1, 4, 16], &mut csv);
     }
 
-    match Manifest::load(&Manifest::default_dir()) {
+    match Manifest::load_for_pjrt() {
         Ok(manifest) => {
             let llama = ModelConfig::llama_scaled();
             let tps_pjrt: Vec<usize> =

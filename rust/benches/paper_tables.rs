@@ -73,7 +73,7 @@ fn emit_latency_table(
                     format!("{:.2}x", r.1 / r.2),
                 )
             })
-            .unwrap_or(("-".into(), "-".into(), "-".into()));
+            .unwrap_or_else(|| ("-".into(), "-".into(), "-".into()));
         t.row(vec![
             m.to_string(),
             format!("({}, {}, {})", shape.k1, shape.n1, shape.n2),
@@ -90,7 +90,7 @@ fn emit_latency_table(
             c.aware_ms,
             paper
                 .map(|p| format!("{:.3},{:.3}", p.rows[i].1, p.rows[i].2))
-                .unwrap_or(",".into())
+                .unwrap_or_else(|| ",".into())
         ));
     }
     println!("{}", t.render());
@@ -153,7 +153,9 @@ fn emit_figures(model: &str, shape: MlpShape, gpu: &GpuSpec, fig_lat: u32, fig_s
 fn main() {
     let a100 = GpuSpec::by_name("a100").unwrap();
     let h100 = GpuSpec::by_name("h100").unwrap();
-    let mut csv = String::from("model,gpu,tp,m,model_naive_ms,model_aware_ms,paper_naive_ms,paper_aware_ms\n");
+    let mut csv = String::from(
+        "model,gpu,tp,m,model_naive_ms,model_aware_ms,paper_naive_ms,paper_aware_ms\n",
+    );
 
     println!("=== TP-Aware Dequantization: modeled reproduction of Tables 1-28 ===\n");
     let mut headline = Vec::new();
@@ -195,7 +197,9 @@ fn main() {
         6,
     );
 
-    println!("=== Headline (paper: 1.81x Llama / 1.80x Granite on A100; 1.76x / 1.78x on H100) ===");
+    println!(
+        "=== Headline (paper: 1.81x Llama / 1.80x Granite on A100; 1.76x / 1.78x on H100) ==="
+    );
     for (model, gpu, avg) in &headline {
         println!("  {model} {gpu} TP=8 average speedup: {avg:.2}x");
     }

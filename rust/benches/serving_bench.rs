@@ -70,7 +70,7 @@ fn main() {
         cfg.name, cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.group_size, n_requests, max_new
     );
 
-    let manifest = Manifest::load(&Manifest::default_dir()).ok();
+    let manifest = Manifest::load_for_pjrt().ok();
     let mut t = Table::new(
         "End-to-end serving: naive vs TP-aware deployments",
         &[
@@ -96,7 +96,7 @@ fn main() {
                 ),
             )];
             if let Some(m) = &manifest {
-                if m.m_buckets(&cfg.name, "fused", tp).len() > 0 {
+                if !m.m_buckets(&cfg.name, "fused", tp).is_empty() {
                     backends.push((
                         "pjrt",
                         Some(

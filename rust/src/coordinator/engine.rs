@@ -24,7 +24,8 @@ use crate::simkernel::pipeline::Algo;
 use crate::tensor::Matrix;
 use crate::tp::collectives::{CollectiveGroup, CommStats, RankComm};
 use crate::tp::sharding::chunk_cols;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context as _, Result};
+use crate::{bail, err};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -98,6 +99,24 @@ impl WorkerCtx {
     }
 }
 
+/// Build one rank's PJRT executor and upload every layer's shard weights
+/// (runs on the rank thread — `PjrtContext` must not cross threads).
+fn build_rank_executor(
+    manifest: &Manifest,
+    model: &str,
+    algo: Algo,
+    tp: usize,
+    rank: usize,
+    layers: &[DeployedMlp],
+) -> Result<RankMlpExecutor> {
+    let mut e =
+        RankMlpExecutor::new(manifest, model, algo, tp, rank).context("building rank executor")?;
+    for d in layers {
+        e.add_layer(d)?;
+    }
+    Ok(e)
+}
+
 impl TpEngine {
     /// Start the rank pool.
     ///
@@ -112,11 +131,11 @@ impl TpEngine {
     ) -> Result<TpEngine> {
         let first = layers
             .first()
-            .ok_or_else(|| anyhow!("engine needs at least one layer"))?;
+            .ok_or_else(|| err!("engine needs at least one layer"))?;
         let algo = first.algo;
         let tp = first.tp.size;
         if !layers.iter().all(|d| d.algo == algo && d.tp.size == tp) {
-            return Err(anyhow!("all layers must share algo and tp"));
+            bail!("all layers must share algo and tp");
         }
         let n_layers = layers.len();
         let layers = Arc::new(layers);
@@ -129,7 +148,7 @@ impl TpEngine {
         let manifest = match &backend {
             EngineBackend::Pjrt { .. } => Some(
                 manifest
-                    .ok_or_else(|| anyhow!("PJRT backend requires a manifest"))?
+                    .ok_or_else(|| err!("PJRT backend requires a manifest"))?
                     .clone(),
             ),
             EngineBackend::Host => None,
@@ -153,15 +172,8 @@ impl TpEngine {
                     let exec = match &backend {
                         EngineBackend::Host => None,
                         EngineBackend::Pjrt { model } => {
-                            let built = (|| -> Result<RankMlpExecutor> {
-                                let m = manifest.as_ref().unwrap();
-                                let mut e = RankMlpExecutor::new(m, model, algo, tp, rank)
-                                    .context("building rank executor")?;
-                                for d in layers.iter() {
-                                    e.add_layer(d)?;
-                                }
-                                Ok(e)
-                            })();
+                            let m = manifest.as_ref().expect("checked above");
+                            let built = build_rank_executor(m, model, algo, tp, rank, &layers);
                             match built {
                                 Ok(e) => {
                                     let _ = ready_tx.send(Ok(()));
@@ -203,7 +215,7 @@ impl TpEngine {
         for _ in 0..tp {
             ready_rx
                 .recv()
-                .map_err(|_| anyhow!("rank died during startup"))??;
+                .map_err(|_| err!("rank died during startup"))??;
         }
         Ok(TpEngine {
             algo,
@@ -238,7 +250,7 @@ impl TpEngine {
     /// blocks until the reduced output is back.
     pub fn mlp(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
         if layer >= self.n_layers {
-            return Err(anyhow!("layer {layer} out of range"));
+            bail!("layer {layer} out of range");
         }
         let x = Arc::new(x.clone());
         for tx in &self.senders {
@@ -246,11 +258,11 @@ impl TpEngine {
                 layer,
                 x: x.clone(),
             })
-            .map_err(|_| anyhow!("engine rank died"))?;
+            .map_err(|_| err!("engine rank died"))?;
         }
         self.reply
             .recv()
-            .map_err(|_| anyhow!("engine reply channel closed"))?
+            .map_err(|_| err!("engine reply channel closed"))?
     }
 
     /// Stop all rank threads.
@@ -357,7 +369,12 @@ mod tests {
 
     #[test]
     fn engine_rejects_mixed_layers() {
-        let a = deploy_quantized(&gen_checkpoint(shape(), 1), &cfg(), Algo::Naive, Topology::new(2));
+        let a = deploy_quantized(
+            &gen_checkpoint(shape(), 1),
+            &cfg(),
+            Algo::Naive,
+            Topology::new(2),
+        );
         let b = deploy_quantized(
             &gen_checkpoint(shape(), 2),
             &cfg(),
@@ -375,7 +392,12 @@ mod tests {
 
     #[test]
     fn out_of_range_layer_errors() {
-        let d = deploy_quantized(&gen_checkpoint(shape(), 3), &cfg(), Algo::TpAware, Topology::new(1));
+        let d = deploy_quantized(
+            &gen_checkpoint(shape(), 3),
+            &cfg(),
+            Algo::TpAware,
+            Topology::new(1),
+        );
         let engine =
             TpEngine::start(EngineBackend::Host, vec![d], Activation::Identity, None).unwrap();
         let mut rng = Xoshiro256::new(4);

@@ -11,8 +11,9 @@
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response, SeqState};
 use crate::coordinator::scheduler::Scheduler;
+use crate::util::error::{Context as _, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::{bail, err};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -222,10 +223,10 @@ fn handle_conn(
                 req: Request::new(id, prompt, max_new),
                 reply: reply_tx,
             })
-            .map_err(|_| anyhow!("scheduler gone"))?;
+            .map_err(|_| err!("scheduler gone"))?;
         let resp = reply_rx
             .recv()
-            .map_err(|_| anyhow!("scheduler dropped request"))?;
+            .map_err(|_| err!("scheduler dropped request"))?;
         writeln!(out, "{}", response_json(&resp))?;
     }
 }
@@ -249,7 +250,7 @@ impl Client {
         writeln!(self.writer, "{msg}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        Ok(json::parse(line.trim()).context("parsing server reply")?)
+        json::parse(line.trim()).context("parsing server reply")
     }
 
     /// Generate `max_new` tokens from `prompt`.
@@ -263,7 +264,7 @@ impl Client {
         ]);
         let r = self.roundtrip(&msg)?;
         if let Some(err) = r.get("error").as_str() {
-            return Err(anyhow!("server error: {err}"));
+            bail!("server error: {err}");
         }
         Ok(Response {
             id: r.get("id").as_usize().unwrap_or(0) as u64,

@@ -28,18 +28,36 @@
 //!   the python AOT path and executes them on the request path.
 //! * [`coordinator`] — the L3 serving system: router, dynamic batcher,
 //!   scheduler, TP engine, metrics.
-//! * [`util`] — offline-friendly foundations: argparse, JSON, PRNG,
-//!   bench timer/statistics, table rendering.
+//! * [`util`] — offline-friendly foundations: argparse, error handling,
+//!   JSON, PRNG, bench timer/statistics, table rendering.
+//!
+//! ## Error convention
+//!
+//! The crate has **zero external dependencies**; error handling goes
+//! through [`util::error`] (the vendored `anyhow` stand-in) rather than
+//! `anyhow`/`thiserror`:
+//!
+//! * fallible APIs return the crate-wide [`Result`] alias
+//!   (re-exported here from [`util::error`]);
+//! * construct ad-hoc errors with [`err!`], return early with [`bail!`]
+//!   and [`ensure!`];
+//! * attach context with [`util::error::Context`]
+//!   (`.context(...)` / `.with_context(|| ...)`), which also lifts
+//!   `Option` into [`Result`];
+//! * typed errors (e.g. [`util::argparse::ArgError`]) implement
+//!   `std::error::Error`, convert via `?`, and are recoverable with
+//!   [`Error::downcast_ref`];
+//! * `{e}` displays the outermost message, `{e:#}` the full context
+//!   chain — error-path tests assert against both forms.
 
 pub mod coordinator;
 pub mod gemm;
-pub mod tensor;
 pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod simkernel;
+pub mod tensor;
 pub mod tp;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use util::error::{Error, Result};

@@ -8,12 +8,13 @@
 //!   quantize    quantize a synthetic checkpoint and report error stats
 //!   validate    run the cross-layer validation suite (PJRT vs host oracle)
 
-use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
+use tpaware::bail;
 use tpaware::coordinator::engine::{EngineBackend, TpEngine};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
 use tpaware::coordinator::server::{Client, Server};
+use tpaware::err;
 use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
 use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
@@ -21,11 +22,12 @@ use tpaware::quant::gptq::{hessian, hessian_loss, quantize_gptq, quantize_rtn, G
 use tpaware::runtime::artifact::Manifest;
 use tpaware::simkernel::gemm_model::WeightDtype;
 use tpaware::simkernel::gpu::GpuSpec;
-use tpaware::simkernel::pipeline::{self, Algo, MlpShape};
 use tpaware::simkernel::paper_data;
+use tpaware::simkernel::pipeline::{self, Algo, MlpShape};
 use tpaware::tensor::Matrix;
 use tpaware::tp::topology::Topology;
 use tpaware::util::argparse::{ArgError, Command};
+use tpaware::util::error::Result;
 use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
 use tpaware::util::timer::{bench, BenchCfg};
@@ -90,7 +92,7 @@ fn parse_algo(s: &str) -> Result<Algo> {
     match s {
         "naive" => Ok(Algo::Naive),
         "tp-aware" | "tp_aware" | "aware" => Ok(Algo::TpAware),
-        _ => Err(anyhow!("algo must be 'naive' or 'tp-aware'")),
+        _ => Err(err!("algo must be 'naive' or 'tp-aware'")),
     }
 }
 
@@ -106,7 +108,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("artifacts", "artifacts", "artifacts directory");
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
-        .ok_or_else(|| anyhow!("unknown model '{}'", a.get("model")))?;
+        .ok_or_else(|| err!("unknown model '{}'", a.get("model")))?;
     let tp = Topology::new(a.usize("tp")?);
     let algo = parse_algo(a.get("algo"))?;
     let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, a.u64("seed")?));
@@ -170,7 +172,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let prompt: Vec<u32> = a
         .get("prompt")
         .split(',')
-        .map(|t| t.trim().parse::<u32>().map_err(|_| anyhow!("bad token")))
+        .map(|t| t.trim().parse::<u32>().map_err(|_| err!("bad token")))
         .collect::<Result<_>>()?;
     let r = c.generate(&prompt, a.usize("max-new")?)?;
     println!(
@@ -195,9 +197,9 @@ fn cmd_tables(args: &[String]) -> Result<()> {
         g => vec![Box::leak(g.to_string().into_boxed_str())],
     };
     for model in &models {
-        let shape = MlpShape::by_name(model).ok_or_else(|| anyhow!("bad model"))?;
+        let shape = MlpShape::by_name(model).ok_or_else(|| err!("bad model"))?;
         for gpu_name in &gpus {
-            let gpu = GpuSpec::by_name(gpu_name).ok_or_else(|| anyhow!("bad gpu"))?;
+            let gpu = GpuSpec::by_name(gpu_name).ok_or_else(|| err!("bad gpu"))?;
             for &tp in &a.usize_list("tp")? {
                 print!("{}", render_table(model, shape, &gpu, gpu_name, tp));
             }
@@ -273,7 +275,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         .flag("seed", "7", "weight seed");
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
-        .ok_or_else(|| anyhow!("unknown model"))?;
+        .ok_or_else(|| err!("unknown model"))?;
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
         group_size: cfg.group_size,
@@ -352,12 +354,26 @@ fn cmd_quantize(args: &[String]) -> Result<()> {
     let rtn = quantize_rtn(&w, &cfg);
     let gptq_loss = hessian_loss(&w, &q.dequantize(), &h);
     let rtn_loss = hessian_loss(&w, &rtn.dequantize(), &h);
-    println!("GPTQ quantization report  (K={k}, N={n}, G={g}, act_order={})", cfg.act_order);
-    println!("  hessian-weighted loss: gptq {gptq_loss:.4}  rtn {rtn_loss:.4}  (ratio {:.3})", gptq_loss / rtn_loss);
+    println!(
+        "GPTQ quantization report  (K={k}, N={n}, G={g}, act_order={})",
+        cfg.act_order
+    );
+    println!(
+        "  hessian-weighted loss: gptq {gptq_loss:.4}  rtn {rtn_loss:.4}  (ratio {:.3})",
+        gptq_loss / rtn_loss
+    );
     println!("  g_idx ordered: {}", q.gidx.is_ordered());
-    println!("  metadata loads (naive walk): {} / ordered: {}", q.gidx.metadata_loads(), q.gidx.num_groups());
+    println!(
+        "  metadata loads (naive walk): {} / ordered: {}",
+        q.gidx.metadata_loads(),
+        q.gidx.num_groups()
+    );
     let (p, q_opt) = q.reorder();
-    println!("  after Algorithm 1: ordered={} loads={}", q_opt.gidx.is_ordered(), q_opt.gidx.metadata_loads());
+    println!(
+        "  after Algorithm 1: ordered={} loads={}",
+        q_opt.gidx.is_ordered(),
+        q_opt.gidx.metadata_loads()
+    );
     println!("  P[0..8] = {:?}", &p[..8.min(p.len())]);
     println!("  bytes: packed+meta {} (fp16 would be {})", q.nbytes(), k * n * 2);
     Ok(())
@@ -371,7 +387,7 @@ fn cmd_validate(args: &[String]) -> Result<()> {
     let a = spec.parse(args)?;
     let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
     let cfg = ModelConfig::by_name(a.get("model"))
-        .ok_or_else(|| anyhow!("unknown model"))?;
+        .ok_or_else(|| err!("unknown model"))?;
     let tp = Topology::new(a.usize("tp")?);
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {

@@ -111,7 +111,7 @@ impl Transformer {
         };
         let blocks = (0..cfg.n_layers)
             .map(|li| {
-                let mlp_ckpt = gen_checkpoint(cfg.mlp_shape(), seed ^ (li as u64 + 1) * 7919);
+                let mlp_ckpt = gen_checkpoint(cfg.mlp_shape(), seed ^ ((li as u64 + 1) * 7919));
                 let mlp = deploy_quantized(&mlp_ckpt, &qcfg, algo, tp);
                 BlockWeights {
                     wq: mat(d, d, &mut rng),

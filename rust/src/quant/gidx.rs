@@ -167,6 +167,32 @@ mod tests {
         });
     }
 
+    /// Eq. 3 → Algorithm 1 → Eq. 1: for ANY permutation φ,
+    /// `argsort(g_idx)` restores monotone group indices, and the sorted
+    /// array is exactly the naive (Eq. 1) layout — the invariant that
+    /// makes the ordered kernel schedule correct for act_order weights.
+    #[test]
+    fn argsort_of_act_order_restores_eq1() {
+        forall("argsort(g_idx) is monotone == Eq.1", 150, |rng| {
+            let groups = 1 + rng.below(12);
+            let gsize = 1 + rng.below(12);
+            let k = groups * gsize;
+            let phi = rng.permutation(k);
+            let g = GroupIndex::act_order(&phi, gsize);
+            let (p, sorted) = g.reorder();
+            assert!(sorted.is_ordered(), "g_idx[P] must be non-decreasing");
+            // The sorted layout is exactly Eq. 1's naive layout.
+            assert_eq!(sorted, GroupIndex::naive(k, gsize));
+            // P is a permutation and gathering by it reproduces `sorted`.
+            assert!(perm::is_permutation(&p));
+            assert_eq!(perm::apply_vec(&g.idx, &p), sorted.idx);
+            // Reordering is idempotent: an ordered layout is a fixpoint.
+            let (p2, sorted2) = sorted.reorder();
+            assert_eq!(p2, perm::identity(k));
+            assert_eq!(sorted2, sorted);
+        });
+    }
+
     #[test]
     fn reorder_of_ordered_is_identity() {
         let g = GroupIndex::naive(32, 8);

@@ -143,6 +143,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "multiple of 8")]
     fn pack_rejects_ragged_k() {
-        pack(&vec![0u32; 5 * 3], 5, 3, 4);
+        let q = vec![0u32; 5 * 3];
+        pack(&q, 5, 3, 4);
     }
 }

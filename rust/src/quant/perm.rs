@@ -131,7 +131,7 @@ pub fn restrict_to_shard(p: &[u32], rank: usize, size: usize) -> Option<Vec<u32>
     let lo = (rank * n_per) as u32;
     let hi = lo + n_per as u32;
     let shard = &p[lo as usize..hi as usize];
-    if shard.iter().all(|&v| v >= lo && v < hi) {
+    if shard.iter().all(|&v| (lo..hi).contains(&v)) {
         Some(shard.iter().map(|&v| v - lo).collect())
     } else {
         None
@@ -179,6 +179,42 @@ mod tests {
             let y = apply_vec(&x, &p);
             let back = apply_vec(&y, &invert(&p));
             assert_eq!(back, x);
+        });
+    }
+
+    /// Permutation round-trip laws: `invert` is an involution, composes
+    /// with `p` to the identity (both ways), and `apply ∘ invert = id` on
+    /// arbitrary payloads — the Algorithm 1 ⇄ Algorithm 3 bookkeeping the
+    /// whole deployment scheme rests on.
+    #[test]
+    fn invert_involution_and_compose_identity() {
+        forall("invert laws", 150, |g: &mut Xoshiro256| {
+            let n = 1 + g.below(256);
+            let p = g.permutation(n);
+            let inv = invert(&p);
+            assert!(is_permutation(&inv));
+            assert_eq!(invert(&inv), p, "invert must be an involution");
+            let id = identity(n);
+            assert_eq!(compose(&p, &inv), id, "p ∘ p⁻¹ = id");
+            assert_eq!(compose(&inv, &p), id, "p⁻¹ ∘ p = id");
+            let x: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+            assert_eq!(apply_vec(&apply_vec(&x, &p), &inv), x);
+            assert_eq!(apply_vec(&apply_vec(&x, &inv), &p), x);
+        });
+    }
+
+    /// Row/column gathers round-trip through the inverse permutation on
+    /// matrices too (the form the MLP runtime actually uses).
+    #[test]
+    fn matrix_gather_roundtrip() {
+        forall("apply_rows/cols ∘ invert = id", 50, |g: &mut Xoshiro256| {
+            let rows = 1 + g.below(12);
+            let cols = 1 + g.below(12);
+            let m = Matrix::randn(rows, cols, g);
+            let pr = g.permutation(rows);
+            let pc = g.permutation(cols);
+            assert_eq!(apply_rows(&apply_rows(&m, &pr), &invert(&pr)), m);
+            assert_eq!(apply_cols(&apply_cols(&m, &pc), &invert(&pc)), m);
         });
     }
 

@@ -4,8 +4,9 @@
 //! writes it) and the rust executors (which consume it). Version-checked:
 //! a stale artifacts directory fails loudly, pointing at `make artifacts`.
 
+use crate::util::error::{Context as _, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, err};
 use std::path::{Path, PathBuf};
 
 /// Manifest schema version this binary understands (see aot.py).
@@ -67,36 +68,36 @@ fn parse_entry(j: &Json) -> Result<ArtifactEntry> {
     let s = |k: &str| -> Result<String> {
         Ok(field(k)?
             .as_str()
-            .ok_or_else(|| anyhow!("field '{k}' not a string"))?
+            .ok_or_else(|| err!("field '{k}' not a string"))?
             .to_string())
     };
     let u = |k: &str| -> Result<usize> {
         field(k)?
             .as_usize()
-            .ok_or_else(|| anyhow!("field '{k}' not a non-negative integer"))
+            .ok_or_else(|| err!("field '{k}' not a non-negative integer"))
     };
     let inputs = field("inputs")?
         .as_arr()
-        .ok_or_else(|| anyhow!("inputs not an array"))?
+        .ok_or_else(|| err!("inputs not an array"))?
         .iter()
         .map(|i| {
             Ok(InputDesc {
                 name: i
                     .get("name")
                     .as_str()
-                    .ok_or_else(|| anyhow!("input missing name"))?
+                    .ok_or_else(|| err!("input missing name"))?
                     .to_string(),
                 shape: i
                     .get("shape")
                     .as_arr()
-                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .ok_or_else(|| err!("input missing shape"))?
                     .iter()
-                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .map(|d| d.as_usize().ok_or_else(|| err!("bad dim")))
                     .collect::<Result<_>>()?,
                 dtype: i
                     .get("dtype")
                     .as_str()
-                    .ok_or_else(|| anyhow!("input missing dtype"))?
+                    .ok_or_else(|| err!("input missing dtype"))?
                     .to_string(),
             })
         })
@@ -131,7 +132,7 @@ impl Manifest {
         let version = root
             .get("version")
             .as_i64()
-            .ok_or_else(|| anyhow!("manifest missing version"))?;
+            .ok_or_else(|| err!("manifest missing version"))?;
         if version != SUPPORTED_VERSION {
             bail!(
                 "manifest version {version} != supported {SUPPORTED_VERSION}; \
@@ -141,7 +142,7 @@ impl Manifest {
         let entries = root
             .get("entries")
             .as_arr()
-            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .ok_or_else(|| err!("manifest missing entries"))?
             .iter()
             .map(parse_entry)
             .collect::<Result<Vec<_>>>()?;
@@ -157,7 +158,7 @@ impl Manifest {
             .iter()
             .find(|e| e.model == model && e.kind == kind && e.tp == tp && e.m == m)
             .ok_or_else(|| {
-                anyhow!("no artifact for model={model} kind={kind} tp={tp} m={m}")
+                err!("no artifact for model={model} kind={kind} tp={tp} m={m}")
             })
     }
 
@@ -184,6 +185,17 @@ impl Manifest {
         std::env::var("TPAWARE_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// [`Manifest::load`] from [`Manifest::default_dir`], failing early
+    /// when this build has no PJRT runtime to execute the artifacts (see
+    /// [`crate::runtime::xla`]) — the shared gate for every optional
+    /// PJRT sweep in tests, benches and examples.
+    pub fn load_for_pjrt() -> Result<Manifest> {
+        if !crate::runtime::xla::available() {
+            bail!("no PJRT runtime in this build (stubbed xla facade)");
+        }
+        Manifest::load(&Self::default_dir())
     }
 }
 

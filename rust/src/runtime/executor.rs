@@ -16,9 +16,11 @@ use crate::model::weights::{DeployedMlp, LayerShard};
 use crate::quant::gptq::QuantizedLinear;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::pjrt::{Executable, PjrtContext};
+use crate::runtime::xla;
 use crate::simkernel::pipeline::Algo;
 use crate::tensor::Matrix;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context as _, Result};
+use crate::{bail, err};
 use std::collections::BTreeMap;
 
 /// Device-resident weights for one MLP layer on one rank.
@@ -187,7 +189,7 @@ impl RankMlpExecutor {
         self.buckets()
             .into_iter()
             .find(|&b| b >= m)
-            .ok_or_else(|| anyhow!("batch {m} exceeds largest compiled bucket"))
+            .ok_or_else(|| err!("batch {m} exceeds largest compiled bucket"))
     }
 
     /// Upload `x` padded with zero rows to `bucket` — without an extra
@@ -212,12 +214,12 @@ impl RankMlpExecutor {
         let bucket = self.bucket_for(m)?;
         let exe = exe_map
             .get(&bucket)
-            .ok_or_else(|| anyhow!("bucket {bucket} not compiled for this kind"))?;
+            .ok_or_else(|| err!("bucket {bucket} not compiled for this kind"))?;
         let xb = self.upload_padded(x, bucket)?;
         let lb = self
             .layers
             .get(layer)
-            .ok_or_else(|| anyhow!("layer {layer} not loaded"))?;
+            .ok_or_else(|| err!("layer {layer} not loaded"))?;
         let out = if stage2_only {
             exe.run(&[&xb, &lb.qw2, &lb.s2, &lb.z2])?
         } else if self.algo == Algo::TpAware {

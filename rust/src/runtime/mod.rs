@@ -4,7 +4,10 @@
 //! artifacts`); this module loads those artifacts and executes them on the
 //! request path. Python is never invoked at runtime.
 //!
-//! * [`pjrt`] — thin safe wrapper over the `xla` crate: client, HLO-text
+//! * [`xla`] — vendored facade over the external `xla` crate's PJRT API;
+//!   in the zero-dependency offline build it reports PJRT as unavailable
+//!   and every consumer falls back / skips cleanly.
+//! * [`pjrt`] — thin safe wrapper over that facade: client, HLO-text
 //!   loading (the xla_extension 0.5.1 proto-id gotcha is why text, not
 //!   serialized protos), host↔device buffers, execution.
 //! * [`artifact`] — `artifacts/manifest.json` parsing and artifact lookup.
@@ -19,6 +22,7 @@
 pub mod artifact;
 pub mod executor;
 pub mod pjrt;
+pub mod xla;
 
 pub use artifact::{ArtifactEntry, Manifest};
 pub use executor::RankMlpExecutor;

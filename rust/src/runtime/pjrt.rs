@@ -1,4 +1,6 @@
-//! Thin safe wrapper over the `xla` crate's PJRT bindings.
+//! Thin safe wrapper over the PJRT bindings (see [`crate::runtime::xla`];
+//! in the offline zero-dependency build that facade reports PJRT as
+//! unavailable and everything here fails cleanly at construction).
 //!
 //! Interchange is HLO **text**: jax ≥ 0.5 serializes `HloModuleProto`s
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects
@@ -6,8 +8,9 @@
 //! and reassigns ids, so text round-trips cleanly (see
 //! /opt/xla-example/README.md and python/compile/aot.py).
 
+use crate::runtime::xla;
 use crate::tensor::Matrix;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context as _, Result};
 use std::path::Path;
 
 /// A PJRT CPU context (client). One per rank thread — `PjRtClient` is
@@ -35,7 +38,7 @@ impl PjrtContext {
     pub fn load_hlo(&self, path: &Path, out_shape: (usize, usize)) -> Result<Executable> {
         let path_str = path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| crate::err!("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("parsing HLO text {path_str}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -48,17 +51,17 @@ impl PjrtContext {
 
     /// Upload an f32 tensor to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        self.client.buffer_from_host_buffer(data, dims, None)
     }
 
     /// Upload a u32 tensor (packed weights).
     pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        self.client.buffer_from_host_buffer(data, dims, None)
     }
 
     /// Upload an i32 tensor (permutations).
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        self.client.buffer_from_host_buffer(data, dims, None)
     }
 
     /// Upload a matrix as a 2-D f32 buffer.
@@ -80,7 +83,7 @@ impl Executable {
         let data: Vec<f32> = out.to_vec().context("reading f32 output")?;
         let (rows, cols) = self.out_shape;
         if data.len() != rows * cols {
-            return Err(anyhow!(
+            return Err(crate::err!(
                 "output size mismatch: got {} values, expected {}x{}",
                 data.len(),
                 rows,
@@ -109,8 +112,23 @@ ENTRY main {
 }
 "#;
 
+    /// Skip (with a note) when this build has no PJRT runtime — the same
+    /// contract as the artifact-dependent integration tests.
+    fn ctx_or_skip() -> Option<PjrtContext> {
+        match PjrtContext::cpu() {
+            Ok(ctx) => Some(ctx),
+            Err(e) => {
+                eprintln!("SKIP (no PJRT runtime in this build): {e}");
+                None
+            }
+        }
+    }
+
     #[test]
     fn load_compile_execute_roundtrip() {
+        let Some(ctx) = ctx_or_skip() else {
+            return;
+        };
         let dir = std::env::temp_dir().join("tpaware_pjrt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("add.hlo.txt");
@@ -118,7 +136,6 @@ ENTRY main {
         f.write_all(ADD_HLO.as_bytes()).unwrap();
         drop(f);
 
-        let ctx = PjrtContext::cpu().unwrap();
         let exe = ctx.load_hlo(&path, (2, 2)).unwrap();
         let a = ctx.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
         let b = ctx.upload_f32(&[10.0, 20.0, 30.0, 40.0], &[2, 2]).unwrap();
@@ -131,11 +148,24 @@ ENTRY main {
 
     #[test]
     fn missing_artifact_is_a_clean_error() {
-        let ctx = PjrtContext::cpu().unwrap();
+        let Some(ctx) = ctx_or_skip() else {
+            return;
+        };
         let err = match ctx.load_hlo(Path::new("/nonexistent/x.hlo.txt"), (1, 1)) {
             Err(e) => e,
             Ok(_) => panic!("expected load failure"),
         };
         assert!(format!("{err:#}").contains("parsing HLO text"));
+    }
+
+    #[test]
+    fn unavailable_build_fails_at_construction() {
+        if xla::available() {
+            return;
+        }
+        let err = PjrtContext::cpu().unwrap_err();
+        // Context chain: our wrapper's message, then the facade's.
+        assert!(format!("{err}").contains("creating PJRT CPU client"));
+        assert!(format!("{err:#}").contains("PJRT unavailable"));
     }
 }

@@ -32,20 +32,29 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("missing required flag --{0}")]
     MissingRequired(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
     /// `--help` was requested; message contains the rendered help.
-    #[error("{0}")]
     Help(String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Unknown(name) => write!(f, "unknown flag --{name}"),
+            ArgError::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            ArgError::MissingRequired(name) => write!(f, "missing required flag --{name}"),
+            ArgError::Invalid(name, v) => write!(f, "invalid value for --{name}: {v}"),
+            ArgError::Help(text) => f.write_str(text),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {

@@ -1,0 +1,260 @@
+//! Zero-dependency error handling — the crate's `anyhow` stand-in.
+//!
+//! The offline crate set has no `anyhow`/`thiserror`, so this module
+//! provides the small subset the codebase actually needs, with the same
+//! ergonomics:
+//!
+//! * [`Error`] — a message-chain error with an optional typed payload.
+//!   `{e}` prints the outermost message, `{e:#}` the full context chain
+//!   (`outer: inner: root`), and [`Error::downcast_ref`] recovers the
+//!   original typed error (the launcher uses this for
+//!   [`crate::util::argparse::ArgError::Help`]).
+//! * [`Result`] — the crate-wide alias.
+//! * [`Context`] — `.context(...)` / `.with_context(|| ...)` on any
+//!   `Result` whose error converts into [`Error`], and on `Option`.
+//! * [`crate::err!`] / [`crate::bail!`] / [`crate::ensure!`] — the usual
+//!   construction macros (`err!` is the `anyhow!` analogue).
+//!
+//! Any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//! via `?` — the conversion snapshots the source chain's messages and
+//! keeps the typed value for downcasting. Like `anyhow::Error`, [`Error`]
+//! deliberately does **not** implement `std::error::Error`, which is what
+//! makes that blanket conversion coherent.
+
+use std::any::Any;
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A context-chained error. See the module docs for the display contract.
+pub struct Error {
+    /// Context chain, outermost first; the last entry is the root cause.
+    chain: Vec<String>,
+    /// The original typed error (root cause), kept for downcasting.
+    payload: Option<Box<dyn Any + Send + Sync>>,
+}
+
+impl Error {
+    /// Build an error from a plain message (no payload).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            chain: vec![msg.into()],
+            payload: None,
+        }
+    }
+
+    /// Wrap with an outer context message (consuming form; the
+    /// [`Context`] trait is the ergonomic entry point).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message (what `{e}` prints).
+    pub fn message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// Recover the original typed error, if this [`Error`] was created
+    /// from one via the blanket `From` conversion.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the full chain, anyhow-style.
+            for (i, msg) in self.chain.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in &self.chain[1..] {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The `anyhow` coherence trick: `Error` itself does not implement
+// `std::error::Error`, so this blanket impl does not overlap the
+// reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error {
+            chain,
+            payload: Some(Box::new(e)),
+        }
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with an outer context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// As [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string — the `anyhow!` analogue.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn context_trait_on_results_and_options() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading manifest: file gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("x").unwrap_err();
+        assert!(e.downcast_ref::<std::num::ParseIntError>().is_some());
+    }
+
+    #[test]
+    fn downcast_survives_context() {
+        let e: Error = Error::from(io_err()).context("outer");
+        let io = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+    }
+
+    #[test]
+    fn macros_construct_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                crate::bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(crate::err!("n={}", 2).to_string(), "n=2");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("root"));
+    }
+
+    #[test]
+    fn errors_cross_threads() {
+        let e = Error::from(io_err()).context("worker");
+        let handle = std::thread::spawn(move || format!("{e:#}"));
+        assert_eq!(handle.join().unwrap(), "worker: file gone");
+    }
+}

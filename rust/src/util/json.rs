@@ -79,13 +79,6 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-
     /// Serialize with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut s = String::new();
@@ -99,7 +92,7 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    out.push_str(&(*n as i64).to_string());
                 } else {
                     out.push_str(&format!("{n}"));
                 }
@@ -167,9 +160,13 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Compact serialization; `Json::to_string()` (via `Display`) is the
+/// canonical wire encoding.
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
     }
 }
 
@@ -210,12 +207,19 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 }
 
 /// Parse error with byte offset for debuggability.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a JSON document (must consume all non-whitespace input).
 pub fn parse(input: &str) -> Result<Json, ParseError> {

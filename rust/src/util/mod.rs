@@ -5,6 +5,10 @@
 //! small, well-tested pieces a serving framework normally pulls from crates:
 //!
 //! * [`argparse`] — declarative CLI flag parsing for the launcher binary.
+//! * [`error`] — the crate's `anyhow` stand-in: context-chained
+//!   [`error::Error`], the crate-wide [`error::Result`] alias, the
+//!   [`error::Context`] extension trait and the [`crate::err!`] /
+//!   [`crate::bail!`] / [`crate::ensure!`] macros.
 //! * [`json`] — a JSON value type, parser and serializer (artifact
 //!   manifests, bench result dumps, server wire protocol).
 //! * [`prng`] — deterministic SplitMix64 / xoshiro256** generators for
@@ -17,6 +21,7 @@
 //!   with seed reporting on failure) used across module tests.
 
 pub mod argparse;
+pub mod error;
 pub mod json;
 pub mod proptest_lite;
 pub mod prng;

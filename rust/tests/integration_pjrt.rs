@@ -19,10 +19,10 @@ use tpaware::tp::topology::Topology;
 use tpaware::util::prng::Xoshiro256;
 
 fn manifest_or_skip() -> Option<Manifest> {
-    match Manifest::load(&Manifest::default_dir()) {
+    match Manifest::load_for_pjrt() {
         Ok(m) => Some(m),
         Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
+            eprintln!("SKIP (needs `make artifacts` + a real PJRT build): {e}");
             None
         }
     }

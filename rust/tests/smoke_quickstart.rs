@@ -1,0 +1,84 @@
+//! Smoke test mirroring the `quickstart` example's main path in-process
+//! (at a smaller shape, so `cargo test -q` stays fast): quantize with
+//! act_order GPTQ → Algorithm 1 reorder → deploy Algorithms 2 and 3 on
+//! real rank threads → outputs agree with each other and with the
+//! unsharded reference, and only the naive deployment pays the AllGather.
+//! CI runs this on every commit, so at least one end-to-end
+//! naive-vs-TP-aware comparison is always exercised.
+
+use tpaware::model::config::Activation;
+use tpaware::model::mlp::{run_mlp_with_group, run_reference};
+use tpaware::model::weights::{deploy_quantized, gen_checkpoint, quantize_and_reorder};
+use tpaware::quant::gptq::{quantize_gptq, GptqConfig};
+use tpaware::quant::perm;
+use tpaware::simkernel::pipeline::{Algo, MlpShape};
+use tpaware::tensor::Matrix;
+use tpaware::tp::collectives::CollectiveGroup;
+use tpaware::tp::topology::Topology;
+use tpaware::util::prng::Xoshiro256;
+
+#[test]
+fn quickstart_main_path_end_to_end() {
+    // --- 1. Quantize with act_order GPTQ (the paper's starting point) ---
+    let shape = MlpShape {
+        k1: 64,
+        n1: 128,
+        n2: 64,
+    };
+    let cfg = GptqConfig {
+        bits: 4,
+        group_size: 16,
+        act_order: true,
+        damp: 0.01,
+    };
+    let ckpt = gen_checkpoint(shape, 42);
+    let q1 = quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg);
+    assert!(!q1.gidx.is_ordered(), "act_order g_idx must be unordered");
+    assert!(q1.gidx.metadata_loads() > q1.gidx.num_groups());
+
+    // --- 2. Algorithm 1: reorder for locality ---------------------------
+    let (p, q1_opt) = q1.reorder();
+    assert!(perm::is_permutation(&p));
+    assert!(q1_opt.gidx.is_ordered());
+    assert_eq!(q1_opt.gidx.metadata_loads(), q1_opt.gidx.num_groups());
+
+    // --- 3. Deploy both algorithms at TP=4 on real rank threads ---------
+    let tp = Topology::new(4);
+    let naive = deploy_quantized(&ckpt, &cfg, Algo::Naive, tp);
+    let aware = deploy_quantized(&ckpt, &cfg, Algo::TpAware, tp);
+    let mut rng = Xoshiro256::new(7);
+    let x = Matrix::randn(4, shape.k1, &mut rng);
+
+    let gn = CollectiveGroup::new(tp.size);
+    let (y_naive, t_naive) = run_mlp_with_group(&naive, &x, Activation::Identity, &gn);
+    let naive_comm = gn.stats();
+
+    let ga = CollectiveGroup::new(tp.size);
+    let (y_aware, t_aware) = run_mlp_with_group(&aware, &x, Activation::Identity, &ga);
+    let aware_comm = ga.stats();
+
+    // Same math, no AllGather: Algorithm 2 ≡ Algorithm 3.
+    let diff = y_naive.max_abs_diff(&y_aware);
+    assert!(diff < 1e-3, "Alg.2 vs Alg.3 diff {diff}");
+
+    // Against the unsharded dense reference (original channel order).
+    let (_, q1r, _, q2r) = quantize_and_reorder(&ckpt, &cfg);
+    let w1 = perm::apply_rows(&q1r.dequantize(), &perm::invert(&naive.p1));
+    let w2 = perm::apply_rows(&q2r.dequantize(), &perm::invert(&naive.p2));
+    let y_ref = run_reference(&x, &w1, &w2, Activation::Identity);
+    let ref_diff = y_aware.max_abs_diff(&y_ref);
+    assert!(ref_diff < 1e-3, "vs reference diff {ref_diff}");
+
+    // The paper's whole point, as communication accounting.
+    assert_eq!(naive_comm.allgather_calls, 1);
+    assert_eq!(naive_comm.allreduce_calls, 1);
+    assert_eq!(aware_comm.allgather_calls, 0);
+    assert_eq!(aware_comm.allreduce_calls, 1);
+    assert!(aware_comm.total_bytes() < naive_comm.total_bytes());
+
+    // And as phase timing: the TP-aware path never gathers or reorders.
+    assert!(t_naive.allgather_ns > 0);
+    assert_eq!(t_aware.allgather_ns, 0);
+    assert_eq!(t_aware.reorder_ns, 0);
+    assert_eq!(t_aware.chunk_ns, 0);
+}
