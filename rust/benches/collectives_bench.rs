@@ -6,21 +6,43 @@
 
 use tpaware::simkernel::comm_model;
 use tpaware::simkernel::gpu::{A100, H100};
-use tpaware::tp::collectives::CollectiveGroup;
+use tpaware::tp::codec::CodecSpec;
+use tpaware::tp::collectives::{CollectiveGroup, CommStats};
 use tpaware::tp::interconnect::PCIE4;
 use tpaware::tp::topology::Topology;
 use tpaware::util::table::Table;
 
 fn measured_collective(tp: usize, elems: usize, allgather: bool, iters: usize) -> f64 {
-    let group = CollectiveGroup::new(tp);
+    measured_codec_collective(tp, elems, allgather, iters, CodecSpec::Fp32).0
+}
+
+/// A non-constant per-rank payload so lossy codecs see a realistic range.
+fn bench_payload(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems)
+        .map(|i| ((i + 31 * rank) as f32 * 0.013).sin())
+        .collect()
+}
+
+/// Time one collective under `codec` on thread ranks; returns the mean
+/// per-call milliseconds on rank 0 plus the group's traffic counters
+/// (raw vs wire bytes, codec error) from one clean post-timing call.
+fn measured_codec_collective(
+    tp: usize,
+    elems: usize,
+    allgather: bool,
+    iters: usize,
+    codec: CodecSpec,
+) -> (f64, CommStats) {
+    let group = CollectiveGroup::new_with_codec(tp, codec);
     let comms = std::sync::Arc::new(std::sync::Mutex::new(group.ranks()));
     let topo = Topology::new(tp);
     // Collectives require every rank to make the SAME number of calls
     // (mismatched counts deadlock on the barrier, exactly like NCCL), so
     // the iteration count is fixed across ranks and rank 0 is timed.
+    let timing_comms = comms.clone();
     let out = topo.run_spmd(move |rank| {
-        let comm = comms.lock().unwrap()[rank].clone();
-        let payload = vec![rank as f32; elems];
+        let comm = timing_comms.lock().unwrap()[rank].clone();
+        let payload = bench_payload(rank, elems);
         for _ in 0..3 {
             // warmup, all ranks
             if allgather {
@@ -39,7 +61,18 @@ fn measured_collective(tp: usize, elems: usize, allgather: bool, iters: usize) -
         }
         t0.elapsed().as_secs_f64() * 1e3 / iters as f64
     });
-    out[0]
+    // One clean accounted call (fresh counters) for per-call stats.
+    group.reset_stats();
+    topo.run_spmd(move |rank| {
+        let comm = comms.lock().unwrap()[rank].clone();
+        let payload = bench_payload(rank, elems);
+        if allgather {
+            comm.all_gather(&payload);
+        } else {
+            comm.all_reduce_sum(&payload);
+        }
+    });
+    (out[0], group.stats())
 }
 
 fn main() {
@@ -103,6 +136,60 @@ fn main() {
         }
         println!("{}", t.render());
     }
+
+    // Codec sweep (wire compression vs accuracy): the same measured
+    // collectives with each wire codec, across rank counts and payloads.
+    let codecs = [
+        CodecSpec::Fp32,
+        CodecSpec::Bf16,
+        CodecSpec::Int8 { group: 64 },
+        CodecSpec::Int4 { group: 32 },
+    ];
+    let mut codec_csv =
+        String::from("op,tp,elems,codec,measured_ms,raw_bytes,wire_bytes,err_rms,err_max\n");
+    for (op, allgather) in [("allgather", true), ("allreduce", false)] {
+        let mut t = Table::new(
+            &format!("{op} codec sweep: wire bytes vs round-trip error"),
+            &[
+                "TP",
+                "payload/rank",
+                "codec",
+                "measured (ms)",
+                "raw B",
+                "wire B",
+                "wire/raw",
+                "err RMS",
+            ],
+        );
+        for &tp in &tps {
+            for elems in [16 * 1024usize, 256 * 1024] {
+                for codec in codecs {
+                    let (ms, s) = measured_codec_collective(tp, elems, allgather, iters, codec);
+                    let (raw, wire) = (s.total_bytes(), s.total_wire_bytes());
+                    let ratio = wire as f64 / raw.max(1) as f64;
+                    t.row(vec![
+                        tp.to_string(),
+                        format!("{} KiB", elems * 4 / 1024),
+                        codec.label(),
+                        format!("{ms:.4}"),
+                        raw.to_string(),
+                        wire.to_string(),
+                        format!("{ratio:.3}"),
+                        format!("{:.2e}", s.codec_err.rms()),
+                    ]);
+                    codec_csv.push_str(&format!(
+                        "{op},{tp},{elems},{},{ms:.5},{raw},{wire},{:.3e},{:.3e}\n",
+                        codec.label(),
+                        s.codec_err.rms(),
+                        f64::from(s.codec_err.max_abs_err),
+                    ));
+                }
+            }
+        }
+        println!("{}", t.render());
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/collectives_codec_sweep.csv", codec_csv).ok();
 
     // The specific AllGather the paper deletes, at paper scale (modeled).
     let mut t = Table::new(

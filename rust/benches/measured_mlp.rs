@@ -15,13 +15,14 @@ use tpaware::quant::gptq::GptqConfig;
 use tpaware::runtime::artifact::Manifest;
 use tpaware::simkernel::pipeline::Algo;
 use tpaware::tensor::Matrix;
+use tpaware::tp::codec::CodecSpec;
 use tpaware::tp::collectives::CollectiveGroup;
 use tpaware::tp::topology::Topology;
 use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
 use tpaware::util::timer::{bench, BenchCfg};
 
-fn host_sweep(cfg: &ModelConfig, tps: &[usize], ms: &[usize], csv: &mut String) {
+fn host_sweep(cfg: &ModelConfig, codec: CodecSpec, tps: &[usize], ms: &[usize], csv: &mut String) {
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
         group_size: cfg.group_size,
@@ -32,8 +33,13 @@ fn host_sweep(cfg: &ModelConfig, tps: &[usize], ms: &[usize], csv: &mut String) 
     let bcfg = BenchCfg::quick().from_env();
     let mut t = Table::new(
         &format!(
-            "Measured host engine — {} ({}, {}, {}), int4 G={}",
-            cfg.name, shape.k1, shape.n1, shape.n2, cfg.group_size
+            "Measured host engine — {} ({}, {}, {}), int4 G={}, codec {}",
+            cfg.name,
+            shape.k1,
+            shape.n1,
+            shape.n2,
+            cfg.group_size,
+            codec.label()
         ),
         &[
             "TP",
@@ -41,8 +47,9 @@ fn host_sweep(cfg: &ModelConfig, tps: &[usize], ms: &[usize], csv: &mut String) 
             "Naive (ms)",
             "TP-Aware (ms)",
             "Speedup",
-            "naive comm B",
-            "aware comm B",
+            "naive raw→wire B",
+            "aware raw→wire B",
+            "err RMS",
         ],
     );
     for &tp in tps {
@@ -52,34 +59,42 @@ fn host_sweep(cfg: &ModelConfig, tps: &[usize], ms: &[usize], csv: &mut String) 
         for &m in ms {
             let mut rng = Xoshiro256::new(99);
             let x = Matrix::randn(m, shape.k1, &mut rng);
-            let gn = CollectiveGroup::new(tp);
+            let gn = CollectiveGroup::new_with_codec(tp, codec);
             let sn = bench(&bcfg, || {
                 run_mlp_with_group(&dn, &x, cfg.activation, &gn);
             });
             gn.reset_stats();
             run_mlp_with_group(&dn, &x, cfg.activation, &gn);
-            let nb = gn.stats().total_bytes();
-            let ga = CollectiveGroup::new(tp);
+            let ns = gn.stats();
+            let ga = CollectiveGroup::new_with_codec(tp, codec);
             let sa = bench(&bcfg, || {
                 run_mlp_with_group(&da, &x, cfg.activation, &ga);
             });
             ga.reset_stats();
             run_mlp_with_group(&da, &x, cfg.activation, &ga);
-            let ab = ga.stats().total_bytes();
+            let astats = ga.stats();
+            let mut err = ns.codec_err;
+            err.merge(&astats.codec_err);
             t.row(vec![
                 tp.to_string(),
                 m.to_string(),
                 format!("{:.3}", sn.mean_ms()),
                 format!("{:.3}", sa.mean_ms()),
                 format!("{:.2}x", sn.mean_ns / sa.mean_ns),
-                nb.to_string(),
-                ab.to_string(),
+                format!("{}→{}", ns.total_bytes(), ns.total_wire_bytes()),
+                format!("{}→{}", astats.total_bytes(), astats.total_wire_bytes()),
+                format!("{:.2e}", err.rms()),
             ]);
             csv.push_str(&format!(
-                "host,{},{tp},{m},{:.4},{:.4},{nb},{ab}\n",
+                "host,{},{},{tp},{m},{:.4},{:.4},{},{},{},{}\n",
                 cfg.name,
+                codec.label(),
                 sn.mean_ms(),
-                sa.mean_ms()
+                sa.mean_ms(),
+                ns.total_bytes(),
+                ns.total_wire_bytes(),
+                astats.total_bytes(),
+                astats.total_wire_bytes(),
             ));
         }
     }
@@ -137,7 +152,7 @@ fn pjrt_sweep(
                 format!("{:.2}x", sn.mean_ns / sa.mean_ns),
             ]);
             csv.push_str(&format!(
-                "pjrt,{},{tp},{m},{:.4},{:.4},,\n",
+                "pjrt,{},fp32,{tp},{m},{:.4},{:.4},,,,\n",
                 cfg.name,
                 sn.mean_ms(),
                 sa.mean_ms()
@@ -150,8 +165,10 @@ fn pjrt_sweep(
 }
 
 fn main() {
-    let mut csv =
-        String::from("engine,model,tp,m,naive_ms,aware_ms,naive_comm_bytes,aware_comm_bytes\n");
+    let mut csv = String::from(
+        "engine,model,codec,tp,m,naive_ms,aware_ms,\
+         naive_raw_bytes,naive_wire_bytes,aware_raw_bytes,aware_wire_bytes\n",
+    );
     let cores = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
@@ -163,8 +180,12 @@ fn main() {
     );
 
     for cfg in [ModelConfig::llama_scaled(), ModelConfig::granite_scaled()] {
-        host_sweep(&cfg, &tps, &[1, 4, 16], &mut csv);
+        host_sweep(&cfg, CodecSpec::Fp32, &tps, &[1, 4, 16], &mut csv);
     }
+    // The compressed wire: same sweep with int8 group-affine payloads
+    // (≈ 3.5× fewer bytes on every collective, bounded error reported).
+    let int8 = CodecSpec::Int8 { group: 64 };
+    host_sweep(&ModelConfig::llama_scaled(), int8, &tps, &[1, 4, 16], &mut csv);
 
     match Manifest::load_for_pjrt() {
         Ok(manifest) => {

@@ -6,8 +6,9 @@
 //! * a [`RankMlpExecutor`] — PJRT executables compiled from
 //!   `artifacts/*.hlo.txt` with device-resident weights (the production
 //!   path: python never runs here), or
-//! * the host fallback — [`LayerShard::forward`] fused-dequant GEMMs
-//!   (used when artifacts are absent, and as a cross-check oracle).
+//! * the host fallback — [`crate::model::weights::LayerShard::forward`]
+//!   fused-dequant GEMMs (used when artifacts are absent, and as a
+//!   cross-check oracle).
 //!
 //! A job is broadcast to all ranks; they execute SPMD with real
 //! collectives between them (AllGather for the naive algorithm's
@@ -22,6 +23,7 @@ use crate::runtime::artifact::Manifest;
 use crate::runtime::executor::RankMlpExecutor;
 use crate::simkernel::pipeline::Algo;
 use crate::tensor::Matrix;
+use crate::tp::codec::CodecSpec;
 use crate::tp::collectives::{CollectiveGroup, CommStats, RankComm};
 use crate::tp::sharding::chunk_cols;
 use crate::util::error::{Context as _, Result};
@@ -52,6 +54,7 @@ enum Job {
 pub struct TpEngine {
     algo: Algo,
     tp: usize,
+    codec: CodecSpec,
     n_layers: usize,
     senders: Vec<mpsc::Sender<Job>>,
     reply: mpsc::Receiver<Result<Matrix>>,
@@ -129,6 +132,18 @@ impl TpEngine {
         act: Activation,
         manifest: Option<&Manifest>,
     ) -> Result<TpEngine> {
+        TpEngine::start_with_codec(backend, layers, act, manifest, CodecSpec::Fp32)
+    }
+
+    /// As [`TpEngine::start`], with every inter-rank collective moving
+    /// `codec`-encoded bytes (see [`crate::tp::codec`]).
+    pub fn start_with_codec(
+        backend: EngineBackend,
+        layers: Vec<DeployedMlp>,
+        act: Activation,
+        manifest: Option<&Manifest>,
+        codec: CodecSpec,
+    ) -> Result<TpEngine> {
         let first = layers
             .first()
             .ok_or_else(|| err!("engine needs at least one layer"))?;
@@ -139,7 +154,7 @@ impl TpEngine {
         }
         let n_layers = layers.len();
         let layers = Arc::new(layers);
-        let group = Arc::new(CollectiveGroup::new(tp));
+        let group = Arc::new(CollectiveGroup::new_with_codec(tp, codec));
         let (reply_tx, reply_rx) = mpsc::channel();
 
         // For PJRT, compile on the main thread? No: PjrtContext is not
@@ -220,6 +235,7 @@ impl TpEngine {
         Ok(TpEngine {
             algo,
             tp,
+            codec,
             n_layers,
             senders,
             reply: reply_rx,
@@ -233,6 +249,10 @@ impl TpEngine {
     }
     pub fn tp(&self) -> usize {
         self.tp
+    }
+    /// The wire codec the engine's collectives encode with.
+    pub fn codec(&self) -> CodecSpec {
+        self.codec
     }
     pub fn n_layers(&self) -> usize {
         self.n_layers
@@ -365,6 +385,50 @@ mod tests {
         assert_eq!(ns.allgather_calls, 1);
         assert_eq!(aas.allgather_calls, 0);
         assert!(aas.total_bytes() < ns.total_bytes());
+        // Under the default fp32 codec the wire moves exactly the raw
+        // bytes, and call counts are codec-independent.
+        assert_eq!(ns.total_wire_bytes(), ns.total_bytes());
+        assert_eq!(aas.total_wire_bytes(), aas.total_bytes());
+        assert_eq!(ns.total_calls(), 2);
+        assert_eq!(aas.total_calls(), 1);
+    }
+
+    #[test]
+    fn engine_int8_codec_compresses_wire_and_stays_close() {
+        let mut rng = Xoshiro256::new(5);
+        let x = Matrix::randn(2, 32, &mut rng);
+        let layers = vec![deploy_quantized(
+            &gen_checkpoint(shape(), 21),
+            &cfg(),
+            Algo::Naive,
+            Topology::new(4),
+        )];
+        let oracle = run_mlp_sequential(&layers[0], &x, Activation::Identity);
+        let engine = TpEngine::start_with_codec(
+            EngineBackend::Host,
+            layers,
+            Activation::Identity,
+            None,
+            CodecSpec::Int8 { group: 64 },
+        )
+        .unwrap();
+        let got = engine.mlp(0, &x).unwrap();
+        let s = engine.comm_stats();
+        engine.shutdown();
+        // Raw accounting unchanged; the wire ships ≤ 30% of it.
+        assert!(s.total_bytes() > 0);
+        assert!(
+            s.total_wire_bytes() * 10 <= s.total_bytes() * 3,
+            "wire {} vs raw {}",
+            s.total_wire_bytes(),
+            s.total_bytes()
+        );
+        // Lossy wire: error is recorded and the output stays close to
+        // the exact (fp32-wire) oracle. Output magnitudes here are
+        // O(100); a broken codec drifts by tens.
+        assert!(s.codec_err.elems > 0);
+        let diff = got.max_abs_diff(&oracle);
+        assert!(diff < 4.0, "int8-wire output drifted: {diff}");
     }
 
     #[test]

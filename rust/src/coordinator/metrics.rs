@@ -1,6 +1,9 @@
-//! Serving metrics: counters and log-bucketed latency histograms,
-//! exportable as JSON for the server's `metrics` endpoint and the benches.
+//! Serving metrics: counters, log-bucketed latency histograms, and the
+//! engine's communication accounting (raw vs wire bytes per collective,
+//! cumulative codec quantization error), exportable as JSON for the
+//! server's `metrics` endpoint and the benches.
 
+use crate::tp::collectives::CommStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -85,6 +88,45 @@ impl Histogram {
     }
 }
 
+/// JSON view of one rank group's traffic counters: per-op calls plus raw
+/// vs wire bytes, and the cumulative codec quantization error.
+pub fn comm_stats_json(s: &CommStats) -> Json {
+    let op = |calls: usize, raw: usize, wire: usize| {
+        Json::obj(vec![
+            ("calls", calls.into()),
+            ("raw_bytes", raw.into()),
+            ("wire_bytes", wire.into()),
+        ])
+    };
+    Json::obj(vec![
+        (
+            "allgather",
+            op(s.allgather_calls, s.allgather_bytes, s.allgather_wire_bytes),
+        ),
+        (
+            "allreduce",
+            op(s.allreduce_calls, s.allreduce_bytes, s.allreduce_wire_bytes),
+        ),
+        (
+            "broadcast",
+            op(s.broadcast_calls, s.broadcast_bytes, s.broadcast_wire_bytes),
+        ),
+        (
+            "reduce_scatter",
+            op(
+                s.reduce_scatter_calls,
+                s.reduce_scatter_bytes,
+                s.reduce_scatter_wire_bytes,
+            ),
+        ),
+        ("total_raw_bytes", s.total_bytes().into()),
+        ("total_wire_bytes", s.total_wire_bytes().into()),
+        ("codec_err_elems", s.codec_err.elems.into()),
+        ("codec_err_rms", s.codec_err.rms().into()),
+        ("codec_err_max_abs", f64::from(s.codec_err.max_abs_err).into()),
+    ])
+}
+
 /// All serving metrics, shared across threads.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -99,6 +141,9 @@ pub struct Metrics {
     pub e2e: Histogram,
     /// Per-decode-step engine latency.
     pub step: Histogram,
+    /// Engine communication accounting (last snapshot pushed by the
+    /// scheduler via [`Metrics::set_comm`]; all-zero without an engine).
+    pub comm: Mutex<CommStats>,
 }
 
 impl Metrics {
@@ -108,6 +153,11 @@ impl Metrics {
 
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Replace the communication snapshot (scheduler, once per step).
+    pub fn set_comm(&self, stats: CommStats) {
+        *self.comm.lock().unwrap() = stats;
     }
 
     /// Mean decode batch occupancy (tokens per step).
@@ -142,6 +192,7 @@ impl Metrics {
             ("ttft", self.ttft.to_json()),
             ("e2e", self.e2e.to_json()),
             ("step", self.step.to_json()),
+            ("comm", comm_stats_json(&self.comm.lock().unwrap())),
         ])
     }
 }
@@ -190,6 +241,28 @@ mod tests {
         assert_eq!(j.get("requests_received").as_usize(), Some(1));
         assert_eq!(j.get("tokens_generated").as_usize(), Some(7));
         assert_eq!(j.get("ttft").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn comm_snapshot_surfaces_raw_wire_and_error() {
+        let m = Metrics::default();
+        let mut s = CommStats {
+            allgather_calls: 2,
+            allgather_bytes: 4096,
+            allgather_wire_bytes: 1152,
+            ..Default::default()
+        };
+        s.codec_err.record(&[1.0, 2.0], &[1.25, 2.0]);
+        m.set_comm(s);
+        let j = m.to_json();
+        let comm = j.get("comm");
+        assert_eq!(comm.get("allgather").get("calls").as_usize(), Some(2));
+        assert_eq!(comm.get("allgather").get("raw_bytes").as_usize(), Some(4096));
+        assert_eq!(comm.get("allgather").get("wire_bytes").as_usize(), Some(1152));
+        assert_eq!(comm.get("total_raw_bytes").as_usize(), Some(4096));
+        assert_eq!(comm.get("total_wire_bytes").as_usize(), Some(1152));
+        assert_eq!(comm.get("codec_err_elems").as_usize(), Some(2));
+        assert!(comm.get("codec_err_max_abs").as_f64().unwrap() > 0.2);
     }
 
     #[test]

@@ -72,6 +72,11 @@ impl Scheduler {
         self.metrics.step.observe_us(step_us);
         Metrics::inc(&self.metrics.engine_steps);
         Metrics::add(&self.metrics.batch_occupancy_sum, n as u64);
+        if let Some(engine) = &self.engine {
+            // Publish the engine's communication accounting (raw vs wire
+            // bytes, codec error) for the metrics endpoint.
+            self.metrics.set_comm(engine.comm_stats());
+        }
 
         for (i, s) in batch.iter_mut().enumerate() {
             s.kv = std::mem::take(&mut caches[i]);
@@ -236,12 +241,8 @@ mod tests {
             None,
         )
         .unwrap();
-        let with_engine = Scheduler::new(
-            model.clone(),
-            Some(engine),
-            Arc::new(Metrics::default()),
-            4,
-        );
+        let engine_metrics = Arc::new(Metrics::default());
+        let with_engine = Scheduler::new(model.clone(), Some(engine), engine_metrics.clone(), 4);
         let without = Scheduler::new(model, None, Arc::new(Metrics::default()), 4);
         let mk = || vec![Request::new(0, vec![3, 7], 4), Request::new(1, vec![11], 4)];
         let a = with_engine.run_all(mk());
@@ -250,6 +251,12 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.tokens, y.tokens);
         }
+        // The scheduler published the engine's comm accounting: TP=2
+        // TP-aware pays AllReduce traffic, fp32 wire == raw.
+        let comm = *engine_metrics.comm.lock().unwrap();
+        assert!(comm.allreduce_calls > 0);
+        assert!(comm.total_bytes() > 0);
+        assert_eq!(comm.total_wire_bytes(), comm.total_bytes());
         with_engine.engine.unwrap().shutdown();
     }
 

@@ -18,7 +18,8 @@
 //!   (Eq. 1 / Eq. 3 / Algorithm 1), permutation algebra.
 //! * [`gemm`] — host dequant + GEMM engine (the ExllamaV2 stand-in).
 //! * [`tp`] — thread-per-rank tensor-parallel runtime: topology,
-//!   byte-moving collectives, interconnect profiles.
+//!   byte-moving collectives, on-the-wire codecs (fp32 / bf16 /
+//!   int8 / int4 group-affine), interconnect profiles.
 //! * [`model`] — model configs (Llama-70B / Granite-20B problem sizes,
 //!   tiny serving model), sharded MLP implementing Algorithms 2 and 3,
 //!   attention, transformer, KV cache.

@@ -25,6 +25,8 @@ use tpaware::simkernel::gpu::GpuSpec;
 use tpaware::simkernel::paper_data;
 use tpaware::simkernel::pipeline::{self, Algo, MlpShape};
 use tpaware::tensor::Matrix;
+use tpaware::tp::codec::CodecSpec;
+use tpaware::tp::collectives::CollectiveGroup;
 use tpaware::tp::topology::Topology;
 use tpaware::util::argparse::{ArgError, Command};
 use tpaware::util::error::Result;
@@ -96,6 +98,11 @@ fn parse_algo(s: &str) -> Result<Algo> {
     }
 }
 
+fn parse_codec(s: &str) -> Result<CodecSpec> {
+    CodecSpec::by_name(s)
+        .ok_or_else(|| err!("comm codec must be fp32 | bf16 | int8[:G] | int4[:G], got '{s}'"))
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let spec = Command::new("serve", "start the serving server")
         .flag("addr", "127.0.0.1:7411", "listen address")
@@ -105,33 +112,42 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("backend", "pjrt", "mlp backend: pjrt | host")
         .flag("max-batch", "8", "largest decode batch")
         .flag("seed", "42", "weight synthesis seed")
-        .flag("artifacts", "artifacts", "artifacts directory");
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]");
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model '{}'", a.get("model")))?;
     let tp = Topology::new(a.usize("tp")?);
     let algo = parse_algo(a.get("algo"))?;
+    let codec = parse_codec(a.get("comm-codec"))?;
     let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, a.u64("seed")?));
     eprintln!(
-        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}",
-        cfg.name, cfg.n_layers, cfg.d_model, cfg.d_ff, tp.size
+        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}, codec={}",
+        cfg.name,
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.d_ff,
+        tp.size,
+        codec.label()
     );
     let engine = match a.get("backend") {
-        "host" => Some(TpEngine::start(
+        "host" => Some(TpEngine::start_with_codec(
             EngineBackend::Host,
             model.blocks.iter().map(|b| b.mlp.clone()).collect(),
             cfg.activation,
             None,
+            codec,
         )?),
         "pjrt" => {
             let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
-            Some(TpEngine::start(
+            Some(TpEngine::start_with_codec(
                 EngineBackend::Pjrt {
                     model: cfg.name.clone(),
                 },
                 model.blocks.iter().map(|b| b.mlp.clone()).collect(),
                 cfg.activation,
                 Some(&manifest),
+                codec,
             )?)
         }
         other => bail!("unknown backend '{other}'"),
@@ -272,10 +288,12 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         .flag("model", "llama-scaled", "llama-scaled | granite-scaled | tiny")
         .flag("tp", "1,2,4", "TP widths")
         .flag("m", "1,4,16", "batch sizes")
-        .flag("seed", "7", "weight seed");
+        .flag("seed", "7", "weight seed")
+        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]");
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model"))?;
+    let codec = parse_codec(a.get("comm-codec"))?;
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
         group_size: cfg.group_size,
@@ -284,12 +302,29 @@ fn cmd_measure(args: &[String]) -> Result<()> {
     };
     let ckpt = gen_checkpoint(shape, a.u64("seed")?);
     println!(
-        "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}",
-        shape.k1, shape.n1, shape.n2, cfg.group_size
+        "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}, comm codec {}",
+        shape.k1,
+        shape.n1,
+        shape.n2,
+        cfg.group_size,
+        codec.label()
     );
     let mut t = Table::new(
         "Measured (thread ranks, fused-dequant host kernels)",
         &["TP", "M", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
+    );
+    let mut ct = Table::new(
+        &format!("Communication accounting (codec={})", codec.label()),
+        &[
+            "TP",
+            "M",
+            "Algo",
+            "raw B",
+            "wire B",
+            "wire/raw",
+            "err RMS",
+            "err max",
+        ],
     );
     for &tp in &a.usize_list("tp")? {
         let topo = Topology::new(tp);
@@ -299,7 +334,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
             let mut rng = Xoshiro256::new(99);
             let x = Matrix::randn(m, shape.k1, &mut rng);
             let bcfg = BenchCfg::quick().from_env();
-            let gn = tpaware::tp::collectives::CollectiveGroup::new(tp);
+            let gn = CollectiveGroup::new_with_codec(tp, codec);
             let sn = bench(&bcfg, || {
                 tpaware::model::mlp::run_mlp_with_group(
                     &dn,
@@ -308,7 +343,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
                     &gn,
                 );
             });
-            let ga = tpaware::tp::collectives::CollectiveGroup::new(tp);
+            let ga = CollectiveGroup::new_with_codec(tp, codec);
             let sa = bench(&bcfg, || {
                 tpaware::model::mlp::run_mlp_with_group(
                     &da,
@@ -324,9 +359,32 @@ fn cmd_measure(args: &[String]) -> Result<()> {
                 format!("{:.3}", sa.mean_ms()),
                 format!("{:.2}x", sn.mean_ns / sa.mean_ns),
             ]);
+            // Per-forward communication accounting: one clean run per
+            // algorithm with freshly reset counters.
+            for (name, d, g) in [("naive", &dn, &gn), ("tp-aware", &da, &ga)] {
+                g.reset_stats();
+                tpaware::model::mlp::run_mlp_with_group(d, &x, cfg.activation, g);
+                let s = g.stats();
+                let ratio = if s.total_bytes() == 0 {
+                    1.0
+                } else {
+                    s.total_wire_bytes() as f64 / s.total_bytes() as f64
+                };
+                ct.row(vec![
+                    tp.to_string(),
+                    m.to_string(),
+                    name.to_string(),
+                    s.total_bytes().to_string(),
+                    s.total_wire_bytes().to_string(),
+                    format!("{ratio:.3}"),
+                    format!("{:.2e}", s.codec_err.rms()),
+                    format!("{:.2e}", f64::from(s.codec_err.max_abs_err)),
+                ]);
+            }
         }
     }
     println!("{}", t.render());
+    println!("{}", ct.render());
     Ok(())
 }
 

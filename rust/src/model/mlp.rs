@@ -307,6 +307,71 @@ mod tests {
         assert_eq!(aware_stats.allgather_calls, 0, "the paper's whole point");
         assert_eq!(aware_stats.allreduce_calls, 1);
         assert!(aware_stats.total_bytes() < naive_stats.total_bytes());
+        // fp32 wire: raw and wire accounting coincide op by op, and call
+        // counts track the ops regardless of codec.
+        assert_eq!(naive_stats.total_wire_bytes(), naive_stats.total_bytes());
+        assert_eq!(aware_stats.total_wire_bytes(), aware_stats.total_bytes());
+        assert!(aware_stats.total_wire_bytes() < naive_stats.total_wire_bytes());
+        assert_eq!(naive_stats.total_calls(), 2);
+        assert_eq!(aware_stats.total_calls(), 1);
+    }
+
+    /// Both algorithms run under any wire codec: outputs stay within the
+    /// codec's tolerance of the exact (fp32-wire) result, and the wire
+    /// moves the advertised fraction of the raw bytes (int8 ≤ 30%,
+    /// int4 ≤ 20%, bf16 = 50%).
+    #[test]
+    fn codecs_compress_wire_and_preserve_agreement() {
+        use crate::tp::codec::CodecSpec;
+        let ckpt = gen_checkpoint(shape(), 19);
+        let mut rng = Xoshiro256::new(20);
+        let x = Matrix::randn(4, 32, &mut rng);
+        let tp = Topology::new(4);
+        let dn = deploy_quantized(&ckpt, &cfg(), Algo::Naive, tp);
+        let da = deploy_quantized(&ckpt, &cfg(), Algo::TpAware, tp);
+        let exact = run_mlp_sequential(&da, &x, Activation::Identity);
+        // Tolerances sized to the worst-case quantize-before-reduce
+        // error at this shape (output magnitudes are O(100)).
+        let cases = [
+            (CodecSpec::Bf16, 4.0f32),
+            (CodecSpec::Int8 { group: 64 }, 8.0),
+            (CodecSpec::Int4 { group: 32 }, 64.0),
+        ];
+        for (codec, tol) in cases {
+            let gn = CollectiveGroup::new_with_codec(4, codec);
+            let (yn, _) = run_mlp_with_group(&dn, &x, Activation::Identity, &gn);
+            let ga = CollectiveGroup::new_with_codec(4, codec);
+            let (ya, _) = run_mlp_with_group(&da, &x, Activation::Identity, &ga);
+            let (sn, sa) = (gn.stats(), ga.stats());
+            let label = codec.label();
+            // Accuracy: both algorithms stay near the exact result.
+            let dn_diff = yn.max_abs_diff(&exact);
+            let da_diff = ya.max_abs_diff(&exact);
+            assert!(dn_diff <= tol, "{label} naive drifted {dn_diff} > {tol}");
+            assert!(da_diff <= tol, "{label} aware drifted {da_diff} > {tol}");
+            assert!(sn.codec_err.elems > 0, "{label}: no error recorded");
+            // Compression: raw accounting is codec-independent…
+            let g0 = CollectiveGroup::new(4);
+            run_mlp_with_group(&dn, &x, Activation::Identity, &g0);
+            assert_eq!(sn.total_bytes(), g0.stats().total_bytes());
+            // …while the wire shrinks by the codec's advertised factor.
+            match codec {
+                CodecSpec::Bf16 => {
+                    assert_eq!(sn.total_wire_bytes() * 2, sn.total_bytes());
+                    assert_eq!(sa.total_wire_bytes() * 2, sa.total_bytes());
+                }
+                CodecSpec::Int8 { .. } => {
+                    // The acceptance bar: wire ≤ 30% of the fp32 baseline
+                    // for both the naive and the TP-aware path.
+                    assert!(sn.total_wire_bytes() * 10 <= sn.total_bytes() * 3);
+                    assert!(sa.total_wire_bytes() * 10 <= sa.total_bytes() * 3);
+                }
+                _ => {
+                    assert!(sn.total_wire_bytes() * 5 <= sn.total_bytes());
+                    assert!(sa.total_wire_bytes() * 5 <= sa.total_bytes());
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,8 +5,15 @@
 //! kernel launch and the host-side synchronization of the eager dispatch
 //! loop. That constant comes from the [`crate::simkernel::gpu::GpuSpec`]
 //! calibration.
+//!
+//! The `*_codec_s` variants price a collective whose payload moves under
+//! a [`crate::tp::codec::CodecSpec`] wire codec: the ring model is fed
+//! the *encoded* byte count and the encode/decode kernels are charged as
+//! memory-bound streaming passes over raw + wire bytes (zero for the
+//! identity codec, which launches no extra kernels).
 
 use crate::simkernel::gpu::GpuSpec;
+use crate::tp::codec::CodecSpec;
 
 /// Fixed + rank-scaled overhead of issuing and synchronizing one
 /// collective on a `ranks`-wide communicator.
@@ -28,6 +35,46 @@ pub fn allreduce_s(gpu: &GpuSpec, payload_bytes: usize, ranks: usize) -> f64 {
         return 0.0;
     }
     gpu.fabric.allreduce_s(payload_bytes, ranks) + coll_overhead_s(gpu, ranks)
+}
+
+/// Encode + decode kernel time for one `elems`-element f32 payload under
+/// `codec`: two memory-bound streaming passes (encode reads raw and
+/// writes wire; decode reads wire and writes raw) plus their dispatch
+/// overheads. The identity codec launches nothing and costs nothing.
+pub fn codec_overhead_s(gpu: &GpuSpec, elems: usize, codec: CodecSpec) -> f64 {
+    if codec.is_exact() || elems == 0 {
+        return 0.0;
+    }
+    let raw = elems * 4;
+    let wire = codec.wire_bytes(elems);
+    (2 * (raw + wire)) as f64 / gpu.eff_bw() + 2.0 * gpu.op_overhead_s
+}
+
+/// AllGather of a per-rank shard of `shard_elems` f32 values across
+/// `ranks`, with the payload encoded by `codec` for the wire.
+pub fn allgather_codec_s(gpu: &GpuSpec, shard_elems: usize, ranks: usize, codec: CodecSpec) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    gpu.fabric.allgather_s(codec.wire_bytes(shard_elems), ranks)
+        + coll_overhead_s(gpu, ranks)
+        + codec_overhead_s(gpu, shard_elems, codec)
+}
+
+/// AllReduce of a per-rank payload of `payload_elems` f32 values across
+/// `ranks`, quantize-before-reduce under `codec`.
+pub fn allreduce_codec_s(
+    gpu: &GpuSpec,
+    payload_elems: usize,
+    ranks: usize,
+    codec: CodecSpec,
+) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    gpu.fabric.allreduce_s(codec.wire_bytes(payload_elems), ranks)
+        + coll_overhead_s(gpu, ranks)
+        + codec_overhead_s(gpu, payload_elems, codec)
 }
 
 /// Straggler / rank-convergence penalty of a *blocking* global sync point
@@ -74,5 +121,55 @@ mod tests {
     #[test]
     fn h100_collectives_cheaper() {
         assert!(allreduce_s(&H100, 1 << 20, 8) < allreduce_s(&A100, 1 << 20, 8));
+    }
+
+    #[test]
+    fn fp32_codec_matches_uncompressed_model() {
+        // The identity codec prices exactly like the raw-bytes model.
+        let elems = 1 << 18;
+        assert_eq!(
+            allgather_codec_s(&A100, elems, 8, CodecSpec::Fp32),
+            allgather_s(&A100, elems * 4, 8)
+        );
+        assert_eq!(
+            allreduce_codec_s(&A100, elems, 8, CodecSpec::Fp32),
+            allreduce_s(&A100, elems * 4, 8)
+        );
+        assert_eq!(codec_overhead_s(&A100, elems, CodecSpec::Fp32), 0.0);
+    }
+
+    #[test]
+    fn compressed_wire_beats_fp32_on_large_payloads() {
+        // At MB-scale payloads the 4× (int8) / 8× (int4) byte reduction
+        // dwarfs the encode/decode streaming cost.
+        let elems = 4 << 20;
+        let fp32 = allgather_codec_s(&A100, elems, 8, CodecSpec::Fp32);
+        let bf16 = allgather_codec_s(&A100, elems, 8, CodecSpec::Bf16);
+        let int8 = allgather_codec_s(&A100, elems, 8, CodecSpec::Int8 { group: 64 });
+        let int4 = allgather_codec_s(&A100, elems, 8, CodecSpec::Int4 { group: 32 });
+        assert!(bf16 < fp32, "bf16 {bf16} vs fp32 {fp32}");
+        assert!(int8 < bf16, "int8 {int8} vs bf16 {bf16}");
+        assert!(int4 < int8, "int4 {int4} vs int8 {int8}");
+    }
+
+    #[test]
+    fn encode_overhead_can_dominate_tiny_payloads() {
+        // For a handful of elements the two extra kernel launches cost
+        // more than the saved wire bytes — the codec model must show it.
+        let fp32 = allreduce_codec_s(&A100, 8, 4, CodecSpec::Fp32);
+        let int8 = allreduce_codec_s(&A100, 8, 4, CodecSpec::Int8 { group: 64 });
+        assert!(int8 > fp32, "int8 {int8} vs fp32 {fp32}");
+    }
+
+    #[test]
+    fn single_rank_codec_collectives_free() {
+        assert_eq!(
+            allgather_codec_s(&A100, 1 << 20, 1, CodecSpec::Int8 { group: 64 }),
+            0.0
+        );
+        assert_eq!(
+            allreduce_codec_s(&H100, 1 << 20, 1, CodecSpec::Int4 { group: 32 }),
+            0.0
+        );
     }
 }

@@ -1,0 +1,66 @@
+//! Identity wire codec: raw little-endian f32, 4 bytes per element.
+//!
+//! This is exactly the byte stream the collectives moved before codecs
+//! existed; it is the default so that every pre-codec deployment keeps
+//! its wire format (and its bit-exact results) unchanged.
+
+use super::{CodecSpec, Encoded, WireCodec};
+
+/// The identity codec: no compression, no error.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp32;
+
+impl WireCodec for Fp32 {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Fp32
+    }
+
+    fn encode(&self, data: &[f32]) -> Encoded {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Encoded {
+            spec: CodecSpec::Fp32,
+            elems: data.len(),
+            bytes,
+        }
+    }
+
+    fn decode(&self, enc: &Encoded) -> Vec<f32> {
+        assert_eq!(enc.spec, CodecSpec::Fp32, "codec mismatch");
+        assert_eq!(enc.bytes.len(), enc.elems * 4, "corrupt fp32 payload");
+        enc.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bitwise_identity() {
+        let data = vec![0.0f32, -1.5, 3.25e-20, f32::MAX, -0.0];
+        let enc = Fp32.encode(&data);
+        assert_eq!(enc.wire_len(), data.len() * 4);
+        let out = Fp32.decode(&enc);
+        assert_eq!(data.len(), out.len());
+        for (a, b) in data.iter().zip(out.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "codec mismatch")]
+    fn rejects_foreign_payload() {
+        let enc = Encoded {
+            spec: CodecSpec::Bf16,
+            elems: 1,
+            bytes: vec![0, 0],
+        };
+        Fp32.decode(&enc);
+    }
+}

@@ -1,0 +1,245 @@
+//! Group-scaled affine integer codecs: int8 (4× smaller than f32) and
+//! int4 (8× smaller, before metadata).
+//!
+//! # Wire layout
+//!
+//! For a payload of `n` elements with group size `G`
+//! (`g = ceil(n/G)` groups), all little-endian:
+//!
+//! ```text
+//! int8: [ n u8 codes                                  ][ g × (scale: f32, zero: f32) ]
+//! int4: [ ceil(n/2) bytes, two codes each, low nibble ][ g × (scale: f32, zero: f32) ]
+//!       ^ packed payload                                 ^ per-group metadata
+//! ```
+//!
+//! For int4 the code of element `2k` lives in the low nibble of byte `k`
+//! and element `2k+1` in the high nibble; a trailing odd element leaves
+//! the final high nibble zero.
+//!
+//! # Quantization
+//!
+//! Per group of `G` consecutive elements, with `b` bits:
+//!
+//! ```text
+//! zero  = min(x)                 scale = (max(x) − min(x)) / (2ᵇ − 1)
+//! q     = clamp(round((x − zero) / scale), 0, 2ᵇ − 1)
+//! x̂     = zero + scale · q
+//! ```
+//!
+//! so the round-trip error is at most `scale / 2` per element. A
+//! constant group stores `scale = 0` and decodes exactly.
+
+use super::{n_groups, CodecSpec, Encoded, WireCodec};
+
+/// int8 group-affine codec: 1 byte per element + 8 bytes per group.
+#[derive(Clone, Copy, Debug)]
+pub struct Int8Group {
+    /// Elements sharing one scale/zero pair.
+    pub group: usize,
+}
+
+impl Int8Group {
+    /// A codec with `group` elements per quantization group (≥ 1).
+    pub fn new(group: usize) -> Int8Group {
+        assert!(group > 0, "group size must be positive");
+        Int8Group { group }
+    }
+}
+
+impl WireCodec for Int8Group {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Int8 { group: self.group }
+    }
+
+    fn encode(&self, data: &[f32]) -> Encoded {
+        encode_grouped(data, self.group, 8, self.spec())
+    }
+
+    fn decode(&self, enc: &Encoded) -> Vec<f32> {
+        decode_grouped(enc, self.group, 8, self.spec())
+    }
+}
+
+/// int4 group-affine codec: half a byte per element + 8 bytes per group.
+#[derive(Clone, Copy, Debug)]
+pub struct Int4Group {
+    /// Elements sharing one scale/zero pair.
+    pub group: usize,
+}
+
+impl Int4Group {
+    /// A codec with `group` elements per quantization group (≥ 1).
+    pub fn new(group: usize) -> Int4Group {
+        assert!(group > 0, "group size must be positive");
+        Int4Group { group }
+    }
+}
+
+impl WireCodec for Int4Group {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Int4 { group: self.group }
+    }
+
+    fn encode(&self, data: &[f32]) -> Encoded {
+        encode_grouped(data, self.group, 4, self.spec())
+    }
+
+    fn decode(&self, enc: &Encoded) -> Vec<f32> {
+        decode_grouped(enc, self.group, 4, self.spec())
+    }
+}
+
+fn payload_bytes(elems: usize, bits: u32) -> usize {
+    match bits {
+        8 => elems,
+        4 => (elems + 1) / 2,
+        _ => unreachable!("only int8/int4 are wired up"),
+    }
+}
+
+fn le_f32(b: &[u8]) -> f32 {
+    f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn encode_grouped(data: &[f32], group: usize, bits: u32, spec: CodecSpec) -> Encoded {
+    let levels = (1u32 << bits) - 1;
+    let groups = n_groups(data.len(), group);
+    let pbytes = payload_bytes(data.len(), bits);
+    let mut bytes = vec![0u8; pbytes + 8 * groups];
+    let (payload, meta) = bytes.split_at_mut(pbytes);
+    for (g, chunk) in data.chunks(group).enumerate() {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        // Range arithmetic in f64: a group spanning both f32 extremes
+        // must not overflow to an infinite scale (which would decode the
+        // whole group to NaN/Inf).
+        let scale = if hi > lo {
+            ((f64::from(hi) - f64::from(lo)) / f64::from(levels)) as f32
+        } else {
+            0.0
+        };
+        meta[g * 8..g * 8 + 4].copy_from_slice(&scale.to_le_bytes());
+        meta[g * 8 + 4..g * 8 + 8].copy_from_slice(&lo.to_le_bytes());
+        for (i, &v) in chunk.iter().enumerate() {
+            let q = if scale > 0.0 {
+                let t = (f64::from(v) - f64::from(lo)) / f64::from(scale);
+                t.round().clamp(0.0, f64::from(levels)) as u8
+            } else {
+                0
+            };
+            let idx = g * group + i;
+            match bits {
+                8 => payload[idx] = q,
+                _ => payload[idx / 2] |= (q & 0x0F) << ((idx % 2) * 4),
+            }
+        }
+    }
+    Encoded {
+        spec,
+        elems: data.len(),
+        bytes,
+    }
+}
+
+fn decode_grouped(enc: &Encoded, group: usize, bits: u32, spec: CodecSpec) -> Vec<f32> {
+    assert_eq!(enc.spec, spec, "codec mismatch");
+    let groups = n_groups(enc.elems, group);
+    let pbytes = payload_bytes(enc.elems, bits);
+    assert_eq!(
+        enc.bytes.len(),
+        pbytes + 8 * groups,
+        "corrupt grouped payload"
+    );
+    let (payload, meta) = enc.bytes.split_at(pbytes);
+    let mut out = Vec::with_capacity(enc.elems);
+    for g in 0..groups {
+        let scale = le_f32(&meta[g * 8..g * 8 + 4]);
+        let zero = le_f32(&meta[g * 8 + 4..g * 8 + 8]);
+        let lo = g * group;
+        let hi = (lo + group).min(enc.elems);
+        for idx in lo..hi {
+            let q = match bits {
+                8 => payload[idx],
+                _ => (payload[idx / 2] >> ((idx % 2) * 4)) & 0x0F,
+            };
+            // Dequantize in f64 so `zero + scale·q` cannot overflow f32
+            // on the way back up for extreme-range groups.
+            out.push((f64::from(zero) + f64::from(scale) * f64::from(q)) as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn int8_error_bounded_by_half_scale() {
+        let mut g = Xoshiro256::new(7);
+        let data: Vec<f32> = (0..300).map(|_| g.normal() * 5.0).collect();
+        let codec = Int8Group::new(64);
+        let out = codec.decode(&codec.encode(&data));
+        for chunk in 0..(data.len() + 63) / 64 {
+            let span = &data[chunk * 64..(chunk * 64 + 64).min(data.len())];
+            let lo = span.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = span.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let half_scale = 0.5 * (hi - lo) / 255.0 + 1e-4;
+            for (i, &v) in span.iter().enumerate() {
+                let err = (v - out[chunk * 64 + i]).abs();
+                assert!(err <= half_scale, "err {err} > {half_scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_packs_two_codes_per_byte() {
+        let data = vec![0.0f32, 15.0, 1.0, 14.0, 7.0];
+        let codec = Int4Group::new(8);
+        let enc = codec.encode(&data);
+        // ceil(5/2) payload bytes + one 8-byte group header.
+        assert_eq!(enc.wire_len(), 3 + 8);
+        // Group range 0..15 with 15 levels → scale 1.0: codes = values.
+        assert_eq!(enc.bytes[0], 0xF0); // codes 0 (low) and 15 (high)
+        assert_eq!(enc.bytes[1], 0xE1); // codes 1 (low) and 14 (high)
+        assert_eq!(enc.bytes[2], 0x07); // odd tail, high nibble zero
+        let out = codec.decode(&enc);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn group_boundaries_respected() {
+        // Two groups with wildly different ranges: a shared scale would
+        // destroy the small group; per-group scales keep both accurate.
+        let mut data = vec![0.001f32, 0.002, 0.003, 0.004];
+        data.extend_from_slice(&[1000.0, 2000.0, 3000.0, 4000.0]);
+        let codec = Int8Group::new(4);
+        let out = codec.decode(&codec.encode(&data));
+        for (a, b) in data.iter().zip(out.iter()) {
+            let rel = (a - b).abs() / a.abs();
+            assert!(rel < 0.01, "{a} → {b}");
+        }
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        for (enc, dec) in [
+            (Int8Group::new(8).encode(&[]), Int8Group::new(8)),
+            (Int4Group::new(8).encode(&[]), Int4Group::new(8)),
+        ] {
+            assert_eq!(enc.wire_len(), 0);
+            assert!(dec.decode(&enc).is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "group size must be positive")]
+    fn zero_group_rejected() {
+        Int8Group::new(0);
+    }
+}

@@ -1,38 +1,68 @@
 //! Byte-moving collectives over shared memory with NCCL semantics.
 //!
-//! A [`CollectiveGroup`] is created once per topology; each rank thread
-//! holds a [`RankComm`] handle. Operations are synchronous (every rank must
-//! call the same op in the same order — as with NCCL, mismatched calls
-//! deadlock, and a generation counter catches some misuse in debug).
+//! A [`CollectiveGroup`] is created once per topology — optionally with a
+//! wire codec (see [`crate::tp::codec`]) that compresses every payload at
+//! the communicator boundary; each rank thread holds a [`RankComm`]
+//! handle. Operations are synchronous (every rank must call the same op
+//! in the same order — as with NCCL, mismatched calls deadlock, and a
+//! generation counter catches some misuse in debug).
 //!
-//! All ops record traffic in [`CommStats`], which both the metrics endpoint
-//! and the modeled-time accounting consume: the measured path moves real
-//! bytes through these slots, and the modeled path converts the recorded
+//! All ops record traffic in [`CommStats`] — both the *raw* f32 bytes the
+//! op semantically moves and the *wire* bytes the codec actually shipped
+//! — which the metrics endpoint, the benches and the modeled-time
+//! accounting consume: the measured path moves real (encoded) bytes
+//! through these slots, and the modeled path converts the recorded
 //! (op, bytes, ranks) triples into NVLink/PCIe timings via
-//! [`crate::tp::interconnect`].
+//! [`crate::tp::interconnect`]. Lossy codecs additionally accumulate
+//! round-trip error into [`CommStats::codec_err`].
+//!
+//! Reductions follow quantize-before-reduce: each rank encodes its local
+//! partial, the encoded payloads are exchanged, and every rank decodes
+//! and accumulates them in f32 in rank order — so all ranks produce
+//! bit-identical results under any codec.
 
+use crate::tp::codec::{CodecErrorStats, CodecSpec, Encoded};
 use std::sync::{Arc, Barrier, Mutex};
 
 /// Traffic accounting for one rank group.
+///
+/// `*_bytes` counts the raw f32 payload each op semantically moves
+/// (codec-independent, comparable across codecs); `*_wire_bytes` counts
+/// the encoded bytes the group's codec actually shipped. Under the
+/// default [`CodecSpec::Fp32`] the two are equal.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommStats {
     pub allgather_calls: usize,
     pub allgather_bytes: usize,
+    pub allgather_wire_bytes: usize,
     pub allreduce_calls: usize,
     pub allreduce_bytes: usize,
+    pub allreduce_wire_bytes: usize,
     pub broadcast_calls: usize,
     pub broadcast_bytes: usize,
+    pub broadcast_wire_bytes: usize,
     pub reduce_scatter_calls: usize,
     pub reduce_scatter_bytes: usize,
+    pub reduce_scatter_wire_bytes: usize,
     pub barrier_calls: usize,
+    /// Round-trip quantization error accumulated by lossy codecs.
+    pub codec_err: CodecErrorStats,
 }
 
 impl CommStats {
+    /// Raw f32 bytes across all ops — what an fp32 wire would move.
     pub fn total_bytes(&self) -> usize {
         self.allgather_bytes
             + self.allreduce_bytes
             + self.broadcast_bytes
             + self.reduce_scatter_bytes
+    }
+    /// Encoded bytes across all ops — what the codec's wire moved.
+    pub fn total_wire_bytes(&self) -> usize {
+        self.allgather_wire_bytes
+            + self.allreduce_wire_bytes
+            + self.broadcast_wire_bytes
+            + self.reduce_scatter_wire_bytes
     }
     pub fn total_calls(&self) -> usize {
         self.allgather_calls
@@ -42,11 +72,49 @@ impl CommStats {
     }
 }
 
+/// One rank's deposited payload. The exact (fp32) codec keeps the
+/// pre-codec fast path — a plain `Vec<f32>` moved by memcpy, no
+/// encode/decode transform — so the default wire is byte-for-byte and
+/// cost-for-cost identical to the codec-free implementation.
+enum Slot {
+    Raw(Vec<f32>),
+    Wire(Encoded),
+}
+
 struct Shared {
     size: usize,
-    slots: Vec<Mutex<Vec<f32>>>,
+    codec: CodecSpec,
+    slots: Vec<Mutex<Slot>>,
     barrier: Barrier,
     stats: Mutex<CommStats>,
+}
+
+impl Shared {
+    /// Deposit `local` into `rank`'s slot (encoding under a lossy codec,
+    /// with round-trip error accounting); returns the wire byte count.
+    fn deposit(&self, rank: usize, local: &[f32]) -> usize {
+        if self.codec.is_exact() {
+            *self.slots[rank].lock().unwrap() = Slot::Raw(local.to_vec());
+            local.len() * 4
+        } else {
+            let enc = self.codec.encode(local);
+            let wire = enc.wire_len();
+            let decoded = self.codec.decode(&enc);
+            self.stats.lock().unwrap().codec_err.record(local, &decoded);
+            *self.slots[rank].lock().unwrap() = Slot::Wire(enc);
+            wire
+        }
+    }
+
+    /// Run `f` over the f32 view of rank `r`'s deposited payload
+    /// (borrowed in place for raw slots, decoded for wire slots).
+    fn with_slot<R>(&self, r: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        let slot = self.slots[r].lock().unwrap();
+        match &*slot {
+            Slot::Raw(v) => f(v),
+            Slot::Wire(e) => f(&self.codec.decode(e)),
+        }
+    }
 }
 
 /// Factory for per-rank communicators.
@@ -62,12 +130,19 @@ pub struct RankComm {
 }
 
 impl CollectiveGroup {
+    /// A group whose collectives move raw f32 ([`CodecSpec::Fp32`]).
     pub fn new(size: usize) -> CollectiveGroup {
+        CollectiveGroup::new_with_codec(size, CodecSpec::Fp32)
+    }
+
+    /// A group whose collectives move `codec`-encoded bytes.
+    pub fn new_with_codec(size: usize, codec: CodecSpec) -> CollectiveGroup {
         assert!(size > 0);
         CollectiveGroup {
             shared: Arc::new(Shared {
                 size,
-                slots: (0..size).map(|_| Mutex::new(Vec::new())).collect(),
+                codec,
+                slots: (0..size).map(|_| Mutex::new(Slot::Raw(Vec::new()))).collect(),
                 barrier: Barrier::new(size),
                 stats: Mutex::new(CommStats::default()),
             }),
@@ -88,6 +163,11 @@ impl CollectiveGroup {
         (0..self.shared.size).map(|r| self.rank(r)).collect()
     }
 
+    /// The wire codec this group's collectives encode with.
+    pub fn codec(&self) -> CodecSpec {
+        self.shared.codec
+    }
+
     /// Snapshot of the group's traffic counters.
     pub fn stats(&self) -> CommStats {
         *self.shared.stats.lock().unwrap()
@@ -106,6 +186,10 @@ impl RankComm {
     pub fn size(&self) -> usize {
         self.shared.size
     }
+    /// The wire codec this communicator encodes with.
+    pub fn codec(&self) -> CodecSpec {
+        self.shared.codec
+    }
 
     /// Synchronize all ranks.
     pub fn barrier(&self) {
@@ -116,56 +200,66 @@ impl RankComm {
     }
 
     /// AllGather: each rank contributes `local`; returns the rank-ordered
-    /// concatenation `[shard_0 | shard_1 | … | shard_{p-1}]` on every rank.
+    /// concatenation `[shard_0 | shard_1 | … | shard_{p-1}]` on every
+    /// rank. Under a lossy codec every rank — including the contributor —
+    /// sees the *decoded wire payload* of each shard, so all ranks agree
+    /// bit-exactly.
     pub fn all_gather(&self, local: &[f32]) -> Vec<f32> {
         let p = self.size();
         if p == 1 {
             return local.to_vec();
         }
-        *self.shared.slots[self.rank].lock().unwrap() = local.to_vec();
+        let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait(); // all deposits visible
         let mut out = Vec::with_capacity(local.len() * p);
         for r in 0..p {
-            out.extend_from_slice(&self.shared.slots[r].lock().unwrap());
+            self.shared.with_slot(r, |shard| out.extend_from_slice(shard));
         }
         if self.rank == 0 {
             let mut s = self.shared.stats.lock().unwrap();
             s.allgather_calls += 1;
             // NCCL accounting: each rank receives (p-1) shards.
             s.allgather_bytes += local.len() * 4 * (p - 1) * p;
+            s.allgather_wire_bytes += wire * (p - 1) * p;
         }
         self.shared.barrier.wait(); // safe to overwrite slots next op
         out
     }
 
-    /// AllReduce(sum): every rank gets the elementwise sum of all `local`s.
+    /// AllReduce(sum): every rank gets the elementwise sum of all
+    /// `local`s. Quantize-before-reduce: the *partials* are encoded for
+    /// the wire; accumulation runs in f32 over the decoded values, in
+    /// rank order, identically on every rank.
     pub fn all_reduce_sum(&self, local: &[f32]) -> Vec<f32> {
         let p = self.size();
         if p == 1 {
             return local.to_vec();
         }
-        *self.shared.slots[self.rank].lock().unwrap() = local.to_vec();
+        let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait();
         let mut out = vec![0.0f32; local.len()];
         for r in 0..p {
-            let shard = self.shared.slots[r].lock().unwrap();
-            assert_eq!(shard.len(), out.len(), "allreduce length mismatch");
-            for (o, v) in out.iter_mut().zip(shard.iter()) {
-                *o += v;
-            }
+            self.shared.with_slot(r, |shard| {
+                assert_eq!(shard.len(), out.len(), "allreduce length mismatch");
+                for (o, v) in out.iter_mut().zip(shard.iter()) {
+                    *o += v;
+                }
+            });
         }
         if self.rank == 0 {
             let mut s = self.shared.stats.lock().unwrap();
             s.allreduce_calls += 1;
             // Ring allreduce moves 2(p-1)/p × payload per rank.
             s.allreduce_bytes += (local.len() * 4 * 2 * (p - 1) / p) * p;
+            s.allreduce_wire_bytes += (wire * 2 * (p - 1) / p) * p;
         }
         self.shared.barrier.wait();
         out
     }
 
     /// ReduceScatter(sum): sum of all `local`s, rank `r` keeps chunk `r`.
-    /// `local.len()` must divide evenly by the group size.
+    /// `local.len()` must divide evenly by the group size. Same
+    /// quantize-before-reduce semantics as [`RankComm::all_reduce_sum`].
     pub fn reduce_scatter_sum(&self, local: &[f32]) -> Vec<f32> {
         let p = self.size();
         if p == 1 {
@@ -173,40 +267,49 @@ impl RankComm {
         }
         assert_eq!(local.len() % p, 0, "reduce_scatter payload must divide");
         let chunk = local.len() / p;
-        *self.shared.slots[self.rank].lock().unwrap() = local.to_vec();
+        let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait();
         let lo = self.rank * chunk;
         let mut out = vec![0.0f32; chunk];
         for r in 0..p {
-            let shard = self.shared.slots[r].lock().unwrap();
-            for i in 0..chunk {
-                out[i] += shard[lo + i];
-            }
+            self.shared.with_slot(r, |shard| {
+                for i in 0..chunk {
+                    out[i] += shard[lo + i];
+                }
+            });
         }
         if self.rank == 0 {
             let mut s = self.shared.stats.lock().unwrap();
             s.reduce_scatter_calls += 1;
             s.reduce_scatter_bytes += (local.len() * 4 * (p - 1) / p) * p;
+            s.reduce_scatter_wire_bytes += (wire * (p - 1) / p) * p;
         }
         self.shared.barrier.wait();
         out
     }
 
-    /// Broadcast from `root` to all ranks.
+    /// Broadcast from `root` to all ranks. Under a lossy codec every rank
+    /// — including the root — returns the decoded wire payload, so all
+    /// ranks hold identical values.
     pub fn broadcast(&self, buf: &[f32], root: usize) -> Vec<f32> {
         let p = self.size();
         if p == 1 {
             return buf.to_vec();
         }
+        let mut wire = 0;
         if self.rank == root {
-            *self.shared.slots[root].lock().unwrap() = buf.to_vec();
+            wire = self.shared.deposit(root, buf);
         }
         self.shared.barrier.wait();
-        let out = self.shared.slots[root].lock().unwrap().clone();
+        let out = self.shared.with_slot(root, |v| v.to_vec());
+        if self.rank != root {
+            wire = self.shared.codec.wire_bytes(out.len());
+        }
         if self.rank == 0 {
             let mut s = self.shared.stats.lock().unwrap();
             s.broadcast_calls += 1;
             s.broadcast_bytes += out.len() * 4 * (p - 1);
+            s.broadcast_wire_bytes += wire * (p - 1);
         }
         self.shared.barrier.wait();
         out
@@ -217,12 +320,21 @@ impl RankComm {
 mod tests {
     use super::*;
     use crate::tp::topology::Topology;
+    use crate::util::proptest_lite::forall;
 
     fn with_group<T: Send + 'static>(
         size: usize,
         f: impl Fn(RankComm) -> T + Send + Sync + 'static,
     ) -> (Vec<T>, CommStats) {
-        let group = CollectiveGroup::new(size);
+        with_group_codec(size, CodecSpec::Fp32, f)
+    }
+
+    fn with_group_codec<T: Send + 'static>(
+        size: usize,
+        codec: CodecSpec,
+        f: impl Fn(RankComm) -> T + Send + Sync + 'static,
+    ) -> (Vec<T>, CommStats) {
+        let group = CollectiveGroup::new_with_codec(size, codec);
         let comms = group.ranks();
         let comms = std::sync::Mutex::new(comms);
         let t = Topology::new(size);
@@ -230,7 +342,7 @@ mod tests {
             let comm = comms.lock().unwrap()[rank].clone();
             f(comm)
         });
-        (out, CommStats::default())
+        (out, group.stats())
     }
 
     #[test]
@@ -249,6 +361,9 @@ mod tests {
         let s = group.stats();
         assert_eq!(s.allgather_calls, 1);
         assert_eq!(s.allgather_bytes, 2 * 4 * 3 * 4); // shard 8B × (p-1) × p
+        // fp32 wire: raw and wire bytes coincide, no codec error.
+        assert_eq!(s.allgather_wire_bytes, s.allgather_bytes);
+        assert_eq!(s.codec_err.elems, 0);
     }
 
     #[test]
@@ -331,5 +446,117 @@ mod tests {
         for o in &out {
             assert_eq!(*o, (0..16).map(|i| i as f32).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn fp32_wire_equals_raw_for_every_op() {
+        let (_, s) = with_group(4, |comm| {
+            let payload = vec![comm.rank() as f32; 8];
+            comm.all_gather(&payload);
+            comm.all_reduce_sum(&payload);
+            comm.reduce_scatter_sum(&payload);
+            comm.broadcast(&payload, 1);
+        });
+        assert_eq!(s.total_calls(), 4);
+        assert!(s.total_bytes() > 0);
+        assert_eq!(s.total_wire_bytes(), s.total_bytes());
+        assert_eq!(s.allreduce_wire_bytes, s.allreduce_bytes);
+        assert_eq!(s.reduce_scatter_wire_bytes, s.reduce_scatter_bytes);
+        assert_eq!(s.broadcast_wire_bytes, s.broadcast_bytes);
+        assert_eq!(s.codec_err.elems, 0);
+    }
+
+    #[test]
+    fn int8_collectives_compress_and_record_error() {
+        let spec = CodecSpec::Int8 { group: 64 };
+        let (out, s) = with_group_codec(4, spec, |comm| {
+            let payload: Vec<f32> = (0..256)
+                .map(|i| (i as f32 * 0.37 + comm.rank() as f32).sin())
+                .collect();
+            (payload.clone(), comm.all_gather(&payload))
+        });
+        // ≤ 30% of the raw fp32 bytes at the default-ish group size.
+        assert!(s.allgather_wire_bytes * 10 <= s.allgather_bytes * 3);
+        assert!(s.codec_err.elems > 0);
+        assert!(s.codec_err.max_abs_err > 0.0);
+        // Every rank decodes the same bytes → identical gathers…
+        for (_, gathered) in &out {
+            assert_eq!(gathered, &out[0].1);
+        }
+        // …and each shard round-trips within the codec bound.
+        for (rank, (payload, _)) in out.iter().enumerate() {
+            let bound = spec.max_abs_error_bound(payload);
+            let shard = &out[0].1[rank * 256..(rank + 1) * 256];
+            for (a, b) in payload.iter().zip(shard.iter()) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_allreduce_identical_on_every_rank() {
+        let spec = CodecSpec::Int4 { group: 16 };
+        let (out, _) = with_group_codec(4, spec, |comm| {
+            let payload: Vec<f32> = (0..64)
+                .map(|i| ((i + 13 * comm.rank()) as f32 * 0.11).cos() * 4.0)
+                .collect();
+            comm.all_reduce_sum(&payload)
+        });
+        for o in &out {
+            // Bit-identical, not merely close: all ranks decode the same
+            // wire bytes in the same order.
+            assert_eq!(o, &out[0]);
+        }
+    }
+
+    /// Property (satellite): AllReduce under any codec agrees with the
+    /// exact sum within the accumulated per-rank codec tolerance, for
+    /// p ∈ {1, 2, 4, 8}.
+    #[test]
+    fn prop_allreduce_with_codec_agrees_across_widths() {
+        forall("allreduce codec agreement", 8, |g| {
+            let n = 1 + g.below(97);
+            let locals: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..n).map(|_| g.normal() * 3.0).collect())
+                .collect();
+            let specs = [
+                CodecSpec::Fp32,
+                CodecSpec::Bf16,
+                CodecSpec::Int8 { group: 32 },
+                CodecSpec::Int4 { group: 16 },
+            ];
+            for codec in specs {
+                for p in [1usize, 2, 4, 8] {
+                    let mut expect = vec![0.0f64; n];
+                    for l in &locals[..p] {
+                        for (e, &v) in expect.iter_mut().zip(l.iter()) {
+                            *e += f64::from(v);
+                        }
+                    }
+                    let tol: f32 = locals[..p]
+                        .iter()
+                        .map(|l| codec.max_abs_error_bound(l))
+                        .sum::<f32>()
+                        + 1e-4;
+                    let group = CollectiveGroup::new_with_codec(p, codec);
+                    let comms = std::sync::Mutex::new(group.ranks());
+                    let locals_p = locals[..p].to_vec();
+                    let t = Topology::new(p);
+                    let out = t.run_spmd(move |rank| {
+                        let comm = comms.lock().unwrap()[rank].clone();
+                        comm.all_reduce_sum(&locals_p[rank])
+                    });
+                    for o in &out {
+                        for (i, (&got, &e)) in o.iter().zip(expect.iter()).enumerate() {
+                            assert!(
+                                (f64::from(got) - e).abs() <= f64::from(tol),
+                                "{} p={p} i={i}: {got} vs {e} (tol {tol})",
+                                codec.label()
+                            );
+                        }
+                    }
+                }
+            }
+        });
     }
 }

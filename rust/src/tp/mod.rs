@@ -10,15 +10,19 @@
 //!
 //! * [`topology`] — rank groups and SPMD launch helpers.
 //! * [`collectives`] — AllGather / AllReduce / ReduceScatter / Broadcast /
-//!   Barrier over shared slots, with traffic accounting.
+//!   Barrier over shared slots, with raw + wire traffic accounting.
+//! * [`codec`] — wire codecs (fp32 / bf16 / int8 / int4 group-affine)
+//!   that compress collective payloads at the communicator boundary.
 //! * [`sharding`] — Column-TP / Row-TP shard math for dense and quantized
 //!   weights (including metadata sharding).
 //! * [`interconnect`] — fabric profiles + ring-collective timing formulas.
 
+pub mod codec;
 pub mod collectives;
 pub mod interconnect;
 pub mod sharding;
 pub mod topology;
 
+pub use codec::CodecSpec;
 pub use collectives::{CollectiveGroup, CommStats};
 pub use topology::Topology;

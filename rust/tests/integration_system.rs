@@ -259,6 +259,9 @@ fn model_level_comm_accounting() {
         let stats = engine.comm_stats();
         assert_eq!(stats.allgather_calls, expect_ag, "algo={algo:?}");
         assert_eq!(stats.allreduce_calls, cfg.n_layers);
+        // Default fp32 wire: raw and wire accounting stay in lockstep.
+        assert_eq!(stats.total_wire_bytes(), stats.total_bytes());
+        assert!(stats.total_bytes() > 0);
         engine.shutdown();
     }
 }
