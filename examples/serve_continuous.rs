@@ -1,0 +1,204 @@
+//! Continuous batching under arriving traffic: Poisson arrivals, mixed
+//! output lengths, a capacity-bounded KV pool — the serving regime the
+//! static path cannot express.
+//!
+//! The example drives a [`ContinuousScheduler`] directly (no TCP): a
+//! pre-generated arrival trace (exponential inter-arrival times; mostly
+//! short completions with a 1-in-6 long-tail generation) is submitted
+//! as wall-clock time catches up with each arrival, while the scheduler
+//! ticks continuously. The same trace is then replayed under static
+//! batching for contrast: there, each admitted batch drains to its long
+//! member and runs it alone while freed slots idle.
+//!
+//! How to read the printout, per mode:
+//!
+//! * `tok/s`  — generated-token throughput over the whole run; the
+//!   headline number, higher is better. Continuous wins on mixed
+//!   lengths because retired slots refill immediately instead of
+//!   idling until the batch's longest member drains.
+//! * `steps`  — decode steps executed. Same tokens over fewer steps =
+//!   fuller batches; per-step fixed costs (weight dequant, engine
+//!   sync, collectives) amortize across more sequences.
+//! * `occ.`   — mean live sequences per step (≤ max_batch). The
+//!   mechanism behind the tok/s gap: continuous keeps this near the
+//!   top bucket.
+//! * `ttft/e2e p50` — median time-to-first-token / request latency.
+//!   TTFT includes queue wait, so under backpressure it grows while
+//!   throughput stays high — that is the pool trading latency for
+//!   bounded memory.
+//! * `kv peak` — high-water mark of reserved KV tokens; always ≤ the
+//!   configured budget (the pool admits by reservation, so overload
+//!   queues instead of OOMing).
+//!
+//! Run with: `cargo run --release --example serve_continuous`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tpaware::coordinator::kv_pool::{KvPool, KvPoolCfg};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::request::{Request, Response};
+use tpaware::coordinator::scheduler::{ContinuousScheduler, Scheduler};
+use tpaware::model::config::ModelConfig;
+use tpaware::model::transformer::Transformer;
+use tpaware::simkernel::pipeline::{Algo, SchedMode};
+use tpaware::tp::topology::Topology;
+use tpaware::util::prng::Xoshiro256;
+use tpaware::util::table::Table;
+
+/// One request of the trace: arrival offset from t0, prompt, output len.
+struct Arrival {
+    at: Duration,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Poisson arrival process with rate `lambda` (requests/second): mostly
+/// short completions with a long-tail generation every sixth request
+/// (the realistic serving mix static batching handles worst), prompts
+/// 2–5 tokens.
+fn gen_trace(n: usize, lambda: f64, seed: u64) -> Vec<Arrival> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            // Exponential inter-arrival: -ln(U)/lambda.
+            let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+            t += -u.ln() / lambda;
+            let plen = 2 + rng.below(4);
+            Arrival {
+                at: Duration::from_secs_f64(t),
+                prompt: (0..plen).map(|_| rng.below(512) as u32).collect(),
+                max_new: if i % 6 == 0 { 32 } else { 2 },
+            }
+        })
+        .collect()
+}
+
+struct ModeReport {
+    tokens: usize,
+    wall_s: f64,
+    steps: u64,
+    occupancy: f64,
+    ttft_p50_ms: f64,
+    e2e_p50_ms: f64,
+    kv_peak: usize,
+    rejections: u64,
+}
+
+/// Replay `trace` through one scheduler mode, submitting each request
+/// when the wall clock reaches its arrival time.
+fn replay(
+    model: Arc<Transformer>,
+    trace: &[Arrival],
+    max_batch: usize,
+    pool_cfg: KvPoolCfg,
+    mode: SchedMode,
+) -> ModeReport {
+    let metrics = Arc::new(Metrics::default());
+    let core = Scheduler::new(model, None, metrics.clone(), max_batch);
+    let pool = Arc::new(KvPool::new(pool_cfg));
+    let mut sched = ContinuousScheduler::new(core, pool.clone(), mode);
+    let mut responses: Vec<Response> = Vec::new();
+    let mut next = 0;
+    let t0 = Instant::now();
+    while next < trace.len() || !sched.is_idle() {
+        // Admit every arrival whose time has come.
+        while next < trace.len() && t0.elapsed() >= trace[next].at {
+            let a = &trace[next];
+            let req = Request::new(next as u64, a.prompt.clone(), a.max_new);
+            if let Some(rejected) = sched.submit(req) {
+                responses.push(rejected);
+            }
+            next += 1;
+        }
+        let done = sched.tick();
+        responses.extend(done);
+        if sched.is_idle() && next < trace.len() {
+            // Nothing in flight: sleep until the next arrival.
+            let now = t0.elapsed();
+            if trace[next].at > now {
+                std::thread::sleep((trace[next].at - now).min(Duration::from_millis(5)));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), trace.len());
+    let stats = pool.stats();
+    assert!(stats.peak_tokens <= pool_cfg.max_tokens);
+    ModeReport {
+        tokens: responses.iter().map(|r| r.tokens.len()).sum(),
+        wall_s,
+        steps: metrics
+            .engine_steps
+            .load(std::sync::atomic::Ordering::Relaxed),
+        occupancy: metrics.mean_occupancy(),
+        ttft_p50_ms: metrics.ttft.quantile_us(0.5) as f64 / 1e3,
+        e2e_p50_ms: metrics.e2e.quantile_us(0.5) as f64 / 1e3,
+        kv_peak: stats.peak_tokens,
+        rejections: stats.rejections,
+    }
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let fast = std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1");
+    let (n_requests, lambda) = if fast { (8, 50.0) } else { (24, 30.0) };
+    let max_batch = 8;
+    let pool_cfg = KvPoolCfg {
+        max_seqs: 16,
+        max_tokens: 512,
+    };
+    eprintln!(
+        "synthesizing {} ({} layers, d={}, ff={}), TP-aware, tp=2",
+        cfg.name, cfg.n_layers, cfg.d_model, cfg.d_ff
+    );
+    let model = Arc::new(Transformer::synthesize(
+        &cfg,
+        Algo::TpAware,
+        Topology::new(2),
+        42,
+    ));
+    println!(
+        "trace: {n_requests} requests, Poisson λ={lambda}/s, outputs 2 short / 32 \
+         long-tail (1-in-6), max_batch={max_batch}, kv pool {} seqs / {} tokens\n",
+        pool_cfg.max_seqs, pool_cfg.max_tokens
+    );
+
+    let trace = gen_trace(n_requests, lambda, 7);
+    let mut t = Table::new(
+        "Arrival-driven serving: continuous vs static batching",
+        &[
+            "mode",
+            "tok/s",
+            "steps",
+            "occ.",
+            "ttft p50 (ms)",
+            "e2e p50 (ms)",
+            "kv peak",
+            "kv waits",
+        ],
+    );
+    let mut throughput = Vec::new();
+    for mode in [SchedMode::Continuous, SchedMode::Static] {
+        let r = replay(model.clone(), &trace, max_batch, pool_cfg, mode);
+        throughput.push(r.tokens as f64 / r.wall_s);
+        t.row(vec![
+            mode.label().into(),
+            format!("{:.1}", r.tokens as f64 / r.wall_s),
+            r.steps.to_string(),
+            format!("{:.2}", r.occupancy),
+            format!("{:.2}", r.ttft_p50_ms),
+            format!("{:.2}", r.e2e_p50_ms),
+            r.kv_peak.to_string(),
+            r.rejections.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "continuous over static: {:.2}x tokens/s (see module doc for how to read\n\
+         each column; kv waits = failed admission attempts — one per step a\n\
+         queued request waited on pool backpressure)",
+        throughput[0] / throughput[1]
+    );
+    println!("serve_continuous OK");
+}

@@ -28,10 +28,14 @@ impl Default for BatcherCfg {
     }
 }
 
-/// Round `n` up to the next compiled bucket (power of two up to
-/// `max_batch`).
+/// Round `n` up to the next compiled bucket (power of two, capped at
+/// `max_batch` — the engine's largest compiled artifact is always a
+/// valid bucket even when `max_batch` is not a power of two).
+///
+/// `n = 0` (an empty step — nothing live yet) maps to the smallest
+/// bucket, 1; `n > max_batch` saturates at `max_batch`.
 pub fn bucket_for(n: usize, max_batch: usize) -> usize {
-    debug_assert!(n > 0 && n <= max_batch);
+    debug_assert!(max_batch > 0);
     let mut b = 1;
     while b < n {
         b *= 2;
@@ -48,6 +52,7 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher under `cfg`'s policy.
     pub fn new(cfg: BatcherCfg) -> Batcher<T> {
         Batcher {
             cfg,
@@ -56,6 +61,7 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Enqueue one item (starts the wait clock when the queue was empty).
     pub fn push(&mut self, item: T) {
         if self.queue.is_empty() {
             self.oldest_at = Some(Instant::now());
@@ -63,10 +69,12 @@ impl<T> Batcher<T> {
         self.queue.push_back(item);
     }
 
+    /// Items waiting.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -123,6 +131,28 @@ mod tests {
         assert_eq!(bucket_for(16, 16), 16);
         // Caps at max_batch even when rounding would exceed it.
         assert_eq!(bucket_for(5, 8), 8);
+    }
+
+    #[test]
+    fn bucket_edge_cases() {
+        // n = 0: an empty step maps to the smallest bucket.
+        assert_eq!(bucket_for(0, 16), 1);
+        assert_eq!(bucket_for(0, 1), 1);
+        // n = max_batch lands exactly on the top bucket, including when
+        // max_batch is not a power of two (the engine's largest compiled
+        // artifact is itself a bucket).
+        assert_eq!(bucket_for(8, 8), 8);
+        assert_eq!(bucket_for(6, 6), 6);
+        assert_eq!(bucket_for(1, 1), 1);
+        // n just over a power-of-two boundary rounds to the next bucket…
+        assert_eq!(bucket_for(2 + 1, 16), 4);
+        assert_eq!(bucket_for(4 + 1, 16), 8);
+        assert_eq!(bucket_for(8 + 1, 16), 16);
+        // …and saturates at max_batch when the next bucket would pass it.
+        assert_eq!(bucket_for(4 + 1, 6), 6);
+        // n > max_batch saturates too (scheduler clamps, bucket_for
+        // stays total).
+        assert_eq!(bucket_for(40, 16), 16);
     }
 
     #[test]

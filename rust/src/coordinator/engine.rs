@@ -244,9 +244,11 @@ impl TpEngine {
         })
     }
 
+    /// The deployment algorithm all layers run.
     pub fn algo(&self) -> Algo {
         self.algo
     }
+    /// Tensor-parallel width (rank-thread count).
     pub fn tp(&self) -> usize {
         self.tp
     }
@@ -254,6 +256,7 @@ impl TpEngine {
     pub fn codec(&self) -> CodecSpec {
         self.codec
     }
+    /// MLP layers deployed on this engine.
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }
@@ -262,6 +265,7 @@ impl TpEngine {
     pub fn comm_stats(&self) -> CommStats {
         self.group.stats()
     }
+    /// Zero the communication counters (between bench iterations).
     pub fn reset_comm_stats(&self) {
         self.group.reset_stats()
     }

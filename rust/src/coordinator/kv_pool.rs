@@ -1,0 +1,267 @@
+//! Shared, capacity-bounded KV-cache pool (slab + token budget).
+//!
+//! Continuous batching admits requests mid-flight, so the resource that
+//! bounds admission is KV-cache storage, not batch shape. The pool
+//! enforces two limits: a fixed number of *sequence slots* and a total
+//! *token budget* (one token = one cached K/V row per layer). A request
+//! reserves its worst case (`prompt_len + max_new` tokens) at admission
+//! and releases the reservation when it retires, so a full pool produces
+//! **backpressure** — queued requests wait for capacity instead of
+//! growing the cache without bound.
+//!
+//! Slot storage is recycled slab-style: a released [`KvCache`] is cleared
+//! but keeps its heap allocations, and the next acquisition reuses it, so
+//! steady-state serving does not reallocate per request.
+//!
+//! Occupancy is observable: [`KvPool::stats`] snapshots in-use/peak
+//! counters that the scheduler publishes into the serving metrics (the
+//! server's `metrics` endpoint exposes them as the `kv` object).
+
+use crate::model::transformer::KvCache;
+use std::sync::Mutex;
+
+/// Pool sizing limits.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolCfg {
+    /// Maximum concurrently-resident sequences (slab slots).
+    pub max_seqs: usize,
+    /// Total KV token budget summed over all resident sequences.
+    pub max_tokens: usize,
+}
+
+impl Default for KvPoolCfg {
+    fn default() -> Self {
+        KvPoolCfg {
+            max_seqs: 64,
+            max_tokens: 16_384,
+        }
+    }
+}
+
+/// Occupancy counters; a snapshot is surfaced in the metrics JSON.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvPoolStats {
+    /// Sequences currently holding a slot.
+    pub seqs_in_use: usize,
+    /// KV tokens currently reserved (worst-case, reserved at admission).
+    pub tokens_reserved: usize,
+    /// High-water mark of `seqs_in_use`.
+    pub peak_seqs: usize,
+    /// High-water mark of `tokens_reserved`.
+    pub peak_tokens: usize,
+    /// Successful acquisitions since pool creation.
+    pub acquires: u64,
+    /// Releases since pool creation.
+    pub releases: u64,
+    /// Failed acquisition *attempts* since pool creation. The scheduler
+    /// retries the queue front every decode step, so one deferred
+    /// request contributes one rejection per step it waits — this
+    /// counts step-waits under backpressure, not deferred requests
+    /// (the `admission` latency histogram measures those).
+    pub rejections: u64,
+    /// Configured slot capacity (copied from [`KvPoolCfg::max_seqs`]).
+    pub max_seqs: usize,
+    /// Configured token capacity (copied from [`KvPoolCfg::max_tokens`]).
+    pub max_tokens: usize,
+}
+
+impl KvPoolStats {
+    /// Fraction of the token budget currently reserved, in `[0, 1]`.
+    pub fn token_occupancy(&self) -> f64 {
+        if self.max_tokens == 0 {
+            0.0
+        } else {
+            self.tokens_reserved as f64 / self.max_tokens as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PoolState {
+    /// Recycled slot storage (cleared caches keeping their allocations).
+    free: Vec<KvCache>,
+    stats: KvPoolStats,
+}
+
+/// The shared KV-cache pool. All methods are thread-safe; the scheduler
+/// thread acquires at admission and releases at retirement.
+#[derive(Debug)]
+pub struct KvPool {
+    cfg: KvPoolCfg,
+    state: Mutex<PoolState>,
+}
+
+impl KvPool {
+    /// Create an empty pool with the given limits (both must be ≥ 1, or
+    /// nothing could ever be admitted and the scheduler would spin).
+    pub fn new(cfg: KvPoolCfg) -> KvPool {
+        assert!(
+            cfg.max_seqs >= 1 && cfg.max_tokens >= 1,
+            "KV pool needs at least one slot and one token of budget"
+        );
+        KvPool {
+            cfg,
+            state: Mutex::new(PoolState {
+                free: Vec::new(),
+                stats: KvPoolStats {
+                    max_seqs: cfg.max_seqs,
+                    max_tokens: cfg.max_tokens,
+                    ..Default::default()
+                },
+            }),
+        }
+    }
+
+    /// The configured limits.
+    pub fn cfg(&self) -> KvPoolCfg {
+        self.cfg
+    }
+
+    /// Whether a reservation of `tokens` would currently fit.
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        let s = &self.state.lock().unwrap().stats;
+        s.seqs_in_use < self.cfg.max_seqs
+            && s.tokens_reserved + tokens <= self.cfg.max_tokens
+    }
+
+    /// Try to reserve one slot plus `tokens` KV tokens. On success returns
+    /// cache storage (recycled when available) shaped for `n_layers`; on
+    /// failure (pool full — backpressure) returns `None` and counts a
+    /// rejection. The caller keeps the request queued and retries later.
+    pub fn try_acquire(&self, tokens: usize, n_layers: usize) -> Option<KvCache> {
+        let mut st = self.state.lock().unwrap();
+        let fits = st.stats.seqs_in_use < self.cfg.max_seqs
+            && st.stats.tokens_reserved + tokens <= self.cfg.max_tokens;
+        if !fits {
+            st.stats.rejections += 1;
+            return None;
+        }
+        st.stats.seqs_in_use += 1;
+        st.stats.tokens_reserved += tokens;
+        st.stats.peak_seqs = st.stats.peak_seqs.max(st.stats.seqs_in_use);
+        st.stats.peak_tokens = st.stats.peak_tokens.max(st.stats.tokens_reserved);
+        st.stats.acquires += 1;
+        let mut kv = st.free.pop().unwrap_or_default();
+        kv.reset(n_layers);
+        Some(kv)
+    }
+
+    /// Return a retired sequence's storage and release its reservation of
+    /// `tokens` (the same amount passed to [`KvPool::try_acquire`]). The
+    /// storage goes back on the free slab for reuse.
+    pub fn release(&self, mut kv: KvCache, tokens: usize) {
+        let n_layers = kv.layers.len();
+        kv.reset(n_layers); // drop contents, keep allocations
+        let mut st = self.state.lock().unwrap();
+        st.stats.seqs_in_use = st.stats.seqs_in_use.saturating_sub(1);
+        st.stats.tokens_reserved = st.stats.tokens_reserved.saturating_sub(tokens);
+        st.stats.releases += 1;
+        if st.free.len() < self.cfg.max_seqs {
+            st.free.push(kv);
+        }
+    }
+
+    /// Snapshot the occupancy counters.
+    pub fn stats(&self) -> KvPoolStats {
+        self.state.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_seqs: usize, max_tokens: usize) -> KvPoolCfg {
+        KvPoolCfg {
+            max_seqs,
+            max_tokens,
+        }
+    }
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let pool = KvPool::new(cfg(2, 100));
+        let a = pool.try_acquire(40, 3).unwrap();
+        assert_eq!(a.layers.len(), 3);
+        let s = pool.stats();
+        assert_eq!(s.seqs_in_use, 1);
+        assert_eq!(s.tokens_reserved, 40);
+        pool.release(a, 40);
+        let s = pool.stats();
+        assert_eq!(s.seqs_in_use, 0);
+        assert_eq!(s.tokens_reserved, 0);
+        assert_eq!(s.acquires, 1);
+        assert_eq!(s.releases, 1);
+    }
+
+    #[test]
+    fn token_budget_backpressure() {
+        let pool = KvPool::new(cfg(8, 100));
+        let a = pool.try_acquire(60, 1).unwrap();
+        assert!(pool.try_acquire(50, 1).is_none(), "would exceed budget");
+        assert_eq!(pool.stats().rejections, 1);
+        let b = pool.try_acquire(40, 1).unwrap(); // exactly fits
+        assert_eq!(pool.stats().tokens_reserved, 100);
+        pool.release(a, 60);
+        pool.release(b, 40);
+    }
+
+    #[test]
+    fn slot_limit_backpressure() {
+        let pool = KvPool::new(cfg(1, 1000));
+        let a = pool.try_acquire(1, 1).unwrap();
+        assert!(!pool.can_admit(1));
+        assert!(pool.try_acquire(1, 1).is_none());
+        pool.release(a, 1);
+        assert!(pool.can_admit(1));
+    }
+
+    #[test]
+    fn storage_is_recycled() {
+        let pool = KvPool::new(cfg(4, 1000));
+        let mut a = pool.try_acquire(10, 2).unwrap();
+        // Simulate use: grow the layer-0 K vec, then release.
+        a.layers[0].0.extend_from_slice(&[1.0; 64]);
+        a.len = 1;
+        let cap_before = a.layers[0].0.capacity();
+        pool.release(a, 10);
+        let b = pool.try_acquire(10, 2).unwrap();
+        // Cleared but with the old allocation retained.
+        assert!(b.layers[0].0.is_empty());
+        assert_eq!(b.len, 0);
+        assert!(b.layers[0].0.capacity() >= cap_before);
+        pool.release(b, 10);
+    }
+
+    #[test]
+    fn peaks_track_high_water() {
+        let pool = KvPool::new(cfg(4, 100));
+        let a = pool.try_acquire(30, 1).unwrap();
+        let b = pool.try_acquire(30, 1).unwrap();
+        pool.release(a, 30);
+        let s = pool.stats();
+        assert_eq!(s.peak_seqs, 2);
+        assert_eq!(s.peak_tokens, 60);
+        assert_eq!(s.tokens_reserved, 30);
+        pool.release(b, 30);
+    }
+
+    #[test]
+    fn reset_reshapes_layer_count() {
+        let pool = KvPool::new(cfg(2, 100));
+        let a = pool.try_acquire(10, 2).unwrap();
+        pool.release(a, 10);
+        let b = pool.try_acquire(10, 5).unwrap();
+        assert_eq!(b.layers.len(), 5);
+        pool.release(b, 10);
+    }
+
+    #[test]
+    fn stats_carry_capacity() {
+        let pool = KvPool::new(cfg(7, 777));
+        let s = pool.stats();
+        assert_eq!(s.max_seqs, 7);
+        assert_eq!(s.max_tokens, 777);
+        assert_eq!(s.token_occupancy(), 0.0);
+    }
+}

@@ -1,8 +1,10 @@
-//! Serving metrics: counters, log-bucketed latency histograms, and the
-//! engine's communication accounting (raw vs wire bytes per collective,
-//! cumulative codec quantization error), exportable as JSON for the
-//! server's `metrics` endpoint and the benches.
+//! Serving metrics: counters, log-bucketed latency histograms, KV-pool
+//! occupancy gauges, and the engine's communication accounting (raw vs
+//! wire bytes per collective, cumulative codec quantization error),
+//! exportable as JSON for the server's `metrics` endpoint and the
+//! benches.
 
+use crate::coordinator::kv_pool::KvPoolStats;
 use crate::tp::collectives::CommStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +32,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one sample, in microseconds.
     pub fn observe_us(&self, us: u64) {
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
         self.buckets.lock().unwrap()[idx] += 1;
@@ -38,14 +41,17 @@ impl Histogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Record one sample, in milliseconds.
     pub fn observe_ms(&self, ms: f64) {
         self.observe_us((ms * 1000.0) as u64);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean of all samples, microseconds.
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -73,6 +79,7 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
+    /// JSON view: count, mean, p50/p95/p99 and max in microseconds.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", (self.count() as usize).into()),
@@ -127,30 +134,64 @@ pub fn comm_stats_json(s: &CommStats) -> Json {
     ])
 }
 
+/// JSON view of a KV-pool occupancy snapshot (the `kv` object of the
+/// metrics endpoint).
+pub fn kv_stats_json(s: &KvPoolStats) -> Json {
+    Json::obj(vec![
+        ("seqs_in_use", s.seqs_in_use.into()),
+        ("tokens_reserved", s.tokens_reserved.into()),
+        ("max_seqs", s.max_seqs.into()),
+        ("max_tokens", s.max_tokens.into()),
+        ("token_occupancy", s.token_occupancy().into()),
+        ("peak_seqs", s.peak_seqs.into()),
+        ("peak_tokens", s.peak_tokens.into()),
+        ("acquires", (s.acquires as usize).into()),
+        ("releases", (s.releases as usize).into()),
+        ("rejections", (s.rejections as usize).into()),
+    ])
+}
+
 /// All serving metrics, shared across threads.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted by the server/scheduler.
     pub requests_received: AtomicU64,
+    /// Requests fully generated (responses produced).
     pub requests_completed: AtomicU64,
+    /// Decode tokens produced across all requests.
     pub tokens_generated: AtomicU64,
+    /// Decode steps executed.
     pub engine_steps: AtomicU64,
+    /// Sum of live sequences over all steps (per-step batch occupancy).
     pub batch_occupancy_sum: AtomicU64,
+    /// Sum of executed artifact-bucket sizes over all steps; together
+    /// with [`Metrics::batch_occupancy_sum`] this exposes bucket padding
+    /// (`occupancy / bucket` = useful fraction of each step).
+    pub batch_bucket_sum: AtomicU64,
     /// Time-to-first-token.
     pub ttft: Histogram,
     /// End-to-end request latency.
     pub e2e: Histogram,
     /// Per-decode-step engine latency.
     pub step: Histogram,
+    /// Queue wait: request arrival → admission into the decode batch
+    /// (grows under KV-pool backpressure).
+    pub admission: Histogram,
     /// Engine communication accounting (last snapshot pushed by the
     /// scheduler via [`Metrics::set_comm`]; all-zero without an engine).
     pub comm: Mutex<CommStats>,
+    /// KV-pool occupancy (last snapshot pushed by the continuous
+    /// scheduler via [`Metrics::set_kv`]; all-zero without a pool).
+    pub kv: Mutex<KvPoolStats>,
 }
 
 impl Metrics {
+    /// Relaxed increment of a counter.
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Relaxed add to a counter.
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
@@ -158,6 +199,12 @@ impl Metrics {
     /// Replace the communication snapshot (scheduler, once per step).
     pub fn set_comm(&self, stats: CommStats) {
         *self.comm.lock().unwrap() = stats;
+    }
+
+    /// Replace the KV-pool occupancy snapshot (continuous scheduler,
+    /// once per tick).
+    pub fn set_kv(&self, stats: KvPoolStats) {
+        *self.kv.lock().unwrap() = stats;
     }
 
     /// Mean decode batch occupancy (tokens per step).
@@ -170,6 +217,18 @@ impl Metrics {
         }
     }
 
+    /// Mean useful fraction of each executed bucket
+    /// (`occupancy / bucket` ∈ (0, 1]; 1.0 = no padding waste).
+    pub fn mean_bucket_util(&self) -> f64 {
+        let buckets = self.batch_bucket_sum.load(Ordering::Relaxed);
+        if buckets == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / buckets as f64
+        }
+    }
+
+    /// Everything as one JSON object (the `metrics` endpoint payload).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -189,10 +248,13 @@ impl Metrics {
                 (self.engine_steps.load(Ordering::Relaxed) as usize).into(),
             ),
             ("mean_batch_occupancy", self.mean_occupancy().into()),
+            ("mean_bucket_util", self.mean_bucket_util().into()),
             ("ttft", self.ttft.to_json()),
             ("e2e", self.e2e.to_json()),
             ("step", self.step.to_json()),
+            ("admission", self.admission.to_json()),
             ("comm", comm_stats_json(&self.comm.lock().unwrap())),
+            ("kv", kv_stats_json(&self.kv.lock().unwrap())),
         ])
     }
 }
@@ -271,5 +333,42 @@ mod tests {
         Metrics::add(&m.engine_steps, 2);
         Metrics::add(&m.batch_occupancy_sum, 12);
         assert_eq!(m.mean_occupancy(), 6.0);
+    }
+
+    #[test]
+    fn bucket_util_mean() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_bucket_util(), 0.0);
+        // Two steps: 3 live in bucket 4, 8 live in bucket 8.
+        Metrics::add(&m.engine_steps, 2);
+        Metrics::add(&m.batch_occupancy_sum, 11);
+        Metrics::add(&m.batch_bucket_sum, 12);
+        assert!((m.mean_bucket_util() - 11.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_snapshot_surfaces_occupancy_gauges() {
+        let m = Metrics::default();
+        m.set_kv(KvPoolStats {
+            seqs_in_use: 3,
+            tokens_reserved: 70,
+            peak_seqs: 4,
+            peak_tokens: 90,
+            acquires: 9,
+            releases: 6,
+            rejections: 2,
+            max_seqs: 8,
+            max_tokens: 100,
+        });
+        m.admission.observe_us(250);
+        let j = m.to_json();
+        let kv = j.get("kv");
+        assert_eq!(kv.get("seqs_in_use").as_usize(), Some(3));
+        assert_eq!(kv.get("tokens_reserved").as_usize(), Some(70));
+        assert_eq!(kv.get("max_tokens").as_usize(), Some(100));
+        assert_eq!(kv.get("peak_tokens").as_usize(), Some(90));
+        assert_eq!(kv.get("rejections").as_usize(), Some(2));
+        assert!((kv.get("token_occupancy").as_f64().unwrap() - 0.7).abs() < 1e-12);
+        assert_eq!(j.get("admission").get("count").as_usize(), Some(1));
     }
 }

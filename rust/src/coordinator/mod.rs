@@ -9,12 +9,16 @@
 //! * [`engine`] — the TP execution engine: persistent rank threads, each
 //!   owning a PJRT executor (or the host fallback), collectives between
 //!   them; plus the serving engine that drives the tiny transformer.
-//! * [`scheduler`] — continuous-batching decode scheduler.
+//! * [`kv_pool`] — shared, capacity-bounded KV-cache pool (slab storage,
+//!   token-budget reservations, backpressure instead of OOM).
+//! * [`scheduler`] — per-step decode core plus the continuous-batching
+//!   admission loop (`--scheduler continuous|static`).
 //! * [`server`] — TCP line-JSON serving front end + client.
 //! * [`metrics`] — counters/histograms surfaced by the server and benches.
 
 pub mod batcher;
 pub mod engine;
+pub mod kv_pool;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -22,4 +26,6 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{EngineBackend, TpEngine};
+pub use kv_pool::{KvPool, KvPoolCfg};
 pub use request::{Request, Response};
+pub use scheduler::{ContinuousScheduler, Scheduler};

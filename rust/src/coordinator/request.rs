@@ -5,6 +5,7 @@ use std::time::Instant;
 /// A generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-assigned request id (echoed in the [`Response`]).
     pub id: u64,
     /// Prompt token ids (byte-level tokenizer upstream).
     pub prompt: Vec<u32>,
@@ -15,6 +16,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Build a request arriving now.
     pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
         Request {
             id,
@@ -23,12 +25,22 @@ impl Request {
             arrival: Instant::now(),
         }
     }
+
+    /// Worst-case KV tokens this request can occupy: one cache row per
+    /// prompt token plus one per generated token. This is the amount the
+    /// continuous scheduler reserves from the
+    /// [`crate::coordinator::kv_pool::KvPool`] at admission.
+    pub fn kv_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
 }
 
 /// A finished generation.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The originating request's id.
     pub id: u64,
+    /// Generated token ids (`max_new` of them, greedy decode).
     pub tokens: Vec<u32>,
     /// Time to first generated token, milliseconds.
     pub ttft_ms: f64,
@@ -39,6 +51,7 @@ pub struct Response {
 /// Per-sequence decode state owned by the scheduler.
 #[derive(Debug)]
 pub struct SeqState {
+    /// The originating request.
     pub req: Request,
     /// Tokens generated so far.
     pub generated: Vec<u32>,
@@ -47,12 +60,22 @@ pub struct SeqState {
     /// Prompt tokens not yet consumed (fed one per step — simple
     /// incremental prefill; the decode path is what the paper measures).
     pub pending_prompt: Vec<u32>,
+    /// When the first generated token was produced (TTFT).
     pub first_token_at: Option<Instant>,
+    /// This sequence's KV cache (pool-slot storage in the serving path).
     pub kv: crate::model::transformer::KvCache,
 }
 
 impl SeqState {
+    /// Start a sequence with freshly-allocated cache storage.
     pub fn new(req: Request, n_layers: usize) -> SeqState {
+        Self::with_cache(req, crate::model::transformer::KvCache::new(n_layers))
+    }
+
+    /// Start a sequence backed by pre-acquired cache storage — the
+    /// continuous scheduler passes a recycled
+    /// [`crate::coordinator::kv_pool::KvPool`] slot here.
+    pub fn with_cache(req: Request, kv: crate::model::transformer::KvCache) -> SeqState {
         let mut pending: Vec<u32> = req.prompt.clone();
         pending.reverse(); // pop() from the back = consume front
         let first = pending.pop().unwrap_or(0);
@@ -62,7 +85,7 @@ impl SeqState {
             next_token: first,
             pending_prompt: pending,
             first_token_at: None,
-            kv: crate::model::transformer::KvCache::new(n_layers),
+            kv,
         }
     }
 
@@ -100,5 +123,22 @@ mod tests {
         let s = SeqState::new(Request::new(2, vec![], 1), 1);
         assert_eq!(s.next_token, 0);
         assert!(!s.prefilling());
+    }
+
+    #[test]
+    fn kv_tokens_is_worst_case_footprint() {
+        let r = Request::new(3, vec![1, 2, 3], 5);
+        assert_eq!(r.kv_tokens(), 8);
+        assert_eq!(Request::new(4, vec![], 2).kv_tokens(), 2);
+    }
+
+    #[test]
+    fn with_cache_adopts_storage() {
+        let mut kv = crate::model::transformer::KvCache::new(3);
+        kv.layers[0].0.reserve(128);
+        let cap = kv.layers[0].0.capacity();
+        let s = SeqState::with_cache(Request::new(5, vec![7], 1), kv);
+        assert_eq!(s.kv.layers.len(), 3);
+        assert!(s.kv.layers[0].0.capacity() >= cap);
     }
 }

@@ -26,6 +26,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over `replicas` engines using `policy`.
     pub fn new(policy: Policy, replicas: usize) -> Router {
         assert!(replicas > 0);
         Router {
@@ -35,6 +36,7 @@ impl Router {
         }
     }
 
+    /// Number of replicas routed across.
     pub fn replicas(&self) -> usize {
         self.outstanding.len()
     }

@@ -1,31 +1,61 @@
-//! Continuous-batching decode scheduler.
+//! Decode schedulers: the per-step core and the continuous-batching
+//! admission loop around it.
 //!
-//! Maintains the active sequence set, admits new requests from the
-//! batcher, groups active sequences into artifact-bucket-sized decode
-//! batches each step, and retires finished sequences. Prefill is
-//! incremental (one prompt token per step through the same batched path),
-//! which keeps the engine on the fixed-M decode artifacts — the regime the
-//! paper's tables measure.
+//! [`Scheduler`] owns one model replica and knows how to advance a set of
+//! live sequences by one token ([`Scheduler::step`]) and retire the
+//! finished ones ([`Scheduler::retire`]). Prefill is incremental (one
+//! prompt token per step through the same batched path), which keeps the
+//! engine on the fixed-M decode artifacts — the regime the paper's
+//! tables measure.
+//!
+//! [`ContinuousScheduler`] wraps it with a request queue, a shared
+//! [`KvPool`], and a [`SchedMode`]:
+//!
+//! * **continuous** — new requests are admitted into the running batch at
+//!   every decode step and finished sequences retire in place, keeping
+//!   per-step occupancy high (decode-phase collectives amortize best when
+//!   the batch stays full);
+//! * **static** — a batch is admitted only when the previous one has
+//!   fully drained (the classic fixed-batch serving baseline the bench
+//!   compares against).
+//!
+//! Admission is **token-budget bound**: a request reserves its worst-case
+//! KV footprint ([`Request::kv_tokens`]) from the pool and is admitted
+//! only when the reservation fits — a full pool queues requests instead
+//! of growing the cache (backpressure, not OOM). It is **bucket-aware**
+//! in the fill-the-paid-bucket sense: a step over `n` live sequences
+//! executes in the compiled artifact bucket [`bucket_for`]`(n)`, so the
+//! admission loop fills up to `max_batch` (the top bucket) — added work
+//! rides in bucket capacity the step already pays for, and the
+//! bucket-utilization metric exposes any padding slack.
 
 use crate::coordinator::batcher::bucket_for;
+use crate::coordinator::kv_pool::KvPool;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response, SeqState};
 use crate::coordinator::TpEngine;
 use crate::model::transformer::{argmax, Transformer};
+use crate::simkernel::pipeline::SchedMode;
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
 /// Scheduler over one model replica.
 pub struct Scheduler {
+    /// The replica all sequences decode through.
     pub model: Arc<Transformer>,
     /// TP rank pool; `None` = in-thread sequential execution.
     pub engine: Option<TpEngine>,
+    /// Shared serving metrics sink.
     pub metrics: Arc<Metrics>,
     /// Largest decode batch per step (≤ largest compiled bucket).
     pub max_batch: usize,
 }
 
 impl Scheduler {
+    /// Build a scheduler over `model`, optionally routing MLPs through
+    /// `engine`, recording into `metrics`, stepping at most `max_batch`
+    /// sequences at a time.
     pub fn new(
         model: Arc<Transformer>,
         engine: Option<TpEngine>,
@@ -72,6 +102,10 @@ impl Scheduler {
         self.metrics.step.observe_us(step_us);
         Metrics::inc(&self.metrics.engine_steps);
         Metrics::add(&self.metrics.batch_occupancy_sum, n as u64);
+        Metrics::add(
+            &self.metrics.batch_bucket_sum,
+            bucket_for(n, self.max_batch) as u64,
+        );
         if let Some(engine) = &self.engine {
             // Publish the engine's communication accounting (raw vs wire
             // bytes, codec error) for the metrics endpoint.
@@ -98,7 +132,23 @@ impl Scheduler {
     }
 
     /// Retire finished sequences, producing responses.
+    ///
+    /// Responses come out in *admission order* (the order sequences sit
+    /// in `active`), not completion or id order — FIFO admission makes
+    /// this deterministic and the tests assert it.
     pub fn retire(&self, active: &mut Vec<SeqState>) -> Vec<Response> {
+        self.retire_with(active, &mut |_| {})
+    }
+
+    /// As [`Scheduler::retire`], invoking `reclaim` on every finished
+    /// sequence *before* it is dropped — the continuous scheduler uses
+    /// this to return KV storage (and its token reservation) to the
+    /// [`KvPool`].
+    pub fn retire_with(
+        &self,
+        active: &mut Vec<SeqState>,
+        reclaim: &mut dyn FnMut(&mut SeqState),
+    ) -> Vec<Response> {
         let mut done = Vec::new();
         active.retain_mut(|s| {
             if s.done() {
@@ -111,6 +161,7 @@ impl Scheduler {
                     .unwrap_or(total_ms);
                 self.metrics.e2e.observe_ms(total_ms);
                 Metrics::inc(&self.metrics.requests_completed);
+                reclaim(s);
                 done.push(Response {
                     id: s.req.id,
                     tokens: std::mem::take(&mut s.generated),
@@ -125,9 +176,9 @@ impl Scheduler {
         done
     }
 
-    /// Offline batch mode: run a closed set of requests to completion.
-    /// (The server wraps the same `step`/`retire` loop around a live
-    /// request queue.)
+    /// Offline batch mode: run a closed set of requests to completion
+    /// with unpooled caches. (The serving path wraps the same
+    /// `step`/`retire` loop in a [`ContinuousScheduler`].)
     pub fn run_all(&self, reqs: Vec<Request>) -> Vec<Response> {
         let n_layers = self.model.cfg.n_layers;
         for _ in &reqs {
@@ -152,12 +203,154 @@ impl Scheduler {
     }
 }
 
+/// Continuous-batching admission loop: a request queue and a live batch
+/// over a core [`Scheduler`], with KV storage drawn from a shared
+/// [`KvPool`]. See the module docs for the admission policy.
+pub struct ContinuousScheduler {
+    /// The per-step core (model, engine, metrics, `max_batch`).
+    pub core: Scheduler,
+    /// Shared KV capacity; admission blocks on it (backpressure).
+    pub pool: Arc<KvPool>,
+    mode: SchedMode,
+    queue: VecDeque<Request>,
+    active: Vec<SeqState>,
+}
+
+impl ContinuousScheduler {
+    /// Wrap `core` with a request queue drawing KV storage from `pool`,
+    /// admitting per `mode`.
+    pub fn new(core: Scheduler, pool: Arc<KvPool>, mode: SchedMode) -> ContinuousScheduler {
+        ContinuousScheduler {
+            core,
+            pool,
+            mode,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+        }
+    }
+
+    /// The admission mode this scheduler runs under.
+    pub fn mode(&self) -> SchedMode {
+        self.mode
+    }
+
+    /// Queued (not yet admitted) requests.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sequences currently decoding.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True when there is nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Enqueue a request. Returns `Some(response)` only for requests the
+    /// pool can *never* hold (prompt alone exceeds the token budget):
+    /// those complete immediately with no tokens rather than deadlocking
+    /// the queue. Oversized-but-servable requests get `max_new` clamped
+    /// to what the budget can cover.
+    pub fn submit(&mut self, mut req: Request) -> Option<Response> {
+        Metrics::inc(&self.core.metrics.requests_received);
+        let budget = self.pool.cfg().max_tokens;
+        if req.prompt.len() + 1 > budget {
+            Metrics::inc(&self.core.metrics.requests_completed);
+            let total_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
+            return Some(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                ttft_ms: total_ms,
+                total_ms,
+            });
+        }
+        if req.kv_tokens() > budget {
+            req.max_new = budget - req.prompt.len();
+        }
+        self.queue.push_back(req);
+        None
+    }
+
+    /// Admit queued requests into the live batch, FIFO, until the batch
+    /// is full, the queue is empty, or the pool pushes back. Static mode
+    /// only admits into an empty batch.
+    fn admit(&mut self) {
+        if self.mode == SchedMode::Static && !self.active.is_empty() {
+            return;
+        }
+        let n_layers = self.core.model.cfg.n_layers;
+        while self.active.len() < self.core.max_batch {
+            let Some(front) = self.queue.front() else {
+                break;
+            };
+            let tokens = front.kv_tokens();
+            let Some(kv) = self.pool.try_acquire(tokens, n_layers) else {
+                break; // backpressure: front stays queued, FIFO preserved
+            };
+            let req = self.queue.pop_front().expect("front checked above");
+            self.core
+                .metrics
+                .admission
+                .observe_us(req.arrival.elapsed().as_micros() as u64);
+            self.active.push(SeqState::with_cache(req, kv));
+        }
+    }
+
+    /// One serving iteration: admit, decode one step, publish KV
+    /// occupancy, retire. Returns the requests that finished this tick
+    /// (admission order).
+    pub fn tick(&mut self) -> Vec<Response> {
+        self.admit();
+        self.core.metrics.set_kv(self.pool.stats());
+        if self.active.is_empty() {
+            return Vec::new();
+        }
+        self.core.step(&mut self.active);
+        let pool = &self.pool;
+        let done = self.core.retire_with(&mut self.active, &mut |s| {
+            let kv = std::mem::take(&mut s.kv);
+            pool.release(kv, s.req.kv_tokens());
+        });
+        if !done.is_empty() {
+            self.core.metrics.set_kv(self.pool.stats());
+        }
+        done
+    }
+
+    /// Offline mode: run a closed set of requests to completion under
+    /// this scheduler's admission policy, returning responses sorted by
+    /// request id.
+    pub fn run_all(&mut self, reqs: Vec<Request>) -> Vec<Response> {
+        let mut out = Vec::new();
+        for r in reqs {
+            if let Some(rejected) = self.submit(r) {
+                out.push(rejected);
+            }
+        }
+        while !self.is_idle() {
+            out.extend(self.tick());
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Tear down, returning the engine (if any) for shutdown.
+    pub fn into_engine(self) -> Option<TpEngine> {
+        self.core.engine
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::kv_pool::KvPoolCfg;
     use crate::model::config::ModelConfig;
     use crate::simkernel::pipeline::Algo;
     use crate::tp::topology::Topology;
+    use std::sync::atomic::Ordering;
 
     fn tiny_model() -> Arc<Transformer> {
         let cfg = ModelConfig {
@@ -179,6 +372,13 @@ mod tests {
         ))
     }
 
+    fn pool(max_seqs: usize, max_tokens: usize) -> Arc<KvPool> {
+        Arc::new(KvPool::new(KvPoolCfg {
+            max_seqs,
+            max_tokens,
+        }))
+    }
+
     #[test]
     fn run_all_completes_every_request() {
         let model = tiny_model();
@@ -193,20 +393,12 @@ mod tests {
             assert_eq!(r.tokens.len(), 4);
             assert!(r.total_ms >= r.ttft_ms);
         }
-        assert_eq!(
-            metrics
-                .requests_completed
-                .load(std::sync::atomic::Ordering::Relaxed),
-            5
-        );
-        assert_eq!(
-            metrics
-                .tokens_generated
-                .load(std::sync::atomic::Ordering::Relaxed),
-            20
-        );
-        // Occupancy ≤ max_batch.
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 20);
+        // Occupancy ≤ max_batch, and executed buckets cover occupancy.
         assert!(metrics.mean_occupancy() <= 4.0);
+        assert!(metrics.mean_bucket_util() <= 1.0);
+        assert!(metrics.mean_bucket_util() > 0.0);
     }
 
     /// Batched continuous decoding must produce exactly the same tokens as
@@ -266,5 +458,164 @@ mod tests {
         assert_eq!(s.next_bucket(0), 1);
         assert_eq!(s.next_bucket(3), 4);
         assert_eq!(s.next_bucket(100), 16);
+    }
+
+    /// Retirement order is admission order: when several sequences finish
+    /// on the same step, their responses come out in the order they were
+    /// admitted, and earlier-finishing sequences precede later ones.
+    #[test]
+    fn retire_preserves_admission_order() {
+        let model = tiny_model();
+        let s = Scheduler::new(model, None, Arc::new(Metrics::default()), 4);
+        // One-token prompts; lifetimes equal max_new.
+        let lens = [5usize, 2, 2, 5];
+        let mut active: Vec<SeqState> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| SeqState::new(Request::new(i as u64, vec![1], g), 2))
+            .collect();
+        let mut completion: Vec<u64> = Vec::new();
+        while !active.is_empty() {
+            s.step(&mut active);
+            completion.extend(s.retire(&mut active).iter().map(|r| r.id));
+        }
+        // ids 1 and 2 finish together on step 2 (admission order), then
+        // ids 0 and 3 on step 5.
+        assert_eq!(completion, vec![1, 2, 0, 3]);
+    }
+
+    fn mixed_requests(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let max_new = if i % 2 == 0 { 2 } else { 20 };
+                Request::new(i as u64, vec![(i % 8) as u32 + 1, 3, 7], max_new)
+            })
+            .collect()
+    }
+
+    /// The acceptance-bar invariant: under the mixed-length workload the
+    /// bench uses, continuous admission never reserves more than the
+    /// pool's configured capacity — at any tick, not just at the end.
+    #[test]
+    fn continuous_admission_never_exceeds_kv_capacity() {
+        let model = tiny_model();
+        // Tight pool: one long request reserves 23 tokens, so only a few
+        // fit at once and admission must wait on retirements.
+        let (max_seqs, max_tokens) = (3usize, 60usize);
+        let p = pool(max_seqs, max_tokens);
+        let core = Scheduler::new(model, None, Arc::new(Metrics::default()), 4);
+        let mut cs = ContinuousScheduler::new(core, p.clone(), SchedMode::Continuous);
+        for r in mixed_requests(12) {
+            assert!(cs.submit(r).is_none());
+        }
+        let mut done = 0;
+        while !cs.is_idle() {
+            done += cs.tick().len();
+            let s = p.stats();
+            assert!(
+                s.tokens_reserved <= max_tokens,
+                "reserved {} > budget {max_tokens}",
+                s.tokens_reserved
+            );
+            assert!(s.seqs_in_use <= max_seqs);
+            assert!(cs.active_len() <= max_seqs);
+        }
+        assert_eq!(done, 12);
+        let s = p.stats();
+        assert!(s.peak_tokens <= max_tokens);
+        assert!(s.peak_seqs <= max_seqs);
+        assert!(s.rejections > 0, "tight pool must have pushed back");
+        assert_eq!(s.seqs_in_use, 0);
+        assert_eq!(s.tokens_reserved, 0);
+    }
+
+    /// Continuous and static modes generate identical token streams —
+    /// the scheduling policy changes throughput, never results.
+    #[test]
+    fn modes_agree_on_generated_tokens() {
+        let model = tiny_model();
+        let run = |mode| {
+            let core = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
+            let mut cs = ContinuousScheduler::new(core, pool(64, 4096), mode);
+            cs.run_all(mixed_requests(8))
+        };
+        let st = run(SchedMode::Static);
+        let ct = run(SchedMode::Continuous);
+        assert_eq!(st.len(), ct.len());
+        for (a, b) in st.iter().zip(&ct) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {} diverged across modes", a.id);
+        }
+    }
+
+    /// The structural form of the ≥1.2× acceptance bar: on the mixed
+    /// workload, continuous batching needs ≥1.2× fewer decode steps than
+    /// static for the same tokens (step counts are deterministic, unlike
+    /// wall time; `serving_bench` reports the wall-clock version).
+    #[test]
+    fn continuous_saves_steps_on_mixed_lengths() {
+        let model = tiny_model();
+        let run = |mode| {
+            let metrics = Arc::new(Metrics::default());
+            let core = Scheduler::new(model.clone(), None, metrics.clone(), 4);
+            let mut cs = ContinuousScheduler::new(core, pool(64, 4096), mode);
+            let n = cs.run_all(mixed_requests(12)).len();
+            assert_eq!(n, 12);
+            (
+                metrics.engine_steps.load(Ordering::Relaxed),
+                metrics.tokens_generated.load(Ordering::Relaxed),
+            )
+        };
+        let (static_steps, static_tokens) = run(SchedMode::Static);
+        let (cont_steps, cont_tokens) = run(SchedMode::Continuous);
+        assert_eq!(static_tokens, cont_tokens);
+        assert!(
+            static_steps as f64 >= 1.2 * cont_steps as f64,
+            "static {static_steps} vs continuous {cont_steps} steps"
+        );
+    }
+
+    #[test]
+    fn oversized_requests_are_clamped_or_rejected() {
+        let model = tiny_model();
+        let core = Scheduler::new(model, None, Arc::new(Metrics::default()), 4);
+        let mut cs = ContinuousScheduler::new(core, pool(4, 10), SchedMode::Continuous);
+        // Prompt alone exceeds the budget: immediate empty response.
+        let rejected = cs.submit(Request::new(0, (0..12).collect(), 4));
+        let r = rejected.expect("impossible request must resolve immediately");
+        assert!(r.tokens.is_empty());
+        // Servable but over budget: max_new clamped to fit (3 + 7 = 10).
+        assert!(cs.submit(Request::new(1, vec![1, 2, 3], 50)).is_none());
+        let out = {
+            let mut o = Vec::new();
+            while !cs.is_idle() {
+                o.extend(cs.tick());
+            }
+            o
+        };
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 7);
+    }
+
+    #[test]
+    fn static_mode_drains_batches_fully() {
+        let model = tiny_model();
+        let core = Scheduler::new(model, None, Arc::new(Metrics::default()), 2);
+        let mut cs = ContinuousScheduler::new(core, pool(8, 1024), SchedMode::Static);
+        for r in mixed_requests(4) {
+            cs.submit(r);
+        }
+        // First tick admits exactly max_batch; no further admission until
+        // both retire.
+        let mut saw_partial_refill = false;
+        while !cs.is_idle() {
+            cs.tick();
+            if cs.active_len() == 1 && cs.queue_len() > 0 {
+                saw_partial_refill = true;
+            }
+        }
+        // A drained short sequence leaves the long one running alone —
+        // exactly the slot idleness continuous mode eliminates.
+        assert!(saw_partial_refill, "static mode should strand slots");
     }
 }

@@ -1,6 +1,7 @@
 //! TCP serving front end: newline-delimited JSON over a socket, a
-//! scheduler thread running the continuous-batching loop, and a matching
-//! client used by the examples and the serving bench.
+//! scheduler thread running the decode loop (continuous or static
+//! batching over a shared KV pool), and a matching client used by the
+//! examples and the serving bench.
 //!
 //! Protocol (one JSON object per line):
 //!   → `{"id": 1, "prompt": [3, 7, 9], "max_new": 8}`
@@ -8,9 +9,11 @@
 //!   → `{"cmd": "metrics"}`            ← the metrics JSON
 //!   → `{"cmd": "shutdown"}`           ← `{"ok": true}` and server exit
 
+use crate::coordinator::kv_pool::{KvPool, KvPoolCfg};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response, SeqState};
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::scheduler::{ContinuousScheduler, Scheduler};
+use crate::simkernel::pipeline::SchedMode;
 use crate::util::error::{Context as _, Result};
 use crate::util::json::{self, Json};
 use crate::{bail, err};
@@ -28,6 +31,7 @@ struct Submission {
 
 /// The serving server: owns the scheduler thread and the TCP acceptor.
 pub struct Server {
+    /// The bound listen address (resolved port when started with `:0`).
     pub addr: String,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
@@ -46,10 +50,30 @@ fn response_json(r: &Response) -> Json {
     ])
 }
 
+/// Send `resp` to its request's reply channel, if still registered.
+fn route_reply(replies: &mut Vec<(u64, mpsc::Sender<Response>)>, resp: Response) {
+    if let Some(pos) = replies.iter().position(|(id, _)| *id == resp.id) {
+        let (_, tx) = replies.swap_remove(pos);
+        let _ = tx.send(resp);
+    }
+}
+
 impl Server {
-    /// Start serving on `addr` (use port 0 for an OS-assigned port; the
-    /// bound address is in `server.addr`).
+    /// Start serving on `addr` with the default KV pool and continuous
+    /// batching (use port 0 for an OS-assigned port; the bound address
+    /// is in `server.addr`).
     pub fn start(addr: &str, scheduler: Scheduler) -> Result<Server> {
+        Server::start_with(addr, scheduler, KvPoolCfg::default(), SchedMode::Continuous)
+    }
+
+    /// As [`Server::start`], choosing the KV pool limits and the
+    /// scheduling mode (the CLI's `--scheduler continuous|static`).
+    pub fn start_with(
+        addr: &str,
+        scheduler: Scheduler,
+        pool_cfg: KvPoolCfg,
+        mode: SchedMode,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let bound = listener.local_addr()?.to_string();
@@ -57,52 +81,50 @@ impl Server {
         let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
         let metrics = scheduler.metrics.clone();
 
-        // Scheduler thread: continuous batching over live submissions.
+        // Scheduler thread: the admission/step/retire loop over live
+        // submissions, with KV capacity as the admission bound.
         let sched_shutdown = shutdown.clone();
         let sched_handle = std::thread::Builder::new()
             .name("scheduler".into())
             .spawn(move || {
-                let n_layers = scheduler.model.cfg.n_layers;
-                let mut active: Vec<SeqState> = Vec::new();
+                let pool = Arc::new(KvPool::new(pool_cfg));
+                let mut sched = ContinuousScheduler::new(scheduler, pool, mode);
                 let mut replies: Vec<(u64, mpsc::Sender<Response>)> = Vec::new();
                 loop {
-                    // Admit new work (never beyond 4× max_batch in flight).
-                    while active.len() < scheduler.max_batch * 4 {
+                    // Enqueue new work; admission happens inside tick(),
+                    // bounded by the KV pool (backpressure, not OOM).
+                    loop {
                         match sub_rx.try_recv() {
                             Ok(sub) => {
-                                Metrics::inc(&scheduler.metrics.requests_received);
                                 replies.push((sub.req.id, sub.reply));
-                                active.push(SeqState::new(sub.req, n_layers));
+                                if let Some(resp) = sched.submit(sub.req) {
+                                    route_reply(&mut replies, resp);
+                                }
                             }
                             Err(mpsc::TryRecvError::Empty) => break,
                             Err(mpsc::TryRecvError::Disconnected) => break,
                         }
                     }
-                    if active.is_empty() {
+                    if sched.is_idle() {
                         if sched_shutdown.load(Ordering::Relaxed) {
                             break;
                         }
                         // Idle: block briefly for the next submission.
                         match sub_rx.recv_timeout(Duration::from_millis(10)) {
                             Ok(sub) => {
-                                Metrics::inc(&scheduler.metrics.requests_received);
                                 replies.push((sub.req.id, sub.reply));
-                                active.push(SeqState::new(sub.req, n_layers));
+                                if let Some(resp) = sched.submit(sub.req) {
+                                    route_reply(&mut replies, resp);
+                                }
                             }
                             Err(_) => continue,
                         }
                     }
-                    scheduler.step(&mut active);
-                    for resp in scheduler.retire(&mut active) {
-                        if let Some(pos) =
-                            replies.iter().position(|(id, _)| *id == resp.id)
-                        {
-                            let (_, tx) = replies.swap_remove(pos);
-                            let _ = tx.send(resp);
-                        }
+                    for resp in sched.tick() {
+                        route_reply(&mut replies, resp);
                     }
                 }
-                if let Some(engine) = scheduler.engine {
+                if let Some(engine) = sched.into_engine() {
                     engine.shutdown();
                 }
             })
@@ -238,6 +260,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running server.
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to server")?;
         Ok(Client {
@@ -371,6 +394,46 @@ mod tests {
         assert_eq!(m.get("requests_completed").as_usize(), Some(4));
         c.shutdown().unwrap();
         server.stop();
+    }
+
+    /// The server works in both scheduling modes and under a tight KV
+    /// pool: responses still match direct generation, and the metrics
+    /// endpoint surfaces the kv/admission fields.
+    #[test]
+    fn modes_and_kv_pool_serve_correctly() {
+        for mode in [SchedMode::Static, SchedMode::Continuous] {
+            let pool_cfg = KvPoolCfg {
+                max_seqs: 2,
+                max_tokens: 64,
+            };
+            let server =
+                Server::start_with("127.0.0.1:0", tiny_scheduler(), pool_cfg, mode).unwrap();
+            let addr = server.addr.clone();
+            let handles: Vec<_> = (0..4)
+                .map(|i| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        let mut c = Client::connect(&addr).unwrap();
+                        c.generate(&[i as u32 + 1, 2], 4).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let r = h.join().unwrap();
+                assert_eq!(r.tokens.len(), 4, "mode {mode:?}");
+            }
+            let mut c = Client::connect(&addr).unwrap();
+            let m = c.metrics().unwrap();
+            assert_eq!(m.get("requests_completed").as_usize(), Some(4));
+            let kv = m.get("kv");
+            assert_eq!(kv.get("max_tokens").as_usize(), Some(64));
+            assert!(kv.get("peak_tokens").as_usize().unwrap() <= 64);
+            assert!(kv.get("peak_seqs").as_usize().unwrap() <= 2);
+            assert_eq!(kv.get("seqs_in_use").as_usize(), Some(0));
+            assert_eq!(m.get("admission").get("count").as_usize(), Some(4));
+            c.shutdown().unwrap();
+            server.stop();
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::sync::Arc;
 use tpaware::bail;
 use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::kv_pool::KvPoolCfg;
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
 use tpaware::coordinator::server::{Client, Server};
@@ -23,7 +24,7 @@ use tpaware::runtime::artifact::Manifest;
 use tpaware::simkernel::gemm_model::WeightDtype;
 use tpaware::simkernel::gpu::GpuSpec;
 use tpaware::simkernel::paper_data;
-use tpaware::simkernel::pipeline::{self, Algo, MlpShape};
+use tpaware::simkernel::pipeline::{self, Algo, MlpShape, SchedMode};
 use tpaware::tensor::Matrix;
 use tpaware::tp::codec::CodecSpec;
 use tpaware::tp::collectives::CollectiveGroup;
@@ -111,6 +112,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("algo", "tp-aware", "deployment algorithm: naive | tp-aware")
         .flag("backend", "pjrt", "mlp backend: pjrt | host")
         .flag("max-batch", "8", "largest decode batch")
+        .flag("scheduler", "continuous", "batching mode: continuous | static")
+        .flag("kv-seqs", "64", "KV pool: max resident sequences")
+        .flag("kv-tokens", "16384", "KV pool: total cached-token budget")
         .flag("seed", "42", "weight synthesis seed")
         .flag("artifacts", "artifacts", "artifacts directory")
         .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]");
@@ -120,15 +124,25 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let tp = Topology::new(a.usize("tp")?);
     let algo = parse_algo(a.get("algo"))?;
     let codec = parse_codec(a.get("comm-codec"))?;
+    let mode = SchedMode::by_name(a.get("scheduler"))
+        .ok_or_else(|| err!("scheduler must be 'continuous' or 'static'"))?;
+    let pool_cfg = KvPoolCfg {
+        max_seqs: a.usize("kv-seqs")?,
+        max_tokens: a.usize("kv-tokens")?,
+    };
     let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, a.u64("seed")?));
     eprintln!(
-        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}, codec={}",
+        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}, codec={}, \
+         scheduler={} (kv pool: {} seqs / {} tokens)",
         cfg.name,
         cfg.n_layers,
         cfg.d_model,
         cfg.d_ff,
         tp.size,
-        codec.label()
+        codec.label(),
+        mode.label(),
+        pool_cfg.max_seqs,
+        pool_cfg.max_tokens
     );
     let engine = match a.get("backend") {
         "host" => Some(TpEngine::start_with_codec(
@@ -159,7 +173,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Arc::new(Metrics::default()),
         a.usize("max-batch")?,
     );
-    let server = Server::start(a.get("addr"), scheduler)?;
+    let server = Server::start_with(a.get("addr"), scheduler, pool_cfg, mode)?;
     println!("listening on {}", server.addr);
     // Serve until a client sends {"cmd":"shutdown"}.
     loop {

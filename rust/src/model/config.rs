@@ -22,6 +22,7 @@ pub enum Activation {
 }
 
 impl Activation {
+    /// Apply to one scalar.
     #[inline]
     pub fn apply(&self, x: f32) -> f32 {
         match self {
@@ -50,15 +51,21 @@ impl Activation {
 /// A full model configuration (the tiny serving model and test configs).
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
+    /// Config name (also the artifact-manifest model key).
     pub name: String,
     /// Hidden dimension (`K1` and `N2` of the MLP).
     pub d_model: usize,
     /// MLP intermediate dimension (`N1`).
     pub d_ff: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention heads per block.
     pub n_heads: usize,
+    /// Vocabulary size (tied embedding / LM head).
     pub vocab: usize,
+    /// Maximum sequence length served.
     pub max_seq: usize,
+    /// MLP nonlinearity.
     pub activation: Activation,
     /// GPTQ group size for the quantized MLP weights.
     pub group_size: usize,
@@ -122,10 +129,12 @@ impl ModelConfig {
         }
     }
 
+    /// Per-head attention dimension.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
 
+    /// Look up a named config (`tiny` | `llama-scaled` | `granite-scaled`).
     pub fn by_name(name: &str) -> Option<ModelConfig> {
         match name {
             "tiny" => Some(Self::tiny()),

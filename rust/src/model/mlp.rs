@@ -22,15 +22,22 @@ use std::time::Instant;
 /// [`crate::simkernel::pipeline::LatencyBreakdown`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseTiming {
+    /// Column-TP GEMM (dequant + matmul) time.
     pub gemm1_ns: u64,
+    /// Inter-layer AllGather time (naive algorithm only).
     pub allgather_ns: u64,
+    /// `Y1[:, P2]` gather time (naive algorithm only).
     pub reorder_ns: u64,
+    /// Local-chunk copy time (naive algorithm only).
     pub chunk_ns: u64,
+    /// Row-TP GEMM time.
     pub gemm2_ns: u64,
+    /// Epilogue AllReduce time.
     pub allreduce_ns: u64,
 }
 
 impl PhaseTiming {
+    /// Sum of all phases, nanoseconds.
     pub fn total_ns(&self) -> u64 {
         self.gemm1_ns
             + self.allgather_ns

@@ -22,11 +22,17 @@ use crate::util::prng::Xoshiro256;
 /// Weights of one transformer block.
 #[derive(Clone, Debug)]
 pub struct BlockWeights {
+    /// Query projection, `d_model × d_model`.
     pub wq: Matrix,
+    /// Key projection, `d_model × d_model`.
     pub wk: Matrix,
+    /// Value projection, `d_model × d_model`.
     pub wv: Matrix,
+    /// Attention output projection, `d_model × d_model`.
     pub wo: Matrix,
+    /// Pre-attention RMSNorm gain.
     pub attn_norm: Vec<f32>,
+    /// Pre-MLP RMSNorm gain.
     pub mlp_norm: Vec<f32>,
     /// The quantized checkpoint this block's MLP came from (kept for
     /// re-deployment at other TP widths / algorithms).
@@ -38,28 +44,53 @@ pub struct BlockWeights {
 /// A complete tiny transformer.
 #[derive(Clone, Debug)]
 pub struct Transformer {
+    /// The model configuration this instance was synthesized from.
     pub cfg: ModelConfig,
     /// Token embedding, `vocab × d_model` (tied LM head).
     pub embedding: Matrix,
+    /// Per-layer weights (attention + deployed quantized MLP).
     pub blocks: Vec<BlockWeights>,
+    /// Final RMSNorm gain before the LM head.
     pub final_norm: Vec<f32>,
+    /// Deployment algorithm the MLPs were prepared for.
     pub algo: Algo,
+    /// Tensor-parallel topology the MLPs are sharded across.
     pub tp: Topology,
 }
 
 /// Per-sequence KV cache: one (K, V) pair of `seq × d_model` per layer.
+///
+/// In the serving path the storage behind a cache is a slot of the
+/// [`crate::coordinator::kv_pool::KvPool`]: acquired at admission,
+/// recycled (cleared, allocations kept) at retirement.
 #[derive(Clone, Debug, Default)]
 pub struct KvCache {
+    /// Per-layer `(K, V)` row-major buffers, each `len × d_model`.
     pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Tokens cached so far (rows per layer buffer).
     pub len: usize,
 }
 
 impl KvCache {
+    /// An empty cache with `n_layers` unallocated layer slots.
     pub fn new(n_layers: usize) -> KvCache {
         KvCache {
             layers: vec![(Vec::new(), Vec::new()); n_layers],
             len: 0,
         }
+    }
+
+    /// Clear contents while keeping heap allocations, reshaping to
+    /// `n_layers` — this is what makes a cache reusable as a pool slot:
+    /// the next sequence writes into the previous sequence's buffers.
+    pub fn reset(&mut self, n_layers: usize) {
+        self.layers
+            .resize_with(n_layers, || (Vec::new(), Vec::new()));
+        for (k, v) in &mut self.layers {
+            k.clear();
+            v.clear();
+        }
+        self.len = 0;
     }
 
     /// Bytes held (for cache-manager accounting).

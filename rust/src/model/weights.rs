@@ -103,7 +103,9 @@ impl LayerShard {
 /// A deployable, sharded two-layer MLP with its permutation metadata.
 #[derive(Clone, Debug)]
 pub struct DeployedMlp {
+    /// Deployment algorithm the shards were prepared for.
     pub algo: Algo,
+    /// Tensor-parallel topology the shards are split across.
     pub tp: Topology,
     /// First-layer row permutation (Algorithm 1 of `W1`).
     pub p1: Vec<u32>,
@@ -119,8 +121,11 @@ pub struct DeployedMlp {
 /// An unquantized synthetic MLP checkpoint plus calibration data.
 #[derive(Clone, Debug)]
 pub struct MlpCheckpoint {
+    /// The MLP problem size.
     pub shape: MlpShape,
+    /// First (Column-TP) weight, `K1 × N1`.
     pub w1: Matrix,
+    /// Second (Row-TP) weight, `N1 × N2`.
     pub w2: Matrix,
     /// Calibration activations for the first layer (`S × K1`).
     pub calib: Matrix,

@@ -56,6 +56,7 @@ impl GroupIndex {
         self.idx.len()
     }
 
+    /// True when the index covers no channels.
     pub fn is_empty(&self) -> bool {
         self.idx.is_empty()
     }

@@ -63,13 +63,16 @@ pub struct QuantizedLinear {
     /// The salience permutation φ actually used (identity if
     /// `act_order=false`). `phi[i]` = quantization position of channel `i`.
     pub phi: Vec<u32>,
+    /// Weight precision in bits (4 for the paper's int4 deployments).
     pub bits: u32,
 }
 
 impl QuantizedLinear {
+    /// Input features `K`.
     pub fn k(&self) -> usize {
         self.packed.k
     }
+    /// Output features `N`.
     pub fn n(&self) -> usize {
         self.packed.n
     }

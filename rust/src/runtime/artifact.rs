@@ -15,26 +15,40 @@ pub const SUPPORTED_VERSION: i64 = 2;
 /// One input tensor declaration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InputDesc {
+    /// Parameter name in the lowered HLO.
     pub name: String,
+    /// Tensor shape, row-major.
     pub shape: Vec<usize>,
+    /// Element dtype string as aot.py wrote it (e.g. "f32", "u32").
     pub dtype: String,
 }
 
 /// One AOT-compiled artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Unique artifact name (the manifest key).
     pub name: String,
+    /// HLO text filename relative to the artifacts directory.
     pub file: String,
     /// "stage1" | "stage2" | "fused" | "kernel_ordered" | "kernel_naive".
     pub kind: String,
+    /// Model config name the artifact was compiled for.
     pub model: String,
+    /// Tensor-parallel width it was compiled at.
     pub tp: usize,
+    /// Batch (M) bucket it was compiled for.
     pub m: usize,
+    /// Column-TP input features.
     pub k1: usize,
+    /// Column-TP output features.
     pub n1: usize,
+    /// Row-TP output features.
     pub n2: usize,
+    /// Quantization group size baked into the kernel.
     pub group_size: usize,
+    /// Activation name between the GEMMs.
     pub act: String,
+    /// Input tensor declarations, in call order.
     pub inputs: Vec<InputDesc>,
 }
 
@@ -53,7 +67,9 @@ impl ArtifactEntry {
 /// The parsed manifest with lookup indices.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// All artifact entries, in manifest order.
     pub entries: Vec<ArtifactEntry>,
 }
 

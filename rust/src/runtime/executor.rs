@@ -37,9 +37,13 @@ struct LayerBuffers {
 /// Executables + weights for one rank of one model.
 pub struct RankMlpExecutor {
     ctx: PjrtContext,
+    /// This executor's rank index.
     pub rank: usize,
+    /// Tensor-parallel width the artifacts were compiled at.
     pub tp: usize,
+    /// Deployment algorithm the artifacts implement.
     pub algo: Algo,
+    /// Model config name the artifacts belong to.
     pub model: String,
     /// M-bucket → executable.
     fused: BTreeMap<usize, Executable>,

@@ -16,6 +16,7 @@ use std::path::Path;
 /// A PJRT CPU context (client). One per rank thread — `PjRtClient` is
 /// `Rc`-based and must not cross threads.
 pub struct PjrtContext {
+    /// The underlying PJRT client handle.
     pub client: xla::PjRtClient,
 }
 

@@ -11,6 +11,7 @@ use crate::tp::interconnect::{Fabric, NVLINK3_A100, NVLINK4_H100};
 /// One GPU + node fabric profile.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GpuSpec {
+    /// GPU marketing name.
     pub name: &'static str,
     /// Peak HBM bandwidth, bytes/s.
     pub hbm_peak_bytes_per_s: f64,
@@ -79,6 +80,7 @@ impl GpuSpec {
         self.eff_bw() * self.gather_bw_frac
     }
 
+    /// Look up a profile by name (`a100` | `h100`).
     pub fn by_name(name: &str) -> Option<GpuSpec> {
         match name.to_ascii_lowercase().as_str() {
             "a100" => Some(A100),

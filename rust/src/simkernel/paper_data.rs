@@ -7,8 +7,11 @@
 pub struct PaperTable {
     /// Paper table number(s) for the latency rows.
     pub table_no: u32,
+    /// Model key (`llama-70b` | `granite-20b`).
     pub model: &'static str,
+    /// GPU key (`a100` | `h100`).
     pub gpu: &'static str,
+    /// Tensor-parallel width of the table.
     pub tp: usize,
     /// (M, K1, N1, N2) is fixed per model; rows are (M, naive, tp_aware).
     pub rows: [(usize, f64, f64); 5],

@@ -36,6 +36,42 @@ pub enum Algo {
     TpAware,
 }
 
+/// How the serving scheduler forms decode batches. Shared between the
+/// analytic model below and the measured path
+/// ([`crate::coordinator::scheduler::ContinuousScheduler`]), like
+/// [`Algo`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Classic static batching: admit a full batch, run every sequence in
+    /// it to completion, only then admit the next batch. Slots freed by
+    /// short sequences idle until the batch drains.
+    Static,
+    /// Continuous batching: admit new sequences into the running batch at
+    /// every decode step and retire finished ones in place, keeping the
+    /// per-step batch full — the regime where decode-phase collectives
+    /// amortize best.
+    Continuous,
+}
+
+impl SchedMode {
+    /// Parse a CLI name (`static` | `continuous`).
+    pub fn by_name(name: &str) -> Option<SchedMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "static" => Some(SchedMode::Static),
+            "continuous" | "cont" => Some(SchedMode::Continuous),
+            _ => None,
+        }
+    }
+
+    /// Lowercase display name (mirrors [`SchedMode::by_name`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedMode::Static => "static",
+            SchedMode::Continuous => "continuous",
+        }
+    }
+}
+
 /// MLP problem size, in the paper's notation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MlpShape {
@@ -62,6 +98,7 @@ pub const GRANITE_20B: MlpShape = MlpShape {
 };
 
 impl MlpShape {
+    /// Look up a paper problem size by model name.
     pub fn by_name(name: &str) -> Option<MlpShape> {
         match name.to_ascii_lowercase().as_str() {
             "llama-70b" | "llama" => Some(LLAMA_70B),
@@ -74,12 +111,19 @@ impl MlpShape {
 /// Per-phase latency breakdown, seconds.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencyBreakdown {
+    /// Column-TP GEMM time.
     pub gemm1_s: f64,
+    /// Inter-layer AllGather time (naive algorithm only).
     pub allgather_s: f64,
+    /// `Y1[:, P2]` uncoalesced gather time (naive algorithm only).
     pub reorder_s: f64,
+    /// Local-chunk copy time (naive algorithm only).
     pub chunk_s: f64,
+    /// Mid-layer global-sync straggler penalty (naive algorithm only).
     pub straggler_s: f64,
+    /// Row-TP GEMM time.
     pub gemm2_s: f64,
+    /// Epilogue AllReduce time.
     pub allreduce_s: f64,
     /// Extra dequant-metadata reload time (only when modeling a quantized
     /// deployment that kept the *unordered* Eq.-3 `g_idx`).
@@ -87,6 +131,7 @@ pub struct LatencyBreakdown {
 }
 
 impl LatencyBreakdown {
+    /// Sum of all phases, seconds.
     pub fn total_s(&self) -> f64 {
         self.gemm1_s
             + self.allgather_s
@@ -97,9 +142,11 @@ impl LatencyBreakdown {
             + self.allreduce_s
             + self.reload_penalty_s
     }
+    /// Sum of all phases, milliseconds.
     pub fn total_ms(&self) -> f64 {
         self.total_s() * 1e3
     }
+    /// Collective-communication time only (AllGather + AllReduce).
     pub fn comm_s(&self) -> f64 {
         self.allgather_s + self.allreduce_s
     }
@@ -192,6 +239,175 @@ pub fn speedup(gpu: &GpuSpec, shape: MlpShape, m: usize, tp: usize, dtype: Weigh
     let naive = mlp_latency(gpu, shape, m, tp, Algo::Naive, dtype, false).total_s();
     let aware = mlp_latency(gpu, shape, m, tp, Algo::TpAware, dtype, false).total_s();
     naive / aware
+}
+
+/// Result of simulating a decode workload under one scheduling mode
+/// (see [`decode_workload_latency`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DecodeSim {
+    /// Modeled wall time for the whole workload, seconds.
+    pub total_s: f64,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Sum of live sequences over all steps (occupancy integral).
+    pub token_steps: usize,
+    /// Tokens generated (sum of the workload's output lengths).
+    pub tokens: usize,
+}
+
+impl DecodeSim {
+    /// Mean live sequences per step.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.token_steps as f64 / self.steps as f64
+        }
+    }
+
+    /// Modeled generation throughput, tokens per second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.total_s
+        }
+    }
+}
+
+/// Round a live-sequence count up to the executed artifact bucket —
+/// the model-side mirror of `coordinator::batcher::bucket_for` (kept
+/// separate so the cost model stays below the coordinator layer).
+fn bucket(n: usize, max_batch: usize) -> usize {
+    let mut b = 1;
+    while b < n {
+        b *= 2;
+    }
+    b.min(max_batch)
+}
+
+/// Decode steps a sequence with `prompt` prompt tokens and `new` output
+/// tokens occupies a batch slot for, mirroring the serving scheduler's
+/// incremental prefill (the step that consumes the last prompt token
+/// already produces the first output token).
+fn seq_lifetime_steps(prompt: usize, new: usize) -> usize {
+    if prompt == 0 {
+        new.max(1)
+    } else {
+        (prompt + new).saturating_sub(1).max(1)
+    }
+}
+
+/// Simulate serving a closed workload of `(prompt_len, new_tokens)`
+/// requests through an `n_layers`-deep stack of TP MLPs under `mode`,
+/// pricing each decode step at the compiled-bucket latency of the live
+/// batch ([`mlp_latency`] at `bucket(n)`).
+///
+/// Static mode admits `max_batch` sequences and runs the batch until its
+/// longest member finishes (slots drain as short sequences retire);
+/// continuous mode refills the batch from the queue at every step. The
+/// model deliberately ignores KV-pool limits — it answers "what does the
+/// *scheduling policy* cost", the measured path answers "what does the
+/// implementation cost"; `serving_bench` compares the two.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_workload_latency(
+    gpu: &GpuSpec,
+    shape: MlpShape,
+    tp: usize,
+    algo: Algo,
+    dtype: WeightDtype,
+    n_layers: usize,
+    workload: &[(usize, usize)],
+    max_batch: usize,
+    mode: SchedMode,
+) -> DecodeSim {
+    assert!(max_batch >= 1);
+    // Per-bucket step latency, precomputed once.
+    let mut step_s = vec![0.0f64; max_batch + 1];
+    for (m, slot) in step_s.iter_mut().enumerate().skip(1) {
+        *slot = n_layers as f64 * mlp_latency(gpu, shape, m, tp, algo, dtype, false).total_s();
+    }
+    let mut sim = DecodeSim {
+        tokens: workload.iter().map(|&(_, new)| new).sum(),
+        ..Default::default()
+    };
+    let mut queue: std::collections::VecDeque<usize> = workload
+        .iter()
+        .map(|&(p, n)| seq_lifetime_steps(p, n))
+        .collect();
+    let mut active: Vec<usize> = Vec::new();
+    loop {
+        match mode {
+            SchedMode::Continuous => {
+                while active.len() < max_batch {
+                    match queue.pop_front() {
+                        Some(life) => active.push(life),
+                        None => break,
+                    }
+                }
+            }
+            SchedMode::Static => {
+                if active.is_empty() {
+                    while active.len() < max_batch {
+                        match queue.pop_front() {
+                            Some(life) => active.push(life),
+                            None => break,
+                        }
+                    }
+                }
+            }
+        }
+        if active.is_empty() {
+            break;
+        }
+        let n = active.len();
+        sim.total_s += step_s[bucket(n, max_batch)];
+        sim.steps += 1;
+        sim.token_steps += n;
+        for life in &mut active {
+            *life -= 1;
+        }
+        active.retain(|&life| life > 0);
+    }
+    sim
+}
+
+/// Convenience: modeled tokens/s of continuous over static batching for
+/// one workload (>1 whenever mixed lengths leave static slots idle).
+#[allow(clippy::too_many_arguments)]
+pub fn continuous_over_static(
+    gpu: &GpuSpec,
+    shape: MlpShape,
+    tp: usize,
+    algo: Algo,
+    dtype: WeightDtype,
+    n_layers: usize,
+    workload: &[(usize, usize)],
+    max_batch: usize,
+) -> f64 {
+    let st = decode_workload_latency(
+        gpu,
+        shape,
+        tp,
+        algo,
+        dtype,
+        n_layers,
+        workload,
+        max_batch,
+        SchedMode::Static,
+    );
+    let ct = decode_workload_latency(
+        gpu,
+        shape,
+        tp,
+        algo,
+        dtype,
+        n_layers,
+        workload,
+        max_batch,
+        SchedMode::Continuous,
+    );
+    st.total_s / ct.total_s
 }
 
 #[cfg(test)]
@@ -347,6 +563,120 @@ mod tests {
             let (naive, aware) = (n.total_s(), a.total_s());
             assert!(naive > aware, "{}: {naive} vs {aware}", codec.label());
         }
+    }
+
+    /// The workload shape the serving bench and the acceptance bar use:
+    /// short and long outputs interleaved, so every static batch drains
+    /// down to its long members while freed slots idle.
+    fn mixed_workload() -> Vec<(usize, usize)> {
+        (0..12)
+            .map(|i| if i % 2 == 0 { (3, 2) } else { (3, 20) })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_beats_static_on_mixed_lengths() {
+        let s = continuous_over_static(
+            &A100,
+            LLAMA_70B,
+            4,
+            Algo::TpAware,
+            WeightDtype::F16,
+            4,
+            &mixed_workload(),
+            4,
+        );
+        assert!(s >= 1.2, "continuous/static = {s}");
+    }
+
+    #[test]
+    fn continuous_never_slower_than_static() {
+        let workloads: [Vec<(usize, usize)>; 3] = [
+            mixed_workload(),
+            (0..12).map(|_| (3usize, 8usize)).collect(), // uniform
+            vec![(2, 30), (2, 1), (2, 1), (2, 1), (2, 29), (2, 2)],
+        ];
+        for w in &workloads {
+            for mb in [2usize, 4, 8] {
+                let s = continuous_over_static(
+                    &A100,
+                    LLAMA_70B,
+                    2,
+                    Algo::Naive,
+                    WeightDtype::F16,
+                    2,
+                    w,
+                    mb,
+                );
+                assert!(s >= 0.999, "workload {w:?} mb={mb}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_lengths_make_modes_equal() {
+        // When every sequence lives equally long and the count divides
+        // max_batch, static batches never idle — the modes coincide.
+        let w: Vec<(usize, usize)> = (0..16).map(|_| (4usize, 8usize)).collect();
+        let st = decode_workload_latency(
+            &A100,
+            LLAMA_70B,
+            2,
+            Algo::TpAware,
+            WeightDtype::F16,
+            2,
+            &w,
+            8,
+            SchedMode::Static,
+        );
+        let ct = decode_workload_latency(
+            &A100,
+            LLAMA_70B,
+            2,
+            Algo::TpAware,
+            WeightDtype::F16,
+            2,
+            &w,
+            8,
+            SchedMode::Continuous,
+        );
+        assert_eq!(st.steps, ct.steps);
+        assert!((st.total_s - ct.total_s).abs() < 1e-12);
+        assert_eq!(st.tokens, 16 * 8);
+    }
+
+    #[test]
+    fn sim_accounting_is_consistent() {
+        let sim = decode_workload_latency(
+            &H100,
+            GRANITE_20B,
+            4,
+            Algo::Naive,
+            WeightDtype::F16,
+            3,
+            &mixed_workload(),
+            8,
+            SchedMode::Continuous,
+        );
+        // Token-steps is exactly the sum of sequence lifetimes.
+        let lives: usize = mixed_workload()
+            .iter()
+            .map(|&(p, n)| if p == 0 { n.max(1) } else { (p + n - 1).max(1) })
+            .sum();
+        assert_eq!(sim.token_steps, lives);
+        assert!(sim.steps >= lives / 8);
+        assert!(sim.mean_occupancy() <= 8.0);
+        assert!(sim.total_s > 0.0 && sim.tokens_per_s() > 0.0);
+        assert_eq!(sim.tokens, 6 * 2 + 6 * 20);
+    }
+
+    #[test]
+    fn sched_mode_names_roundtrip() {
+        for m in [SchedMode::Static, SchedMode::Continuous] {
+            assert_eq!(SchedMode::by_name(m.label()), Some(m));
+        }
+        assert_eq!(SchedMode::by_name("cont"), Some(SchedMode::Continuous));
+        assert!(SchedMode::by_name("eager").is_none());
     }
 
     #[test]

@@ -10,8 +10,11 @@ use crate::util::prng::Xoshiro256;
 /// A dense row-major `rows × cols` matrix of `f32`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
@@ -47,12 +50,14 @@ impl Matrix {
         Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Set element `(r, c)` to `v`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);

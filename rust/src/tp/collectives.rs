@@ -32,18 +32,31 @@ use std::sync::{Arc, Barrier, Mutex};
 /// default [`CodecSpec::Fp32`] the two are equal.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommStats {
+    /// AllGather invocations.
     pub allgather_calls: usize,
+    /// AllGather raw f32 payload bytes.
     pub allgather_bytes: usize,
+    /// AllGather encoded wire bytes.
     pub allgather_wire_bytes: usize,
+    /// AllReduce invocations.
     pub allreduce_calls: usize,
+    /// AllReduce raw f32 payload bytes.
     pub allreduce_bytes: usize,
+    /// AllReduce encoded wire bytes.
     pub allreduce_wire_bytes: usize,
+    /// Broadcast invocations.
     pub broadcast_calls: usize,
+    /// Broadcast raw f32 payload bytes.
     pub broadcast_bytes: usize,
+    /// Broadcast encoded wire bytes.
     pub broadcast_wire_bytes: usize,
+    /// ReduceScatter invocations.
     pub reduce_scatter_calls: usize,
+    /// ReduceScatter raw f32 payload bytes.
     pub reduce_scatter_bytes: usize,
+    /// ReduceScatter encoded wire bytes.
     pub reduce_scatter_wire_bytes: usize,
+    /// Barrier invocations.
     pub barrier_calls: usize,
     /// Round-trip quantization error accumulated by lossy codecs.
     pub codec_err: CodecErrorStats,
@@ -64,6 +77,7 @@ impl CommStats {
             + self.broadcast_wire_bytes
             + self.reduce_scatter_wire_bytes
     }
+    /// Collective invocations across all ops (barriers excluded).
     pub fn total_calls(&self) -> usize {
         self.allgather_calls
             + self.allreduce_calls
@@ -180,9 +194,11 @@ impl CollectiveGroup {
 }
 
 impl RankComm {
+    /// This communicator's rank index.
     pub fn rank(&self) -> usize {
         self.rank
     }
+    /// Ranks in the group.
     pub fn size(&self) -> usize {
         self.shared.size
     }

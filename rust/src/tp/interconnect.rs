@@ -16,6 +16,7 @@
 /// A point-to-point fabric profile.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Fabric {
+    /// Human-readable fabric name.
     pub name: &'static str,
     /// Achievable per-GPU unidirectional bandwidth, bytes/second.
     pub bw_bytes_per_s: f64,

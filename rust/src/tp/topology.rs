@@ -13,6 +13,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// A topology of `size` ranks (panics on zero).
     pub fn new(size: usize) -> Topology {
         assert!(size > 0, "topology needs at least one rank");
         Topology { size }

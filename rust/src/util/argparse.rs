@@ -8,17 +8,24 @@ use std::collections::BTreeMap;
 /// One flag specification.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value for optional value flags.
     pub default: Option<&'static str>,
+    /// Whether parsing fails when the flag is absent.
     pub required: bool,
+    /// True for boolean `--name` switches (no value).
     pub is_switch: bool,
 }
 
 /// A declarative command parser.
 #[derive(Clone, Debug, Default)]
 pub struct Command {
+    /// Subcommand name as typed on the CLI.
     pub name: &'static str,
+    /// One-line description for the help text.
     pub about: &'static str,
     flags: Vec<FlagSpec>,
 }
@@ -32,11 +39,16 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
+/// Why parsing failed (or stopped, for [`ArgError::Help`]).
 #[derive(Debug)]
 pub enum ArgError {
+    /// A flag that was never declared.
     Unknown(String),
+    /// A value flag given without a value.
     MissingValue(String),
+    /// A required flag that was not provided.
     MissingRequired(String),
+    /// A value that failed to parse; `(flag, offending value)`.
     Invalid(String, String),
     /// `--help` was requested; message contains the rendered help.
     Help(String),
@@ -57,6 +69,7 @@ impl std::fmt::Display for ArgError {
 impl std::error::Error for ArgError {}
 
 impl Command {
+    /// Start a parser for subcommand `name`.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Self {
             name,
@@ -101,6 +114,7 @@ impl Command {
         self
     }
 
+    /// Render the `--help` text for this command.
     pub fn help_text(&self) -> String {
         let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
         for f in &self.flags {
@@ -178,6 +192,8 @@ impl Command {
 }
 
 impl Args {
+    /// A declared flag's value (panics on undeclared flags — a
+    /// programmer error, not a user error).
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
@@ -185,26 +201,31 @@ impl Args {
             .unwrap_or_else(|| panic!("flag --{name} not declared"))
     }
 
+    /// A flag's value, `None` when absent without default.
     pub fn get_opt(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Whether a boolean switch was given.
     pub fn on(&self, name: &str) -> bool {
         *self.switches.get(name).unwrap_or(&false)
     }
 
+    /// Parse a flag's value as `usize`.
     pub fn usize(&self, name: &str) -> Result<usize, ArgError> {
         self.get(name)
             .parse()
             .map_err(|_| ArgError::Invalid(name.to_string(), self.get(name).to_string()))
     }
 
+    /// Parse a flag's value as `u64`.
     pub fn u64(&self, name: &str) -> Result<u64, ArgError> {
         self.get(name)
             .parse()
             .map_err(|_| ArgError::Invalid(name.to_string(), self.get(name).to_string()))
     }
 
+    /// Parse a flag's value as `f64`.
     pub fn f64(&self, name: &str) -> Result<f64, ArgError> {
         self.get(name)
             .parse()

@@ -12,45 +12,58 @@ use std::fmt;
 /// deterministic — handy for golden tests and manifest diffs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys kept sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The numeric value truncated to `i64`, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
+    /// The numeric value as `usize`, if this is a non-negative `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|f| if f >= 0.0 { Some(f as usize) } else { None })
     }
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -209,7 +222,9 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 /// Parse error with byte offset for debuggability.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset where parsing failed.
     pub pos: usize,
+    /// What was wrong.
     pub msg: String,
 }
 

@@ -7,12 +7,16 @@
 /// A simple column-aligned table with a title, rendered as markdown.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Title printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Rows; each exactly as wide as `headers`.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with `headers` columns.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -21,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row (panics on width mismatch).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -86,6 +91,7 @@ impl Table {
 /// A named series for ASCII charts (the paper's figures).
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
     /// (x label, y value)
     pub points: Vec<(String, f64)>,

@@ -16,16 +16,24 @@ pub fn black_box<T>(x: T) -> T {
 /// Summary statistics over a set of per-iteration timings.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean per-iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Median per-iteration time, nanoseconds.
     pub median_ns: f64,
+    /// Standard deviation, nanoseconds.
     pub stddev_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
+    /// Slowest iteration, nanoseconds.
     pub max_ns: f64,
+    /// 95th-percentile iteration, nanoseconds.
     pub p95_ns: f64,
 }
 
 impl Stats {
+    /// Summarize raw per-iteration samples (nanoseconds).
     pub fn from_ns(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -47,12 +55,15 @@ impl Stats {
         }
     }
 
+    /// Mean in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
+    /// Median in milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median_ns / 1e6
     }
+    /// Mean in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.mean_ns / 1e3
     }

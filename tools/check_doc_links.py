@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in markdown docs.
+
+Scans each markdown file given on the command line for inline links
+(``[text](target)``) and image refs, and checks that every *relative*
+target resolves to an existing file or directory (anchors are stripped;
+external ``http(s)://`` / ``mailto:`` targets and pure in-page anchors
+are skipped). Badge-style links into GitHub UI paths (``../../actions``)
+are skipped too, since they only exist on the forge.
+
+Used by the CI docs job:
+
+    python3 tools/check_doc_links.py ARCHITECTURE.md README.md
+
+Exit code 0 = all links resolve; 1 = at least one broken link (each is
+printed as ``file:line: broken link -> target``).
+"""
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path):
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                if target.startswith("../../"):
+                    continue  # forge UI path (e.g. the CI badge)
+                resolved = os.path.join(base, target.split("#", 1)[0])
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target))
+    return broken
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_doc_links.py <file.md> [...]", file=sys.stderr)
+        return 2
+    failures = 0
+    for path in argv:
+        if not os.path.exists(path):
+            print(f"{path}: file not found", file=sys.stderr)
+            failures += 1
+            continue
+        for lineno, target in check_file(path):
+            print(f"{path}:{lineno}: broken link -> {target}", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"{failures} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"all links resolve in: {', '.join(argv)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
