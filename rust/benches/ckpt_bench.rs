@@ -1,0 +1,151 @@
+//! Checkpoint store bench: write / load / verify throughput of the
+//! `.tpck` per-rank shard files, and the startup comparison the `ckpt`
+//! subsystem exists for — booting a deployment from disk vs
+//! re-quantizing it in memory (GPTQ + Algorithm 1 + Algorithm 3 +
+//! sharding), at the Granite-20B-proportioned MLP config, tp=8.
+//!
+//! Run: `cargo bench --bench ckpt_bench`
+//! (`TPAWARE_BENCH_FAST=1` shrinks the problem 4x for smoke runs.)
+
+use std::path::PathBuf;
+use tpaware::ckpt::repack::{load_deployment, rank_file, repack_model};
+use tpaware::ckpt::store::CkptReader;
+use tpaware::model::config::ModelConfig;
+use tpaware::model::weights::{deploy_quantized, gen_checkpoint, layer_seed};
+use tpaware::quant::gptq::GptqConfig;
+use tpaware::simkernel::pipeline::Algo;
+use tpaware::tp::topology::Topology;
+use tpaware::util::table::Table;
+use tpaware::util::timer::{bench, black_box, time_once, BenchCfg};
+
+const SEED: u64 = 42;
+const TP: usize = 8;
+
+fn mb_per_s(bytes: u64, ms: f64) -> f64 {
+    (bytes as f64 / (1024.0 * 1024.0)) / (ms / 1e3)
+}
+
+fn main() {
+    let fast = std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1");
+    // Granite-20B MLP proportions (1:4 aspect); fast mode shrinks 4x.
+    let mut cfg = ModelConfig::granite_scaled();
+    if fast {
+        cfg.name = "granite-fast".into();
+        cfg.d_model /= 4;
+        cfg.d_ff /= 4;
+    }
+    let algo = Algo::TpAware;
+    let topo = Topology::new(TP);
+    let shape = cfg.mlp_shape();
+    let qcfg = GptqConfig {
+        group_size: cfg.group_size,
+        act_order: true,
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join(format!("tpaware-ckpt-bench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "ckpt_bench — {} MLP ({}, {}, {}), int4 G={}, algo tp-aware, tp={TP}{}",
+        cfg.name,
+        shape.k1,
+        shape.n1,
+        shape.n2,
+        cfg.group_size,
+        if fast { " [fast]" } else { "" }
+    );
+
+    // --- 1. Startup A: re-quantize in memory (serve without --ckpt) ----
+    let ckpt0 = gen_checkpoint(shape, layer_seed(SEED, 0));
+    let (mem_deploy, requant) = time_once(|| deploy_quantized(&ckpt0, &qcfg, algo, topo));
+    let requant_ms = requant.as_secs_f64() * 1e3;
+    println!("\nre-quantization startup (GPTQ + Alg.1 + Alg.3 + shard): {requant_ms:.1} ms");
+
+    // --- 2. Offline repack: the one-time cost amortized over boots -----
+    let (stats, _) = time_once(|| repack_model(&cfg, SEED, &[algo], &[TP], &dir).expect("repack"));
+    println!(
+        "offline repack: quantize {:.1} ms + shard/write {:.1} ms → {} files, {} bytes",
+        stats.quantize_ms, stats.write_ms, stats.files, stats.bytes
+    );
+
+    // --- 3. Startup B: load the per-rank shards from disk --------------
+    let bcfg = BenchCfg::quick().from_env();
+    let loaded = load_deployment(&dir, algo, topo).expect("load");
+    assert_eq!(loaded.len(), cfg.n_layers);
+    // Bit-identical to the in-memory deployment — the speedup is free.
+    assert_eq!(loaded[0], mem_deploy, "ckpt load diverged from in-memory deploy");
+    let s_load = bench(&bcfg, || {
+        black_box(load_deployment(&dir, algo, topo).expect("load"));
+    });
+
+    // --- 4. Verify: checksum-sweep every rank container ----------------
+    let rank_files: Vec<PathBuf> = (0..TP).map(|r| rank_file(&dir, algo, TP, r)).collect();
+    let s_verify = bench(&bcfg, || {
+        for f in &rank_files {
+            CkptReader::open(f).expect("open").verify_all().expect("verify");
+        }
+    });
+
+    // RepackStats already separates the write path from quantization.
+    let write_ms = stats.write_ms;
+
+    let mut t = Table::new(
+        &format!("checkpoint store throughput ({} bytes across {TP} rank files)", stats.bytes),
+        &["op", "ms", "MB/s", "notes"],
+    );
+    t.row(vec![
+        "write".into(),
+        format!("{write_ms:.2}"),
+        format!("{:.0}", mb_per_s(stats.bytes, write_ms)),
+        "shard + serialize + fsync-less write".into(),
+    ]);
+    t.row(vec![
+        "load".into(),
+        format!("{:.2}", s_load.mean_ms()),
+        format!("{:.0}", mb_per_s(stats.bytes, s_load.mean_ms())),
+        "all ranks, checksum-verified, zero-copy views".into(),
+    ]);
+    t.row(vec![
+        "verify".into(),
+        format!("{:.2}", s_verify.mean_ms()),
+        format!("{:.0}", mb_per_s(stats.bytes, s_verify.mean_ms())),
+        "FNV-1a sweep of every section".into(),
+    ]);
+    println!("\n{}", t.render());
+
+    let speedup = requant_ms / s_load.mean_ms();
+    let mut s = Table::new(
+        "serve startup: disk load vs in-memory re-quantization",
+        &["boot path", "ms", "speedup"],
+    );
+    s.row(vec![
+        "re-quantize (no ckpt)".into(),
+        format!("{requant_ms:.1}"),
+        "1.00x".into(),
+    ]);
+    s.row(vec![
+        format!("load ckpt (tp={TP})"),
+        format!("{:.1}", s_load.mean_ms()),
+        format!("{speedup:.1}x"),
+    ]);
+    println!("{}", s.render());
+
+    std::fs::create_dir_all("bench_results").ok();
+    let csv = format!(
+        "config,tp,bytes,requant_ms,write_ms,load_ms,verify_ms,startup_speedup\n\
+         {},{TP},{},{requant_ms:.3},{write_ms:.3},{:.3},{:.3},{speedup:.2}\n",
+        cfg.name,
+        stats.bytes,
+        s_load.mean_ms(),
+        s_verify.mean_ms()
+    );
+    std::fs::write("bench_results/ckpt_bench.csv", csv).ok();
+    println!("CSV written to bench_results/ckpt_bench.csv");
+
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(
+        speedup > 1.0,
+        "disk-load startup ({:.1} ms) must beat re-quantization ({requant_ms:.1} ms)",
+        s_load.mean_ms()
+    );
+    println!("\ndisk-load startup beats re-quantization by {speedup:.1}x");
+}

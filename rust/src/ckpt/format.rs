@@ -1,0 +1,377 @@
+//! The `.tpck` binary container format: preamble, JSON header, aligned
+//! raw sections, per-section checksums.
+//!
+//! A container file is laid out as (all integers little-endian):
+//!
+//! ```text
+//! offset 0x00  magic          b"TPCK"
+//! offset 0x04  version        u32        (currently 1)
+//! offset 0x08  header_len     u64        (padded header byte count)
+//! offset 0x10  header         UTF-8 JSON, space-padded so the data
+//!                             area starts on a 64-byte boundary
+//! data area    raw section bytes, each section 64-byte aligned,
+//!              zero-padded between sections
+//! ```
+//!
+//! The header is a JSON object `{"meta": ..., "sections": [...]}`:
+//! `meta` is caller-defined metadata (the repacker records model, seed,
+//! algo, tp, rank, bits, group size, layer count) and each entry of
+//! `sections` describes one tensor: name, dtype (`"u32"` / `"f32"`),
+//! logical shape, byte offset *relative to the data area*, byte length,
+//! and an FNV-1a 64-bit checksum of the raw bytes (hex-encoded — JSON
+//! numbers are doubles and cannot hold 64 bits exactly).
+//!
+//! Alignment is what buys the zero-copy read path: the data area starts
+//! on a 64-byte file offset and every section offset is a multiple of
+//! 64, so once the file sits in an 8-byte-aligned buffer
+//! ([`AlignedBuf`]), each section can be reinterpreted in place as
+//! `&[u32]` / `&[f32]` without copying (see
+//! [`crate::ckpt::store::CkptReader`]).
+//!
+//! Byte order is little-endian on disk; like GPTQ/safetensors exports,
+//! the format does not support big-endian hosts (enforced at compile
+//! time below — every deployment target of this crate is LE).
+
+use crate::ensure;
+use crate::util::error::{Context as _, Result};
+use crate::util::json::Json;
+
+#[cfg(target_endian = "big")]
+compile_error!("the tpaware .tpck container assumes a little-endian host");
+
+/// File magic, first four bytes of every `.tpck` container.
+pub const MAGIC: [u8; 4] = *b"TPCK";
+
+/// Current (and only) container version this build reads and writes.
+pub const VERSION: u32 = 1;
+
+/// Alignment (bytes) of the data area and of every section within it.
+pub const ALIGN: usize = 64;
+
+/// Byte length of the fixed preamble (magic + version + header_len).
+pub const PREAMBLE: usize = 16;
+
+/// Round `x` up to the next multiple of `align`.
+pub fn align_up(x: usize, align: usize) -> usize {
+    // (usize::div_ceil needs Rust 1.73; the crate's MSRV is 1.70.)
+    (x + align - 1) / align * align
+}
+
+/// FNV-1a 64-bit hash — the per-section checksum. Not cryptographic;
+/// it exists to catch disk/transfer corruption loudly at load time.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Element type of a section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// Packed quantized words, permutations, group indices.
+    U32,
+    /// Scales, zeros, dense weights.
+    F32,
+}
+
+impl Dtype {
+    /// The on-disk dtype label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::U32 => "u32",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    /// Parse an on-disk dtype label.
+    pub fn by_name(name: &str) -> Option<Dtype> {
+        match name {
+            "u32" => Some(Dtype::U32),
+            "f32" => Some(Dtype::F32),
+            _ => None,
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Descriptor of one raw tensor section inside a container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SectionMeta {
+    /// Section name (e.g. `l0.w1.qweight`), unique within the file.
+    pub name: String,
+    /// Element type.
+    pub dtype: Dtype,
+    /// Logical shape; the element count is its product.
+    pub shape: Vec<usize>,
+    /// Byte offset relative to the data area (multiple of [`ALIGN`]).
+    pub offset: usize,
+    /// Raw byte length (`product(shape) * dtype.size()`).
+    pub nbytes: usize,
+    /// FNV-1a 64 checksum of the raw section bytes.
+    pub checksum: u64,
+}
+
+impl SectionMeta {
+    /// Element count (product of the shape).
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("dtype", self.dtype.name().into()),
+            ("shape", Json::Arr(self.shape.iter().map(|&d| d.into()).collect())),
+            ("offset", self.offset.into()),
+            ("nbytes", self.nbytes.into()),
+            ("fnv1a", format!("{:016x}", self.checksum).into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SectionMeta> {
+        let name = j
+            .get("name")
+            .as_str()
+            .context("section entry missing 'name'")?
+            .to_string();
+        let dtype_name = j
+            .get("dtype")
+            .as_str()
+            .with_context(|| format!("section '{name}' missing 'dtype'"))?;
+        let dtype = Dtype::by_name(dtype_name)
+            .with_context(|| format!("section '{name}' has unknown dtype '{dtype_name}'"))?;
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .with_context(|| format!("section '{name}' missing 'shape'"))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .with_context(|| format!("section '{name}' has a non-integer shape entry"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let offset = j
+            .get("offset")
+            .as_usize()
+            .with_context(|| format!("section '{name}' missing 'offset'"))?;
+        let nbytes = j
+            .get("nbytes")
+            .as_usize()
+            .with_context(|| format!("section '{name}' missing 'nbytes'"))?;
+        let hex = j
+            .get("fnv1a")
+            .as_str()
+            .with_context(|| format!("section '{name}' missing 'fnv1a' checksum"))?;
+        let checksum = u64::from_str_radix(hex, 16)
+            .map_err(|_| crate::err!("section '{name}' has a malformed checksum '{hex}'"))?;
+        let meta = SectionMeta {
+            name,
+            dtype,
+            shape,
+            offset,
+            nbytes,
+            checksum,
+        };
+        ensure!(
+            meta.nbytes == meta.elems() * meta.dtype.size(),
+            "section '{}': byte length {} does not match shape {:?} of {}",
+            meta.name,
+            meta.nbytes,
+            meta.shape,
+            meta.dtype.name()
+        );
+        ensure!(
+            meta.offset % ALIGN == 0,
+            "section '{}': offset {} is not {ALIGN}-byte aligned",
+            meta.name,
+            meta.offset
+        );
+        Ok(meta)
+    }
+}
+
+/// Build the header JSON document from caller metadata and section
+/// descriptors.
+pub fn header_json(meta: &Json, sections: &[SectionMeta]) -> Json {
+    Json::obj(vec![
+        ("meta", meta.clone()),
+        (
+            "sections",
+            Json::Arr(sections.iter().map(SectionMeta::to_json).collect()),
+        ),
+    ])
+}
+
+/// Split a parsed header document back into caller metadata and section
+/// descriptors (duplicate section names are rejected).
+pub fn parse_header(doc: &Json) -> Result<(Json, Vec<SectionMeta>)> {
+    let meta = doc.get("meta").clone();
+    let sections = doc
+        .get("sections")
+        .as_arr()
+        .context("checkpoint header has no 'sections' array")?
+        .iter()
+        .map(SectionMeta::from_json)
+        .collect::<Result<Vec<SectionMeta>>>()?;
+    for (i, s) in sections.iter().enumerate() {
+        ensure!(
+            !sections[..i].iter().any(|t| t.name == s.name),
+            "duplicate section name '{}' in checkpoint header",
+            s.name
+        );
+    }
+    Ok((meta, sections))
+}
+
+/// An 8-byte-aligned byte buffer: a whole container file loaded into
+/// memory such that its [`ALIGN`]-aligned sections can be reinterpreted
+/// in place as `&[u32]` / `&[f32]` (the zero-copy read path).
+#[derive(Debug)]
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Read a whole file into a fresh 8-aligned buffer — one copy,
+    /// disk straight into the aligned storage (the in-memory
+    /// [`AlignedBuf::from_bytes`] path would copy twice).
+    pub fn read_file(path: &std::path::Path) -> std::io::Result<AlignedBuf> {
+        use std::io::Read as _;
+        let mut f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        let mut words = vec![0u64; len / 8 + usize::from(len % 8 != 0)];
+        // Safe: `words` owns at least `len` initialized bytes and u64
+        // storage may be written through a byte view.
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len) };
+        f.read_exact(bytes)?;
+        Ok(AlignedBuf { words, len })
+    }
+
+    /// Copy `bytes` into a fresh 8-aligned buffer.
+    pub fn from_bytes(bytes: &[u8]) -> AlignedBuf {
+        let words = bytes
+            .chunks(8)
+            .map(|c| {
+                let mut w = [0u8; 8];
+                w[..c.len()].copy_from_slice(c);
+                u64::from_ne_bytes(w)
+            })
+            .collect();
+        AlignedBuf {
+            words,
+            len: bytes.len(),
+        }
+    }
+
+    /// The buffer contents as bytes (same length as the source).
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safe: `words` owns at least `len` initialized bytes and u64
+        // storage is valid to view as bytes at any alignment.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    /// Byte length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 64), 0);
+        assert_eq!(align_up(1, 64), 64);
+        assert_eq!(align_up(64, 64), 64);
+        assert_eq!(align_up(65, 64), 128);
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn section_meta_json_roundtrip() {
+        let s = SectionMeta {
+            name: "l0.w1.qweight".into(),
+            dtype: Dtype::U32,
+            shape: vec![4, 16],
+            offset: 128,
+            nbytes: 256,
+            checksum: 0xdead_beef_0123_4567,
+        };
+        let j = header_json(&Json::obj(vec![("model", "tiny".into())]), &[s.clone()]);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let (meta, sections) = parse_header(&parsed).unwrap();
+        assert_eq!(meta.get("model").as_str(), Some("tiny"));
+        assert_eq!(sections, vec![s]);
+    }
+
+    #[test]
+    fn parse_header_rejects_bad_entries() {
+        // Shape/byte mismatch.
+        let bad = crate::util::json::parse(
+            r#"{"meta": {}, "sections": [{"name": "x", "dtype": "u32",
+                "shape": [3], "offset": 0, "nbytes": 8, "fnv1a": "00"}]}"#,
+        )
+        .unwrap();
+        let e = parse_header(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("does not match shape"));
+        // Unknown dtype.
+        let bad = crate::util::json::parse(
+            r#"{"meta": {}, "sections": [{"name": "x", "dtype": "f64",
+                "shape": [1], "offset": 0, "nbytes": 8, "fnv1a": "00"}]}"#,
+        )
+        .unwrap();
+        assert!(format!("{:#}", parse_header(&bad).unwrap_err()).contains("unknown dtype"));
+        // Misaligned offset.
+        let bad = crate::util::json::parse(
+            r#"{"meta": {}, "sections": [{"name": "x", "dtype": "u32",
+                "shape": [1], "offset": 4, "nbytes": 4, "fnv1a": "00"}]}"#,
+        )
+        .unwrap();
+        assert!(format!("{:#}", parse_header(&bad).unwrap_err()).contains("aligned"));
+        // Duplicate names.
+        let bad = crate::util::json::parse(
+            r#"{"meta": {}, "sections": [
+                {"name": "x", "dtype": "u32", "shape": [1], "offset": 0,
+                 "nbytes": 4, "fnv1a": "00"},
+                {"name": "x", "dtype": "u32", "shape": [1], "offset": 64,
+                 "nbytes": 4, "fnv1a": "00"}]}"#,
+        )
+        .unwrap();
+        assert!(format!("{:#}", parse_header(&bad).unwrap_err()).contains("duplicate"));
+    }
+
+    #[test]
+    fn aligned_buf_preserves_bytes_and_aligns() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i * 37 % 251) as u8).collect();
+            let buf = AlignedBuf::from_bytes(&bytes);
+            assert_eq!(buf.as_bytes(), &bytes[..]);
+            assert_eq!(buf.len(), n);
+            assert_eq!(buf.is_empty(), n == 0);
+            assert_eq!(buf.as_bytes().as_ptr() as usize % 8, 0);
+        }
+    }
+}

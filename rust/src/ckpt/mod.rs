@@ -1,0 +1,31 @@
+//! On-disk quantized checkpoint store + TP-aware offline repacker.
+//!
+//! Everything upstream of this module prepares weights *in memory*:
+//! [`crate::model::weights`] quantizes and shards synthetic checkpoints
+//! on every boot. That reproduces the paper's math but not its
+//! *deployment story* — the whole point of TP-Aware Dequantization is
+//! that reordering and sharding happen **offline, once**, and the
+//! artifact ships to ranks. This module is that missing layer:
+//!
+//! * [`format`] — the `.tpck` container: versioned preamble, JSON
+//!   metadata header, 64-byte-aligned raw tensor sections, per-section
+//!   FNV-1a checksums, loud version/corruption errors.
+//! * [`store`] — the writer/reader pair, with a borrowed zero-copy read
+//!   path for aligned `u32`/`f32` sections.
+//! * [`repack`] — the offline pipeline: GPTQ → Algorithm 1 → (for the
+//!   TP-aware algorithm) the Algorithm 3 `W1[P1, P2]` alignment → one
+//!   shard file **per rank** per TP degree, plus a manifest recording
+//!   algorithm, tp, bits, group size, permutations and shard extents.
+//!
+//! Entry points: the `repack` CLI subcommand writes checkpoints,
+//! `serve --ckpt <dir>` / `measure --ckpt <dir>` boot from them
+//! (skipping the quantizer entirely),
+//! [`crate::coordinator::engine::TpEngine::start_from_ckpt`] wires a
+//! loaded deployment straight into the rank pool, and `ckpt_bench`
+//! quantifies write/load/verify throughput against in-memory
+//! re-quantization. `tools/ckpt_inspect.py` dumps headers and manifests
+//! without a rust toolchain.
+
+pub mod format;
+pub mod repack;
+pub mod store;

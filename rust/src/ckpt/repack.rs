@@ -1,0 +1,935 @@
+//! The offline TP-aware repacker: quantize once, pre-shard per rank,
+//! persist, boot from disk.
+//!
+//! This is the paper's deployment scheme made durable. For a model
+//! config and seed, the repacker
+//!
+//! 1. GPTQ-quantizes every MLP layer with `act_order` (producing the
+//!    unordered Eq.-3 `g_idx`),
+//! 2. applies **Algorithm 1** per layer (the `P1`/`P2` locality
+//!    reorders), and for TP-aware deployments the **Algorithm 3**
+//!    offline alignment `W1[P1, P2]`,
+//! 3. shards every layer for each requested TP degree and writes **one
+//!    container file per rank** (`<dir>/<algo>/tp<p>/rank<r>.tpck`)
+//!    plus a `manifest.json` recording algorithm, tp degrees, bits,
+//!    group size, per-layer permutations and per-rank shard extents.
+//!
+//! A serving rank then loads exactly its own file — no quantizer, no
+//! Hessian, no re-permutation on the boot path — and
+//! [`load_deployment`] reassembles [`DeployedMlp`]s that are
+//! **bit-identical** to what [`crate::model::weights::deploy_quantized`]
+//! builds in memory (asserted by `examples/repack_roundtrip.rs` and the
+//! `integration_ckpt` suite).
+//!
+//! Directory layout:
+//!
+//! ```text
+//! <dir>/manifest.json            # CkptManifest (JSON)
+//! <dir>/tp-aware/tp4/rank0.tpck  # rank 0's shards of every layer
+//! <dir>/tp-aware/tp4/rank1.tpck  # ...
+//! <dir>/naive/tp4/rank0.tpck     # (when repacked with --algo both)
+//! ```
+//!
+//! Each rank file holds, per layer `l`, sections `l{l}.w1.{qweight,
+//! scales,zeros,gidx,phi}` (the Column-TP shard) and the matching
+//! `l{l}.w2.*` (the Row-TP shard). Logical `K` is recovered from the
+//! `gidx` length, `N` from the section shape, bits/group size from the
+//! file metadata — enough to rebuild a
+//! [`crate::quant::gptq::QuantizedLinear`] without touching the
+//! quantizer.
+
+use crate::ckpt::store::{CkptReader, CkptWriter};
+use crate::model::config::ModelConfig;
+use crate::model::weights::{
+    align_w1, gen_checkpoint, layer_seed, quantize_and_reorder, shard_aligned, DeployedMlp,
+    LayerShard,
+};
+use crate::quant::gidx::GroupIndex;
+use crate::quant::gptq::{GptqConfig, QuantizedLinear};
+use crate::quant::pack::PackedWeights;
+use crate::simkernel::pipeline::{Algo, MlpShape};
+use crate::tp::topology::Topology;
+use crate::util::error::{Context as _, Result};
+use crate::util::json::{self, Json};
+use crate::{ensure, err};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// On-disk label of a deployment algorithm (stable — recorded in
+/// manifests and used as a directory name).
+pub fn algo_label(algo: Algo) -> &'static str {
+    match algo {
+        Algo::Naive => "naive",
+        Algo::TpAware => "tp-aware",
+    }
+}
+
+/// Inverse of [`algo_label`].
+pub fn algo_by_label(label: &str) -> Option<Algo> {
+    match label {
+        "naive" => Some(Algo::Naive),
+        "tp-aware" => Some(Algo::TpAware),
+        _ => None,
+    }
+}
+
+/// Path of one rank's shard container inside a checkpoint directory.
+pub fn rank_file(dir: &Path, algo: Algo, tp: usize, rank: usize) -> PathBuf {
+    dir.join(algo_label(algo))
+        .join(format!("tp{tp}"))
+        .join(format!("rank{rank}.tpck"))
+}
+
+/// The `[lo, hi)` extents into the shared `N1` dimension owned by each
+/// rank: `W1` is column-sharded and `W2` row-sharded over the same
+/// dimension, so one extent list describes both.
+pub fn shard_extents(n1: usize, tp: Topology) -> Vec<(usize, usize)> {
+    (0..tp.size).map(|r| tp.shard_range(n1, r)).collect()
+}
+
+/// Check that `extents` tile `0..n` exactly: start at 0, contiguous,
+/// non-empty, end at `n` (the manifest invariant the loader enforces).
+pub fn check_extents(n: usize, extents: &[(usize, usize)]) -> Result<()> {
+    ensure!(!extents.is_empty(), "empty shard extent list");
+    let mut cursor = 0usize;
+    for (i, &(lo, hi)) in extents.iter().enumerate() {
+        ensure!(
+            lo == cursor,
+            "shard extent {i} starts at {lo}, expected {cursor} (gap or overlap)"
+        );
+        ensure!(lo < hi, "shard extent {i} [{lo}, {hi}) is empty or inverted");
+        cursor = hi;
+    }
+    ensure!(
+        cursor == n,
+        "shard extents end at {cursor}, expected {n} — shards do not tile the dimension"
+    );
+    Ok(())
+}
+
+/// The checkpoint-directory manifest: everything a serving process
+/// needs to know about a repacked model before opening a rank file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptManifest {
+    /// Model config name the checkpoint was repacked from.
+    pub model: String,
+    /// Weight-synthesis seed (must match `serve --seed` for the boot to
+    /// be bit-identical with in-memory synthesis). Stored in the JSON
+    /// as a decimal string so all 64 bits survive the f64-backed
+    /// number type.
+    pub seed: u64,
+    /// Weight precision in bits.
+    pub bits: u32,
+    /// GPTQ quantization group size.
+    pub group_size: usize,
+    /// MLP layer count.
+    pub n_layers: usize,
+    /// The per-layer MLP problem size.
+    pub shape: MlpShape,
+    /// Deployment algorithms materialized in this directory.
+    pub algos: Vec<Algo>,
+    /// TP degrees pre-sharded in this directory.
+    pub tps: Vec<usize>,
+    /// Per-layer Algorithm-1 permutations `(P1, P2)`.
+    pub perms: Vec<(Vec<u32>, Vec<u32>)>,
+}
+
+fn perm_json(p: &[u32]) -> Json {
+    Json::Arr(p.iter().map(|&v| (v as usize).into()).collect())
+}
+
+fn json_u32_vec(j: &Json, what: &str) -> Result<Vec<u32>> {
+    j.as_arr()
+        .with_context(|| format!("manifest field '{what}' is not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .map(|u| u as u32)
+                .with_context(|| format!("manifest field '{what}' has a non-integer entry"))
+        })
+        .collect()
+}
+
+fn json_usize(doc: &Json, key: &str) -> Result<usize> {
+    doc.get(key)
+        .as_usize()
+        .with_context(|| format!("manifest missing numeric field '{key}'"))
+}
+
+impl CkptManifest {
+    /// Serialize to the `manifest.json` document (includes derived
+    /// per-rank shard extents for each TP degree, so operators and
+    /// `tools/ckpt_inspect.py` can read shard boundaries without shard
+    /// math).
+    pub fn to_json(&self) -> Json {
+        let extents = Json::Obj(
+            self.tps
+                .iter()
+                .map(|&tp| {
+                    let ext = shard_extents(self.shape.n1, Topology::new(tp))
+                        .into_iter()
+                        .map(|(lo, hi)| Json::Arr(vec![lo.into(), hi.into()]))
+                        .collect();
+                    (tp.to_string(), Json::Arr(ext))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("format", "tpaware-ckpt".into()),
+            ("version", 1usize.into()),
+            ("model", self.model.as_str().into()),
+            // Decimal string, not a JSON number: JSON numbers are f64
+            // and would silently mangle seeds >= 2^53.
+            ("seed", self.seed.to_string().into()),
+            ("bits", (self.bits as usize).into()),
+            ("group_size", self.group_size.into()),
+            ("n_layers", self.n_layers.into()),
+            (
+                "shape",
+                Json::obj(vec![
+                    ("k1", self.shape.k1.into()),
+                    ("n1", self.shape.n1.into()),
+                    ("n2", self.shape.n2.into()),
+                ]),
+            ),
+            (
+                "algos",
+                Json::Arr(self.algos.iter().map(|&a| algo_label(a).into()).collect()),
+            ),
+            (
+                "tps",
+                Json::Arr(self.tps.iter().map(|&t| t.into()).collect()),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.perms
+                        .iter()
+                        .map(|(p1, p2)| {
+                            Json::obj(vec![("p1", perm_json(p1)), ("p2", perm_json(p2))])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("extents", extents),
+        ])
+    }
+
+    /// Parse and validate a manifest document (version, field shapes,
+    /// extent tiling).
+    pub fn from_json(doc: &Json) -> Result<CkptManifest> {
+        ensure!(
+            doc.get("format").as_str() == Some("tpaware-ckpt"),
+            "not a tpaware checkpoint manifest (format field: {})",
+            doc.get("format")
+        );
+        let version = json_usize(doc, "version")?;
+        ensure!(
+            version == 1,
+            "unsupported manifest version {version} (this build reads version 1)"
+        );
+        let model = doc
+            .get("model")
+            .as_str()
+            .context("manifest missing 'model'")?
+            .to_string();
+        let shape = MlpShape {
+            k1: json_usize(doc.get("shape"), "k1").context("manifest 'shape'")?,
+            n1: json_usize(doc.get("shape"), "n1").context("manifest 'shape'")?,
+            n2: json_usize(doc.get("shape"), "n2").context("manifest 'shape'")?,
+        };
+        let algos = doc
+            .get("algos")
+            .as_arr()
+            .context("manifest missing 'algos'")?
+            .iter()
+            .map(|a| {
+                let label = a.as_str().context("non-string entry in 'algos'")?;
+                algo_by_label(label)
+                    .with_context(|| format!("unknown algorithm '{label}' in manifest"))
+            })
+            .collect::<Result<Vec<Algo>>>()?;
+        let tps = doc
+            .get("tps")
+            .as_arr()
+            .context("manifest missing 'tps'")?
+            .iter()
+            .map(|t| t.as_usize().context("non-integer entry in 'tps'"))
+            .collect::<Result<Vec<usize>>>()?;
+        let n_layers = json_usize(doc, "n_layers")?;
+        let layers = doc
+            .get("layers")
+            .as_arr()
+            .context("manifest missing 'layers'")?;
+        ensure!(
+            layers.len() == n_layers,
+            "manifest lists {} layer permutation entries for {n_layers} layers",
+            layers.len()
+        );
+        let perms = layers
+            .iter()
+            .map(|l| {
+                Ok((
+                    json_u32_vec(l.get("p1"), "p1")?,
+                    json_u32_vec(l.get("p2"), "p2")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Shard extents must tile the shared N1 dimension exactly and
+        // agree with this build's shard math. Guard the shard-math
+        // preconditions first so a hand-edited manifest errors instead
+        // of tripping the Topology asserts (panic) downstream.
+        for &tp in &tps {
+            ensure!(
+                tp > 0 && shape.n1 % tp == 0,
+                "manifest tp={tp} cannot shard n1={} evenly",
+                shape.n1
+            );
+            let ext = doc
+                .get("extents")
+                .get(&tp.to_string())
+                .as_arr()
+                .with_context(|| format!("manifest missing extents for tp={tp}"))?
+                .iter()
+                .map(|pair| {
+                    let lo = pair.idx(0).as_usize();
+                    let hi = pair.idx(1).as_usize();
+                    match (lo, hi) {
+                        (Some(lo), Some(hi)) => Ok((lo, hi)),
+                        _ => Err(err!("malformed extent entry for tp={tp}")),
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            check_extents(shape.n1, &ext).with_context(|| format!("manifest extents, tp={tp}"))?;
+            ensure!(
+                ext == shard_extents(shape.n1, Topology::new(tp)),
+                "manifest extents for tp={tp} disagree with this build's shard math"
+            );
+        }
+        let seed = doc
+            .get("seed")
+            .as_str()
+            .context("manifest missing 'seed' (decimal string)")?
+            .parse::<u64>()
+            .map_err(|_| err!("manifest 'seed' is not a u64"))?;
+        // The manifest is hand-editable JSON with no checksum; validate
+        // everything the loaders and kernels would otherwise trust, so
+        // corruption errors here instead of panicking mid-boot.
+        let bits = json_usize(doc, "bits")? as u32;
+        ensure!(
+            matches!(bits, 2 | 4 | 8),
+            "manifest bits={bits} unsupported (this build packs 2/4/8-bit weights)"
+        );
+        let group_size = json_usize(doc, "group_size")?;
+        ensure!(
+            group_size > 0
+                && shape.k1 % group_size == 0
+                && shape.n1 % group_size == 0,
+            "manifest group_size={group_size} does not divide the MLP dims ({}, {})",
+            shape.k1,
+            shape.n1
+        );
+        for (li, (p1, p2)) in perms.iter().enumerate() {
+            ensure!(
+                p1.len() == shape.k1 && crate::quant::perm::is_permutation(p1),
+                "manifest layer {li} p1 is not a permutation of 0..{}",
+                shape.k1
+            );
+            ensure!(
+                p2.len() == shape.n1 && crate::quant::perm::is_permutation(p2),
+                "manifest layer {li} p2 is not a permutation of 0..{}",
+                shape.n1
+            );
+        }
+        Ok(CkptManifest {
+            model,
+            seed,
+            bits,
+            group_size,
+            n_layers,
+            shape,
+            algos,
+            tps,
+            perms,
+        })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<CkptManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading checkpoint manifest {}", path.display()))?;
+        let doc = json::parse(&text)
+            .with_context(|| format!("parsing checkpoint manifest {}", path.display()))?;
+        CkptManifest::from_json(&doc)
+            .with_context(|| format!("validating checkpoint manifest {}", path.display()))
+    }
+
+    /// Write `<dir>/manifest.json` (pretty-printed).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, self.to_json().to_pretty())
+            .with_context(|| format!("writing checkpoint manifest {}", path.display()))
+    }
+}
+
+/// What a repack run produced (for CLI/bench reporting).
+#[derive(Clone, Copy, Debug)]
+pub struct RepackStats {
+    /// Rank container files written.
+    pub files: usize,
+    /// Total container bytes written.
+    pub bytes: u64,
+    /// Wall-clock milliseconds spent quantizing (GPTQ + Algorithm 1) —
+    /// the cost every boot pays *without* a checkpoint.
+    pub quantize_ms: f64,
+    /// Wall-clock milliseconds spent sharding + writing containers.
+    pub write_ms: f64,
+}
+
+fn push_quant_sections(w: &mut CkptWriter, prefix: &str, q: &QuantizedLinear) {
+    w.add_u32(
+        &format!("{prefix}.qweight"),
+        &[q.packed.packed_rows(), q.n()],
+        &q.packed.words,
+    );
+    w.add_f32(
+        &format!("{prefix}.scales"),
+        &[q.scales.rows, q.scales.cols],
+        &q.scales.data,
+    );
+    w.add_f32(
+        &format!("{prefix}.zeros"),
+        &[q.zeros.rows, q.zeros.cols],
+        &q.zeros.data,
+    );
+    w.add_u32(&format!("{prefix}.gidx"), &[q.gidx.idx.len()], &q.gidx.idx);
+    w.add_u32(&format!("{prefix}.phi"), &[q.phi.len()], &q.phi);
+}
+
+fn read_quant_sections(
+    r: &CkptReader,
+    prefix: &str,
+    bits: u32,
+    group_size: usize,
+) -> Result<QuantizedLinear> {
+    let gidx = r.section_u32(&format!("{prefix}.gidx"))?.to_vec();
+    let phi = r.section_u32(&format!("{prefix}.phi"))?.to_vec();
+    let k = gidx.len();
+    ensure!(
+        phi.len() == k,
+        "{prefix}: phi length {} != gidx length {k}",
+        phi.len()
+    );
+    let qmeta = r.section(&format!("{prefix}.qweight"))?;
+    ensure!(
+        qmeta.shape.len() == 2,
+        "{prefix}.qweight has shape {:?}, expected 2-D",
+        qmeta.shape
+    );
+    let n = qmeta.shape[1];
+    let per = (32 / bits) as usize;
+    ensure!(
+        k % per == 0 && qmeta.shape[0] == k / per,
+        "{prefix}.qweight packed rows {} inconsistent with K={k} at {bits}-bit",
+        qmeta.shape[0]
+    );
+    let words = r.section_u32(&format!("{prefix}.qweight"))?.to_vec();
+    let scales = r.section_matrix(&format!("{prefix}.scales"))?;
+    let zeros = r.section_matrix(&format!("{prefix}.zeros"))?;
+    ensure!(
+        scales.cols == n && zeros.cols == n && scales.rows == zeros.rows,
+        "{prefix}: metadata shape ({}, {}) / ({}, {}) inconsistent with N={n}",
+        scales.rows,
+        scales.cols,
+        zeros.rows,
+        zeros.cols
+    );
+    Ok(QuantizedLinear {
+        packed: PackedWeights { words, k, n, bits },
+        scales,
+        zeros,
+        gidx: GroupIndex {
+            idx: gidx,
+            group_size,
+        },
+        phi,
+        bits,
+    })
+}
+
+/// Quantize a synthetic model's MLP layers once and repack them for
+/// every requested `(algo, tp)` pair — the offline pipeline behind the
+/// `repack` CLI subcommand. The per-layer weights and quantization are
+/// identical to [`crate::model::transformer::Transformer::synthesize`]
+/// with the same config and seed, so a checkpoint boot is bit-identical
+/// with an in-memory boot.
+pub fn repack_model(
+    cfg: &ModelConfig,
+    seed: u64,
+    algos: &[Algo],
+    tps: &[usize],
+    dir: &Path,
+) -> Result<RepackStats> {
+    ensure!(!algos.is_empty(), "repack needs at least one algorithm");
+    ensure!(!tps.is_empty(), "repack needs at least one TP degree");
+    let shape = cfg.mlp_shape();
+    let qcfg = GptqConfig {
+        group_size: cfg.group_size,
+        act_order: true,
+        ..Default::default()
+    };
+    let per = (32 / qcfg.bits) as usize;
+    for &tp in tps {
+        ensure!(
+            shape.n1 % tp == 0,
+            "d_ff {} does not divide across {tp} ranks",
+            shape.n1
+        );
+        ensure!(
+            (shape.n1 / tp) % per == 0,
+            "W2 row shards of {} channels would not fall on the {bits}-bit packing \
+             boundary ({per} values/word) at tp={tp}",
+            shape.n1 / tp,
+            bits = qcfg.bits
+        );
+    }
+
+    // 1+2: quantize + Algorithm 1, once per layer (shared by every
+    // algo/tp the directory serves).
+    let t0 = Instant::now();
+    let layers: Vec<(Vec<u32>, QuantizedLinear, Vec<u32>, QuantizedLinear)> = (0..cfg.n_layers)
+        .map(|li| {
+            let ckpt = gen_checkpoint(shape, layer_seed(seed, li));
+            quantize_and_reorder(&ckpt, &qcfg)
+        })
+        .collect();
+    let quantize_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let manifest = CkptManifest {
+        model: cfg.name.clone(),
+        seed,
+        bits: qcfg.bits,
+        group_size: cfg.group_size,
+        n_layers: cfg.n_layers,
+        shape,
+        algos: algos.to_vec(),
+        tps: tps.to_vec(),
+        perms: layers
+            .iter()
+            .map(|(p1, _, p2, _)| (p1.clone(), p2.clone()))
+            .collect(),
+    };
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
+    manifest.save(dir)?;
+
+    // 3: Algorithm 3 alignment per algo, then the SAME shard tail the
+    // in-memory path runs (`align_w1` + `shard_aligned`), one file per
+    // rank — bit-identical boots by construction, not by coincidence.
+    let t1 = Instant::now();
+    let mut files = 0usize;
+    let mut bytes = 0u64;
+    for &algo in algos {
+        let w1_full: Vec<QuantizedLinear> = layers
+            .iter()
+            .map(|(_, q1r, p2, _)| align_w1(q1r.clone(), p2, algo))
+            .collect();
+        for &tp in tps {
+            let topo = Topology::new(tp);
+            let subdir = dir.join(algo_label(algo)).join(format!("tp{tp}"));
+            std::fs::create_dir_all(&subdir)
+                .with_context(|| format!("creating shard directory {}", subdir.display()))?;
+            let deployments: Vec<DeployedMlp> = layers
+                .iter()
+                .zip(&w1_full)
+                .map(|((p1, _, p2, q2r), w1)| {
+                    shard_aligned(p1.clone(), p2.clone(), w1, q2r, algo, topo)
+                })
+                .collect();
+            for rank in 0..tp {
+                let meta = Json::obj(vec![
+                    ("model", cfg.name.as_str().into()),
+                    ("seed", seed.to_string().into()),
+                    ("algo", algo_label(algo).into()),
+                    ("tp", tp.into()),
+                    ("rank", rank.into()),
+                    ("bits", (qcfg.bits as usize).into()),
+                    ("group_size", cfg.group_size.into()),
+                    ("n_layers", cfg.n_layers.into()),
+                ]);
+                let mut w = CkptWriter::new(meta);
+                for (li, d) in deployments.iter().enumerate() {
+                    let (w1s, w2s) = match (&d.w1_shards[rank], &d.w2_shards[rank]) {
+                        (LayerShard::Quant(a), LayerShard::Quant(b)) => (a, b),
+                        _ => unreachable!("shard_aligned builds quantized shards"),
+                    };
+                    push_quant_sections(&mut w, &format!("l{li}.w1"), w1s);
+                    push_quant_sections(&mut w, &format!("l{li}.w2"), w2s);
+                }
+                bytes += w.write_to(&rank_file(dir, algo, tp, rank))? as u64;
+                files += 1;
+            }
+        }
+    }
+    Ok(RepackStats {
+        files,
+        bytes,
+        quantize_ms,
+        write_ms: t1.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Load one rank's per-layer `(W1 shard, W2 shard)` pairs from a
+/// repacked checkpoint directory, validating the file against the
+/// manifest and the requested placement.
+pub fn load_rank_layers(
+    dir: &Path,
+    algo: Algo,
+    tp: Topology,
+    rank: usize,
+) -> Result<Vec<(QuantizedLinear, QuantizedLinear)>> {
+    let manifest = CkptManifest::load(dir)?;
+    let n_layers = manifest.n_layers;
+    load_rank_layers_with(&manifest, dir, algo, tp, rank, n_layers)
+}
+
+/// [`load_rank_layers`] against an already-loaded manifest (so a
+/// full-deployment load parses/validates `manifest.json` once, not
+/// once per rank), reading only the first `n_layers` layers — sections
+/// are checksummed on access, so skipped layers cost nothing beyond
+/// the file read.
+fn load_rank_layers_with(
+    manifest: &CkptManifest,
+    dir: &Path,
+    algo: Algo,
+    tp: Topology,
+    rank: usize,
+    n_layers: usize,
+) -> Result<Vec<(QuantizedLinear, QuantizedLinear)>> {
+    ensure!(
+        manifest.algos.contains(&algo),
+        "checkpoint at {} holds no {} shards (repacked algos: {:?}); \
+         re-run `repack` with --algo {} or both",
+        dir.display(),
+        algo_label(algo),
+        manifest.algos.iter().map(|&a| algo_label(a)).collect::<Vec<_>>(),
+        algo_label(algo)
+    );
+    ensure!(
+        manifest.tps.contains(&tp.size),
+        "checkpoint at {} holds no tp={} shards (repacked tps: {:?})",
+        dir.display(),
+        tp.size,
+        manifest.tps
+    );
+    ensure!(rank < tp.size, "rank {rank} out of range for tp={}", tp.size);
+    let path = rank_file(dir, algo, tp.size, rank);
+    let r = CkptReader::open(&path)?;
+    let fm = r.meta();
+    for (key, expect) in [
+        ("algo", algo_label(algo).to_string()),
+        ("model", manifest.model.clone()),
+        // Seed too: shard files copied in from a different repack run
+        // would otherwise pass every structural check yet carry weights
+        // quantized under different permutations than the manifest's.
+        ("seed", manifest.seed.to_string()),
+    ] {
+        ensure!(
+            fm.get(key).as_str() == Some(expect.as_str()),
+            "{}: file metadata '{key}' is {}, manifest/request says '{expect}'",
+            path.display(),
+            fm.get(key)
+        );
+    }
+    for (key, expect) in [
+        ("tp", tp.size),
+        ("rank", rank),
+        ("n_layers", manifest.n_layers),
+    ] {
+        ensure!(
+            fm.get(key).as_usize() == Some(expect),
+            "{}: file metadata '{key}' is {}, expected {expect}",
+            path.display(),
+            fm.get(key)
+        );
+    }
+    let (lo, hi) = tp.shard_range(manifest.shape.n1, rank);
+    let mut out = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let w1 = read_quant_sections(&r, &format!("l{li}.w1"), manifest.bits, manifest.group_size)
+            .with_context(|| format!("loading {} layer {li} W1", path.display()))?;
+        let w2 = read_quant_sections(&r, &format!("l{li}.w2"), manifest.bits, manifest.group_size)
+            .with_context(|| format!("loading {} layer {li} W2", path.display()))?;
+        ensure!(
+            w1.k() == manifest.shape.k1 && w1.n() == hi - lo,
+            "layer {li} W1 shard is {}x{}, manifest extents say {}x{}",
+            w1.k(),
+            w1.n(),
+            manifest.shape.k1,
+            hi - lo
+        );
+        ensure!(
+            w2.k() == hi - lo && w2.n() == manifest.shape.n2,
+            "layer {li} W2 shard is {}x{}, manifest extents say {}x{}",
+            w2.k(),
+            w2.n(),
+            hi - lo,
+            manifest.shape.n2
+        );
+        out.push((w1, w2));
+    }
+    Ok(out)
+}
+
+/// Load a full deployment (all ranks, all layers) from a repacked
+/// checkpoint directory: one [`DeployedMlp`] per layer, bit-identical
+/// to the in-memory [`crate::model::weights::deploy_quantized`] output
+/// for the same model/seed — the `serve --ckpt` boot path.
+pub fn load_deployment(dir: &Path, algo: Algo, tp: Topology) -> Result<Vec<DeployedMlp>> {
+    load_deployment_limit(dir, algo, tp, None)
+}
+
+/// As [`load_deployment`], reading only the first `max_layers` layers
+/// (all when `None`). Unread layers' sections are never checksummed or
+/// copied — `measure --ckpt`, which benches a single MLP, uses this to
+/// load exactly one layer.
+pub fn load_deployment_limit(
+    dir: &Path,
+    algo: Algo,
+    tp: Topology,
+    max_layers: Option<usize>,
+) -> Result<Vec<DeployedMlp>> {
+    let manifest = CkptManifest::load(dir)?;
+    let n_layers = max_layers.map_or(manifest.n_layers, |m| m.min(manifest.n_layers));
+    let mut rank_iters: Vec<_> = (0..tp.size)
+        .map(|rank| {
+            load_rank_layers_with(&manifest, dir, algo, tp, rank, n_layers)
+                .map(|v| v.into_iter())
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut out = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let mut w1_shards = Vec::with_capacity(tp.size);
+        let mut w2_shards = Vec::with_capacity(tp.size);
+        for it in &mut rank_iters {
+            let (w1, w2) = it
+                .next()
+                .ok_or_else(|| err!("rank file is missing layer {li}"))?;
+            w1_shards.push(LayerShard::Quant(w1));
+            w2_shards.push(LayerShard::Quant(w2));
+        }
+        let (p1, p2) = manifest.perms[li].clone();
+        out.push(DeployedMlp {
+            algo,
+            tp,
+            p1,
+            p2,
+            w1_shards,
+            w2_shards,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Activation;
+    use crate::model::weights::deploy_quantized;
+    use crate::util::proptest_lite::forall;
+
+    fn unit_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "unit".into(),
+            d_model: 32,
+            d_ff: 64,
+            n_layers: 2,
+            n_heads: 4,
+            vocab: 64,
+            max_seq: 32,
+            activation: Activation::Gelu,
+            group_size: 8,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tpaware-repack-test-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn extents_tile_property() {
+        forall("rank shard extents tile 0..n exactly", 100, |g| {
+            let p = [1usize, 2, 4, 8][g.below(4)];
+            // n divisible by 8p so every paper-legal config is covered.
+            let n = 8 * p * (1 + g.below(32));
+            let ext = shard_extents(n, Topology::new(p));
+            assert_eq!(ext.len(), p);
+            check_extents(n, &ext).unwrap();
+            // No overlap and full coverage, checked independently of
+            // check_extents' contiguity walk.
+            let mut covered = vec![0u8; n];
+            for &(lo, hi) in &ext {
+                for c in &mut covered[lo..hi] {
+                    *c += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "overlap or gap in {ext:?}");
+        });
+    }
+
+    #[test]
+    fn check_extents_rejects_bad_tilings() {
+        assert!(check_extents(8, &[(0, 4), (4, 8)]).is_ok());
+        for bad in [
+            vec![],                 // empty
+            vec![(0, 4)],           // short
+            vec![(0, 4), (5, 8)],   // gap
+            vec![(0, 5), (4, 8)],   // overlap
+            vec![(0, 4), (4, 9)],   // overrun
+            vec![(1, 4), (4, 8)],   // does not start at 0
+            vec![(0, 0), (0, 8)],   // empty extent
+        ] {
+            assert!(check_extents(8, &bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = CkptManifest {
+            model: "unit".into(),
+            // Above 2^53: must survive the JSON round-trip exactly
+            // (seeds travel as decimal strings, not f64 numbers).
+            seed: (1u64 << 53) + 1,
+            bits: 4,
+            group_size: 8,
+            n_layers: 2,
+            shape: MlpShape {
+                k1: 32,
+                n1: 64,
+                n2: 32,
+            },
+            algos: vec![Algo::Naive, Algo::TpAware],
+            tps: vec![2, 4],
+            perms: vec![
+                ((0..32).rev().collect(), (0..64).collect()),
+                ((0..32).collect(), (0..64).rev().collect()),
+            ],
+        };
+        let doc = json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(CkptManifest::from_json(&doc).unwrap(), m);
+    }
+
+    /// Hand-edited/corrupted manifests must error, never panic: every
+    /// field the loaders and kernels trust is validated in from_json.
+    #[test]
+    fn manifest_rejects_corrupt_fields() {
+        let good = CkptManifest {
+            model: "unit".into(),
+            seed: 7,
+            bits: 4,
+            group_size: 8,
+            n_layers: 1,
+            shape: MlpShape {
+                k1: 32,
+                n1: 64,
+                n2: 32,
+            },
+            algos: vec![Algo::TpAware],
+            tps: vec![2],
+            perms: vec![((0..32).collect(), (0..64).collect())],
+        };
+        let corrupt = |key: &str, value: Json| {
+            let mut doc = json::parse(&good.to_json().to_string()).unwrap();
+            if let Json::Obj(o) = &mut doc {
+                o.insert(key.to_string(), value);
+            }
+            CkptManifest::from_json(&doc).unwrap_err()
+        };
+        // Division-by-zero / Topology-panic vectors become errors.
+        let e = corrupt("bits", Json::Num(0.0));
+        assert!(format!("{e:#}").contains("bits=0"), "{e:#}");
+        let e = corrupt("group_size", Json::Num(7.0));
+        assert!(format!("{e:#}").contains("group_size=7"), "{e:#}");
+        let e = corrupt("tps", Json::Arr(vec![3usize.into()]));
+        assert!(format!("{e:#}").contains("tp=3"), "{e:#}");
+        let e = corrupt("tps", Json::Arr(vec![0usize.into()]));
+        assert!(format!("{e:#}").contains("tp=0"), "{e:#}");
+        // Truncated / non-permutation P arrays are caught at parse.
+        let bad_layers = Json::Arr(vec![Json::obj(vec![
+            ("p1", Json::Arr(vec![0usize.into(), 0usize.into()])),
+            ("p2", Json::Arr((0..64usize).map(Json::from).collect())),
+        ])]);
+        let e = corrupt("layers", bad_layers);
+        assert!(format!("{e:#}").contains("p1 is not a permutation"), "{e:#}");
+    }
+
+    #[test]
+    fn repack_then_load_is_bit_identical_to_in_memory_deploy() {
+        let cfg = unit_cfg();
+        let dir = tmp_dir("roundtrip");
+        let qcfg = GptqConfig {
+            group_size: cfg.group_size,
+            act_order: true,
+            ..Default::default()
+        };
+        let stats =
+            repack_model(&cfg, 5, &[Algo::Naive, Algo::TpAware], &[2, 4], &dir).unwrap();
+        assert_eq!(stats.files, 2 * (2 + 4));
+        assert!(stats.bytes > 0);
+        for algo in [Algo::Naive, Algo::TpAware] {
+            for tp in [2usize, 4] {
+                let topo = Topology::new(tp);
+                let got = load_deployment(&dir, algo, topo).unwrap();
+                assert_eq!(got.len(), cfg.n_layers);
+                for (li, d) in got.iter().enumerate() {
+                    let expect = deploy_quantized(
+                        &gen_checkpoint(cfg.mlp_shape(), layer_seed(5, li)),
+                        &qcfg,
+                        algo,
+                        topo,
+                    );
+                    assert_eq!(d, &expect, "algo={algo:?} tp={tp} layer={li}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loader_rejects_missing_algo_tp_and_corruption() {
+        let cfg = unit_cfg();
+        let dir = tmp_dir("reject");
+        repack_model(&cfg, 6, &[Algo::TpAware], &[2], &dir).unwrap();
+        // Algo not repacked.
+        let e = load_deployment(&dir, Algo::Naive, Topology::new(2)).unwrap_err();
+        assert!(format!("{e:#}").contains("no naive shards"), "{e:#}");
+        // TP not repacked.
+        let e = load_deployment(&dir, Algo::TpAware, Topology::new(4)).unwrap_err();
+        assert!(format!("{e:#}").contains("no tp=4 shards"), "{e:#}");
+        // Flip one byte deep inside rank 1's data area → checksum error.
+        let victim = rank_file(&dir, Algo::TpAware, 2, 1);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x80;
+        std::fs::write(&victim, &bytes).unwrap();
+        let e = load_deployment(&dir, Algo::TpAware, Topology::new(2)).unwrap_err();
+        assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repack_rejects_unshardable_tp() {
+        let cfg = unit_cfg(); // d_ff = 64
+        let dir = tmp_dir("unshardable");
+        // 64 channels across 3 ranks: not even.
+        let e = repack_model(&cfg, 1, &[Algo::TpAware], &[3], &dir).unwrap_err();
+        assert!(format!("{e:#}").contains("does not divide"), "{e:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,410 @@
+//! Writer/reader pair for `.tpck` containers.
+//!
+//! [`CkptWriter`] accumulates named `u32`/`f32` tensors plus a metadata
+//! object and serializes them in one shot ([`CkptWriter::write_to`]).
+//! [`CkptReader`] loads a file into an aligned buffer, validates the
+//! preamble and header eagerly (bad magic, unknown versions and
+//! truncations fail loudly at open), and hands out **borrowed,
+//! zero-copy** `&[u32]` / `&[f32]` views of aligned sections — a shard
+//! load materializes only the heap copies the model structs themselves
+//! need. Section accesses verify the FNV-1a checksum of the underlying
+//! bytes, so corruption surfaces at first touch;
+//! [`CkptReader::verify_all`] sweeps every section for tooling and the
+//! `ckpt_bench` verify-throughput measurement.
+
+use crate::ckpt::format::{
+    align_up, fnv1a, header_json, parse_header, AlignedBuf, Dtype, SectionMeta, ALIGN, MAGIC,
+    PREAMBLE, VERSION,
+};
+use crate::tensor::Matrix;
+use crate::util::error::{Context as _, Result};
+use crate::util::json::{self, Json};
+use crate::{bail, ensure};
+use std::path::Path;
+
+/// Accumulates sections + metadata and writes one `.tpck` container.
+#[derive(Debug)]
+pub struct CkptWriter {
+    meta: Json,
+    sections: Vec<(String, Dtype, Vec<usize>, Vec<u8>)>,
+}
+
+impl CkptWriter {
+    /// Start a container with caller metadata (any JSON object).
+    pub fn new(meta: Json) -> CkptWriter {
+        CkptWriter {
+            meta,
+            sections: Vec::new(),
+        }
+    }
+
+    fn add_raw(&mut self, name: &str, dtype: Dtype, shape: &[usize], bytes: Vec<u8>) {
+        assert!(
+            !self.sections.iter().any(|(n, ..)| n == name),
+            "duplicate section name '{name}'"
+        );
+        assert_eq!(
+            shape.iter().product::<usize>() * dtype.size(),
+            bytes.len(),
+            "section '{name}': shape {shape:?} does not match buffer size"
+        );
+        self.sections
+            .push((name.to_string(), dtype, shape.to_vec(), bytes));
+    }
+
+    /// Append a `u32` tensor section.
+    pub fn add_u32(&mut self, name: &str, shape: &[usize], data: &[u32]) {
+        let bytes = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.add_raw(name, Dtype::U32, shape, bytes);
+    }
+
+    /// Append an `f32` tensor section (stored as raw IEEE-754 bits —
+    /// round-trips are bit-exact).
+    pub fn add_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        let bytes = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.add_raw(name, Dtype::F32, shape, bytes);
+    }
+
+    /// Serialize the container to bytes (preamble + padded header +
+    /// aligned data area).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // Lay out the data area first so the header can record offsets.
+        let mut metas = Vec::with_capacity(self.sections.len());
+        let mut offset = 0usize;
+        for (name, dtype, shape, bytes) in &self.sections {
+            offset = align_up(offset, ALIGN);
+            metas.push(SectionMeta {
+                name: name.clone(),
+                dtype: *dtype,
+                shape: shape.clone(),
+                offset,
+                nbytes: bytes.len(),
+                checksum: fnv1a(bytes),
+            });
+            offset += bytes.len();
+        }
+        let header = header_json(&self.meta, &metas).to_string();
+        let data_start = align_up(PREAMBLE + header.len(), ALIGN);
+        let header_len = data_start - PREAMBLE;
+
+        let mut out = Vec::with_capacity(data_start + offset);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(header_len as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.resize(data_start, b' '); // pad the header with spaces
+        for (meta, (.., bytes)) in metas.iter().zip(&self.sections) {
+            out.resize(data_start + meta.offset, 0); // inter-section padding
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    /// Write the container to `path`, returning the bytes written.
+    pub fn write_to(&self, path: &Path) -> Result<usize> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing checkpoint file {}", path.display()))?;
+        Ok(bytes.len())
+    }
+}
+
+/// A parsed `.tpck` container with zero-copy section access.
+#[derive(Debug)]
+pub struct CkptReader {
+    buf: AlignedBuf,
+    meta: Json,
+    sections: Vec<SectionMeta>,
+    data_start: usize,
+}
+
+impl CkptReader {
+    /// Open and validate a container file (preamble, version, header
+    /// structure, section bounds; checksums are verified per access).
+    /// Reads straight into the aligned buffer — one copy off disk.
+    pub fn open(path: &Path) -> Result<CkptReader> {
+        let buf = AlignedBuf::read_file(path)
+            .with_context(|| format!("reading checkpoint file {}", path.display()))?;
+        CkptReader::from_buf(buf)
+            .with_context(|| format!("parsing checkpoint file {}", path.display()))
+    }
+
+    /// As [`CkptReader::open`], from an in-memory image (tests, tools).
+    pub fn from_bytes(bytes: &[u8]) -> Result<CkptReader> {
+        CkptReader::from_buf(AlignedBuf::from_bytes(bytes))
+    }
+
+    fn from_buf(buf: AlignedBuf) -> Result<CkptReader> {
+        let (meta, sections, data_start) = CkptReader::parse(buf.as_bytes())?;
+        Ok(CkptReader {
+            buf,
+            meta,
+            sections,
+            data_start,
+        })
+    }
+
+    /// Validate preamble/header/bounds; every arithmetic step on the
+    /// untrusted header fields is bounds-checked first, so corrupt
+    /// files produce errors, never overflow panics.
+    fn parse(bytes: &[u8]) -> Result<(Json, Vec<SectionMeta>, usize)> {
+        ensure!(
+            bytes.len() >= PREAMBLE,
+            "checkpoint truncated: {} bytes, the preamble alone is {PREAMBLE}",
+            bytes.len()
+        );
+        ensure!(
+            bytes[..4] == MAGIC,
+            "not a tpaware checkpoint (magic {:02x?}, expected {:02x?} = \"TPCK\")",
+            &bytes[..4],
+            MAGIC
+        );
+        let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+        ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads version {VERSION}); \
+             re-run the repacker from a matching build"
+        );
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes"));
+        // Bound-check before any usize arithmetic: a corrupt header_len
+        // near u64::MAX must error, not overflow.
+        ensure!(
+            header_len <= (bytes.len() - PREAMBLE) as u64,
+            "checkpoint truncated: header claims {header_len} bytes but only {} remain",
+            bytes.len() - PREAMBLE
+        );
+        let data_start = PREAMBLE + header_len as usize;
+        ensure!(
+            data_start % ALIGN == 0,
+            "checkpoint data area starts at {data_start}, not {ALIGN}-byte aligned \
+             (header was written unpadded?)"
+        );
+        let header = std::str::from_utf8(&bytes[PREAMBLE..data_start])
+            .map_err(|_| crate::err!("checkpoint header is not UTF-8"))?;
+        let doc = json::parse(header).context("parsing checkpoint header JSON")?;
+        let (meta, sections) = parse_header(&doc)?;
+        let data_len = bytes.len() - data_start;
+        for s in &sections {
+            ensure!(
+                s.offset.checked_add(s.nbytes).is_some_and(|end| end <= data_len),
+                "section '{}' ({} bytes at offset {}) overruns the {data_len}-byte data area \
+                 — checkpoint truncated or corrupted",
+                s.name,
+                s.nbytes,
+                s.offset
+            );
+        }
+        Ok((meta, sections, data_start))
+    }
+
+    /// The caller metadata object recorded at write time.
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    /// Section descriptors, in file order.
+    pub fn sections(&self) -> &[SectionMeta] {
+        &self.sections
+    }
+
+    /// Look up a section descriptor by name.
+    pub fn section(&self, name: &str) -> Result<&SectionMeta> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("checkpoint has no section '{name}'"))
+    }
+
+    /// The checksum-verified raw bytes of a section.
+    pub fn section_bytes(&self, name: &str) -> Result<&[u8]> {
+        let s = self.section(name)?;
+        let lo = self.data_start + s.offset;
+        let bytes = &self.buf.as_bytes()[lo..lo + s.nbytes];
+        let computed = fnv1a(bytes);
+        ensure!(
+            computed == s.checksum,
+            "checksum mismatch in section '{name}': stored {:016x}, computed {computed:016x} \
+             — checkpoint corrupted",
+            s.checksum
+        );
+        Ok(bytes)
+    }
+
+    fn typed_section(&self, name: &str, dtype: Dtype) -> Result<&[u8]> {
+        let s = self.section(name)?;
+        ensure!(
+            s.dtype == dtype,
+            "section '{name}' holds {}, requested as {}",
+            s.dtype.name(),
+            dtype.name()
+        );
+        self.section_bytes(name)
+    }
+
+    /// Borrowed zero-copy view of a `u32` section (checksum-verified).
+    pub fn section_u32(&self, name: &str) -> Result<&[u32]> {
+        let bytes = self.typed_section(name, Dtype::U32)?;
+        // Alignment holds by construction: the buffer base is 8-aligned
+        // and data_start/offset are ALIGN-multiples. Assert anyway so a
+        // malformed file can never reach the unsafe reinterpret.
+        assert_eq!(bytes.as_ptr() as usize % 4, 0, "section '{name}' misaligned");
+        Ok(unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const u32, bytes.len() / 4)
+        })
+    }
+
+    /// Borrowed zero-copy view of an `f32` section (checksum-verified).
+    pub fn section_f32(&self, name: &str) -> Result<&[f32]> {
+        let bytes = self.typed_section(name, Dtype::F32)?;
+        assert_eq!(bytes.as_ptr() as usize % 4, 0, "section '{name}' misaligned");
+        Ok(unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
+        })
+    }
+
+    /// Copy a 2-D `f32` section into an owned [`Matrix`].
+    pub fn section_matrix(&self, name: &str) -> Result<Matrix> {
+        let s = self.section(name)?;
+        if s.shape.len() != 2 {
+            bail!(
+                "section '{name}' has shape {:?}, expected a 2-D matrix",
+                s.shape
+            );
+        }
+        let (rows, cols) = (s.shape[0], s.shape[1]);
+        let data = self.section_f32(name)?.to_vec();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Verify every section's checksum (the load path verifies lazily,
+    /// per access; this is the exhaustive sweep for tools and benches).
+    pub fn verify_all(&self) -> Result<()> {
+        for s in &self.sections {
+            self.section_bytes(&s.name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_writer() -> CkptWriter {
+        let mut w = CkptWriter::new(Json::obj(vec![
+            ("model", "unit".into()),
+            ("rank", 0usize.into()),
+        ]));
+        w.add_u32("a.qweight", &[2, 3], &[1, 2, 3, 4, 5, 0xffff_ffff]);
+        w.add_f32("a.scales", &[1, 4], &[0.5, -1.25, f32::MIN_POSITIVE, 3.0e8]);
+        w.add_u32("a.gidx", &[5], &[0, 0, 1, 1, 2]);
+        w
+    }
+
+    #[test]
+    fn header_and_sections_roundtrip() {
+        let bytes = sample_writer().to_bytes();
+        let r = CkptReader::from_bytes(&bytes).unwrap();
+        assert_eq!(r.meta().get("model").as_str(), Some("unit"));
+        assert_eq!(r.meta().get("rank").as_usize(), Some(0));
+        assert_eq!(r.sections().len(), 3);
+        assert_eq!(r.section("a.qweight").unwrap().shape, vec![2, 3]);
+        assert_eq!(
+            r.section_u32("a.qweight").unwrap(),
+            &[1, 2, 3, 4, 5, 0xffff_ffff]
+        );
+        // f32 round-trips bit-exactly, including extreme values.
+        assert_eq!(
+            r.section_f32("a.scales").unwrap(),
+            &[0.5, -1.25, f32::MIN_POSITIVE, 3.0e8]
+        );
+        let m = r.section_matrix("a.scales").unwrap();
+        assert_eq!((m.rows, m.cols), (1, 4));
+        r.verify_all().unwrap();
+    }
+
+    #[test]
+    fn sections_are_aligned_for_zero_copy() {
+        let bytes = sample_writer().to_bytes();
+        let r = CkptReader::from_bytes(&bytes).unwrap();
+        for s in r.sections() {
+            assert_eq!(s.offset % ALIGN, 0, "section {} misaligned", s.name);
+        }
+        // The borrowed views really are views into the load buffer.
+        let buf_range = r.buf.as_bytes().as_ptr() as usize
+            ..r.buf.as_bytes().as_ptr() as usize + r.buf.len();
+        let view = r.section_u32("a.gidx").unwrap();
+        assert!(buf_range.contains(&(view.as_ptr() as usize)));
+    }
+
+    #[test]
+    fn corruption_is_detected_on_access() {
+        let mut bytes = sample_writer().to_bytes();
+        // Flip one bit in the last data byte (inside `a.gidx`).
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40;
+        let r = CkptReader::from_bytes(&bytes).unwrap();
+        // Untouched sections still read fine...
+        assert!(r.section_u32("a.qweight").is_ok());
+        // ...the corrupted one fails loudly, on access and in the sweep.
+        let e = r.section_u32("a.gidx").unwrap_err();
+        assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+        assert!(r.verify_all().is_err());
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let mut bytes = sample_writer().to_bytes();
+        bytes[4..8].copy_from_slice(&7u32.to_le_bytes());
+        let e = CkptReader::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unsupported checkpoint version 7"), "{msg}");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_rejected() {
+        let bytes = sample_writer().to_bytes();
+        let mut evil = bytes.clone();
+        evil[0] = b'X';
+        let msg = format!("{:#}", CkptReader::from_bytes(&evil).unwrap_err());
+        assert!(msg.contains("not a tpaware checkpoint"), "{msg}");
+
+        let msg = format!("{:#}", CkptReader::from_bytes(&bytes[..8]).unwrap_err());
+        assert!(msg.contains("truncated"), "{msg}");
+
+        // Cut inside the data area: a section now overruns the file.
+        let msg =
+            format!("{:#}", CkptReader::from_bytes(&bytes[..bytes.len() - 8]).unwrap_err());
+        assert!(msg.contains("overruns"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_dtype_access_is_rejected() {
+        let bytes = sample_writer().to_bytes();
+        let r = CkptReader::from_bytes(&bytes).unwrap();
+        let e = r.section_f32("a.qweight").unwrap_err();
+        assert!(format!("{e:#}").contains("holds u32"));
+        assert!(r.section("missing").is_err());
+        assert!(r.section_matrix("a.gidx").is_err()); // 1-D, not a matrix
+    }
+
+    #[test]
+    fn file_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("tpck-store-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.tpck");
+        let written = sample_writer().write_to(&path).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len() as usize);
+        let r = CkptReader::open(&path).unwrap();
+        assert_eq!(r.section_u32("a.gidx").unwrap(), &[0, 0, 1, 1, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate section")]
+    fn writer_rejects_duplicate_names() {
+        let mut w = CkptWriter::new(Json::Null);
+        w.add_u32("x", &[1], &[1]);
+        w.add_u32("x", &[1], &[2]);
+    }
+}

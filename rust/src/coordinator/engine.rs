@@ -244,6 +244,29 @@ impl TpEngine {
         })
     }
 
+    /// Start the rank pool from a **repacked on-disk checkpoint**: each
+    /// layer's per-rank [`crate::model::weights::LayerShard`]s are read
+    /// from `ckpt_dir` (written offline by the `repack` subcommand /
+    /// [`crate::ckpt::repack::repack_model`]) instead of being
+    /// quantized in-process — the boot path never touches the GPTQ
+    /// quantizer. Checksum or manifest mismatches fail loudly here,
+    /// before any rank thread starts.
+    pub fn start_from_ckpt(
+        backend: EngineBackend,
+        ckpt_dir: &std::path::Path,
+        algo: Algo,
+        tp: crate::tp::topology::Topology,
+        act: Activation,
+        manifest: Option<&Manifest>,
+        codec: CodecSpec,
+    ) -> Result<TpEngine> {
+        let layers = crate::ckpt::repack::load_deployment(ckpt_dir, algo, tp)
+            .with_context(|| {
+                format!("loading repacked checkpoint {} for the TP engine", ckpt_dir.display())
+            })?;
+        TpEngine::start_with_codec(backend, layers, act, manifest, codec)
+    }
+
     /// The deployment algorithm all layers run.
     pub fn algo(&self) -> Algo {
         self.algo
@@ -433,6 +456,63 @@ mod tests {
         assert!(s.codec_err.elems > 0);
         let diff = got.max_abs_diff(&oracle);
         assert!(diff < 4.0, "int8-wire output drifted: {diff}");
+    }
+
+    /// A checkpoint-booted engine is indistinguishable from one built
+    /// from in-memory quantization: same shards, bit-identical outputs.
+    #[test]
+    fn engine_from_ckpt_matches_in_memory_engine() {
+        use crate::ckpt::repack::repack_model;
+        use crate::model::config::ModelConfig;
+        use crate::model::weights::layer_seed;
+        let mcfg = ModelConfig {
+            name: "unit".into(),
+            d_model: 32,
+            d_ff: 64,
+            n_layers: 2,
+            n_heads: 4,
+            vocab: 64,
+            max_seq: 32,
+            activation: Activation::Gelu,
+            group_size: 8,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("tpaware-engine-ckpt-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        repack_model(&mcfg, 17, &[Algo::TpAware], &[2], &dir).unwrap();
+        let tp = Topology::new(2);
+        let layers: Vec<DeployedMlp> = (0..mcfg.n_layers)
+            .map(|li| {
+                deploy_quantized(
+                    &gen_checkpoint(mcfg.mlp_shape(), layer_seed(17, li)),
+                    &cfg(),
+                    Algo::TpAware,
+                    tp,
+                )
+            })
+            .collect();
+        let mem =
+            TpEngine::start(EngineBackend::Host, layers, Activation::Gelu, None).unwrap();
+        let disk = TpEngine::start_from_ckpt(
+            EngineBackend::Host,
+            &dir,
+            Algo::TpAware,
+            tp,
+            Activation::Gelu,
+            None,
+            CodecSpec::Fp32,
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(3);
+        let x = Matrix::randn(2, 32, &mut rng);
+        for l in 0..mcfg.n_layers {
+            let a = mem.mlp(l, &x).unwrap();
+            let b = disk.mlp(l, &x).unwrap();
+            assert_eq!(a.max_abs_diff(&b), 0.0, "layer {l} diverged");
+        }
+        mem.shutdown();
+        disk.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

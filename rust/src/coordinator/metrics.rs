@@ -134,6 +134,29 @@ pub fn comm_stats_json(s: &CommStats) -> Json {
     ])
 }
 
+/// Startup accounting for the serving process: where the model weights
+/// came from and how long they took to materialize. Reported once by
+/// the `serve` boot path — the number the `ckpt` subsystem exists to
+/// shrink (disk load vs in-process re-quantization).
+#[derive(Clone, Debug, Default)]
+pub struct StartupStats {
+    /// `"synthesized"` (in-memory GPTQ quantization) or `"ckpt"`
+    /// (booted from a repacked checkpoint directory); empty until the
+    /// server reports it.
+    pub weights_source: String,
+    /// Wall-clock milliseconds spent materializing the model weights.
+    pub weights_ms: f64,
+}
+
+/// JSON view of a startup snapshot (the `startup` object of the
+/// metrics endpoint).
+pub fn startup_json(s: &StartupStats) -> Json {
+    Json::obj(vec![
+        ("weights_source", s.weights_source.as_str().into()),
+        ("weights_ms", s.weights_ms.into()),
+    ])
+}
+
 /// JSON view of a KV-pool occupancy snapshot (the `kv` object of the
 /// metrics endpoint).
 pub fn kv_stats_json(s: &KvPoolStats) -> Json {
@@ -183,6 +206,9 @@ pub struct Metrics {
     /// KV-pool occupancy (last snapshot pushed by the continuous
     /// scheduler via [`Metrics::set_kv`]; all-zero without a pool).
     pub kv: Mutex<KvPoolStats>,
+    /// Startup accounting (set once by the `serve` boot path via
+    /// [`Metrics::set_startup`]; empty source string until then).
+    pub startup: Mutex<StartupStats>,
 }
 
 impl Metrics {
@@ -205,6 +231,15 @@ impl Metrics {
     /// once per tick).
     pub fn set_kv(&self, stats: KvPoolStats) {
         *self.kv.lock().unwrap() = stats;
+    }
+
+    /// Record how the serving weights were materialized at boot
+    /// (`source`: `"synthesized"` or `"ckpt"`; `ms`: wall-clock time).
+    pub fn set_startup(&self, source: &str, ms: f64) {
+        *self.startup.lock().unwrap() = StartupStats {
+            weights_source: source.to_string(),
+            weights_ms: ms,
+        };
     }
 
     /// Mean decode batch occupancy (tokens per step).
@@ -255,6 +290,7 @@ impl Metrics {
             ("admission", self.admission.to_json()),
             ("comm", comm_stats_json(&self.comm.lock().unwrap())),
             ("kv", kv_stats_json(&self.kv.lock().unwrap())),
+            ("startup", startup_json(&self.startup.lock().unwrap())),
         ])
     }
 }
@@ -325,6 +361,21 @@ mod tests {
         assert_eq!(comm.get("total_wire_bytes").as_usize(), Some(1152));
         assert_eq!(comm.get("codec_err_elems").as_usize(), Some(2));
         assert!(comm.get("codec_err_max_abs").as_f64().unwrap() > 0.2);
+    }
+
+    #[test]
+    fn startup_snapshot_surfaces_source_and_time() {
+        let m = Metrics::default();
+        // Default: unset.
+        let j = m.to_json();
+        assert_eq!(j.get("startup").get("weights_source").as_str(), Some(""));
+        m.set_startup("ckpt", 12.5);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("startup").get("weights_source").as_str(),
+            Some("ckpt")
+        );
+        assert_eq!(j.get("startup").get("weights_ms").as_f64(), Some(12.5));
     }
 
     #[test]

@@ -169,6 +169,21 @@ impl Server {
         })
     }
 
+    /// Block until a client-initiated shutdown (`{"cmd": "shutdown"}`)
+    /// stops the acceptor and scheduler threads — the `serve` CLI's
+    /// main loop, so the process exits cleanly after
+    /// `client --shutdown` instead of sleeping forever.
+    /// [`Server::stop`] remains the programmatic way to stop a server
+    /// you still hold.
+    pub fn run_until_shutdown(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched_handle.take() {
+            let _ = h.join();
+        }
+    }
+
     /// Signal shutdown and join the threads.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
@@ -434,6 +449,18 @@ mod tests {
             c.shutdown().unwrap();
             server.stop();
         }
+    }
+
+    #[test]
+    fn run_until_shutdown_returns_after_client_shutdown() {
+        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let addr = server.addr.clone();
+        let waiter = std::thread::spawn(move || server.run_until_shutdown());
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.generate(&[1], 2).unwrap();
+        assert_eq!(r.tokens.len(), 2);
+        c.shutdown().unwrap();
+        waiter.join().unwrap();
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //!
 //! * [`quant`] — GPTQ quantizer, int4 packing, group-index algebra
 //!   (Eq. 1 / Eq. 3 / Algorithm 1), permutation algebra.
+//! * [`ckpt`] — on-disk quantized checkpoint store and the TP-aware
+//!   offline repacker: Algorithm 1/3 applied once, per-rank shard
+//!   files + manifest persisted, serve boots from disk.
 //! * [`gemm`] — host dequant + GEMM engine (the ExllamaV2 stand-in).
 //! * [`tp`] — thread-per-rank tensor-parallel runtime: topology,
 //!   byte-moving collectives, on-the-wire codecs (fp32 / bf16 /
@@ -58,6 +61,7 @@
 // map these item docs hang off of.
 #![warn(missing_docs)]
 
+pub mod ckpt;
 pub mod coordinator;
 pub mod gemm;
 pub mod model;

@@ -6,15 +6,18 @@
 //!   tables      print the paper's tables from the calibrated model
 //!   measure     measured-mode Alg.2 vs Alg.3 on thread ranks (host/PJRT)
 //!   quantize    quantize a synthetic checkpoint and report error stats
+//!   repack      offline repack: quantize once, write per-rank shard files
 //!   validate    run the cross-layer validation suite (PJRT vs host oracle)
 
 use std::sync::Arc;
 use tpaware::bail;
+use tpaware::ckpt::repack::{load_deployment, load_deployment_limit, repack_model, CkptManifest};
 use tpaware::coordinator::engine::{EngineBackend, TpEngine};
 use tpaware::coordinator::kv_pool::KvPoolCfg;
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
 use tpaware::coordinator::server::{Client, Server};
+use tpaware::ensure;
 use tpaware::err;
 use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
@@ -63,6 +66,7 @@ Subcommands:
   tables     regenerate the paper's tables (modeled A100/H100)
   measure    measured Alg.2 vs Alg.3 on this machine's thread ranks
   quantize   GPTQ a synthetic layer; report error statistics
+  repack     offline repack: quantize once, write per-rank shard files
   validate   cross-layer validation: PJRT artifacts vs host oracle
 
 Run `tpaware <subcommand> --help` for flags.
@@ -82,6 +86,7 @@ fn run(args: &[String]) -> Result<()> {
         "tables" => cmd_tables(rest),
         "measure" => cmd_measure(rest),
         "quantize" => cmd_quantize(rest),
+        "repack" => cmd_repack(rest),
         "validate" => cmd_validate(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -117,7 +122,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("kv-tokens", "16384", "KV pool: total cached-token budget")
         .flag("seed", "42", "weight synthesis seed")
         .flag("artifacts", "artifacts", "artifacts directory")
-        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]");
+        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]")
+        .flag(
+            "ckpt",
+            "",
+            "boot weights from a repacked checkpoint directory (see 'repack') \
+             instead of re-quantizing in memory",
+        );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model '{}'", a.get("model")))?;
@@ -130,10 +141,43 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_seqs: a.usize("kv-seqs")?,
         max_tokens: a.usize("kv-tokens")?,
     };
-    let model = Arc::new(Transformer::synthesize(&cfg, algo, tp, a.u64("seed")?));
+    let seed = a.u64("seed")?;
+    let ckpt_dir = a.get("ckpt").to_string();
+    let t0 = std::time::Instant::now();
+    let (model, weights_source) = if ckpt_dir.is_empty() {
+        (
+            Arc::new(Transformer::synthesize(&cfg, algo, tp, seed)),
+            "synthesized",
+        )
+    } else {
+        let dir = std::path::Path::new(&ckpt_dir);
+        let manifest = CkptManifest::load(dir)?;
+        ensure!(
+            manifest.model == cfg.name,
+            "checkpoint at {} was repacked for model '{}', serving '{}'",
+            dir.display(),
+            manifest.model,
+            cfg.name
+        );
+        ensure!(
+            manifest.seed == seed,
+            "checkpoint at {} was repacked with seed {}, serving --seed {seed} \
+             (attention weights would diverge)",
+            dir.display(),
+            manifest.seed
+        );
+        let layers = load_deployment(dir, algo, tp)?;
+        (
+            Arc::new(Transformer::synthesize_with_deployments(
+                &cfg, algo, tp, seed, layers,
+            )?),
+            "ckpt",
+        )
+    };
+    let weights_ms = t0.elapsed().as_secs_f64() * 1e3;
     eprintln!(
-        "synthesized {} ({} layers, d={}, ff={}), algo={algo:?}, tp={}, codec={}, \
-         scheduler={} (kv pool: {} seqs / {} tokens)",
+        "weights {weights_source} in {weights_ms:.1} ms — {} ({} layers, d={}, ff={}), \
+         algo={algo:?}, tp={}, codec={}, scheduler={} (kv pool: {} seqs / {} tokens)",
         cfg.name,
         cfg.n_layers,
         cfg.d_model,
@@ -167,18 +211,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         other => bail!("unknown backend '{other}'"),
     };
     eprintln!("engine up ({} backend)", a.get("backend"));
-    let scheduler = Scheduler::new(
-        model,
-        engine,
-        Arc::new(Metrics::default()),
-        a.usize("max-batch")?,
-    );
+    let metrics = Arc::new(Metrics::default());
+    metrics.set_startup(weights_source, weights_ms);
+    let scheduler = Scheduler::new(model, engine, metrics, a.usize("max-batch")?);
     let server = Server::start_with(a.get("addr"), scheduler, pool_cfg, mode)?;
     println!("listening on {}", server.addr);
     // Serve until a client sends {"cmd":"shutdown"}.
-    loop {
-        std::thread::sleep(std::time::Duration::from_millis(200));
-    }
+    server.run_until_shutdown();
+    Ok(())
 }
 
 fn cmd_client(args: &[String]) -> Result<()> {
@@ -303,18 +343,56 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         .flag("tp", "1,2,4", "TP widths")
         .flag("m", "1,4,16", "batch sizes")
         .flag("seed", "7", "weight seed")
-        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]");
+        .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]")
+        .flag(
+            "ckpt",
+            "",
+            "load layer-0 deployments from a repacked checkpoint directory \
+             (needs both algorithms: repack with --algo both) instead of quantizing",
+        );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model"))?;
     let codec = parse_codec(a.get("comm-codec"))?;
+    let ckpt_dir = a.get("ckpt").to_string();
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
         group_size: cfg.group_size,
         act_order: true,
         ..Default::default()
     };
-    let ckpt = gen_checkpoint(shape, a.u64("seed")?);
+    if !ckpt_dir.is_empty() {
+        let manifest = CkptManifest::load(std::path::Path::new(&ckpt_dir))?;
+        ensure!(
+            manifest.shape == shape,
+            "checkpoint at {ckpt_dir} holds MLP shape ({}, {}, {}); --model {} needs \
+             ({}, {}, {})",
+            manifest.shape.k1,
+            manifest.shape.n1,
+            manifest.shape.n2,
+            cfg.name,
+            shape.k1,
+            shape.n1,
+            shape.n2
+        );
+        ensure!(
+            manifest.group_size == cfg.group_size && manifest.bits == qcfg.bits,
+            "checkpoint at {ckpt_dir} is {}-bit G={}; --model {} benches {}-bit G={} \
+             (the header would misreport the loaded config)",
+            manifest.bits,
+            manifest.group_size,
+            cfg.name,
+            qcfg.bits,
+            cfg.group_size
+        );
+    }
+    // Synthesized only on the in-memory path — `--ckpt`'s whole point
+    // is to skip weight synthesis + quantization.
+    let ckpt = if ckpt_dir.is_empty() {
+        Some(gen_checkpoint(shape, a.u64("seed")?))
+    } else {
+        None
+    };
     println!(
         "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}, comm codec {}",
         shape.k1,
@@ -342,8 +420,29 @@ fn cmd_measure(args: &[String]) -> Result<()> {
     );
     for &tp in &a.usize_list("tp")? {
         let topo = Topology::new(tp);
-        let dn = deploy_quantized(&ckpt, &qcfg, Algo::Naive, topo);
-        let da = deploy_quantized(&ckpt, &qcfg, Algo::TpAware, topo);
+        let (dn, da) = if let Some(ckpt) = &ckpt {
+            (
+                deploy_quantized(ckpt, &qcfg, Algo::Naive, topo),
+                deploy_quantized(ckpt, &qcfg, Algo::TpAware, topo),
+            )
+        } else {
+            let dir = std::path::Path::new(&ckpt_dir);
+            let t0 = std::time::Instant::now();
+            // One MLP is benched, so load exactly one layer per algo.
+            let mut naive = load_deployment_limit(dir, Algo::Naive, topo, Some(1))?;
+            let mut aware = load_deployment_limit(dir, Algo::TpAware, topo, Some(1))?;
+            ensure!(
+                !naive.is_empty() && !aware.is_empty(),
+                "checkpoint at {} holds no layers",
+                dir.display()
+            );
+            eprintln!(
+                "tp={tp}: loaded layer-0 deployments from {} in {:.1} ms (quantizer skipped)",
+                dir.display(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            (naive.swap_remove(0), aware.swap_remove(0))
+        };
         for &m in &a.usize_list("m")? {
             let mut rng = Xoshiro256::new(99);
             let x = Matrix::randn(m, shape.k1, &mut rng);
@@ -448,6 +547,62 @@ fn cmd_quantize(args: &[String]) -> Result<()> {
     );
     println!("  P[0..8] = {:?}", &p[..8.min(p.len())]);
     println!("  bytes: packed+meta {} (fp16 would be {})", q.nbytes(), k * n * 2);
+    Ok(())
+}
+
+fn cmd_repack(args: &[String]) -> Result<()> {
+    let spec = Command::new(
+        "repack",
+        "offline TP-aware repack: quantize once, write per-rank shard files",
+    )
+    .flag(
+        "model",
+        "tiny",
+        "model config (tiny | llama-scaled | granite-scaled)",
+    )
+    .flag("seed", "42", "weight synthesis seed (serve --ckpt must match)")
+    .flag(
+        "algo",
+        "tp-aware",
+        "algorithms to materialize: naive | tp-aware | both",
+    )
+    .flag("tp", "2,4,8", "tensor-parallel widths to pre-shard for")
+    .flag("out", "ckpt", "output checkpoint directory");
+    let a = spec.parse(args)?;
+    let cfg = ModelConfig::by_name(a.get("model"))
+        .ok_or_else(|| err!("unknown model '{}'", a.get("model")))?;
+    let algos: Vec<Algo> = match a.get("algo") {
+        "both" => vec![Algo::Naive, Algo::TpAware],
+        s => vec![parse_algo(s)?],
+    };
+    let tps = a.usize_list("tp")?;
+    let dir = std::path::PathBuf::from(a.get("out"));
+    let shape = cfg.mlp_shape();
+    let stats = repack_model(&cfg, a.u64("seed")?, &algos, &tps, &dir)?;
+    println!(
+        "repacked {} ({} layers, MLP ({}, {}, {}), int4 G={}) for tp {:?}",
+        cfg.name, cfg.n_layers, shape.k1, shape.n1, shape.n2, cfg.group_size, tps
+    );
+    println!(
+        "  quantize (GPTQ + Alg.1): {:.1} ms   shard + write: {:.1} ms",
+        stats.quantize_ms, stats.write_ms
+    );
+    println!(
+        "  {} rank files, {} bytes → {}",
+        stats.files,
+        stats.bytes,
+        dir.display()
+    );
+    println!(
+        "  manifest: {}  (inspect with tools/ckpt_inspect.py)",
+        dir.join("manifest.json").display()
+    );
+    println!(
+        "  boot with: tpaware serve --backend host --model {} --seed {} --ckpt {}",
+        cfg.name,
+        a.get("seed"),
+        dir.display()
+    );
     Ok(())
 }
 

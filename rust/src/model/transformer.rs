@@ -9,14 +9,18 @@
 //! "additional tricks" and leaves it out of scope — we follow suit), while
 //! each MLP is deployed with Algorithm 2 or Algorithm 3.
 
+use crate::ensure;
 use crate::gemm::naive::matmul_blocked;
 use crate::model::config::ModelConfig;
 use crate::model::mlp::run_mlp_sequential;
-use crate::model::weights::{deploy_quantized, gen_checkpoint, DeployedMlp, MlpCheckpoint};
+use crate::model::weights::{
+    deploy_quantized, gen_checkpoint, layer_seed, DeployedMlp, MlpCheckpoint,
+};
 use crate::quant::gptq::GptqConfig;
 use crate::simkernel::pipeline::Algo;
 use crate::tensor::Matrix;
 use crate::tp::topology::Topology;
+use crate::util::error::Result;
 use crate::util::prng::Xoshiro256;
 
 /// Weights of one transformer block.
@@ -34,9 +38,12 @@ pub struct BlockWeights {
     pub attn_norm: Vec<f32>,
     /// Pre-MLP RMSNorm gain.
     pub mlp_norm: Vec<f32>,
-    /// The quantized checkpoint this block's MLP came from (kept for
-    /// re-deployment at other TP widths / algorithms).
-    pub mlp_ckpt: MlpCheckpoint,
+    /// The unquantized synthesis checkpoint this block's MLP came from,
+    /// kept for re-deployment at other TP widths / algorithms. `None`
+    /// when the model was booted from a repacked on-disk checkpoint —
+    /// that path deliberately skips weight synthesis, so such models
+    /// cannot [`Transformer::redeploy`] (re-run `repack` instead).
+    pub mlp_ckpt: Option<MlpCheckpoint>,
     /// TP-deployed quantized MLP.
     pub mlp: DeployedMlp,
 }
@@ -124,6 +131,45 @@ impl Transformer {
     /// Build a synthetic model, quantize every MLP with act_order GPTQ and
     /// deploy with `algo` at TP width `tp`.
     pub fn synthesize(cfg: &ModelConfig, algo: Algo, tp: Topology, seed: u64) -> Transformer {
+        Self::build(cfg, algo, tp, seed, None).expect("in-memory synthesis cannot fail")
+    }
+
+    /// As [`Transformer::synthesize`], but the (expensive) per-layer
+    /// quantize+deploy step is replaced by the provided deployments —
+    /// e.g. loaded from a repacked checkpoint directory by
+    /// [`crate::ckpt::repack::load_deployment`]. Attention weights and
+    /// embeddings are still synthesized from `seed` (they draw from an
+    /// RNG stream independent of the MLP checkpoints), so a checkpoint
+    /// repacked from the same config and seed boots a model that is
+    /// bit-identical to in-memory synthesis. Errors loudly when the
+    /// deployments don't match the config's layer count, shapes, `algo`
+    /// or `tp`.
+    pub fn synthesize_with_deployments(
+        cfg: &ModelConfig,
+        algo: Algo,
+        tp: Topology,
+        seed: u64,
+        mlps: Vec<DeployedMlp>,
+    ) -> Result<Transformer> {
+        Self::build(cfg, algo, tp, seed, Some(mlps))
+    }
+
+    fn build(
+        cfg: &ModelConfig,
+        algo: Algo,
+        tp: Topology,
+        seed: u64,
+        mlps: Option<Vec<DeployedMlp>>,
+    ) -> Result<Transformer> {
+        if let Some(mlps) = &mlps {
+            ensure!(
+                mlps.len() == cfg.n_layers,
+                "{} MLP deployments provided for a {}-layer model",
+                mlps.len(),
+                cfg.n_layers
+            );
+        }
+        let mut provided = mlps.map(|v| v.into_iter());
         let mut rng = Xoshiro256::new(seed);
         let d = cfg.d_model;
         let scale = 1.0 / (d as f32).sqrt();
@@ -140,34 +186,71 @@ impl Transformer {
             act_order: true,
             ..Default::default()
         };
-        let blocks = (0..cfg.n_layers)
-            .map(|li| {
-                let mlp_ckpt = gen_checkpoint(cfg.mlp_shape(), seed ^ ((li as u64 + 1) * 7919));
-                let mlp = deploy_quantized(&mlp_ckpt, &qcfg, algo, tp);
-                BlockWeights {
-                    wq: mat(d, d, &mut rng),
-                    wk: mat(d, d, &mut rng),
-                    wv: mat(d, d, &mut rng),
-                    wo: mat(d, d, &mut rng),
-                    attn_norm: vec![1.0; d],
-                    mlp_norm: vec![1.0; d],
-                    mlp_ckpt,
-                    mlp,
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            // Only the in-memory path synthesizes the dense per-layer
+            // checkpoint; a ckpt boot skips that work (and the resident
+            // fp32 copies) entirely.
+            let (mlp_ckpt, mlp) = match &mut provided {
+                Some(it) => {
+                    let dep = it.next().expect("length checked above");
+                    ensure!(
+                        dep.algo == algo && dep.tp == tp,
+                        "layer {li} deployment is {:?}/tp={}, requested {algo:?}/tp={}",
+                        dep.algo,
+                        dep.tp.size,
+                        tp.size
+                    );
+                    ensure!(
+                        dep.w1_shards.len() == tp.size && dep.w2_shards.len() == tp.size,
+                        "layer {li} deployment has {}/{} shards for tp={}",
+                        dep.w1_shards.len(),
+                        dep.w2_shards.len(),
+                        tp.size
+                    );
+                    ensure!(
+                        dep.w1_shards[0].k() == cfg.d_model
+                            && dep.w2_shards[0].n() == cfg.d_model,
+                        "layer {li} deployment shapes ({} in, {} out) don't match d_model={}",
+                        dep.w1_shards[0].k(),
+                        dep.w2_shards[0].n(),
+                        cfg.d_model
+                    );
+                    (None, dep)
                 }
-            })
-            .collect();
-        Transformer {
+                None => {
+                    let ckpt = gen_checkpoint(cfg.mlp_shape(), layer_seed(seed, li));
+                    let mlp = deploy_quantized(&ckpt, &qcfg, algo, tp);
+                    (Some(ckpt), mlp)
+                }
+            };
+            blocks.push(BlockWeights {
+                wq: mat(d, d, &mut rng),
+                wk: mat(d, d, &mut rng),
+                wv: mat(d, d, &mut rng),
+                wo: mat(d, d, &mut rng),
+                attn_norm: vec![1.0; d],
+                mlp_norm: vec![1.0; d],
+                mlp_ckpt,
+                mlp,
+            });
+        }
+        Ok(Transformer {
             cfg: cfg.clone(),
             embedding,
             blocks,
             final_norm: vec![1.0; d],
             algo,
             tp,
-        }
+        })
     }
 
     /// Re-deploy every MLP with a different algorithm / TP width
     /// (weights unchanged — offline transform only).
+    ///
+    /// Panics on a checkpoint-booted model: that path never held the
+    /// unquantized synthesis weights. Re-run `repack` for the new
+    /// algorithm/TP degree instead.
     pub fn redeploy(&self, algo: Algo, tp: Topology) -> Transformer {
         let qcfg = GptqConfig {
             group_size: self.cfg.group_size,
@@ -178,7 +261,11 @@ impl Transformer {
         out.algo = algo;
         out.tp = tp;
         for b in &mut out.blocks {
-            b.mlp = deploy_quantized(&b.mlp_ckpt, &qcfg, algo, tp);
+            let ckpt = b.mlp_ckpt.as_ref().expect(
+                "redeploy needs the synthesis checkpoint; ckpt-booted models \
+                 must be repacked offline for a new algo/tp instead",
+            );
+            b.mlp = deploy_quantized(ckpt, &qcfg, algo, tp);
         }
         out
     }
@@ -373,6 +460,56 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.len(), 6);
         assert!(a.iter().all(|&t| t < 64));
+    }
+
+    /// Supplying the deployments a synthesize run would have produced
+    /// yields a bit-identical model — the invariant behind ckpt boots.
+    #[test]
+    fn synthesize_with_deployments_matches_synthesize() {
+        let cfg = tiny_cfg();
+        let tp = Topology::new(2);
+        let base = Transformer::synthesize(&cfg, Algo::TpAware, tp, 8);
+        let mlps: Vec<DeployedMlp> = base.blocks.iter().map(|b| b.mlp.clone()).collect();
+        let booted =
+            Transformer::synthesize_with_deployments(&cfg, Algo::TpAware, tp, 8, mlps).unwrap();
+        assert_eq!(booted.embedding, base.embedding);
+        for (a, b) in booted.blocks.iter().zip(&base.blocks) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(a.wo, b.wo);
+            assert_eq!(a.mlp, b.mlp);
+        }
+        assert_eq!(booted.generate(&[3, 1], 5), base.generate(&[3, 1], 5));
+    }
+
+    #[test]
+    fn synthesize_with_deployments_rejects_mismatches() {
+        let cfg = tiny_cfg();
+        let tp = Topology::new(2);
+        let base = Transformer::synthesize(&cfg, Algo::TpAware, tp, 8);
+        let mlps: Vec<DeployedMlp> = base.blocks.iter().map(|b| b.mlp.clone()).collect();
+        // Wrong layer count.
+        let e = Transformer::synthesize_with_deployments(
+            &cfg,
+            Algo::TpAware,
+            tp,
+            8,
+            mlps[..1].to_vec(),
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("2-layer"), "{e:#}");
+        // Wrong TP width.
+        assert!(Transformer::synthesize_with_deployments(
+            &cfg,
+            Algo::TpAware,
+            Topology::new(4),
+            8,
+            mlps.clone()
+        )
+        .is_err());
+        // Wrong algorithm.
+        assert!(
+            Transformer::synthesize_with_deployments(&cfg, Algo::Naive, tp, 8, mlps).is_err()
+        );
     }
 
     #[test]

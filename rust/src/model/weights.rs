@@ -51,8 +51,19 @@ pub fn permute_cols_quant(q: &QuantizedLinear, p: &[u32]) -> QuantizedLinear {
     }
 }
 
+/// Per-layer weight-synthesis seed, shared by
+/// [`crate::model::transformer::Transformer::synthesize`] and the
+/// offline repacker ([`crate::ckpt::repack::repack_model`]) — both must
+/// derive the same per-layer seeds for a checkpoint boot to be
+/// bit-identical with in-memory synthesis.
+pub fn layer_seed(model_seed: u64, layer: usize) -> u64 {
+    model_seed ^ ((layer as u64 + 1) * 7919)
+}
+
 /// One rank's shard of one linear layer, dense or quantized.
-#[derive(Clone, Debug)]
+/// `PartialEq` compares stored bits exactly (packed words, f32
+/// metadata bit patterns) — the checkpoint round-trip tests rely on it.
+#[derive(Clone, Debug, PartialEq)]
 pub enum LayerShard {
     /// FP16-style dense weights (stored f32 host-side).
     Dense(Matrix),
@@ -101,7 +112,7 @@ impl LayerShard {
 }
 
 /// A deployable, sharded two-layer MLP with its permutation metadata.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeployedMlp {
     /// Deployment algorithm the shards were prepared for.
     pub algo: Algo,
@@ -168,24 +179,34 @@ pub fn quantize_and_reorder(
     (p1, q1r, p2, q2r)
 }
 
-/// Prepare a quantized deployment for `algo` at tensor-parallel width `tp`.
-pub fn deploy_quantized(
-    ckpt: &MlpCheckpoint,
-    cfg: &GptqConfig,
+/// Algorithm-specific offline alignment of the Algorithm-1-reordered
+/// `W1[P1, :]`: identity for the naive algorithm (moves, no copy), the
+/// paper's `W1[P1, P2]` column gather (Algorithm 3) for TP-aware.
+pub fn align_w1(q1r: QuantizedLinear, p2: &[u32], algo: Algo) -> QuantizedLinear {
+    match algo {
+        Algo::Naive => q1r,
+        Algo::TpAware => permute_cols_quant(&q1r, p2),
+    }
+}
+
+/// Shard an aligned layer pair across `tp` ranks. This is the shard
+/// tail shared by the in-memory path ([`deploy_quantized`]) and the
+/// offline repacker ([`crate::ckpt::repack::repack_model`]) — one
+/// implementation, so checkpoint boots are bit-identical by
+/// construction.
+pub fn shard_aligned(
+    p1: Vec<u32>,
+    p2: Vec<u32>,
+    w1_full: &QuantizedLinear,
+    q2r: &QuantizedLinear,
     algo: Algo,
     tp: Topology,
 ) -> DeployedMlp {
-    let (p1, q1r, p2, q2r) = quantize_and_reorder(ckpt, cfg);
-    let w1_full = match algo {
-        Algo::Naive => q1r,
-        // The paper's offline transform: W1[P1, P2].
-        Algo::TpAware => permute_cols_quant(&q1r, &p2),
-    };
     let w1_shards = (0..tp.size)
-        .map(|r| LayerShard::Quant(col_shard_quant(&w1_full, tp, r)))
+        .map(|r| LayerShard::Quant(col_shard_quant(w1_full, tp, r)))
         .collect();
     let w2_shards = (0..tp.size)
-        .map(|r| LayerShard::Quant(row_shard_quant(&q2r, tp, r)))
+        .map(|r| LayerShard::Quant(row_shard_quant(q2r, tp, r)))
         .collect();
     DeployedMlp {
         algo,
@@ -195,6 +216,32 @@ pub fn deploy_quantized(
         w1_shards,
         w2_shards,
     }
+}
+
+/// Assemble a deployment from already-quantized, Algorithm-1-reordered
+/// layers (the output of [`quantize_and_reorder`]): [`align_w1`] then
+/// [`shard_aligned`].
+pub fn deploy_from_reordered(
+    p1: Vec<u32>,
+    q1r: QuantizedLinear,
+    p2: Vec<u32>,
+    q2r: &QuantizedLinear,
+    algo: Algo,
+    tp: Topology,
+) -> DeployedMlp {
+    let w1_full = align_w1(q1r, &p2, algo);
+    shard_aligned(p1, p2, &w1_full, q2r, algo, tp)
+}
+
+/// Prepare a quantized deployment for `algo` at tensor-parallel width `tp`.
+pub fn deploy_quantized(
+    ckpt: &MlpCheckpoint,
+    cfg: &GptqConfig,
+    algo: Algo,
+    tp: Topology,
+) -> DeployedMlp {
+    let (p1, q1r, p2, q2r) = quantize_and_reorder(ckpt, cfg);
+    deploy_from_reordered(p1, q1r, p2, &q2r, algo, tp)
 }
 
 /// Prepare a dense (FP16-style) deployment: same permutation plumbing as

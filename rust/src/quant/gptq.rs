@@ -48,8 +48,9 @@ impl Default for GptqConfig {
 }
 
 /// A quantized linear layer: packed weights + metadata, in original
-/// channel order.
-#[derive(Clone, Debug)]
+/// channel order. `PartialEq` is exact (integer words and f32 bit
+/// patterns) — used to assert checkpoint round-trips are bit-identical.
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantizedLinear {
     /// Packed integers, original channel order, `K×N` logical.
     pub packed: PackedWeights,

@@ -25,15 +25,43 @@ impl PackedWeights {
         (32 / self.bits) as usize
     }
 
-    /// Packed row count `K / per_word`.
+    /// Packed row count `K / per_word`. Panics (rather than silently
+    /// truncating the last partial row) when `K` is not a multiple of
+    /// the packing factor — such a buffer cannot have come from
+    /// [`pack`] and addressing it would read the wrong words.
     pub fn packed_rows(&self) -> usize {
-        self.k / self.per_word()
+        let per = self.per_word();
+        assert_eq!(
+            self.k % per,
+            0,
+            "PackedWeights: K={} is not a multiple of the {}-bit packing factor {per}; \
+             refusing to truncate to {} packed rows",
+            self.k,
+            self.bits,
+            self.k / per
+        );
+        self.k / per
     }
 
     /// Extract the value at logical position `(k, n)`.
+    ///
+    /// A buffer whose `K` is not a multiple of the packing factor (see
+    /// [`PackedWeights::packed_rows`]) is rejected — row addressing
+    /// would silently alias across columns otherwise. The check is a
+    /// `debug_assert` because this sits in the dequant/GEMM inner loops
+    /// and the invariant is per-buffer: [`pack`] and the checkpoint
+    /// loader both enforce it at construction, and [`PackedWeights::packed_rows`]
+    /// asserts it unconditionally once per buffer.
     #[inline]
     pub fn get(&self, k: usize, n: usize) -> u32 {
         let per = self.per_word();
+        debug_assert_eq!(
+            self.k % per,
+            0,
+            "PackedWeights: K={} is not a multiple of the {}-bit packing factor {per}",
+            self.k,
+            self.bits
+        );
         let word = self.words[(k / per) * self.n + n];
         let shift = (k % per) as u32 * self.bits;
         (word >> shift) & ((1 << self.bits) - 1)
@@ -145,5 +173,29 @@ mod tests {
     fn pack_rejects_ragged_k() {
         let q = vec![0u32; 5 * 3];
         pack(&q, 5, 3, 4);
+    }
+
+    // A hand-built buffer with ragged K (impossible via `pack`) must be
+    // rejected by the accessors instead of silently truncating rows.
+
+    fn ragged() -> PackedWeights {
+        PackedWeights {
+            words: vec![0u32; 2],
+            k: 12, // not a multiple of 8
+            n: 1,
+            bits: 4,
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of the 4-bit packing factor 8")]
+    fn get_rejects_ragged_k() {
+        ragged().get(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing to truncate")]
+    fn packed_rows_rejects_ragged_k() {
+        ragged().packed_rows();
     }
 }

@@ -1,0 +1,143 @@
+//! Checkpoint-subsystem integration: the full repack → load → serve
+//! chain. A server booted from a repacked on-disk checkpoint must be
+//! indistinguishable — bit-identical weights, identical generations —
+//! from one that re-quantized in memory, and corrupted artifacts must
+//! fail loudly before serving starts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use tpaware::ckpt::repack::{load_deployment, rank_file, repack_model};
+use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::coordinator::server::{Client, Server};
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::transformer::Transformer;
+use tpaware::simkernel::pipeline::Algo;
+use tpaware::tp::topology::Topology;
+
+fn unit_model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "unit".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+        activation: Activation::Gelu,
+        group_size: 8,
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tpaware-integration-ckpt-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The acceptance-criterion invariant at the model level: a
+/// checkpoint-booted transformer carries bit-identical deployments and
+/// generates exactly the tokens the in-memory model generates.
+#[test]
+fn ckpt_boot_is_bit_identical_to_in_memory_boot() {
+    let cfg = unit_model_cfg();
+    let dir = tmp_dir("boot");
+    let seed = 9;
+    repack_model(&cfg, seed, &[Algo::Naive, Algo::TpAware], &[2], &dir).unwrap();
+    for algo in [Algo::Naive, Algo::TpAware] {
+        let tp = Topology::new(2);
+        let mem = Transformer::synthesize(&cfg, algo, tp, seed);
+        let layers = load_deployment(&dir, algo, tp).unwrap();
+        let booted =
+            Transformer::synthesize_with_deployments(&cfg, algo, tp, seed, layers).unwrap();
+        // Bit-identical weights end to end...
+        assert_eq!(booted.embedding, mem.embedding, "algo={algo:?}");
+        for (a, b) in booted.blocks.iter().zip(&mem.blocks) {
+            assert_eq!(a.mlp, b.mlp, "algo={algo:?}");
+            assert_eq!(a.wq, b.wq);
+        }
+        // ...hence identical serving behavior.
+        let prompt = [5u32, 9, 13];
+        assert_eq!(
+            booted.generate(&prompt, 6),
+            mem.generate(&prompt, 6),
+            "algo={algo:?}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `serve --ckpt` smoke at the library level: a TCP server whose
+/// model and TP engine were booted from disk serves the same tokens as
+/// direct generation on the in-memory model.
+#[test]
+fn tcp_serving_from_ckpt_matches_memory_path() {
+    let cfg = unit_model_cfg();
+    let dir = tmp_dir("tcp");
+    let seed = 21;
+    let tp = Topology::new(2);
+    repack_model(&cfg, seed, &[Algo::TpAware], &[2], &dir).unwrap();
+
+    // In-memory reference (what the non-ckpt server would serve).
+    let mem = Transformer::synthesize(&cfg, Algo::TpAware, tp, seed);
+    let expected = mem.generate(&[7, 3], 5);
+
+    // Checkpoint-booted server: model + engine both come from the dir.
+    let layers = load_deployment(&dir, Algo::TpAware, tp).unwrap();
+    let model = Arc::new(
+        Transformer::synthesize_with_deployments(&cfg, Algo::TpAware, tp, seed, layers)
+            .unwrap(),
+    );
+    let engine = TpEngine::start_from_ckpt(
+        EngineBackend::Host,
+        &dir,
+        Algo::TpAware,
+        tp,
+        cfg.activation,
+        None,
+        tpaware::tp::codec::CodecSpec::Fp32,
+    )
+    .unwrap();
+    let metrics = Arc::new(Metrics::default());
+    metrics.set_startup("ckpt", 1.0);
+    let scheduler = Scheduler::new(model, Some(engine), metrics, 4);
+    let server = Server::start("127.0.0.1:0", scheduler).unwrap();
+    let addr = server.addr.clone();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.generate(&[7, 3], 5).unwrap();
+    assert_eq!(r.tokens, expected);
+    let m = c.metrics().unwrap();
+    assert_eq!(
+        m.get("startup").get("weights_source").as_str(),
+        Some("ckpt")
+    );
+    c.shutdown().unwrap();
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corruption anywhere in a rank file surfaces as a loud checksum error
+/// on the boot path — a damaged checkpoint can never serve silently.
+#[test]
+fn corrupted_rank_file_fails_the_boot_loudly() {
+    let cfg = unit_model_cfg();
+    let dir = tmp_dir("corrupt");
+    repack_model(&cfg, 4, &[Algo::TpAware], &[2], &dir).unwrap();
+    let victim = rank_file(&dir, Algo::TpAware, 2, 0);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let last = bytes.len() - 1; // always inside the final data section
+    bytes[last] ^= 0x01;
+    std::fs::write(&victim, &bytes).unwrap();
+    let err = load_deployment(&dir, Algo::TpAware, Topology::new(2)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("checksum mismatch") || msg.contains("corrupted"),
+        "unexpected error: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Dump tpaware checkpoint headers and manifests — stdlib only.
+
+Point it at a checkpoint directory (written by `tpaware repack`) to
+summarize its `manifest.json` and list the rank shard files, or at one
+or more `.tpck` container files to print their preamble, metadata and
+section table. `--verify` recomputes every section's FNV-1a checksum.
+
+Usage:
+  python3 tools/ckpt_inspect.py <ckpt-dir | file.tpck> [more...] [--verify]
+
+The container layout is documented in `rust/src/ckpt/format.rs`:
+  0x00 magic b"TPCK" | 0x04 version u32 LE | 0x08 header_len u64 LE |
+  0x10 JSON header (space-padded) | 64-byte-aligned raw sections.
+"""
+
+import argparse
+import json
+import struct
+import sys
+from pathlib import Path
+
+MAGIC = b"TPCK"
+PREAMBLE = 16
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def human(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.0f} {unit}" if unit == "B" else f"{n:.1f} {unit}"
+        n /= 1024
+    return f"{n:.0f} B"  # unreachable
+
+
+def dump_container(path: Path, verify: bool) -> int:
+    raw = path.read_bytes()
+    if len(raw) < PREAMBLE or raw[:4] != MAGIC:
+        print(f"error: {path} is not a tpaware .tpck container", file=sys.stderr)
+        return 1
+    (version,) = struct.unpack_from("<I", raw, 4)
+    (header_len,) = struct.unpack_from("<Q", raw, 8)
+    data_start = PREAMBLE + header_len
+    header = json.loads(raw[PREAMBLE:data_start].decode("utf-8"))
+    meta, sections = header.get("meta", {}), header.get("sections", [])
+    print(f"{path}  ({human(len(raw))}, container v{version})")
+    print(f"  meta: {json.dumps(meta, sort_keys=True)}")
+    name_w = max((len(s["name"]) for s in sections), default=4)
+    print(f"  {'section':<{name_w}}  dtype  {'shape':<14} {'bytes':>10}  offset    fnv1a")
+    total = 0
+    rc = 0
+    for s in sections:
+        total += s["nbytes"]
+        status = ""
+        if verify:
+            lo = data_start + s["offset"]
+            got = fnv1a(raw[lo : lo + s["nbytes"]])
+            ok = got == int(s["fnv1a"], 16)
+            status = "  OK" if ok else f"  CORRUPT (computed {got:016x})"
+            rc |= 0 if ok else 1
+        print(
+            f"  {s['name']:<{name_w}}  {s['dtype']:<5}  {str(s['shape']):<14}"
+            f" {s['nbytes']:>10}  {s['offset']:<8}  {s['fnv1a']}{status}"
+        )
+    print(f"  {len(sections)} sections, {human(total)} of tensor data")
+    return rc
+
+
+def dump_dir(path: Path, verify: bool) -> int:
+    manifest_path = path / "manifest.json"
+    if not manifest_path.is_file():
+        print(f"error: {manifest_path} not found — not a checkpoint dir", file=sys.stderr)
+        return 1
+    m = json.loads(manifest_path.read_text())
+    shape = m.get("shape", {})
+    print(f"{path}  (tpaware checkpoint, manifest v{m.get('version')})")
+    print(
+        f"  model {m.get('model')!r}  seed {m.get('seed')}  "
+        f"{m.get('bits')}-bit G={m.get('group_size')}  "
+        f"{m.get('n_layers')} layers, MLP "
+        f"({shape.get('k1')}, {shape.get('n1')}, {shape.get('n2')})"
+    )
+    print(f"  algos {m.get('algos')}  tps {m.get('tps')}")
+    for tp, extents in sorted(m.get("extents", {}).items(), key=lambda kv: int(kv[0])):
+        print(f"  extents tp={tp}: {extents}")
+    rc = 0
+    for algo in m.get("algos", []):
+        for tp in m.get("tps", []):
+            for rank in range(tp):
+                f = path / algo / f"tp{tp}" / f"rank{rank}.tpck"
+                if f.is_file():
+                    print(f"  shard {f.relative_to(path)}  {human(f.stat().st_size)}")
+                    if verify:
+                        rc |= dump_container(f, verify=True)
+                else:
+                    print(f"  shard {f.relative_to(path)}  MISSING")
+                    rc = 1
+    return rc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="checkpoint directory or .tpck file")
+    ap.add_argument(
+        "--verify", action="store_true", help="recompute section checksums (slow)"
+    )
+    args = ap.parse_args()
+    rc = 0
+    for p in map(Path, args.paths):
+        if p.is_dir():
+            rc |= dump_dir(p, args.verify)
+        else:
+            rc |= dump_container(p, args.verify)
+        print()
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
