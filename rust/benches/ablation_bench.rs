@@ -181,7 +181,8 @@ fn main() {
          is the paper.\n"
     );
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/ablation_bench.csv", csv).ok();
-    println!("CSV written to bench_results/ablation_bench.csv");
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("ablation_bench.csv"), csv).ok();
+    println!("CSV written to {}", dir.join("ablation_bench.csv").display());
 }

@@ -129,7 +129,10 @@ fn main() {
     ]);
     println!("{}", s.render());
 
-    std::fs::create_dir_all("bench_results").ok();
+    // Distinct binding from the tmp checkpoint `dir` above — the
+    // cleanup below must remove the checkpoint, not the CSV output dir.
+    let results = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&results).ok();
     let csv = format!(
         "config,tp,bytes,requant_ms,write_ms,load_ms,verify_ms,startup_speedup\n\
          {},{TP},{},{requant_ms:.3},{write_ms:.3},{:.3},{:.3},{speedup:.2}\n",
@@ -138,8 +141,8 @@ fn main() {
         s_load.mean_ms(),
         s_verify.mean_ms()
     );
-    std::fs::write("bench_results/ckpt_bench.csv", csv).ok();
-    println!("CSV written to bench_results/ckpt_bench.csv");
+    std::fs::write(results.join("ckpt_bench.csv"), csv).ok();
+    println!("CSV written to {}", results.join("ckpt_bench.csv").display());
 
     std::fs::remove_dir_all(&dir).ok();
     assert!(

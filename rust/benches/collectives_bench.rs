@@ -188,8 +188,9 @@ fn main() {
         }
         println!("{}", t.render());
     }
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/collectives_codec_sweep.csv", codec_csv).ok();
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("collectives_codec_sweep.csv"), codec_csv).ok();
 
     // The specific AllGather the paper deletes, at paper scale (modeled).
     let mut t = Table::new(
@@ -220,7 +221,6 @@ fn main() {
     }
     println!("{}", t.render());
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/collectives_bench.csv", csv).ok();
-    println!("CSV written to bench_results/collectives_bench.csv");
+    std::fs::write(dir.join("collectives_bench.csv"), csv).ok();
+    println!("CSV written to {}", dir.join("collectives_bench.csv").display());
 }

@@ -1,0 +1,186 @@
+//! Fused dequant-GEMM backend sweep: `naive` (scalar) vs `tiled` vs
+//! `tiled-mt` across the scaled paper MLP shapes, both weight layouts,
+//! decode batch sizes — with the simkernel CPU-tiling model printed next
+//! to the measured numbers.
+//!
+//! Every backend is first checked **bit-identical** to the scalar
+//! baseline (exact equality — the backend contract), then timed. The
+//! bench asserts the acceptance bar in-process (`tiled-mt` beats `naive`
+//! on the granite MLP shape) and emits:
+//!
+//! * `bench_results/gemm_bench.csv` — the full sweep;
+//! * `bench_results/BENCH_gemm.json` — backend × shape GiB/s on the
+//!   deployment (Algorithm-1 ordered) layout, consumed by the CI
+//!   `bench-gate` job against `ci/bench_baseline.json`.
+//!
+//! Run: `cargo bench --bench gemm_bench`
+
+use tpaware::gemm::{dequant_matmul, GemmBackend, TileConfig};
+use tpaware::quant::gidx::GroupIndex;
+use tpaware::quant::gptq::QuantizedLinear;
+use tpaware::quant::pack::pack;
+use tpaware::quant::perm;
+use tpaware::simkernel::gemm_model::{fused_gemm_cpu_s, HOST_CPU};
+use tpaware::tensor::Matrix;
+use tpaware::util::json::Json;
+use tpaware::util::prng::Xoshiro256;
+use tpaware::util::table::Table;
+use tpaware::util::timer::{bench, black_box, BenchCfg};
+
+/// Synthesize an act_order-layout quantized layer directly (random codes
+/// + metadata + salience permutation): the kernels only see layouts, not
+/// quantization quality, so this skips the GPTQ solve and keeps the
+/// bench start-up instant at any shape.
+fn synth_layer(k: usize, n: usize, g: usize, rng: &mut Xoshiro256) -> QuantizedLinear {
+    let bits = 4u32;
+    let phi = rng.permutation(k);
+    let gidx = GroupIndex::act_order(&phi, g);
+    let vals: Vec<u32> = (0..k * n).map(|_| rng.below(16) as u32).collect();
+    let groups = k / g;
+    let scales = Matrix::from_fn(groups, n, |_, _| rng.uniform(0.01, 0.1));
+    let zeros = Matrix::from_fn(groups, n, |_, _| rng.below(16) as f32);
+    QuantizedLinear {
+        packed: pack(&vals, k, n, bits),
+        scales,
+        zeros,
+        gidx,
+        phi,
+        bits,
+    }
+}
+
+/// Effective bytes one fused pass touches once: packed weights +
+/// metadata + activations in/out (f32 host-side).
+fn pass_bytes(q: &QuantizedLinear, m: usize) -> f64 {
+    (q.nbytes() + m * (q.k() + q.n()) * 4) as f64
+}
+
+fn main() {
+    let bcfg = BenchCfg::default().from_env();
+    let fast = std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1");
+    let g = 32usize;
+    let shapes: [(&str, usize, usize); 2] =
+        [("llama-mlp-w1", 512, 1792), ("granite-mlp-w1", 512, 2048)];
+    let ms: &[usize] = if fast { &[1, 16] } else { &[1, 4, 16] };
+    let tile = TileConfig::host_default();
+    let pool_workers = tpaware::gemm::pool::global().workers();
+    println!(
+        "fused dequant-GEMM backend sweep, int4 G={g}, gemm pool: {pool_workers} workers \
+         (+1 caller), blocking MC={} KC={}G NC={}\n",
+        tile.mc, tile.kc_groups, tile.nc
+    );
+
+    let mut csv = String::from("shape,layout,m,backend,ms,gib_s,modeled_ms\n");
+    // shape → backend → GiB/s at the largest M, ordered layout.
+    let mut gate: Vec<(&str, Vec<(&str, f64)>)> = Vec::new();
+    let m_gate = *ms.last().unwrap();
+
+    for (name, k, n) in shapes {
+        let mut rng = Xoshiro256::new(7);
+        let q = synth_layer(k, n, g, &mut rng);
+        let (p, q_opt) = q.reorder();
+        let mut gate_row: Vec<(&str, f64)> = Vec::new();
+        let mut t = Table::new(
+            &format!("{name} (K={k}, N={n})"),
+            &["layout", "M", "backend", "ms", "GiB/s", "modeled ms"],
+        );
+        for (layout, layer) in [("act-order", &q), ("ordered", &q_opt)] {
+            for &m in ms {
+                let x0 = Matrix::randn(m, k, &mut rng);
+                let x = if layout == "ordered" {
+                    perm::apply_cols(&x0, &p)
+                } else {
+                    x0
+                };
+                // The backend contract, checked before timing: exact
+                // equality with the scalar baseline.
+                let base = dequant_matmul(GemmBackend::Naive, &x, layer);
+                for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                    let got = dequant_matmul(b, &x, layer);
+                    assert_eq!(
+                        got.max_abs_diff(&base),
+                        0.0,
+                        "{name} {layout} m={m}: {b:?} is not bit-identical"
+                    );
+                }
+                for b in GemmBackend::all() {
+                    let s = bench(&bcfg, || {
+                        black_box(dequant_matmul(b, &x, layer));
+                    });
+                    let secs = s.mean_ns / 1e9;
+                    let gib_s = pass_bytes(layer, m) / secs / (1u64 << 30) as f64;
+                    let modeled_ms =
+                        fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, b, &tile) * 1e3;
+                    t.row(vec![
+                        layout.to_string(),
+                        m.to_string(),
+                        b.label().to_string(),
+                        format!("{:.3}", s.mean_ms()),
+                        format!("{gib_s:.2}"),
+                        format!("{modeled_ms:.3}"),
+                    ]);
+                    csv.push_str(&format!(
+                        "{name},{layout},{m},{},{:.4},{gib_s:.3},{modeled_ms:.4}\n",
+                        b.label(),
+                        s.mean_ms()
+                    ));
+                    if layout == "ordered" && m == m_gate {
+                        gate_row.push((b.label(), gib_s));
+                    }
+                }
+            }
+        }
+        println!("{}", t.render());
+        gate.push((name, gate_row));
+    }
+
+    // The acceptance bar, asserted in-process: on the granite MLP shape
+    // the multi-threaded tiled backend must beat the scalar baseline.
+    let granite = gate
+        .iter()
+        .find(|(name, _)| *name == "granite-mlp-w1")
+        .expect("granite shape benched");
+    let lookup = |row: &[(&str, f64)], label: &str| -> f64 {
+        row.iter().find(|(l, _)| *l == label).expect("backend row").1
+    };
+    let naive_gibs = lookup(&granite.1, "naive");
+    let mt_gibs = lookup(&granite.1, "tiled-mt");
+    assert!(
+        mt_gibs > naive_gibs,
+        "tiled-mt ({mt_gibs:.2} GiB/s) must beat naive ({naive_gibs:.2} GiB/s) \
+         on granite-mlp-w1"
+    );
+    println!(
+        "granite-mlp-w1 ordered, M={m_gate}: tiled-mt {mt_gibs:.2} GiB/s vs naive \
+         {naive_gibs:.2} GiB/s ({:.2}x) — acceptance bar (tiled-mt > naive) holds\n",
+        mt_gibs / naive_gibs
+    );
+
+    // BENCH_gemm.json for the CI bench-gate job.
+    let shape_objs: Vec<(&str, Json)> = gate
+        .iter()
+        .map(|(name, row)| {
+            let backends: Vec<(&str, Json)> =
+                row.iter().map(|(l, gib)| (*l, Json::from(*gib))).collect();
+            (*name, Json::obj(backends))
+        })
+        .collect();
+    let mode = if fast { "fast" } else { "full" };
+    let out = Json::obj(vec![
+        ("mode", mode.into()),
+        ("layout", "ordered".into()),
+        ("m", m_gate.into()),
+        ("group_size", g.into()),
+        ("pool_workers", pool_workers.into()),
+        ("gib_s", Json::obj(shape_objs)),
+    ]);
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("BENCH_gemm.json"), out.to_pretty()).ok();
+    std::fs::write(dir.join("gemm_bench.csv"), csv).ok();
+    println!(
+        "CSV written to {}; gate input to {}",
+        dir.join("gemm_bench.csv").display(),
+        dir.join("BENCH_gemm.json").display()
+    );
+}

@@ -138,7 +138,8 @@ fn main() {
          ~{penalty:.3} ms/pass — the locality cost Algorithm 1 removes\n"
     );
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/kernel_bench.csv", csv).ok();
-    println!("CSV written to bench_results/kernel_bench.csv");
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("kernel_bench.csv"), csv).ok();
+    println!("CSV written to {}", dir.join("kernel_bench.csv").display());
 }

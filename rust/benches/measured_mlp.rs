@@ -197,7 +197,8 @@ fn main() {
         Err(e) => println!("(skipping PJRT sweep: {e})"),
     }
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/measured_mlp.csv", csv).ok();
-    println!("CSV written to bench_results/measured_mlp.csv");
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("measured_mlp.csv"), csv).ok();
+    println!("CSV written to {}", dir.join("measured_mlp.csv").display());
 }

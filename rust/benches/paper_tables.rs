@@ -204,7 +204,8 @@ fn main() {
         println!("  {model} {gpu} TP=8 average speedup: {avg:.2}x");
     }
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/paper_tables.csv", csv).ok();
-    println!("\nCSV written to bench_results/paper_tables.csv");
+    let dir = tpaware::util::timer::bench_results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("paper_tables.csv"), csv).ok();
+    println!("\nCSV written to {}", dir.join("paper_tables.csv").display());
 }

@@ -15,6 +15,7 @@
 //! inter-layer step, AllReduce for the Row-TP epilogue); rank 0 returns
 //! the reduced result.
 
+use crate::gemm::GemmBackend;
 use crate::model::config::Activation;
 use crate::model::mlp::all_gather_cols;
 use crate::model::weights::DeployedMlp;
@@ -50,11 +51,28 @@ enum Job {
     Stop,
 }
 
+/// Engine-wide execution options: the wire codec collectives encode
+/// with, and the GEMM backend host rank workers dispatch to. Both are
+/// orthogonal to the deployment algorithm; the `Default` is the stack's
+/// default configuration (`fp32` wire, `tiled` GEMM).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineOptions {
+    /// On-the-wire codec for all inter-rank collectives.
+    pub codec: CodecSpec,
+    /// Fused dequant-GEMM backend for the host compute path (ignored by
+    /// the PJRT backend, whose kernels are compiled artifacts).
+    pub gemm: GemmBackend,
+}
+
 /// Handle to the rank pool.
 pub struct TpEngine {
     algo: Algo,
     tp: usize,
     codec: CodecSpec,
+    gemm: GemmBackend,
+    /// True when rank workers run host GEMMs (false ⇒ PJRT executables,
+    /// where [`EngineOptions::gemm`] is irrelevant).
+    host_gemm: bool,
     n_layers: usize,
     senders: Vec<mpsc::Sender<Job>>,
     reply: mpsc::Receiver<Result<Matrix>>,
@@ -66,6 +84,8 @@ struct WorkerCtx {
     rank: usize,
     comm: RankComm,
     act: Activation,
+    /// GEMM backend for the host compute path.
+    gemm: GemmBackend,
     /// Per-layer deployment metadata (perms + host shards).
     layers: Arc<Vec<DeployedMlp>>,
     /// PJRT executor (None → host backend).
@@ -92,9 +112,10 @@ impl WorkerCtx {
             }
             (None, _) => {
                 // Host backend: the same dataflow via the fused-dequant
-                // host kernels (run_rank owns the phase logic).
-                let (out, _) = crate::model::mlp::run_rank(
-                    d, self.rank, &self.comm, x, self.act,
+                // host kernels (run_rank owns the phase logic). All rank
+                // threads share one gemm::pool under tiled-mt.
+                let (out, _) = crate::model::mlp::run_rank_with(
+                    d, self.rank, &self.comm, x, self.act, self.gemm,
                 );
                 Ok(out)
             }
@@ -144,6 +165,29 @@ impl TpEngine {
         manifest: Option<&Manifest>,
         codec: CodecSpec,
     ) -> Result<TpEngine> {
+        TpEngine::start_with_opts(
+            backend,
+            layers,
+            act,
+            manifest,
+            EngineOptions {
+                codec,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// The fully-general constructor: [`TpEngine::start`] plus explicit
+    /// [`EngineOptions`] — wire codec and host GEMM backend.
+    pub fn start_with_opts(
+        backend: EngineBackend,
+        layers: Vec<DeployedMlp>,
+        act: Activation,
+        manifest: Option<&Manifest>,
+        opts: EngineOptions,
+    ) -> Result<TpEngine> {
+        let EngineOptions { codec, gemm } = opts;
+        let host_gemm = backend == EngineBackend::Host;
         let first = layers
             .first()
             .ok_or_else(|| err!("engine needs at least one layer"))?;
@@ -208,6 +252,7 @@ impl TpEngine {
                         rank,
                         comm,
                         act,
+                        gemm,
                         layers,
                         exec,
                     };
@@ -236,6 +281,8 @@ impl TpEngine {
             algo,
             tp,
             codec,
+            gemm,
+            host_gemm,
             n_layers,
             senders,
             reply: reply_rx,
@@ -258,13 +305,13 @@ impl TpEngine {
         tp: crate::tp::topology::Topology,
         act: Activation,
         manifest: Option<&Manifest>,
-        codec: CodecSpec,
+        opts: EngineOptions,
     ) -> Result<TpEngine> {
         let layers = crate::ckpt::repack::load_deployment(ckpt_dir, algo, tp)
             .with_context(|| {
                 format!("loading repacked checkpoint {} for the TP engine", ckpt_dir.display())
             })?;
-        TpEngine::start_with_codec(backend, layers, act, manifest, codec)
+        TpEngine::start_with_opts(backend, layers, act, manifest, opts)
     }
 
     /// The deployment algorithm all layers run.
@@ -278,6 +325,22 @@ impl TpEngine {
     /// The wire codec the engine's collectives encode with.
     pub fn codec(&self) -> CodecSpec {
         self.codec
+    }
+    /// The fused dequant-GEMM backend host rank workers dispatch to.
+    pub fn gemm_backend(&self) -> GemmBackend {
+        self.gemm
+    }
+    /// Metrics label for the compute path actually executing GEMMs:
+    /// the host backend's [`GemmBackend`] label, or `"pjrt"` when the
+    /// engine runs compiled PJRT kernels (where [`EngineOptions::gemm`]
+    /// never applies — reporting a host backend there would attribute
+    /// the run to kernels that never executed).
+    pub fn gemm_backend_label(&self) -> &'static str {
+        if self.host_gemm {
+            self.gemm.label()
+        } else {
+            "pjrt"
+        }
     }
     /// MLP layers deployed on this engine.
     pub fn n_layers(&self) -> usize {
@@ -500,7 +563,7 @@ mod tests {
             tp,
             Activation::Gelu,
             None,
-            CodecSpec::Fp32,
+            EngineOptions::default(),
         )
         .unwrap();
         let mut rng = Xoshiro256::new(3);

@@ -209,6 +209,12 @@ pub struct Metrics {
     /// Startup accounting (set once by the `serve` boot path via
     /// [`Metrics::set_startup`]; empty source string until then).
     pub startup: Mutex<StartupStats>,
+    /// Label of the compute path executing the engine's GEMMs
+    /// (`naive` | `tiled` | `tiled-mt` for host engines, `pjrt` for
+    /// compiled-kernel engines; set by [`Metrics::set_gemm_backend`] —
+    /// the scheduler publishes it from the engine at construction.
+    /// Empty without an engine).
+    pub gemm_backend: Mutex<String>,
 }
 
 impl Metrics {
@@ -231,6 +237,11 @@ impl Metrics {
     /// once per tick).
     pub fn set_kv(&self, stats: KvPoolStats) {
         *self.kv.lock().unwrap() = stats;
+    }
+
+    /// Record the engine's GEMM backend label for the metrics endpoint.
+    pub fn set_gemm_backend(&self, label: &str) {
+        *self.gemm_backend.lock().unwrap() = label.to_string();
     }
 
     /// Record how the serving weights were materialized at boot
@@ -291,6 +302,10 @@ impl Metrics {
             ("comm", comm_stats_json(&self.comm.lock().unwrap())),
             ("kv", kv_stats_json(&self.kv.lock().unwrap())),
             ("startup", startup_json(&self.startup.lock().unwrap())),
+            (
+                "gemm_backend",
+                self.gemm_backend.lock().unwrap().as_str().into(),
+            ),
         ])
     }
 }
@@ -376,6 +391,14 @@ mod tests {
             Some("ckpt")
         );
         assert_eq!(j.get("startup").get("weights_ms").as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn gemm_backend_label_surfaces() {
+        let m = Metrics::default();
+        assert_eq!(m.to_json().get("gemm_backend").as_str(), Some(""));
+        m.set_gemm_backend("tiled-mt");
+        assert_eq!(m.to_json().get("gemm_backend").as_str(), Some("tiled-mt"));
     }
 
     #[test]

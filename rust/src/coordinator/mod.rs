@@ -25,7 +25,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{EngineBackend, TpEngine};
+pub use engine::{EngineBackend, EngineOptions, TpEngine};
 pub use kv_pool::{KvPool, KvPoolCfg};
 pub use request::{Request, Response};
 pub use scheduler::{ContinuousScheduler, Scheduler};

@@ -62,6 +62,12 @@ impl Scheduler {
         metrics: Arc<Metrics>,
         max_batch: usize,
     ) -> Scheduler {
+        if let Some(e) = &engine {
+            // Surface the engine's compute path in the metrics endpoint
+            // so serving runs are attributable to a config: the host
+            // GemmBackend label, or "pjrt" for compiled-kernel engines.
+            metrics.set_gemm_backend(e.gemm_backend_label());
+        }
         Scheduler {
             model,
             engine,

@@ -16,6 +16,33 @@
 use crate::quant::gptq::QuantizedLinear;
 use crate::tensor::Matrix;
 
+/// Cache budget the dequantized group slab (`G × N × 4 B`) is assumed to
+/// stay resident in between its fill and its `M` GEMM uses — sized to a
+/// typical per-core L2 slice. Above this the slab path re-streams the
+/// slab from memory on every use, so [`slab_min_m`] demands more reuse
+/// before materializing it.
+pub const SLAB_CACHE_BYTES: usize = 256 * 1024;
+
+/// Smallest batch `M` for which [`dequant_matmul_ordered`] materializes
+/// the dequantized group slab instead of fusing dequant into the
+/// accumulation loop.
+///
+/// Derivation: filling the slab costs one extra pass over `G × N` f32s
+/// that only pays off once the slab is reused enough times. While the
+/// slab fits in [`SLAB_CACHE_BYTES`] the measured crossover is `M = 3`
+/// (perf pass §Perf iter 4 — below that each dequantized value is used
+/// too few times to amortize the fill); every additional cache-size
+/// multiple the slab spills by adds a full memory round-trip per use,
+/// scaling the required reuse proportionally. Exposed (rather than a
+/// hardcoded constant at the call site) so tests can pin the policy.
+pub fn slab_min_m(group_size: usize, n: usize) -> usize {
+    let slab_bytes = group_size * n * 4;
+    // Ceiling-style spill factor: a slab of exactly the cache budget
+    // still *fits* (threshold stays at the measured 3); only bytes
+    // beyond the budget demand extra reuse.
+    3 * (1 + slab_bytes.saturating_sub(1) / SLAB_CACHE_BYTES)
+}
+
 /// Fused dequant+GEMM with per-channel metadata dereference (naive load).
 /// Correct for any `g_idx`, ordered or not.
 pub fn dequant_matmul_naive(x: &Matrix, q: &QuantizedLinear) -> Matrix {
@@ -64,11 +91,10 @@ pub fn dequant_matmul_ordered(x: &Matrix, q: &QuantizedLinear) -> Matrix {
     let bits = q.bits;
     let mask = (1u32 << bits) - 1;
     // Small batches: materializing the dequant slab costs more than it
-    // saves (each dequantized value is used only M times). Below this
-    // threshold, fuse dequant directly into the accumulation loop while
-    // still fetching metadata once per group (perf pass §Perf iter 4).
-    const SLAB_MIN_M: usize = 3;
-    if m < SLAB_MIN_M {
+    // saves (each dequantized value is used only M times). Below the
+    // slab-size-aware threshold, fuse dequant directly into the
+    // accumulation loop while still fetching metadata once per group.
+    if m < slab_min_m(g_size, n) {
         // Flat channel loop (same shape as the naive kernel, so the only
         // difference left is the metadata access pattern): with an ordered
         // layout the group id (read from g_idx — row shards carry globally
@@ -212,6 +238,50 @@ mod tests {
                     got.max_abs_diff(&expect)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn slab_threshold_policy() {
+        // Cache-resident slabs keep the measured crossover of 3…
+        assert_eq!(slab_min_m(8, 8), 3);
+        assert_eq!(slab_min_m(32, 1792), 3); // llama-scaled up_proj slab
+        // …including a slab that fills the budget *exactly* (the
+        // granite-scaled up_proj: 32·2048·4 == SLAB_CACHE_BYTES).
+        assert_eq!(32 * 2048 * 4, SLAB_CACHE_BYTES);
+        assert_eq!(slab_min_m(32, 2048), 3);
+        // One byte over the budget raises the threshold…
+        assert!(slab_min_m(32, 2049) > 3);
+        // …and it keeps growing with the spill factor.
+        let paper_scale = slab_min_m(128, 28672); // ~14 MiB slab
+        assert!(paper_scale > 3);
+        assert_eq!(
+            paper_scale,
+            3 * (1 + (128 * 28672 * 4 - 1) / SLAB_CACHE_BYTES)
+        );
+        assert!(slab_min_m(128, 28672) >= slab_min_m(128, 1024));
+    }
+
+    #[test]
+    fn ordered_bit_equal_across_the_slab_threshold() {
+        // The flat and slab paths of the ordered kernel accumulate in the
+        // same channel order, so crossing the threshold never changes bits.
+        let mut g = Xoshiro256::new(21);
+        let w = crate::tensor::Matrix::randn(32, 8, &mut g);
+        let xc = crate::tensor::Matrix::randn(32, 32, &mut g);
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        };
+        let (p, q_opt) = quantize_gptq(&w, &xc, &cfg).reorder();
+        let thr = slab_min_m(8, 8);
+        for m in [thr - 1, thr, thr + 1] {
+            let x = crate::tensor::Matrix::randn(m, 32, &mut g);
+            let xp = crate::quant::perm::apply_cols(&x, &p);
+            let a = dequant_matmul_ordered(&xp, &q_opt);
+            let b = dequant_matmul_naive(&xp, &q_opt);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "m={m}");
         }
     }
 

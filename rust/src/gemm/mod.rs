@@ -4,14 +4,184 @@
 //! * [`naive`] — straightforward and cache-blocked f32 matmuls; the
 //!   correctness oracle for everything else (and the measured-mode compute
 //!   when PJRT artifacts are not loaded).
-//! * [`fused`] — fused dequantize+GEMM over packed GPTQ weights with the
-//!   two load schedules the paper contrasts: `naive` (walk channels in
-//!   storage order with an unordered `g_idx`, re-fetching metadata) and
-//!   `ordered` (Algorithm 1 layout, one metadata fetch per group). The
-//!   measured time difference between the two on CPU is the cache-locality
-//!   analogue of the paper's GPU observation.
+//! * [`fused`] — scalar fused dequantize+GEMM over packed GPTQ weights
+//!   with the two load schedules the paper contrasts: `naive` (walk
+//!   channels in storage order with an unordered `g_idx`, re-fetching
+//!   metadata) and `ordered` (Algorithm 1 layout, one metadata fetch per
+//!   group). The measured time difference between the two on CPU is the
+//!   cache-locality analogue of the paper's GPU observation.
+//! * [`tiled`] — the throughput backends: cache-blocked (MC × KC × NC),
+//!   register-tiled fused dequant-GEMM, single-threaded or sharded over
+//!   the shared [`pool`] worker pool. Bit-identical to [`fused`] by
+//!   construction (same per-element accumulation order).
+//! * [`pool`] — the process-wide GEMM worker pool `tiled-mt` shards
+//!   N-tiles onto; rank threads participate as callers, so TP width and
+//!   GEMM parallelism compose without oversubscribing the machine.
+//!
+//! Backend selection is a runtime choice ([`GemmBackend`], `--gemm-backend`
+//! on the CLI): all three backends produce **bit-identical** outputs, so
+//! the choice is purely a throughput/threading decision.
 
 pub mod fused;
 pub mod naive;
+pub mod pool;
+pub mod tiled;
 
 pub use naive::matmul;
+pub use tiled::TileConfig;
+
+use crate::quant::gptq::QuantizedLinear;
+use crate::tensor::Matrix;
+
+/// Which fused dequant-GEMM kernel [`dequant_matmul`] dispatches to.
+///
+/// Every backend handles both weight layouts (Algorithm-1 ordered and
+/// unordered `act_order` `g_idx`) and all backends are bit-identical —
+/// the backend-equivalence tests assert exact equality, not a tolerance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GemmBackend {
+    /// The scalar kernels of [`fused`]: channel-major walk, one row of
+    /// output updated per channel. The baseline every optimization is
+    /// measured against.
+    Naive,
+    /// Cache-blocked + register-tiled ([`tiled`]), single-threaded.
+    /// The default hot-path backend: strictly faster than the scalar
+    /// kernels with a deterministic thread footprint (rank threads
+    /// already parallelize across ranks).
+    #[default]
+    Tiled,
+    /// As [`GemmBackend::Tiled`], with N-dimension tiles sharded across
+    /// the shared [`pool::global`] worker pool.
+    TiledMt,
+}
+
+impl GemmBackend {
+    /// Parse a CLI name: `naive` | `tiled` | `tiled-mt`.
+    pub fn by_name(s: &str) -> Option<GemmBackend> {
+        match s {
+            "naive" => Some(GemmBackend::Naive),
+            "tiled" => Some(GemmBackend::Tiled),
+            "tiled-mt" | "tiled_mt" => Some(GemmBackend::TiledMt),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI/metrics label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            GemmBackend::Naive => "naive",
+            GemmBackend::Tiled => "tiled",
+            GemmBackend::TiledMt => "tiled-mt",
+        }
+    }
+
+    /// All backends, in baseline → fastest order (bench sweeps).
+    pub fn all() -> [GemmBackend; 3] {
+        [GemmBackend::Naive, GemmBackend::Tiled, GemmBackend::TiledMt]
+    }
+}
+
+/// Fused dequant+GEMM `X(M×K) · Ŵ(K×N)` through the selected backend.
+///
+/// The scalar backend picks its load schedule from the layout (ordered
+/// `g_idx` ⇒ one metadata fetch per group); the tiled backends make the
+/// same choice inside their slab-dequant stage.
+pub fn dequant_matmul(backend: GemmBackend, x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    if q.k() % q.gidx.group_size != 0 {
+        // Ragged shard: a row shard narrower than one quantization group
+        // (legal — `row_shard_quant` only requires packing-factor
+        // alignment). The group-slab schedules assume group-aligned K,
+        // so every backend falls back to the per-channel scalar kernel,
+        // which reads the (globally offset) group id from `g_idx` per
+        // channel and handles any K.
+        return fused::dequant_matmul_naive(x, q);
+    }
+    match backend {
+        GemmBackend::Naive => {
+            if q.gidx.is_ordered() {
+                fused::dequant_matmul_ordered(x, q)
+            } else {
+                fused::dequant_matmul_naive(x, q)
+            }
+        }
+        GemmBackend::Tiled => tiled::dequant_matmul_tiled(x, q),
+        GemmBackend::TiledMt => tiled::dequant_matmul_tiled_mt(x, q),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in GemmBackend::all() {
+            assert_eq!(GemmBackend::by_name(b.label()), Some(b));
+        }
+        assert_eq!(GemmBackend::by_name("tiled_mt"), Some(GemmBackend::TiledMt));
+        assert_eq!(GemmBackend::by_name("cuda"), None);
+    }
+
+    #[test]
+    fn default_backend_is_tiled() {
+        assert_eq!(GemmBackend::default(), GemmBackend::Tiled);
+    }
+
+    #[test]
+    fn ragged_group_shards_fall_back_to_the_scalar_kernel() {
+        // A row shard narrower than one quantization group (k_local=8,
+        // G=16) is legal; every backend must compute it correctly via
+        // the per-channel fallback instead of panicking in the
+        // group-slab schedules.
+        use crate::quant::gptq::{quantize_gptq, GptqConfig};
+        use crate::tp::sharding::row_shard_quant;
+        use crate::tp::topology::Topology;
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(9);
+        let w = Matrix::randn(32, 8, &mut rng);
+        let xc = Matrix::randn(32, 32, &mut rng);
+        let cfg = GptqConfig {
+            group_size: 16,
+            act_order: true,
+            ..Default::default()
+        };
+        let (_, q_opt) = quantize_gptq(&w, &xc, &cfg).reorder();
+        let topo = Topology::new(4);
+        for rank in 0..4 {
+            let shard = row_shard_quant(&q_opt, topo, rank);
+            assert_eq!(shard.k() % shard.gidx.group_size, 8, "shard must be ragged");
+            let x = Matrix::randn(4, shard.k(), &mut rng);
+            let oracle = matmul(&x, &shard.dequantize());
+            let base = dequant_matmul(GemmBackend::Naive, &x, &shard);
+            assert!(base.max_abs_diff(&oracle) < 1e-3, "rank {rank}");
+            for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                let got = dequant_matmul(b, &x, &shard);
+                assert_eq!(got.max_abs_diff(&base), 0.0, "{b:?} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_is_bit_identical_across_backends() {
+        use crate::quant::gptq::{quantize_gptq, GptqConfig};
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let w = Matrix::randn(32, 20, &mut rng);
+        let xc = Matrix::randn(32, 32, &mut rng);
+        let cfg = GptqConfig {
+            group_size: 8,
+            act_order: true,
+            ..Default::default()
+        };
+        let q = quantize_gptq(&w, &xc, &cfg);
+        let (_, q_opt) = q.reorder();
+        let x = Matrix::randn(4, 32, &mut rng);
+        for layer in [&q, &q_opt] {
+            let base = dequant_matmul(GemmBackend::Naive, &x, layer);
+            for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                let got = dequant_matmul(b, &x, layer);
+                assert_eq!(got.max_abs_diff(&base), 0.0, "{b:?}");
+            }
+        }
+    }
+}

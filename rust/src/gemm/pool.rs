@@ -1,0 +1,337 @@
+//! Shared GEMM worker pool — the intra-rank parallelism substrate for the
+//! `tiled-mt` backend.
+//!
+//! One process-wide pool ([`global`]) is shared by *every* caller: the
+//! engine's rank threads, benches, and tests all shard their N-dimension
+//! tiles onto the same fixed set of workers, so TP width × GEMM
+//! parallelism never multiplies into more runnable threads than the
+//! machine has cores. Two design points make that composition safe:
+//!
+//! * **callers participate** — [`WorkerPool::run`] claims tasks on the
+//!   calling thread too, so a rank thread always makes progress even when
+//!   all workers are busy with another rank's job (and a pool of size 0
+//!   degrades to plain sequential execution);
+//! * **work stealing across jobs** — workers pull task indices from any
+//!   active job, so concurrent rank threads split the pool instead of
+//!   serializing behind each other.
+//!
+//! Task sharding is over *output columns* (N-dimension tiles): every task
+//! writes a disjoint slice of the result, which is why the `tiled-mt`
+//! backend stays bit-identical to the sequential backends — no partial
+//! sums are ever combined across tasks.
+//!
+//! Pool size comes from `TPAWARE_GEMM_THREADS` (0 = sequential) or
+//! defaults to `available_parallelism − 1`, capped at [`MAX_WORKERS`].
+
+use std::any::Any;
+use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Hard cap on worker threads for the default ([`global`]) pool — beyond
+/// this the N-dimension tile counts of our shapes stop scaling anyway.
+pub const MAX_WORKERS: usize = 8;
+
+/// One in-flight parallel loop: a borrowed task closure plus claim /
+/// completion counters.
+struct Job {
+    /// The task body. The `'static` is a lifetime-erased lie, sound
+    /// because [`WorkerPool::run`] does not return until every task has
+    /// completed (see the SAFETY note there) — after which this
+    /// reference is never dereferenced again.
+    f: &'static (dyn Fn(usize) + Sync),
+    /// Next unclaimed task index (may overshoot `n_tasks`).
+    next: AtomicUsize,
+    /// Total tasks in this job.
+    n_tasks: usize,
+    /// Completed-task count, guarded for the completion wait.
+    done: Mutex<usize>,
+    /// Signaled when `done` reaches `n_tasks`.
+    done_cv: Condvar,
+    /// First panic payload caught inside a task, re-raised on the
+    /// calling thread once the job has fully drained. Catching is what
+    /// keeps the SAFETY contract of [`WorkerPool::run`] intact under
+    /// unwinding: a task panic must neither kill a worker before it
+    /// counts its task (caller deadlock) nor let `run` unwind while
+    /// other threads still hold the borrowed closure (use-after-free).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Claim-and-run loop over one job; shared by workers and the caller.
+/// Every claimed task is counted as done even if it panics, and the
+/// panic payload is parked on the job for the caller to re-raise.
+fn run_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            return;
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f)(i)));
+        if let Err(payload) = result {
+            let mut p = job.panic.lock().unwrap();
+            if p.is_none() {
+                *p = Some(payload);
+            }
+        }
+        let mut d = job.done.lock().unwrap();
+        *d += 1;
+        if *d == job.n_tasks {
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+struct PoolState {
+    /// Jobs that may still have unclaimed tasks.
+    jobs: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Wakes idle workers when a job arrives (or on shutdown).
+    work_cv: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let found = st
+                    .jobs
+                    .iter()
+                    .find(|j| j.next.load(Ordering::Relaxed) < j.n_tasks)
+                    .cloned();
+                match found {
+                    Some(j) => break j,
+                    None => st = shared.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        run_tasks(&job);
+        // Fully claimed: drop it from the active list so idle workers
+        // don't spin on it (run() also removes it defensively).
+        let mut st = shared.state.lock().unwrap();
+        st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+}
+
+/// A fixed set of worker threads executing indexed parallel loops.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with exactly `workers` worker threads (0 is valid:
+    /// [`WorkerPool::run`] then executes on the calling thread only).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("gemm-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawning gemm worker thread")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            workers,
+            handles,
+        }
+    }
+
+    /// Worker-thread count (the calling thread adds one more executor).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `f(0) … f(n_tasks − 1)` across the pool plus the calling
+    /// thread; returns when **all** tasks have completed. Tasks must be
+    /// independent (each is run exactly once, in no particular order, on
+    /// an arbitrary thread).
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.workers == 0 || n_tasks == 1 {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the job only lives in `self.shared.state.jobs` and in
+        // worker stacks between here and the completion wait below; this
+        // function does not return — normally or by unwinding — until
+        // `done == n_tasks`: every task invocation (including panicking
+        // ones, which `run_tasks` catches) happens-before the `done`
+        // increment that releases that wait (both under the `done`
+        // mutex), and a caught panic is re-raised only after the wait.
+        // Workers that claim an index ≥ `n_tasks` never touch `f`.
+        // Hence the borrow of `f` strictly outlives every dereference,
+        // and erasing its lifetime to `'static` is sound.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Arc::new(Job {
+            f: f_static,
+            next: AtomicUsize::new(0),
+            n_tasks,
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // The caller participates instead of blocking idle.
+        run_tasks(&job);
+        let mut d = job.done.lock().unwrap();
+        while *d < n_tasks {
+            d = job.done_cv.wait(d).unwrap();
+        }
+        drop(d);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        // Re-raise a task panic on the caller, now that no thread can
+        // still be inside `f`.
+        let payload = job.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Default worker count for the [`global`] pool: `TPAWARE_GEMM_THREADS`
+/// if set (0 disables the workers), else `available_parallelism − 1`
+/// (the caller is the +1th executor), clamped to `1..=`[`MAX_WORKERS`].
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("TPAWARE_GEMM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.min(MAX_WORKERS);
+        }
+    }
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    avail.saturating_sub(1).clamp(1, MAX_WORKERS)
+}
+
+/// The process-wide shared pool (lazily spawned, never torn down). All
+/// `tiled-mt` GEMMs — from however many engine rank threads — shard onto
+/// this one pool, which is what keeps thread counts bounded.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for workers in [0usize, 1, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let n = 37;
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "task {i}, workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, &|_| panic!("no task should run"));
+    }
+
+    #[test]
+    fn concurrent_jobs_from_multiple_threads_all_complete() {
+        // Several "rank threads" sharing one pool, as the TP engine does.
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        pool.run(16, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 16);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_the_caller_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "the task panic must reach the caller");
+        // The pool must stay fully usable after a panicked job.
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn global_pool_is_one_instance() {
+        assert!(std::ptr::eq(global(), global()));
+        global().run(4, &|_| {});
+    }
+
+    #[test]
+    fn default_workers_is_bounded() {
+        let w = default_workers();
+        assert!(w <= MAX_WORKERS);
+    }
+}

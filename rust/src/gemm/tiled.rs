@@ -1,0 +1,575 @@
+//! Cache-blocked, register-tiled fused dequant-GEMM — the throughput
+//! backend behind [`crate::gemm::GemmBackend::Tiled`] and
+//! [`crate::gemm::GemmBackend::TiledMt`].
+//!
+//! The scalar kernels in [`crate::gemm::fused`] walk the full `M×N`
+//! accumulator once per input channel: `K` complete passes over `C`
+//! through the cache hierarchy. This kernel restructures the same
+//! computation into the classic three-level blocking (MC × KC × NC over
+//! the packed `u32` words) with an `MR × NR` register micro-tile, so
+//! each `C` element is touched once per K-block instead of once per
+//! channel, and the group metadata (scales/zeros) is fetched **once per
+//! tile** — `KC` is group-aligned by construction
+//! ([`TileConfig::kc_groups`] counts *quantization groups*, not
+//! channels), which is the paper's Algorithm-1 locality argument applied
+//! to a CPU cache instead of a GPU L2.
+//!
+//! Per N-block the kernel (1) dequantizes a `KC × NC` slab — hoisting
+//! one (scale, zero) fetch per group on the ordered layout, dereferencing
+//! `g_idx` per channel on the unordered one — and (2) runs the
+//! register-tiled GEMM of `X[:, KC-block]` against the slab.
+//!
+//! **Bit-consistency contract**: for every output element the partial
+//! products are accumulated in strictly increasing channel order — K-blocks
+//! ascend, channels ascend within a block, and the micro-tile keeps one
+//! f32 accumulator per element (an exact value, spilled/reloaded losslessly
+//! between K-blocks). Each term is computed as
+//! `x · (scale · (q − zero))`, exactly as the scalar kernels do. The
+//! result is therefore **bit-identical** to [`crate::gemm::fused`]'s
+//! kernels, which the backend-equivalence property tests assert with
+//! `==`, not a tolerance. The multi-threaded driver shards over disjoint
+//! N-tiles (no cross-task reductions), so it inherits the same guarantee
+//! for any pool size.
+
+use crate::gemm::pool::{self, WorkerPool};
+use crate::quant::gptq::QuantizedLinear;
+use crate::tensor::Matrix;
+use std::sync::Mutex;
+
+/// Micro-tile rows (register accumulator height).
+const MR: usize = 4;
+/// Micro-tile columns (register accumulator width — one or two SIMD
+/// vectors of f32 after vectorization).
+const NR: usize = 8;
+
+/// Cache-blocking parameters for the tiled kernel.
+///
+/// `KC` is expressed in quantization groups so every K-block starts and
+/// ends on a group boundary regardless of the layer's group size — the
+/// invariant that lets the dequant stage load each group's metadata
+/// exactly once per tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Rows of `X`/`C` per cache block (MC).
+    pub mc: usize,
+    /// K-block depth in quantization groups (`KC = kc_groups × G`).
+    pub kc_groups: usize,
+    /// Columns of `W`/`C` per cache block (NC) — also the unit of
+    /// N-dimension sharding for the multi-threaded driver.
+    pub nc: usize,
+}
+
+impl TileConfig {
+    /// Byte budget for the dequantized slab (`KC × NC × 4 B`) of the
+    /// default blocking — the same per-core L2 slice the scalar ordered
+    /// kernel's [`crate::gemm::fused::SLAB_CACHE_BYTES`] models (one
+    /// constant, so retuning the cache assumption moves both kernels
+    /// together). The entry-point drivers derive `KC` from the layer's
+    /// group size against this budget, so the slab never silently
+    /// spills for large groups.
+    pub const SLAB_BUDGET_BYTES: usize = crate::gemm::fused::SLAB_CACHE_BYTES;
+
+    /// Default blocking for a layer with quantization group size `g`:
+    /// `KC` is the largest whole-group multiple whose slab fits in
+    /// [`TileConfig::SLAB_BUDGET_BYTES`] (minimum one group, so tiny
+    /// budgets degrade gracefully rather than panic).
+    pub fn for_group_size(g: usize) -> TileConfig {
+        let nc = 256;
+        let kc_groups = (Self::SLAB_BUDGET_BYTES / (g.max(1) * nc * 4)).max(1);
+        TileConfig {
+            mc: 32,
+            kc_groups,
+            nc,
+        }
+    }
+
+    /// The default blocking at the repo's default group size (G=32):
+    /// KC = 256 channels, slab exactly [`TileConfig::SLAB_BUDGET_BYTES`].
+    /// Prefer [`TileConfig::for_group_size`] when the layer's G is known
+    /// — the convenience drivers do this automatically.
+    pub fn host_default() -> TileConfig {
+        Self::for_group_size(32)
+    }
+
+    /// Panics on degenerate blocking (any dimension of zero).
+    fn validate(&self) {
+        assert!(
+            self.mc >= 1 && self.kc_groups >= 1 && self.nc >= 1,
+            "TileConfig dimensions must be >= 1, got {self:?}"
+        );
+    }
+}
+
+/// Dequantize the `[kb0, kb1) × [n0, n1)` slab of `q` into `slab`
+/// (row-major, `nb = n1 − n0` columns). On an ordered layout the
+/// (scale, zero) rows are fetched once per group run; otherwise per
+/// channel via `g_idx`.
+fn dequant_slab(
+    q: &QuantizedLinear,
+    ordered: bool,
+    kb0: usize,
+    kb1: usize,
+    n0: usize,
+    n1: usize,
+    slab: &mut [f32],
+) {
+    let n = q.n();
+    let nb = n1 - n0;
+    let g_size = q.gidx.group_size;
+    let per = q.packed.per_word();
+    let bits = q.bits;
+    let mask = (1u32 << bits) - 1;
+    let mut dequant_run = |lo: usize, hi: usize, g: usize| {
+        let srow = &q.scales.row(g)[n0..n1];
+        let zrow = &q.zeros.row(g)[n0..n1];
+        for kk in lo..hi {
+            let wrow = &q.packed.words[(kk / per) * n + n0..(kk / per) * n + n1];
+            let shift = ((kk % per) as u32) * bits;
+            let drow = &mut slab[(kk - kb0) * nb..(kk - kb0 + 1) * nb];
+            for (d, (wv, (s, z))) in drow
+                .iter_mut()
+                .zip(wrow.iter().zip(srow.iter().zip(zrow.iter())))
+            {
+                let qv = (wv >> shift) & mask;
+                *d = s * (qv as f32 - z);
+            }
+        }
+    };
+    if ordered {
+        // Group-aligned K-blocks + ordered g_idx ⇒ channels [g0, g0+G)
+        // share one group; fetch its metadata row pointers once.
+        // (Like `fused::dequant_matmul_ordered`, this reads the group id
+        // from g_idx because row shards carry globally offset group ids.)
+        for g0 in (kb0..kb1).step_by(g_size) {
+            dequant_run(g0, g0 + g_size, q.gidx.idx[g0] as usize);
+        }
+    } else {
+        for kk in kb0..kb1 {
+            dequant_run(kk, kk + 1, q.gidx.idx[kk] as usize);
+        }
+    }
+}
+
+/// Full `MR × NR` micro-tile: fixed-size register accumulators, the
+/// vectorizable common case.
+#[inline]
+#[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+fn micro_full(
+    x: &Matrix,
+    slab: &[f32],
+    out: &mut [f32],
+    nb: usize,
+    i0: usize,
+    j0: usize,
+    kb0: usize,
+    kb1: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let off = (i0 + r) * nb + j0;
+        accr.copy_from_slice(&out[off..off + NR]);
+    }
+    for kk in kb0..kb1 {
+        let soff = (kk - kb0) * nb + j0;
+        let srow: &[f32; NR] = (&slab[soff..soff + NR]).try_into().unwrap();
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let xv = x.at(i0 + r, kk);
+            for (a, s) in accr.iter_mut().zip(srow.iter()) {
+                *a += xv * s;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let off = (i0 + r) * nb + j0;
+        out[off..off + NR].copy_from_slice(accr);
+    }
+}
+
+/// Ragged-edge micro-tile (`mr ≤ MR`, `nr ≤ NR` — down to 1×1): same
+/// accumulation order as [`micro_full`], dynamic bounds.
+#[inline]
+#[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+fn micro_edge(
+    x: &Matrix,
+    slab: &[f32],
+    out: &mut [f32],
+    nb: usize,
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+    kb0: usize,
+    kb1: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+        let off = (i0 + r) * nb + j0;
+        accr[..nr].copy_from_slice(&out[off..off + nr]);
+    }
+    for kk in kb0..kb1 {
+        let srow = &slab[(kk - kb0) * nb + j0..(kk - kb0) * nb + j0 + nr];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let xv = x.at(i0 + r, kk);
+            for (a, s) in accr.iter_mut().zip(srow.iter()) {
+                *a += xv * s;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let off = (i0 + r) * nb + j0;
+        out[off..off + nr].copy_from_slice(&accr[..nr]);
+    }
+}
+
+/// `out[i0..i1, :] += X[i0..i1, kb0..kb1] · slab` over the micro-tile
+/// grid (full tiles fast-pathed, ragged edges handled exactly).
+#[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+fn gemm_block(
+    x: &Matrix,
+    slab: &[f32],
+    out: &mut [f32],
+    nb: usize,
+    i0: usize,
+    i1: usize,
+    kb0: usize,
+    kb1: usize,
+) {
+    let mut j0 = 0;
+    while j0 < nb {
+        let nr = NR.min(nb - j0);
+        let mut i = i0;
+        while i < i1 {
+            let mr = MR.min(i1 - i);
+            if mr == MR && nr == NR {
+                micro_full(x, slab, out, nb, i, j0, kb0, kb1);
+            } else {
+                micro_edge(x, slab, out, nb, i, mr, j0, nr, kb0, kb1);
+            }
+            i += mr;
+        }
+        j0 += nr;
+    }
+}
+
+/// Compute the `[0..m) × [n0, n1)` output block into `out` (row-major,
+/// `n1 − n0` columns, pre-zeroed). `slab` is caller-provided scratch of
+/// at least `min(KC, K) × (n1 − n0)` f32s (hoisted out of the per-block
+/// loop so one GEMM performs one scratch allocation, not one per
+/// N-block); its contents need not be initialized — the dequant stage
+/// fully overwrites every element the GEMM stage reads.
+fn tiled_block(
+    x: &Matrix,
+    q: &QuantizedLinear,
+    cfg: &TileConfig,
+    n0: usize,
+    n1: usize,
+    out: &mut [f32],
+    slab: &mut [f32],
+) {
+    let (m, k) = (x.rows, q.k());
+    let nb = n1 - n0;
+    let g_size = q.gidx.group_size;
+    let ordered = q.gidx.is_ordered();
+    let kc = cfg.kc_groups * g_size;
+    let slab = &mut slab[..kc.min(k) * nb];
+    let mut kb0 = 0;
+    while kb0 < k {
+        let kb1 = (kb0 + kc).min(k);
+        dequant_slab(q, ordered, kb0, kb1, n0, n1, slab);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + cfg.mc).min(m);
+            gemm_block(x, &slab, out, nb, i0, i1, kb0, kb1);
+            i0 = i1;
+        }
+        kb0 = kb1;
+    }
+}
+
+/// Shape checks shared by the drivers; returns `(m, k, n)`.
+fn check_shapes(x: &Matrix, q: &QuantizedLinear) -> (usize, usize, usize) {
+    assert_eq!(x.cols, q.k(), "GEMM shape mismatch");
+    assert_eq!(
+        q.k() % q.gidx.group_size,
+        0,
+        "K must be a multiple of the group size"
+    );
+    (x.rows, q.k(), q.n())
+}
+
+/// Tiled fused dequant+GEMM with explicit blocking, single-threaded.
+/// Bit-identical to [`crate::gemm::fused::dequant_matmul_naive`] (see
+/// the module docs for why).
+pub fn dequant_matmul_tiled_cfg(x: &Matrix, q: &QuantizedLinear, cfg: &TileConfig) -> Matrix {
+    cfg.validate();
+    let (m, k, n) = check_shapes(x, q);
+    let mut c = Matrix::zeros(m, n);
+    let nc = cfg.nc.min(n.max(1));
+    let mut block = vec![0.0f32; m * nc];
+    // One scratch slab for the whole GEMM, sliced per block.
+    let kc = cfg.kc_groups * q.gidx.group_size;
+    let mut slab = vec![0.0f32; kc.min(k) * nc];
+    let mut n0 = 0;
+    while n0 < n {
+        let n1 = (n0 + cfg.nc).min(n);
+        let nb = n1 - n0;
+        let out = &mut block[..m * nb];
+        out.fill(0.0);
+        tiled_block(x, q, cfg, n0, n1, out, &mut slab);
+        for i in 0..m {
+            c.row_mut(i)[n0..n1].copy_from_slice(&out[i * nb..(i + 1) * nb]);
+        }
+        n0 = n1;
+    }
+    c
+}
+
+/// Tiled fused dequant+GEMM with explicit blocking and an explicit
+/// worker pool: N-tiles are sharded across `pool` (plus the calling
+/// thread). Each task owns a disjoint column range, so the result is
+/// bit-identical to the single-threaded backends for any pool size.
+pub fn dequant_matmul_tiled_mt_with(
+    x: &Matrix,
+    q: &QuantizedLinear,
+    cfg: &TileConfig,
+    workers: &WorkerPool,
+) -> Matrix {
+    cfg.validate();
+    let (m, _, n) = check_shapes(x, q);
+    if n == 0 || m == 0 {
+        return Matrix::zeros(m, n);
+    }
+    let n_tasks = (n + cfg.nc - 1) / cfg.nc;
+    let blocks = Mutex::new(Vec::<(usize, Vec<f32>)>::with_capacity(n_tasks));
+    let kc = cfg.kc_groups * q.gidx.group_size;
+    workers.run(n_tasks, &|t| {
+        let n0 = t * cfg.nc;
+        let n1 = (n0 + cfg.nc).min(n);
+        let mut out = vec![0.0f32; m * (n1 - n0)];
+        // Per-task scratch: tasks run concurrently, so the slab cannot
+        // be shared; one allocation per task (= per N-tile).
+        let mut slab = vec![0.0f32; kc.min(q.k()) * (n1 - n0)];
+        tiled_block(x, q, cfg, n0, n1, &mut out, &mut slab);
+        blocks.lock().unwrap().push((t, out));
+    });
+    let mut c = Matrix::zeros(m, n);
+    for (t, out) in blocks.into_inner().unwrap() {
+        let n0 = t * cfg.nc;
+        let n1 = (n0 + cfg.nc).min(n);
+        let nb = n1 - n0;
+        for i in 0..m {
+            c.row_mut(i)[n0..n1].copy_from_slice(&out[i * nb..(i + 1) * nb]);
+        }
+    }
+    c
+}
+
+/// Tiled fused dequant+GEMM with the default host blocking for the
+/// layer's group size, single-threaded (the `tiled` backend).
+pub fn dequant_matmul_tiled(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    let cfg = TileConfig::for_group_size(q.gidx.group_size);
+    dequant_matmul_tiled_cfg(x, q, &cfg)
+}
+
+/// Tiled fused dequant+GEMM on the shared [`pool::global`] worker pool
+/// (the `tiled-mt` backend), blocked for the layer's group size.
+pub fn dequant_matmul_tiled_mt(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    let cfg = TileConfig::for_group_size(q.gidx.group_size);
+    dequant_matmul_tiled_mt_with(x, q, &cfg, pool::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::fused::{dequant_matmul_naive, dequant_matmul_ordered};
+    use crate::quant::gptq::{quantize_gptq, GptqConfig};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    /// `a == b` bit for bit (f32 equality is exact here by design).
+    fn assert_bit_eq(a: &Matrix, b: &Matrix, what: &str) {
+        assert_eq!(a.rows, b.rows, "{what}: row mismatch");
+        assert_eq!(a.cols, b.cols, "{what}: col mismatch");
+        for (i, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what}: element {i} differs: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    fn quantize(k: usize, n: usize, g: usize, rng: &mut Xoshiro256) -> QuantizedLinear {
+        let w = Matrix::randn(k, n, rng);
+        let xc = Matrix::randn(32, k, rng);
+        let cfg = GptqConfig {
+            group_size: g,
+            act_order: true,
+            ..Default::default()
+        };
+        quantize_gptq(&w, &xc, &cfg)
+    }
+
+    #[test]
+    fn tiled_matches_naive_bitwise_both_layouts() {
+        forall("tiled == scalar, bit for bit, both layouts", 25, |rng| {
+            let g = 8 * (1 + rng.below(2)); // 8 or 16
+            let k = g * (1 + rng.below(5));
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(6);
+            let q = quantize(k, n, g, rng);
+            let x = Matrix::randn(m, k, rng);
+            // Random blocking, including degenerate 1×1×1 tiles and
+            // blocks larger than the problem.
+            let cfg = TileConfig {
+                mc: 1 + rng.below(8),
+                kc_groups: 1 + rng.below(4),
+                nc: 1 + rng.below(24),
+            };
+            // Unordered act_order layout vs the scalar naive kernel.
+            let expect = dequant_matmul_naive(&x, &q);
+            assert_bit_eq(
+                &dequant_matmul_tiled_cfg(&x, &q, &cfg),
+                &expect,
+                "unordered layout",
+            );
+            // Algorithm-1 ordered layout vs both scalar kernels.
+            let (p, q_opt) = q.reorder();
+            let xp = crate::quant::perm::apply_cols(&x, &p);
+            let expect_o = dequant_matmul_naive(&xp, &q_opt);
+            assert_bit_eq(
+                &dequant_matmul_tiled_cfg(&xp, &q_opt, &cfg),
+                &expect_o,
+                "ordered layout",
+            );
+            assert_bit_eq(
+                &dequant_matmul_ordered(&xp, &q_opt),
+                &expect_o,
+                "scalar ordered vs scalar naive",
+            );
+        });
+    }
+
+    #[test]
+    fn tiled_mt_matches_naive_bitwise_for_all_pool_sizes() {
+        let mut rng = Xoshiro256::new(11);
+        let q = quantize(64, 50, 8, &mut rng);
+        let (_, q_opt) = q.reorder();
+        let x = Matrix::randn(5, 64, &mut rng);
+        let cfg = TileConfig {
+            mc: 3,
+            kc_groups: 2,
+            nc: 7,
+        };
+        let expect = dequant_matmul_naive(&x, &q_opt);
+        for workers in 1..=8 {
+            let pool = WorkerPool::new(workers);
+            let got = dequant_matmul_tiled_mt_with(&x, &q_opt, &cfg, &pool);
+            assert_bit_eq(&got, &expect, &format!("pool size {workers}"));
+        }
+        // And on the shared global pool (the production path).
+        assert_bit_eq(&dequant_matmul_tiled_mt(&x, &q_opt), &expect, "global pool");
+    }
+
+    #[test]
+    fn ragged_edges_and_one_by_one_tiles() {
+        // N prime (ragged against NR and nc), K one group, M below MR.
+        let mut rng = Xoshiro256::new(12);
+        let q = quantize(8, 13, 8, &mut rng);
+        let x = Matrix::randn(3, 8, &mut rng);
+        let expect = dequant_matmul_naive(&x, &q);
+        for cfg in [
+            TileConfig {
+                mc: 1,
+                kc_groups: 1,
+                nc: 1,
+            },
+            TileConfig {
+                mc: 100,
+                kc_groups: 100,
+                nc: 100,
+            },
+            TileConfig::host_default(),
+        ] {
+            assert_bit_eq(
+                &dequant_matmul_tiled_cfg(&x, &q, &cfg),
+                &expect,
+                &format!("{cfg:?}"),
+            );
+        }
+    }
+
+    #[test]
+    fn row_shard_group_offsets_respected() {
+        // Row shards carry globally offset group ids in g_idx; the slab
+        // dequant must read them, not recompute k/G (same regression the
+        // scalar ordered kernel guards).
+        use crate::tp::sharding::row_shard_quant;
+        use crate::tp::topology::Topology;
+        let mut rng = Xoshiro256::new(13);
+        let q = quantize(64, 10, 8, &mut rng);
+        let (_, q_opt) = q.reorder();
+        let topo = Topology::new(4);
+        for rank in 0..4 {
+            let shard = row_shard_quant(&q_opt, topo, rank);
+            let x = Matrix::randn(4, shard.k(), &mut rng);
+            let expect = dequant_matmul_naive(&x, &shard);
+            assert_bit_eq(
+                &dequant_matmul_tiled_cfg(
+                    &x,
+                    &shard,
+                    &TileConfig {
+                        mc: 2,
+                        kc_groups: 1,
+                        nc: 4,
+                    },
+                ),
+                &expect,
+                &format!("rank {rank}"),
+            );
+        }
+    }
+
+    #[test]
+    fn default_blocking_respects_the_slab_budget() {
+        for g in [8usize, 16, 32, 64, 128, 4096] {
+            let cfg = TileConfig::for_group_size(g);
+            assert!(cfg.kc_groups >= 1, "G={g}");
+            // One group always fits logically; beyond that the slab
+            // stays within the budget.
+            if cfg.kc_groups > 1 {
+                assert!(
+                    cfg.kc_groups * g * cfg.nc * 4 <= TileConfig::SLAB_BUDGET_BYTES,
+                    "G={g}: slab over budget"
+                );
+            }
+        }
+        // The G=32 instance is the historical host default (KC = 256).
+        assert_eq!(TileConfig::host_default().kc_groups, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "GEMM shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut rng = Xoshiro256::new(14);
+        let q = quantize(16, 4, 8, &mut rng);
+        let x = Matrix::randn(1, 8, &mut rng);
+        dequant_matmul_tiled(&x, &q);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 1")]
+    fn zero_tile_config_rejected() {
+        let mut rng = Xoshiro256::new(15);
+        let q = quantize(16, 4, 8, &mut rng);
+        let x = Matrix::randn(1, 16, &mut rng);
+        dequant_matmul_tiled_cfg(
+            &x,
+            &q,
+            &TileConfig {
+                mc: 0,
+                kc_groups: 1,
+                nc: 1,
+            },
+        );
+    }
+}

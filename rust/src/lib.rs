@@ -19,7 +19,9 @@
 //! * [`ckpt`] — on-disk quantized checkpoint store and the TP-aware
 //!   offline repacker: Algorithm 1/3 applied once, per-rank shard
 //!   files + manifest persisted, serve boots from disk.
-//! * [`gemm`] — host dequant + GEMM engine (the ExllamaV2 stand-in).
+//! * [`gemm`] — host dequant + GEMM engine (the ExllamaV2 stand-in):
+//!   scalar fused kernels, the tiled/multi-threaded backends and the
+//!   shared worker pool behind the `--gemm-backend` selection layer.
 //! * [`tp`] — thread-per-rank tensor-parallel runtime: topology,
 //!   byte-moving collectives, on-the-wire codecs (fp32 / bf16 /
 //!   int8 / int4 group-affine), interconnect profiles.

@@ -12,13 +12,14 @@
 use std::sync::Arc;
 use tpaware::bail;
 use tpaware::ckpt::repack::{load_deployment, load_deployment_limit, repack_model, CkptManifest};
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineOptions, TpEngine};
 use tpaware::coordinator::kv_pool::KvPoolCfg;
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
 use tpaware::coordinator::server::{Client, Server};
 use tpaware::ensure;
 use tpaware::err;
+use tpaware::gemm::GemmBackend;
 use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
 use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
@@ -109,6 +110,11 @@ fn parse_codec(s: &str) -> Result<CodecSpec> {
         .ok_or_else(|| err!("comm codec must be fp32 | bf16 | int8[:G] | int4[:G], got '{s}'"))
 }
 
+fn parse_gemm_backend(s: &str) -> Result<GemmBackend> {
+    GemmBackend::by_name(s)
+        .ok_or_else(|| err!("gemm backend must be naive | tiled | tiled-mt, got '{s}'"))
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let spec = Command::new("serve", "start the serving server")
         .flag("addr", "127.0.0.1:7411", "listen address")
@@ -124,6 +130,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("artifacts", "artifacts", "artifacts directory")
         .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]")
         .flag(
+            "gemm-backend",
+            "tiled",
+            "host fused dequant-GEMM backend: naive | tiled | tiled-mt",
+        )
+        .flag(
             "ckpt",
             "",
             "boot weights from a repacked checkpoint directory (see 'repack') \
@@ -135,6 +146,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let tp = Topology::new(a.usize("tp")?);
     let algo = parse_algo(a.get("algo"))?;
     let codec = parse_codec(a.get("comm-codec"))?;
+    let gemm = parse_gemm_backend(a.get("gemm-backend"))?;
     let mode = SchedMode::by_name(a.get("scheduler"))
         .ok_or_else(|| err!("scheduler must be 'continuous' or 'static'"))?;
     let pool_cfg = KvPoolCfg {
@@ -177,35 +189,37 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let weights_ms = t0.elapsed().as_secs_f64() * 1e3;
     eprintln!(
         "weights {weights_source} in {weights_ms:.1} ms — {} ({} layers, d={}, ff={}), \
-         algo={algo:?}, tp={}, codec={}, scheduler={} (kv pool: {} seqs / {} tokens)",
+         algo={algo:?}, tp={}, codec={}, gemm={}, scheduler={} (kv pool: {} seqs / {} tokens)",
         cfg.name,
         cfg.n_layers,
         cfg.d_model,
         cfg.d_ff,
         tp.size,
         codec.label(),
+        gemm.label(),
         mode.label(),
         pool_cfg.max_seqs,
         pool_cfg.max_tokens
     );
+    let opts = EngineOptions { codec, gemm };
     let engine = match a.get("backend") {
-        "host" => Some(TpEngine::start_with_codec(
+        "host" => Some(TpEngine::start_with_opts(
             EngineBackend::Host,
             model.blocks.iter().map(|b| b.mlp.clone()).collect(),
             cfg.activation,
             None,
-            codec,
+            opts,
         )?),
         "pjrt" => {
             let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
-            Some(TpEngine::start_with_codec(
+            Some(TpEngine::start_with_opts(
                 EngineBackend::Pjrt {
                     model: cfg.name.clone(),
                 },
                 model.blocks.iter().map(|b| b.mlp.clone()).collect(),
                 cfg.activation,
                 Some(&manifest),
-                codec,
+                opts,
             )?)
         }
         other => bail!("unknown backend '{other}'"),
@@ -345,6 +359,11 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         .flag("seed", "7", "weight seed")
         .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]")
         .flag(
+            "gemm-backend",
+            "tiled",
+            "host fused dequant-GEMM backend: naive | tiled | tiled-mt",
+        )
+        .flag(
             "ckpt",
             "",
             "load layer-0 deployments from a repacked checkpoint directory \
@@ -354,6 +373,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model"))?;
     let codec = parse_codec(a.get("comm-codec"))?;
+    let gemm = parse_gemm_backend(a.get("gemm-backend"))?;
     let ckpt_dir = a.get("ckpt").to_string();
     let shape = cfg.mlp_shape();
     let qcfg = GptqConfig {
@@ -394,15 +414,20 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         None
     };
     println!(
-        "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}, comm codec {}",
+        "measured host-engine MLP latency, shape ({}, {}, {}), int4 g={}, comm codec {}, \
+         gemm backend {}",
         shape.k1,
         shape.n1,
         shape.n2,
         cfg.group_size,
-        codec.label()
+        codec.label(),
+        gemm.label()
     );
     let mut t = Table::new(
-        "Measured (thread ranks, fused-dequant host kernels)",
+        &format!(
+            "Measured (thread ranks, fused-dequant host kernels, gemm={})",
+            gemm.label()
+        ),
         &["TP", "M", "Naive (ms)", "TP-Aware (ms)", "Speedup"],
     );
     let mut ct = Table::new(
@@ -449,20 +474,22 @@ fn cmd_measure(args: &[String]) -> Result<()> {
             let bcfg = BenchCfg::quick().from_env();
             let gn = CollectiveGroup::new_with_codec(tp, codec);
             let sn = bench(&bcfg, || {
-                tpaware::model::mlp::run_mlp_with_group(
+                tpaware::model::mlp::run_mlp_with_opts(
                     &dn,
                     &x,
                     cfg.activation,
                     &gn,
+                    gemm,
                 );
             });
             let ga = CollectiveGroup::new_with_codec(tp, codec);
             let sa = bench(&bcfg, || {
-                tpaware::model::mlp::run_mlp_with_group(
+                tpaware::model::mlp::run_mlp_with_opts(
                     &da,
                     &x,
                     cfg.activation,
                     &ga,
+                    gemm,
                 );
             });
             t.row(vec![
@@ -476,7 +503,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
             // algorithm with freshly reset counters.
             for (name, d, g) in [("naive", &dn, &gn), ("tp-aware", &da, &ga)] {
                 g.reset_stats();
-                tpaware::model::mlp::run_mlp_with_group(d, &x, cfg.activation, g);
+                tpaware::model::mlp::run_mlp_with_opts(d, &x, cfg.activation, g, gemm);
                 let s = g.stats();
                 let ratio = if s.total_bytes() == 0 {
                     1.0

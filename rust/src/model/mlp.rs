@@ -9,6 +9,7 @@
 //! bytes through [`crate::tp::collectives`]. Per-phase wall-clock is
 //! recorded so benches can print measured breakdowns next to modeled ones.
 
+use crate::gemm::GemmBackend;
 use crate::model::config::Activation;
 use crate::model::weights::DeployedMlp;
 use crate::quant::perm;
@@ -92,12 +93,25 @@ pub fn run_rank(
     x: &Matrix,
     act: Activation,
 ) -> (Matrix, PhaseTiming) {
+    run_rank_with(d, rank, comm, x, act, GemmBackend::default())
+}
+
+/// As [`run_rank`], with an explicit GEMM backend for both layer shards
+/// (bit-identical across backends — the choice is throughput only).
+pub fn run_rank_with(
+    d: &DeployedMlp,
+    rank: usize,
+    comm: &RankComm,
+    x: &Matrix,
+    act: Activation,
+    backend: GemmBackend,
+) -> (Matrix, PhaseTiming) {
     let mut t = PhaseTiming::default();
 
     // Line 1: Y1_local ← X[:, P1] @ W1_local.
     let t0 = Instant::now();
     let xp = perm::apply_cols(x, &d.p1);
-    let mut y1_local = d.w1_shards[rank].forward(&xp);
+    let mut y1_local = d.w1_shards[rank].forward_with(&xp, backend);
     act.apply_slice(&mut y1_local.data);
     t.gemm1_ns = t0.elapsed().as_nanos() as u64;
 
@@ -122,7 +136,7 @@ pub fn run_rank(
 
     // Line 5 (Alg.2) / Line 2 (Alg.3): Y2_local ← Y1_local @ W2_local.
     let t0 = Instant::now();
-    let y2_partial = d.w2_shards[rank].forward(&y1_for_w2);
+    let y2_partial = d.w2_shards[rank].forward_with(&y1_for_w2, backend);
     t.gemm2_ns = t0.elapsed().as_nanos() as u64;
 
     // Final line of both: AllReduce(sum).
@@ -150,6 +164,19 @@ pub fn run_mlp_with_group(
     act: Activation,
     group: &CollectiveGroup,
 ) -> (Matrix, PhaseTiming) {
+    run_mlp_with_opts(d, x, act, group, GemmBackend::default())
+}
+
+/// As [`run_mlp_with_group`], with an explicit GEMM backend. With
+/// `tiled-mt` every rank thread shards its N-tiles onto the shared
+/// [`crate::gemm::pool`], so rank- and tile-parallelism compose.
+pub fn run_mlp_with_opts(
+    d: &DeployedMlp,
+    x: &Matrix,
+    act: Activation,
+    group: &CollectiveGroup,
+    backend: GemmBackend,
+) -> (Matrix, PhaseTiming) {
     let comms = group.ranks();
     let d = std::sync::Arc::new(d.clone());
     let x = std::sync::Arc::new(x.clone());
@@ -157,7 +184,7 @@ pub fn run_mlp_with_group(
     let dc = d.clone();
     let results = d.tp.run_spmd(move |rank| {
         let comm = comms.lock().unwrap()[rank].clone();
-        run_rank(&dc, rank, &comm, &x, act)
+        run_rank_with(&dc, rank, &comm, &x, act, backend)
     });
     let mut iter = results.into_iter();
     let (out0, mut timing) = iter.next().expect("at least one rank");
@@ -177,12 +204,22 @@ pub fn run_mlp_with_group(
 /// transformer oracle and as the engine fallback when thread-per-rank
 /// execution is not wanted per token.
 pub fn run_mlp_sequential(d: &DeployedMlp, x: &Matrix, act: Activation) -> Matrix {
+    run_mlp_sequential_with(d, x, act, GemmBackend::default())
+}
+
+/// As [`run_mlp_sequential`], with an explicit GEMM backend.
+pub fn run_mlp_sequential_with(
+    d: &DeployedMlp,
+    x: &Matrix,
+    act: Activation,
+    backend: GemmBackend,
+) -> Matrix {
     let p = d.tp.size;
     let xp = perm::apply_cols(x, &d.p1);
     // Column-TP layer on every "rank".
     let mut y1_shards: Vec<Matrix> = (0..p)
         .map(|r| {
-            let mut y = d.w1_shards[r].forward(&xp);
+            let mut y = d.w1_shards[r].forward_with(&xp, backend);
             act.apply_slice(&mut y.data);
             y
         })
@@ -197,7 +234,7 @@ pub fn run_mlp_sequential(d: &DeployedMlp, x: &Matrix, act: Activation) -> Matri
     // Row-TP layer + AllReduce(sum).
     let mut acc: Option<Matrix> = None;
     for r in 0..p {
-        let partial = d.w2_shards[r].forward(&y1_shards[r]);
+        let partial = d.w2_shards[r].forward_with(&y1_shards[r], backend);
         acc = Some(match acc {
             None => partial,
             Some(a) => a.add(&partial),
@@ -391,6 +428,25 @@ mod tests {
             let (threaded, _) = run_mlp(&d, &x, Activation::Gelu);
             let sequential = run_mlp_sequential(&d, &x, Activation::Gelu);
             assert!(threaded.max_abs_diff(&sequential) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gemm_backends_agree_bit_for_bit_through_the_threaded_mlp() {
+        let ckpt = gen_checkpoint(shape(), 23);
+        let mut rng = Xoshiro256::new(24);
+        let x = Matrix::randn(3, 32, &mut rng);
+        for algo in [Algo::Naive, Algo::TpAware] {
+            let d = deploy_quantized(&ckpt, &cfg(), algo, Topology::new(2));
+            let group = CollectiveGroup::new(2);
+            let (base, _) =
+                run_mlp_with_opts(&d, &x, Activation::Gelu, &group, GemmBackend::Naive);
+            for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                let (y, _) = run_mlp_with_opts(&d, &x, Activation::Gelu, &group, b);
+                assert_eq!(y.max_abs_diff(&base), 0.0, "{algo:?} {b:?}");
+                let seq = run_mlp_sequential_with(&d, &x, Activation::Gelu, b);
+                assert!(seq.max_abs_diff(&base) < 1e-6, "{algo:?} {b:?} sequential");
+            }
         }
     }
 

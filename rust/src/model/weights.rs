@@ -19,8 +19,8 @@
 //! ([`LayerShard::Dense`]) because the paper benchmarks FP16 GEMMs "to
 //! demonstrate the communication benefit" in isolation.
 
-use crate::gemm::fused::{dequant_matmul_naive, dequant_matmul_ordered};
 use crate::gemm::naive::matmul_blocked;
+use crate::gemm::{dequant_matmul, GemmBackend};
 use crate::quant::gptq::{quantize_gptq, GptqConfig, QuantizedLinear};
 use crate::quant::pack::pack;
 use crate::quant::perm;
@@ -72,17 +72,19 @@ pub enum LayerShard {
 }
 
 impl LayerShard {
-    /// `x @ W` for this shard.
+    /// `x @ W` for this shard through the default GEMM backend.
     pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_with(x, GemmBackend::default())
+    }
+
+    /// `x @ W` for this shard through an explicit GEMM backend. All
+    /// backends are bit-identical (see [`crate::gemm::GemmBackend`]), so
+    /// the choice only affects throughput. Dense shards always use the
+    /// blocked f32 matmul — the backend selects the *dequant* kernel.
+    pub fn forward_with(&self, x: &Matrix, backend: GemmBackend) -> Matrix {
         match self {
             LayerShard::Dense(w) => matmul_blocked(x, w),
-            LayerShard::Quant(q) => {
-                if q.gidx.is_ordered() {
-                    dequant_matmul_ordered(x, q)
-                } else {
-                    dequant_matmul_naive(x, q)
-                }
-            }
+            LayerShard::Quant(q) => dequant_matmul(backend, x, q),
         }
     }
 
@@ -370,6 +372,26 @@ mod tests {
         let a = dense.forward(&x);
         let b = quant.forward(&x);
         assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn forward_with_is_bit_identical_across_backends() {
+        let ckpt = gen_checkpoint(small_shape(), 9);
+        let q = quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg());
+        let (_, qr) = q.reorder();
+        let shard = LayerShard::Quant(qr);
+        let mut rng = Xoshiro256::new(10);
+        let x = Matrix::randn(4, 32, &mut rng);
+        let base = shard.forward_with(&x, GemmBackend::Naive);
+        for b in GemmBackend::all() {
+            assert_eq!(
+                shard.forward_with(&x, b).max_abs_diff(&base),
+                0.0,
+                "{b:?} diverged from the scalar backend"
+            );
+        }
+        // The default backend is one of the three, so it inherits equality.
+        assert_eq!(shard.forward(&x).max_abs_diff(&base), 0.0);
     }
 
     #[test]

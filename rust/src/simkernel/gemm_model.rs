@@ -53,6 +53,114 @@ pub fn arithmetic_intensity(m: usize, k: usize, n: usize, dtype: WeightDtype) ->
     flops / bytes
 }
 
+// ---------------------------------------------------------------------
+// Host-CPU pricing of the fused dequant-GEMM backends (the tiling model
+// behind `gemm::tiled` / `--gemm-backend`).
+// ---------------------------------------------------------------------
+
+/// Host-CPU profile for pricing the fused dequant-GEMM backends.
+///
+/// Deliberately coarse (two bandwidth tiers + scalar FMA throughput per
+/// worker): the point is to rank the backends and expose *why* tiling
+/// wins — accumulator-traffic amplification — not to predict
+/// nanoseconds. `gemm_bench` prints these modeled times next to the
+/// measured ones.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuSpec {
+    /// Streaming main-memory bandwidth, bytes/s (shared by all workers).
+    pub dram_bw: f64,
+    /// Cache-hierarchy bandwidth for blocked working sets, bytes/s
+    /// (per worker).
+    pub cache_bw: f64,
+    /// Vectorized f32 FMA throughput per worker, FLOP/s — what the
+    /// register-tiled micro-kernel sustains (accumulators live in SIMD
+    /// registers, the compiler vectorizes the NR-wide inner loop).
+    pub flops: f64,
+    /// Scalar FMA throughput, FLOP/s — what the channel-major scalar
+    /// kernel sustains: every FMA round-trips its accumulator through
+    /// the cache (load-add-store chain), so it runs far below
+    /// [`CpuSpec::flops`]. This gap, not the DRAM stream, is why tiling
+    /// wins even on cache-resident shapes.
+    pub scalar_flops: f64,
+    /// Worker-thread count available to `tiled-mt` (the caller adds one).
+    pub workers: usize,
+    /// Working-set size under which repeated traffic is priced at
+    /// [`CpuSpec::cache_bw`] instead of [`CpuSpec::dram_bw`], bytes.
+    pub cache_bytes: usize,
+}
+
+/// A typical CI/dev x86 host (few cores, modest DDR4).
+pub const HOST_CPU: CpuSpec = CpuSpec {
+    dram_bw: 16e9,
+    cache_bw: 80e9,
+    flops: 16e9,
+    scalar_flops: 2e9,
+    workers: 8,
+    cache_bytes: 2 << 20,
+};
+
+/// Bytes one pass over a `K×N` int4 weight streams on the host,
+/// including the f32 (not f16 — host metadata is f32) scales/zeros.
+pub fn fused_weight_bytes_host(k: usize, n: usize, group_size: usize) -> f64 {
+    let packed = (k * n) as f64 / 2.0;
+    let groups = (k as f64 / group_size as f64).ceil();
+    packed + groups * n as f64 * 2.0 * 4.0
+}
+
+/// Modeled latency of one fused dequant-GEMM `M×K · K×N` on the host
+/// CPU under the given backend and (for the tiled backends) blocking.
+///
+/// The backends differ in *accumulator traffic*: the scalar kernel
+/// rescans the full `M×N` output once per input channel (`K` passes
+/// through whatever level holds it), while the tiled kernels hold an
+/// `MR×NR` register tile and revisit each output element once per
+/// K-block (`⌈K/KC⌉` passes) and each `X` element once per N-block.
+/// `tiled-mt` divides the per-worker terms by the effective parallelism
+/// `min(workers + 1, N-tiles)` — the DRAM weight stream is shared and
+/// does not scale.
+pub fn fused_gemm_cpu_s(
+    spec: &CpuSpec,
+    m: usize,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    backend: crate::gemm::GemmBackend,
+    tile: &crate::gemm::TileConfig,
+) -> f64 {
+    use crate::gemm::GemmBackend;
+    let weight_s = fused_weight_bytes_host(k, n, group_size) / spec.dram_bw;
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let c_bytes = (m * n * 4) as f64;
+    match backend {
+        GemmBackend::Naive => {
+            // K passes over the accumulator, read + write each time,
+            // and every FMA chained through it at the scalar rate.
+            let acc_traffic = 2.0 * c_bytes * k as f64;
+            let acc_bw = if m * n * 4 <= spec.cache_bytes {
+                spec.cache_bw
+            } else {
+                spec.dram_bw
+            };
+            (weight_s + acc_traffic / acc_bw).max(flops / spec.scalar_flops)
+        }
+        GemmBackend::Tiled | GemmBackend::TiledMt => {
+            let kc = (tile.kc_groups * group_size).max(1);
+            let k_passes = (k as f64 / kc as f64).ceil();
+            let n_tiles = (n as f64 / tile.nc as f64).ceil();
+            // C spilled/reloaded once per K-block; X re-read per N-tile.
+            let blocked_traffic =
+                2.0 * c_bytes * k_passes + (m * k * 4) as f64 * n_tiles;
+            let p = if backend == GemmBackend::TiledMt {
+                ((spec.workers + 1) as f64).min(n_tiles).max(1.0)
+            } else {
+                1.0
+            };
+            (weight_s + blocked_traffic / spec.cache_bw / p)
+                .max(flops / (spec.flops * p))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +198,44 @@ mod tests {
         let a = gemm_s(&A100, 16, 8192, 28672, WeightDtype::F16);
         let h = gemm_s(&H100, 16, 8192, 28672, WeightDtype::F16);
         assert!(h < a);
+    }
+
+    #[test]
+    fn cpu_model_ranks_the_backends() {
+        use crate::gemm::{GemmBackend, TileConfig};
+        // The granite-scaled MLP up_proj at decode batch sizes.
+        let (m, k, n, g) = (16, 512, 2048, 32);
+        let tile = TileConfig::host_default();
+        let naive = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::Naive, &tile);
+        let tiled = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::Tiled, &tile);
+        let mt = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::TiledMt, &tile);
+        assert!(tiled < naive, "tiled {tiled} vs naive {naive}");
+        assert!(mt < tiled, "tiled-mt {mt} vs tiled {tiled}");
+        // The shared weight stream is a floor no parallelism removes.
+        let floor = fused_weight_bytes_host(k, n, g) / HOST_CPU.dram_bw;
+        assert!(mt >= floor);
+    }
+
+    #[test]
+    fn cpu_model_mt_saturates_at_the_tile_count() {
+        use crate::gemm::{GemmBackend, TileConfig};
+        // With a single N-tile there is nothing to shard: tiled-mt
+        // prices identically to tiled.
+        let tile = TileConfig {
+            mc: 32,
+            kc_groups: 8,
+            nc: 4096,
+        };
+        let st = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::Tiled, &tile);
+        let mt = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::TiledMt, &tile);
+        assert_eq!(st, mt);
+    }
+
+    #[test]
+    fn cpu_weight_bytes_count_f32_metadata() {
+        // 512×2048 int4 + 16 groups of f32 scales+zeros.
+        let b = fused_weight_bytes_host(512, 2048, 32);
+        assert_eq!(b, (512.0 * 2048.0 / 2.0) + 16.0 * 2048.0 * 8.0);
     }
 
     #[test]

@@ -156,6 +156,21 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t.elapsed())
 }
 
+/// `bench_results/` anchored at the **workspace root**: cargo runs
+/// bench binaries with their working directory set to the package root
+/// (`rust/`), while the README and the CI bench-gate job reference
+/// `bench_results/` at the repo root — so anchor via
+/// `CARGO_MANIFEST_DIR/..` instead of the cwd. Every bench writes its
+/// CSV/JSON outputs here so one `cargo bench` run lands in one place.
+pub fn bench_results_dir() -> std::path::PathBuf {
+    if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+        if let Some(root) = std::path::Path::new(&manifest).parent() {
+            return root.join("bench_results");
+        }
+    }
+    std::path::PathBuf::from("bench_results")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,131 @@
+//! System-level GEMM-backend equivalence: every backend (`naive`,
+//! `tiled`, `tiled-mt`) must produce **bit-identical** MLP outputs
+//! through the threaded TP path — and therefore identical generated
+//! token streams through the full scheduler/engine stack (the
+//! `measure --gemm-backend` / `serve --gemm-backend` contract).
+
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, EngineOptions, TpEngine};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::request::Request;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::gemm::GemmBackend;
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::transformer::Transformer;
+use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
+use tpaware::quant::gptq::GptqConfig;
+use tpaware::simkernel::pipeline::{Algo, MlpShape};
+use tpaware::tensor::Matrix;
+use tpaware::tp::collectives::CollectiveGroup;
+use tpaware::tp::topology::Topology;
+use tpaware::util::prng::Xoshiro256;
+
+fn qcfg() -> GptqConfig {
+    GptqConfig {
+        group_size: 8,
+        act_order: true,
+        ..Default::default()
+    }
+}
+
+/// The measure path (`run_mlp_with_opts`, what `measure --gemm-backend`
+/// times): exact equality across backends, every TP width, both
+/// algorithms.
+#[test]
+fn backends_bit_identical_through_measure_path() {
+    let shape = MlpShape {
+        k1: 32,
+        n1: 64,
+        n2: 32,
+    };
+    let ckpt = gen_checkpoint(shape, 41);
+    let mut rng = Xoshiro256::new(42);
+    let x = Matrix::randn(4, 32, &mut rng);
+    for tp in [1usize, 2, 4] {
+        for algo in [Algo::Naive, Algo::TpAware] {
+            let d = deploy_quantized(&ckpt, &qcfg(), algo, Topology::new(tp));
+            let group = CollectiveGroup::new(tp);
+            let (base, _) = tpaware::model::mlp::run_mlp_with_opts(
+                &d,
+                &x,
+                Activation::Identity,
+                &group,
+                GemmBackend::Naive,
+            );
+            for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                let (y, _) = tpaware::model::mlp::run_mlp_with_opts(
+                    &d,
+                    &x,
+                    Activation::Identity,
+                    &group,
+                    b,
+                );
+                assert_eq!(
+                    y.max_abs_diff(&base),
+                    0.0,
+                    "tp={tp} {algo:?} {b:?} diverged from the scalar backend"
+                );
+            }
+        }
+    }
+}
+
+/// The serve path: a scheduler + TP engine per backend generates the
+/// exact same token streams (and reports its backend in the metrics).
+#[test]
+fn backends_generate_identical_tokens_through_the_engine() {
+    let cfg = ModelConfig {
+        name: "unit-backends".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 32,
+        activation: Activation::Gelu,
+        group_size: 8,
+    };
+    let mut base: Option<Vec<(u64, Vec<u32>)>> = None;
+    for backend in GemmBackend::all() {
+        let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 17));
+        let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
+        let engine = TpEngine::start_with_opts(
+            EngineBackend::Host,
+            layers,
+            cfg.activation,
+            None,
+            EngineOptions {
+                gemm: backend,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(engine.gemm_backend(), backend);
+        let metrics = Arc::new(Metrics::default());
+        let sched = Scheduler::new(model, Some(engine), metrics.clone(), 4);
+        // The scheduler publishes the engine's backend to the metrics
+        // endpoint (what `serve` surfaces as `gemm_backend`).
+        assert_eq!(
+            metrics.to_json().get("gemm_backend").as_str(),
+            Some(backend.label())
+        );
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request::new(i as u64, vec![1 + i as u32, 5, 9], 6))
+            .collect();
+        let resps = sched.run_all(reqs);
+        let mut tokens: Vec<(u64, Vec<u32>)> =
+            resps.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        tokens.sort();
+        match &base {
+            None => base = Some(tokens),
+            Some(expect) => assert_eq!(
+                expect, &tokens,
+                "backend {} generated different tokens",
+                backend.label()
+            ),
+        }
+        if let Some(e) = sched.engine {
+            e.shutdown();
+        }
+    }
+}

@@ -99,7 +99,7 @@ fn tcp_serving_from_ckpt_matches_memory_path() {
         tp,
         cfg.activation,
         None,
-        tpaware::tp::codec::CodecSpec::Fp32,
+        tpaware::coordinator::engine::EngineOptions::default(),
     )
     .unwrap();
     let metrics = Arc::new(Metrics::default());

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate for the fused dequant-GEMM backends.
+
+Compares the `gemm_bench` output (`bench_results/BENCH_gemm.json`,
+backend x shape GiB/s on the Algorithm-1 ordered layout) against the
+committed floors in `ci/bench_baseline.json`:
+
+* absolute floors: measured GiB/s must be >= floor * (1 - tolerance%),
+  per (shape, backend) listed in `floors_gib_s`;
+* relative requirements: rows of `[shape, faster_backend, slower_backend]`
+  in `require_faster` assert ordering between backends measured in the
+  same run (robust to runner speed, the sharp edge of the gate).
+
+Stdlib-only, like the other tools/ scripts.
+
+Usage: bench_gate.py BENCH_gemm.json ci/bench_baseline.json
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+
+    gib = bench.get("gib_s", {})
+    tol = float(base.get("tolerance_pct", 0.0))
+    failures = []
+
+    print(f"bench gate: mode={bench.get('mode')} m={bench.get('m')} "
+          f"layout={bench.get('layout')} pool_workers={bench.get('pool_workers')} "
+          f"tolerance={tol:.0f}%")
+    for shape, backends in sorted(base.get("floors_gib_s", {}).items()):
+        for backend, floor in sorted(backends.items()):
+            measured = gib.get(shape, {}).get(backend)
+            if measured is None:
+                failures.append(f"{shape}/{backend}: missing from bench output")
+                continue
+            need = floor * (1.0 - tol / 100.0)
+            ok = measured >= need
+            print(f"  {'PASS' if ok else 'FAIL'} {shape}/{backend}: "
+                  f"{measured:.3f} GiB/s (floor {floor:.3f}, need >= {need:.3f})")
+            if not ok:
+                failures.append(
+                    f"{shape}/{backend}: {measured:.3f} GiB/s below floor "
+                    f"{floor:.3f} (-{tol:.0f}% => {need:.3f})")
+
+    for shape, fast, slow in base.get("require_faster", []):
+        f_gib = gib.get(shape, {}).get(fast)
+        s_gib = gib.get(shape, {}).get(slow)
+        if f_gib is None or s_gib is None:
+            failures.append(f"{shape}: {fast} or {slow} missing from bench output")
+            continue
+        ok = f_gib > s_gib
+        ratio = f_gib / s_gib if s_gib else float("inf")
+        print(f"  {'PASS' if ok else 'FAIL'} {shape}: {fast} {f_gib:.3f} GiB/s "
+              f"vs {slow} {s_gib:.3f} GiB/s ({ratio:.2f}x)")
+        if not ok:
+            failures.append(
+                f"{shape}: {fast} ({f_gib:.3f} GiB/s) does not beat "
+                f"{slow} ({s_gib:.3f} GiB/s)")
+
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
