@@ -35,6 +35,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tpaware::coordinator::kv_pool::{KvPool, KvPoolCfg};
+use tpaware::coordinator::loadgen::{gen_trace, Arrival};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::request::{Request, Response};
 use tpaware::coordinator::scheduler::{ContinuousScheduler, Scheduler};
@@ -42,37 +43,7 @@ use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
 use tpaware::simkernel::pipeline::{Algo, SchedMode};
 use tpaware::tp::topology::Topology;
-use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
-
-/// One request of the trace: arrival offset from t0, prompt, output len.
-struct Arrival {
-    at: Duration,
-    prompt: Vec<u32>,
-    max_new: usize,
-}
-
-/// Poisson arrival process with rate `lambda` (requests/second): mostly
-/// short completions with a long-tail generation every sixth request
-/// (the realistic serving mix static batching handles worst), prompts
-/// 2–5 tokens.
-fn gen_trace(n: usize, lambda: f64, seed: u64) -> Vec<Arrival> {
-    let mut rng = Xoshiro256::new(seed);
-    let mut t = 0.0f64;
-    (0..n)
-        .map(|i| {
-            // Exponential inter-arrival: -ln(U)/lambda.
-            let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
-            t += -u.ln() / lambda;
-            let plen = 2 + rng.below(4);
-            Arrival {
-                at: Duration::from_secs_f64(t),
-                prompt: (0..plen).map(|_| rng.below(512) as u32).collect(),
-                max_new: if i % 6 == 0 { 32 } else { 2 },
-            }
-        })
-        .collect()
-}
 
 struct ModeReport {
     tokens: usize,

@@ -7,10 +7,10 @@
 //! Run with: `make artifacts && cargo run --release --example serve_demo`
 
 use std::sync::Arc;
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
-use tpaware::coordinator::server::{Client, Server};
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
 use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
 use tpaware::runtime::artifact::Manifest;
@@ -34,20 +34,23 @@ fn main() -> tpaware::Result<()> {
     let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
     let (engine, backend_name) = match Manifest::load_for_pjrt() {
         Ok(manifest) => (
-            TpEngine::start(
+            EngineConfig::new(
                 EngineBackend::Pjrt {
                     model: cfg.name.clone(),
                 },
-                layers,
                 cfg.activation,
-                Some(&manifest),
-            )?,
+            )
+            .layers(layers)
+            .manifest(&manifest)
+            .start()?,
             "pjrt",
         ),
         Err(e) => {
             eprintln!("note: PJRT unavailable ({e}); using host backend");
             (
-                TpEngine::start(EngineBackend::Host, layers, cfg.activation, None)?,
+                EngineConfig::new(EngineBackend::Host, cfg.activation)
+                    .layers(layers)
+                    .start()?,
                 "host",
             )
         }
@@ -56,9 +59,20 @@ fn main() -> tpaware::Result<()> {
 
     let metrics = Arc::new(Metrics::default());
     let scheduler = Scheduler::new(model, Some(engine), metrics.clone(), 8);
-    let server = Server::start("127.0.0.1:0", scheduler)?;
+    let server = Server::serve(scheduler, ServeConfig::default())?;
     let addr = server.addr.clone();
     eprintln!("serving on {addr}");
+
+    // Per-token streaming: the first thing a consumer sees is the first
+    // token, not the finished response.
+    let mut sc = Client::connect(&addr)?;
+    let mut stream = sc.generate_streamed(&[1, 2, 3, 4], 8)?;
+    print!("streamed tokens:");
+    for t in &mut stream {
+        print!(" {}", t?);
+    }
+    let first = stream.finish()?;
+    println!("  (ttft {:.1} ms, e2e {:.1} ms)", first.ttft_ms, first.total_ms);
 
     // Fire concurrent clients.
     const CLIENTS: usize = 8;

@@ -5,7 +5,7 @@
 //!
 //! Run with: `cargo run --release --example tp_aware_vs_naive`
 
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig, TpEngine};
 use tpaware::model::config::ModelConfig;
 use tpaware::model::mlp::run_mlp_with_group;
 use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
@@ -78,14 +78,15 @@ fn main() -> tpaware::Result<()> {
             for tp in [1usize, 2, 4] {
                 let topo = Topology::new(tp);
                 let mk_engine = |algo| -> tpaware::Result<TpEngine> {
-                    TpEngine::start(
+                    EngineConfig::new(
                         EngineBackend::Pjrt {
                             model: cfg.name.clone(),
                         },
-                        vec![deploy_quantized(&ckpt, &qcfg, algo, topo)],
                         cfg.activation,
-                        Some(&manifest),
                     )
+                    .layers(vec![deploy_quantized(&ckpt, &qcfg, algo, topo)])
+                    .manifest(&manifest)
+                    .start()
                 };
                 let en = mk_engine(Algo::Naive)?;
                 let ea = mk_engine(Algo::TpAware)?;

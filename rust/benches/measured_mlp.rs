@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo bench --bench measured_mlp`
 
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::model::config::ModelConfig;
 use tpaware::model::mlp::run_mlp_with_group;
 use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
@@ -123,14 +123,15 @@ fn pjrt_sweep(
     for &tp in tps {
         let topo = Topology::new(tp);
         let mk = |algo| {
-            TpEngine::start(
+            EngineConfig::new(
                 EngineBackend::Pjrt {
                     model: cfg.name.clone(),
                 },
-                vec![deploy_quantized(&ckpt, &qcfg, algo, topo)],
                 cfg.activation,
-                Some(manifest),
             )
+            .layers(vec![deploy_quantized(&ckpt, &qcfg, algo, topo)])
+            .manifest(manifest)
+            .start()
             .expect("engine start")
         };
         let en = mk(Algo::Naive);

@@ -9,11 +9,13 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use tpaware::coordinator::engine::{EngineBackend, EngineOptions, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig, TpEngine};
 use tpaware::coordinator::kv_pool::{KvPool, KvPoolCfg};
+use tpaware::coordinator::loadgen::{self, LoadMode, LoadgenCfg};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::request::Request;
 use tpaware::coordinator::scheduler::{ContinuousScheduler, Scheduler};
+use tpaware::coordinator::server::{ServeConfig, Server};
 use tpaware::gemm::GemmBackend;
 use tpaware::model::config::ModelConfig;
 use tpaware::model::transformer::Transformer;
@@ -22,6 +24,7 @@ use tpaware::simkernel::gemm_model::WeightDtype;
 use tpaware::simkernel::gpu::A100;
 use tpaware::simkernel::pipeline::{self, Algo, SchedMode};
 use tpaware::tp::topology::Topology;
+use tpaware::util::json::Json;
 use tpaware::util::prng::Xoshiro256;
 use tpaware::util::table::Table;
 
@@ -168,7 +171,9 @@ fn main() {
             let mut backends: Vec<(&str, Option<TpEngine>)> = vec![(
                 "host",
                 Some(
-                    TpEngine::start(EngineBackend::Host, layers.clone(), cfg.activation, None)
+                    EngineConfig::new(EngineBackend::Host, cfg.activation)
+                        .layers(layers.clone())
+                        .start()
                         .unwrap(),
                 ),
             )];
@@ -177,14 +182,15 @@ fn main() {
                     backends.push((
                         "pjrt",
                         Some(
-                            TpEngine::start(
+                            EngineConfig::new(
                                 EngineBackend::Pjrt {
                                     model: cfg.name.clone(),
                                 },
-                                layers.clone(),
                                 cfg.activation,
-                                Some(m),
                             )
+                            .layers(layers.clone())
+                            .manifest(m)
+                            .start()
                             .unwrap(),
                         ),
                     ));
@@ -235,17 +241,11 @@ fn main() {
     let mut gemm_csv = String::from("gemm_backend,tok_per_s,step_p50_us,step_speedup\n");
     let mut naive_step_us = 0u64;
     for backend in GemmBackend::all() {
-        let engine = TpEngine::start_with_opts(
-            EngineBackend::Host,
-            layers.clone(),
-            cfg.activation,
-            None,
-            EngineOptions {
-                gemm: backend,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(layers.clone())
+            .gemm(backend)
+            .start()
+            .unwrap();
         let r = run_offline(model.clone(), Some(engine), n_requests, max_new);
         if backend == GemmBackend::Naive {
             naive_step_us = r.step_p50_us;
@@ -298,8 +298,10 @@ fn main() {
     let mut tok_per_s = [0.0f64; 2];
     let modes = [SchedMode::Static, SchedMode::Continuous];
     for (i, mode) in modes.iter().enumerate() {
-        let engine =
-            TpEngine::start(EngineBackend::Host, layers.clone(), cfg.activation, None).unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(layers.clone())
+            .start()
+            .unwrap();
         let r = run_mode(
             model.clone(),
             Some(engine),
@@ -348,14 +350,74 @@ fn main() {
          (the acceptance bar is >= 1.2x on this mixed-length workload)"
     );
 
+    // ---- Streamed serving under load: live-server TTFT/ITL ----
+    // The same tiny model, but served through the real nonblocking server
+    // and driven by the loadgen harness over TCP — client-observed TTFT,
+    // inter-token and e2e percentiles, and the `BENCH_serving.json` input
+    // the CI bench gate checks as `serving_ttft`.
+    let (lg_n, lg_lambda) = if fast { (8usize, 60.0) } else { (32usize, 40.0) };
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(layers.clone())
+        .start()
+        .unwrap();
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(model.clone(), Some(engine), metrics, max_batch);
+    let server = Server::serve(sched, ServeConfig::new("127.0.0.1:0").pool(pool_cfg))
+        .expect("server start");
+    let report = loadgen::run(&LoadgenCfg {
+        addr: server.addr.clone(),
+        n: lg_n,
+        mode: LoadMode::OpenLoop { lambda: lg_lambda },
+        seed: 7,
+    })
+    .expect("loadgen run");
+    server.stop();
+    println!(
+        "Streamed serving (host engine, TP=2, TP-aware, open-loop Poisson \
+         lambda={lg_lambda}/s, {lg_n} requests):"
+    );
+    println!(
+        "  ttft p50 {:.2} / p95 {:.2} / p99 {:.2} ms   itl p50 {:.2} ms   \
+         e2e p50 {:.2} ms   {:.1} tok/s",
+        report.ttft_ms.p50,
+        report.ttft_ms.p95,
+        report.ttft_ms.p99,
+        report.itl_ms.p50,
+        report.e2e_ms.p50,
+        report.tokens_per_s()
+    );
+    println!(
+        "(TTFT is client-observed through the readiness loop — first token \
+         event after send,\n queue wait included — and sits strictly below \
+         e2e p50 on this long-tail mix.)\n"
+    );
+    assert!(
+        report.ttft_ms.p50 < report.e2e_ms.p50,
+        "TTFT p50 ({:.2} ms) must sit strictly below e2e p50 ({:.2} ms)",
+        report.ttft_ms.p50,
+        report.e2e_ms.p50
+    );
+    let bench_mode = if fast { "fast" } else { "full" };
+    let out = Json::obj(vec![
+        ("mode", bench_mode.into()),
+        ("engine", "host".into()),
+        ("tp", 2usize.into()),
+        ("algo", "tp-aware".into()),
+        ("lambda", lg_lambda.into()),
+        ("serving_ttft", report.to_json()),
+    ]);
+
     let dir = tpaware::util::timer::bench_results_dir();
     std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("BENCH_serving.json"), out.to_pretty()).ok();
+    std::fs::write(dir.join("serving_loadgen.csv"), report.to_csv()).ok();
     std::fs::write(dir.join("serving_bench.csv"), csv).ok();
     std::fs::write(dir.join("serving_modes.csv"), mode_csv).ok();
     std::fs::write(dir.join("serving_gemm_backends.csv"), gemm_csv).ok();
     println!(
-        "CSV written to {}: serving_bench.csv, serving_modes.csv and \
-         serving_gemm_backends.csv",
-        dir.display()
+        "CSV written to {}: serving_bench.csv, serving_modes.csv, \
+         serving_gemm_backends.csv and serving_loadgen.csv; gate input to {}",
+        dir.display(),
+        dir.join("BENCH_serving.json").display()
     );
 }

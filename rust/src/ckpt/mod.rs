@@ -20,7 +20,7 @@
 //! Entry points: the `repack` CLI subcommand writes checkpoints,
 //! `serve --ckpt <dir>` / `measure --ckpt <dir>` boot from them
 //! (skipping the quantizer entirely),
-//! [`crate::coordinator::engine::TpEngine::start_from_ckpt`] wires a
+//! [`crate::coordinator::engine::EngineConfig::from_ckpt`] wires a
 //! loaded deployment straight into the rank pool, and `ckpt_bench`
 //! quantifies write/load/verify throughput against in-memory
 //! re-quantization. `tools/ckpt_inspect.py` dumps headers and manifests

@@ -64,6 +64,138 @@ pub struct EngineOptions {
     pub gemm: GemmBackend,
 }
 
+/// Where an [`EngineConfig`] gets its per-layer deployments from.
+enum WeightSource {
+    /// In-memory deployments (quantized in-process or handed over).
+    Layers(Vec<DeployedMlp>),
+    /// A repacked on-disk checkpoint directory (`repack` subcommand);
+    /// algo + tp select which materialization to load.
+    Ckpt {
+        dir: std::path::PathBuf,
+        algo: Algo,
+        tp: crate::tp::topology::Topology,
+    },
+    /// Not yet chosen — [`EngineConfig::start`] rejects this.
+    Unset,
+}
+
+/// Builder for [`TpEngine`] — the single construction path that replaced
+/// the `start` / `start_with_codec` / `start_with_opts` /
+/// `start_from_ckpt` constructor family.
+///
+/// Pick a weight source ([`EngineConfig::layers`] for in-memory
+/// deployments, [`EngineConfig::from_ckpt`] for a repacked checkpoint
+/// directory — the deployment algorithm and TP width travel with the
+/// source, since in-memory layers already carry both), optionally set
+/// the wire codec / host GEMM backend / PJRT manifest, then call
+/// [`EngineConfig::start`]:
+///
+/// ```no_run
+/// # use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
+/// # use tpaware::model::config::Activation;
+/// # use tpaware::tp::codec::CodecSpec;
+/// # use tpaware::gemm::GemmBackend;
+/// # let layers = vec![];
+/// let engine = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+///     .layers(layers)
+///     .codec(CodecSpec::Bf16)
+///     .gemm(GemmBackend::TiledMt)
+///     .start()?;
+/// # Ok::<(), tpaware::util::error::Error>(())
+/// ```
+pub struct EngineConfig {
+    backend: EngineBackend,
+    act: Activation,
+    source: WeightSource,
+    manifest: Option<Manifest>,
+    opts: EngineOptions,
+}
+
+impl EngineConfig {
+    /// Start a config for `backend` with activation `act` and default
+    /// options (fp32 wire codec, tiled host GEMM, no manifest).
+    pub fn new(backend: EngineBackend, act: Activation) -> EngineConfig {
+        EngineConfig {
+            backend,
+            act,
+            source: WeightSource::Unset,
+            manifest: None,
+            opts: EngineOptions::default(),
+        }
+    }
+
+    /// Use in-memory per-layer deployments (all must share algo + tp).
+    pub fn layers(mut self, layers: Vec<DeployedMlp>) -> EngineConfig {
+        self.source = WeightSource::Layers(layers);
+        self
+    }
+
+    /// Load the per-layer deployments from a **repacked on-disk
+    /// checkpoint** directory (written by the `repack` subcommand /
+    /// [`crate::ckpt::repack::repack_model`]): the boot path never
+    /// touches the GPTQ quantizer, and checksum or manifest mismatches
+    /// fail loudly in [`EngineConfig::start`] before any rank thread
+    /// spawns.
+    pub fn from_ckpt(
+        mut self,
+        dir: impl Into<std::path::PathBuf>,
+        algo: Algo,
+        tp: crate::tp::topology::Topology,
+    ) -> EngineConfig {
+        self.source = WeightSource::Ckpt {
+            dir: dir.into(),
+            algo,
+            tp,
+        };
+        self
+    }
+
+    /// Set the on-the-wire codec for all inter-rank collectives.
+    pub fn codec(mut self, codec: CodecSpec) -> EngineConfig {
+        self.opts.codec = codec;
+        self
+    }
+
+    /// Set the fused dequant-GEMM backend for the host compute path
+    /// (ignored by the PJRT backend, whose kernels are compiled).
+    pub fn gemm(mut self, gemm: GemmBackend) -> EngineConfig {
+        self.opts.gemm = gemm;
+        self
+    }
+
+    /// Attach the artifact manifest (required by
+    /// [`EngineBackend::Pjrt`], ignored by the host backend).
+    pub fn manifest(mut self, manifest: &Manifest) -> EngineConfig {
+        self.manifest = Some(manifest.clone());
+        self
+    }
+
+    /// Resolve the weight source and spawn the rank pool.
+    pub fn start(self) -> Result<TpEngine> {
+        let layers = match self.source {
+            WeightSource::Layers(layers) => layers,
+            WeightSource::Ckpt { dir, algo, tp } => {
+                crate::ckpt::repack::load_deployment(&dir, algo, tp).with_context(|| {
+                    format!(
+                        "loading repacked checkpoint {} for the TP engine",
+                        dir.display()
+                    )
+                })?
+            }
+            WeightSource::Unset => {
+                bail!("EngineConfig needs a weight source: .layers(..) or .from_ckpt(..)")
+            }
+        };
+        start_engine(
+            self.backend,
+            layers,
+            self.act,
+            self.manifest.as_ref(),
+            self.opts,
+        )
+    }
+}
+
 /// Handle to the rank pool.
 pub struct TpEngine {
     algo: Algo,
@@ -141,23 +273,145 @@ fn build_rank_executor(
     Ok(e)
 }
 
+/// The one engine-spawning path every construction route funnels into
+/// (the [`EngineConfig`] builder and the deprecated constructor shims).
+fn start_engine(
+    backend: EngineBackend,
+    layers: Vec<DeployedMlp>,
+    act: Activation,
+    manifest: Option<&Manifest>,
+    opts: EngineOptions,
+) -> Result<TpEngine> {
+    let EngineOptions { codec, gemm } = opts;
+    let host_gemm = backend == EngineBackend::Host;
+    let first = layers
+        .first()
+        .ok_or_else(|| err!("engine needs at least one layer"))?;
+    let algo = first.algo;
+    let tp = first.tp.size;
+    if !layers.iter().all(|d| d.algo == algo && d.tp.size == tp) {
+        bail!("all layers must share algo and tp");
+    }
+    let n_layers = layers.len();
+    let layers = Arc::new(layers);
+    let group = Arc::new(CollectiveGroup::new_with_codec(tp, codec));
+    let (reply_tx, reply_rx) = mpsc::channel();
+
+    // For PJRT, compile on the main thread? No: PjrtContext is not
+    // Send — each worker builds its own executor. The manifest data is
+    // cloneable and Send.
+    let manifest = match &backend {
+        EngineBackend::Pjrt { .. } => Some(
+            manifest
+                .ok_or_else(|| err!("PJRT backend requires a manifest"))?
+                .clone(),
+        ),
+        EngineBackend::Host => None,
+    };
+
+    let mut senders = Vec::with_capacity(tp);
+    let mut handles = Vec::with_capacity(tp);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    for rank in 0..tp {
+        let (tx, rx) = mpsc::channel::<Job>();
+        senders.push(tx);
+        let comm = group.rank(rank);
+        let layers = layers.clone();
+        let backend = backend.clone();
+        let manifest = manifest.clone();
+        let reply_tx = reply_tx.clone();
+        let ready_tx = ready_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-rank-{rank}"))
+            .spawn(move || {
+                let exec = match &backend {
+                    EngineBackend::Host => None,
+                    EngineBackend::Pjrt { model } => {
+                        let m = manifest.as_ref().expect("checked above");
+                        let built = build_rank_executor(m, model, algo, tp, rank, &layers);
+                        match built {
+                            Ok(e) => {
+                                let _ = ready_tx.send(Ok(()));
+                                Some(e)
+                            }
+                            Err(err) => {
+                                let _ = ready_tx.send(Err(err));
+                                return;
+                            }
+                        }
+                    }
+                };
+                if exec.is_none() {
+                    let _ = ready_tx.send(Ok(()));
+                }
+                let ctx = WorkerCtx {
+                    rank,
+                    comm,
+                    act,
+                    gemm,
+                    layers,
+                    exec,
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Stop => break,
+                        Job::Mlp { layer, x } => {
+                            let out = ctx.run_mlp(layer, &x);
+                            if rank == 0 {
+                                let _ = reply_tx.send(out);
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawning engine rank thread");
+        handles.push(handle);
+    }
+    // Wait for all ranks to come up (PJRT compilation happens here).
+    for _ in 0..tp {
+        ready_rx
+            .recv()
+            .map_err(|_| err!("rank died during startup"))??;
+    }
+    Ok(TpEngine {
+        algo,
+        tp,
+        codec,
+        gemm,
+        host_gemm,
+        n_layers,
+        senders,
+        reply: reply_rx,
+        handles,
+        group,
+    })
+}
+
 impl TpEngine {
-    /// Start the rank pool.
+    /// Start the rank pool with default options.
     ///
     /// `layers` — one deployment per MLP layer (all must share algo + tp).
     /// For `EngineBackend::Pjrt`, `manifest` locates the compiled
     /// artifacts for `model`.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use EngineConfig::new(backend, act).layers(..).start()"
+    )]
     pub fn start(
         backend: EngineBackend,
         layers: Vec<DeployedMlp>,
         act: Activation,
         manifest: Option<&Manifest>,
     ) -> Result<TpEngine> {
-        TpEngine::start_with_codec(backend, layers, act, manifest, CodecSpec::Fp32)
+        start_engine(backend, layers, act, manifest, EngineOptions::default())
     }
 
     /// As [`TpEngine::start`], with every inter-rank collective moving
     /// `codec`-encoded bytes (see [`crate::tp::codec`]).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use EngineConfig::new(backend, act).layers(..).codec(..).start()"
+    )]
     pub fn start_with_codec(
         backend: EngineBackend,
         layers: Vec<DeployedMlp>,
@@ -165,7 +419,7 @@ impl TpEngine {
         manifest: Option<&Manifest>,
         codec: CodecSpec,
     ) -> Result<TpEngine> {
-        TpEngine::start_with_opts(
+        start_engine(
             backend,
             layers,
             act,
@@ -177,8 +431,12 @@ impl TpEngine {
         )
     }
 
-    /// The fully-general constructor: [`TpEngine::start`] plus explicit
-    /// [`EngineOptions`] — wire codec and host GEMM backend.
+    /// [`TpEngine::start`] plus explicit [`EngineOptions`] — wire codec
+    /// and host GEMM backend.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use EngineConfig::new(backend, act).layers(..).codec(..).gemm(..).start()"
+    )]
     pub fn start_with_opts(
         backend: EngineBackend,
         layers: Vec<DeployedMlp>,
@@ -186,118 +444,15 @@ impl TpEngine {
         manifest: Option<&Manifest>,
         opts: EngineOptions,
     ) -> Result<TpEngine> {
-        let EngineOptions { codec, gemm } = opts;
-        let host_gemm = backend == EngineBackend::Host;
-        let first = layers
-            .first()
-            .ok_or_else(|| err!("engine needs at least one layer"))?;
-        let algo = first.algo;
-        let tp = first.tp.size;
-        if !layers.iter().all(|d| d.algo == algo && d.tp.size == tp) {
-            bail!("all layers must share algo and tp");
-        }
-        let n_layers = layers.len();
-        let layers = Arc::new(layers);
-        let group = Arc::new(CollectiveGroup::new_with_codec(tp, codec));
-        let (reply_tx, reply_rx) = mpsc::channel();
-
-        // For PJRT, compile on the main thread? No: PjrtContext is not
-        // Send — each worker builds its own executor. The manifest data is
-        // cloneable and Send.
-        let manifest = match &backend {
-            EngineBackend::Pjrt { .. } => Some(
-                manifest
-                    .ok_or_else(|| err!("PJRT backend requires a manifest"))?
-                    .clone(),
-            ),
-            EngineBackend::Host => None,
-        };
-
-        let mut senders = Vec::with_capacity(tp);
-        let mut handles = Vec::with_capacity(tp);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for rank in 0..tp {
-            let (tx, rx) = mpsc::channel::<Job>();
-            senders.push(tx);
-            let comm = group.rank(rank);
-            let layers = layers.clone();
-            let backend = backend.clone();
-            let manifest = manifest.clone();
-            let reply_tx = reply_tx.clone();
-            let ready_tx = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("engine-rank-{rank}"))
-                .spawn(move || {
-                    let exec = match &backend {
-                        EngineBackend::Host => None,
-                        EngineBackend::Pjrt { model } => {
-                            let m = manifest.as_ref().expect("checked above");
-                            let built = build_rank_executor(m, model, algo, tp, rank, &layers);
-                            match built {
-                                Ok(e) => {
-                                    let _ = ready_tx.send(Ok(()));
-                                    Some(e)
-                                }
-                                Err(err) => {
-                                    let _ = ready_tx.send(Err(err));
-                                    return;
-                                }
-                            }
-                        }
-                    };
-                    if exec.is_none() {
-                        let _ = ready_tx.send(Ok(()));
-                    }
-                    let ctx = WorkerCtx {
-                        rank,
-                        comm,
-                        act,
-                        gemm,
-                        layers,
-                        exec,
-                    };
-                    while let Ok(job) = rx.recv() {
-                        match job {
-                            Job::Stop => break,
-                            Job::Mlp { layer, x } => {
-                                let out = ctx.run_mlp(layer, &x);
-                                if rank == 0 {
-                                    let _ = reply_tx.send(out);
-                                }
-                            }
-                        }
-                    }
-                })
-                .expect("spawning engine rank thread");
-            handles.push(handle);
-        }
-        // Wait for all ranks to come up (PJRT compilation happens here).
-        for _ in 0..tp {
-            ready_rx
-                .recv()
-                .map_err(|_| err!("rank died during startup"))??;
-        }
-        Ok(TpEngine {
-            algo,
-            tp,
-            codec,
-            gemm,
-            host_gemm,
-            n_layers,
-            senders,
-            reply: reply_rx,
-            handles,
-            group,
-        })
+        start_engine(backend, layers, act, manifest, opts)
     }
 
-    /// Start the rank pool from a **repacked on-disk checkpoint**: each
-    /// layer's per-rank [`crate::model::weights::LayerShard`]s are read
-    /// from `ckpt_dir` (written offline by the `repack` subcommand /
-    /// [`crate::ckpt::repack::repack_model`]) instead of being
-    /// quantized in-process — the boot path never touches the GPTQ
-    /// quantizer. Checksum or manifest mismatches fail loudly here,
-    /// before any rank thread starts.
+    /// Start the rank pool from a **repacked on-disk checkpoint** (see
+    /// [`EngineConfig::from_ckpt`], the replacement).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use EngineConfig::new(backend, act).from_ckpt(dir, algo, tp).start()"
+    )]
     pub fn start_from_ckpt(
         backend: EngineBackend,
         ckpt_dir: &std::path::Path,
@@ -307,11 +462,14 @@ impl TpEngine {
         manifest: Option<&Manifest>,
         opts: EngineOptions,
     ) -> Result<TpEngine> {
-        let layers = crate::ckpt::repack::load_deployment(ckpt_dir, algo, tp)
-            .with_context(|| {
-                format!("loading repacked checkpoint {} for the TP engine", ckpt_dir.display())
-            })?;
-        TpEngine::start_with_opts(backend, layers, act, manifest, opts)
+        let mut cfg = EngineConfig::new(backend, act)
+            .from_ckpt(ckpt_dir, algo, tp)
+            .codec(opts.codec)
+            .gemm(opts.gemm);
+        if let Some(m) = manifest {
+            cfg = cfg.manifest(m);
+        }
+        cfg.start()
     }
 
     /// The deployment algorithm all layers run.
@@ -431,13 +589,10 @@ mod tests {
                 .iter()
                 .map(|d| run_mlp_sequential(d, &x, Activation::Gelu))
                 .collect();
-            let engine = TpEngine::start(
-                EngineBackend::Host,
-                layers,
-                Activation::Gelu,
-                None,
-            )
-            .unwrap();
+            let engine = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+                .layers(layers)
+                .start()
+                .unwrap();
             for (i, e) in expect.iter().enumerate() {
                 let got = engine.mlp(i, &x).unwrap();
                 assert!(got.max_abs_diff(e) < 1e-5, "layer {i}");
@@ -451,18 +606,15 @@ mod tests {
         let mut rng = Xoshiro256::new(2);
         let x = Matrix::randn(2, 32, &mut rng);
         let mk = |algo| {
-            TpEngine::start(
-                EngineBackend::Host,
-                vec![deploy_quantized(
+            EngineConfig::new(EngineBackend::Host, Activation::Identity)
+                .layers(vec![deploy_quantized(
                     &gen_checkpoint(shape(), 20),
                     &cfg(),
                     algo,
                     Topology::new(4),
-                )],
-                Activation::Identity,
-                None,
-            )
-            .unwrap()
+                )])
+                .start()
+                .unwrap()
         };
         let naive = mk(Algo::Naive);
         naive.mlp(0, &x).unwrap();
@@ -494,14 +646,11 @@ mod tests {
             Topology::new(4),
         )];
         let oracle = run_mlp_sequential(&layers[0], &x, Activation::Identity);
-        let engine = TpEngine::start_with_codec(
-            EngineBackend::Host,
-            layers,
-            Activation::Identity,
-            None,
-            CodecSpec::Int8 { group: 64 },
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, Activation::Identity)
+            .layers(layers)
+            .codec(CodecSpec::Int8 { group: 64 })
+            .start()
+            .unwrap();
         let got = engine.mlp(0, &x).unwrap();
         let s = engine.comm_stats();
         engine.shutdown();
@@ -554,18 +703,14 @@ mod tests {
                 )
             })
             .collect();
-        let mem =
-            TpEngine::start(EngineBackend::Host, layers, Activation::Gelu, None).unwrap();
-        let disk = TpEngine::start_from_ckpt(
-            EngineBackend::Host,
-            &dir,
-            Algo::TpAware,
-            tp,
-            Activation::Gelu,
-            None,
-            EngineOptions::default(),
-        )
-        .unwrap();
+        let mem = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+            .layers(layers)
+            .start()
+            .unwrap();
+        let disk = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+            .from_ckpt(&dir, Algo::TpAware, tp)
+            .start()
+            .unwrap();
         let mut rng = Xoshiro256::new(3);
         let x = Matrix::randn(2, 32, &mut rng);
         for l in 0..mcfg.n_layers {
@@ -592,13 +737,77 @@ mod tests {
             Algo::TpAware,
             Topology::new(2),
         );
-        assert!(TpEngine::start(
+        assert!(EngineConfig::new(EngineBackend::Host, Activation::Identity)
+            .layers(vec![a, b])
+            .start()
+            .is_err());
+    }
+
+    #[test]
+    fn config_without_weight_source_errors() {
+        let e = EngineConfig::new(EngineBackend::Host, Activation::Identity)
+            .start()
+            .unwrap_err();
+        assert!(format!("{e}").contains("weight source"), "{e:#}");
+    }
+
+    /// The deprecated constructor shims stay equivalent to the builder
+    /// for one release — same outputs, same reported config.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_builder() {
+        let mk_layers = || {
+            vec![deploy_quantized(
+                &gen_checkpoint(shape(), 30),
+                &cfg(),
+                Algo::TpAware,
+                Topology::new(2),
+            )]
+        };
+        let mut rng = Xoshiro256::new(9);
+        let x = Matrix::randn(2, 32, &mut rng);
+        let built = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+            .layers(mk_layers())
+            .codec(CodecSpec::Bf16)
+            .gemm(crate::gemm::GemmBackend::Naive)
+            .start()
+            .unwrap();
+        let shimmed = TpEngine::start_with_opts(
             EngineBackend::Host,
-            vec![a, b],
-            Activation::Identity,
-            None
+            mk_layers(),
+            Activation::Gelu,
+            None,
+            EngineOptions {
+                codec: CodecSpec::Bf16,
+                gemm: crate::gemm::GemmBackend::Naive,
+            },
         )
-        .is_err());
+        .unwrap();
+        let plain = TpEngine::start(EngineBackend::Host, mk_layers(), Activation::Gelu, None)
+            .unwrap();
+        let coded = TpEngine::start_with_codec(
+            EngineBackend::Host,
+            mk_layers(),
+            Activation::Gelu,
+            None,
+            CodecSpec::Bf16,
+        )
+        .unwrap();
+        assert_eq!(built.codec(), shimmed.codec());
+        assert_eq!(built.gemm_backend(), shimmed.gemm_backend());
+        assert_eq!(coded.codec(), CodecSpec::Bf16);
+        let a = built.mlp(0, &x).unwrap();
+        let b = shimmed.mlp(0, &x).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        // bf16-wire engines agree with each other bit-for-bit; the
+        // fp32-wire shim only agrees approximately.
+        let c = coded.mlp(0, &x).unwrap();
+        assert_eq!(a.max_abs_diff(&c), 0.0);
+        assert!(plain.mlp(0, &x).unwrap().max_abs_diff(&a) < 1.0);
+        built.shutdown();
+        shimmed.shutdown();
+        plain.shutdown();
+        coded.shutdown();
     }
 
     #[test]
@@ -609,8 +818,10 @@ mod tests {
             Algo::TpAware,
             Topology::new(1),
         );
-        let engine =
-            TpEngine::start(EngineBackend::Host, vec![d], Activation::Identity, None).unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, Activation::Identity)
+            .layers(vec![d])
+            .start()
+            .unwrap();
         let mut rng = Xoshiro256::new(4);
         let x = Matrix::randn(1, 32, &mut rng);
         assert!(engine.mlp(5, &x).is_err());

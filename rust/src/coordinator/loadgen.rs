@@ -1,0 +1,415 @@
+//! Load-generation harness for the streaming server: open-loop Poisson
+//! and closed-loop workloads driven against a live address over the v2
+//! streaming protocol, reporting client-side TTFT, inter-token latency
+//! and end-to-end percentiles.
+//!
+//! This promotes the arrival generator the `serve_continuous` example
+//! replays in-process into a first-class tool: the same
+//! mostly-short/long-tail Poisson trace ([`gen_trace`]), but measured
+//! from the *client side of a real socket* — queue wait, scheduler
+//! admission, decode and the readiness loop's flush latency all land in
+//! the numbers, which is what makes the report comparable to production
+//! serving dashboards.
+//!
+//! * **Open loop** ([`LoadMode::OpenLoop`]): requests fire at their
+//!   trace arrival times regardless of completions — the arrival rate
+//!   is the independent variable, so saturation shows up as growing
+//!   TTFT (queue wait) rather than a lower request rate.
+//! * **Closed loop** ([`LoadMode::ClosedLoop`]): a fixed number of
+//!   workers each keep exactly one request in flight — the concurrency
+//!   is the independent variable, the classic throughput probe.
+//!
+//! Every request streams ([`Client::generate_streamed`]); TTFT is the
+//! gap from send to the first token *event*, inter-token latency the
+//! gap between consecutive events, so the report measures what a
+//! streaming consumer actually observes. Percentiles are exact
+//! (sorted-sample nearest-rank), not histogram-bucket edges: the
+//! `tpaware loadgen` CLI, the serving bench and the integration tests
+//! all compare them strictly.
+
+use crate::coordinator::server::Client;
+use crate::ensure;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One request of a trace: arrival offset from the run start, prompt,
+/// and output length.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Arrival time, as an offset from the start of the run (ignored in
+    /// closed-loop mode, where workers fire as fast as completions
+    /// allow).
+    pub at: Duration,
+    /// Prompt token ids.
+    pub prompt: Vec<u32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+}
+
+/// Poisson arrival process with rate `lambda` (requests/second): mostly
+/// short completions with a long-tail generation every sixth request
+/// (the realistic serving mix static batching handles worst), prompts
+/// 2–5 tokens. Deterministic in `seed`.
+pub fn gen_trace(n: usize, lambda: f64, seed: u64) -> Vec<Arrival> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            // Exponential inter-arrival: -ln(U)/lambda.
+            let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+            t += -u.ln() / lambda;
+            let plen = 2 + rng.below(4);
+            Arrival {
+                at: Duration::from_secs_f64(t),
+                prompt: (0..plen).map(|_| rng.below(512) as u32).collect(),
+                max_new: if i % 6 == 0 { 32 } else { 2 },
+            }
+        })
+        .collect()
+}
+
+/// How requests are driven against the server.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// Fire each request at its trace arrival time, regardless of
+    /// completions (Poisson at `lambda` requests/second).
+    OpenLoop {
+        /// Arrival rate, requests per second.
+        lambda: f64,
+    },
+    /// `concurrency` workers each keep one request in flight.
+    ClosedLoop {
+        /// Number of concurrent workers (and open connections).
+        concurrency: usize,
+    },
+}
+
+/// A loadgen run's parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenCfg {
+    /// Address of a running server (`host:port`).
+    pub addr: String,
+    /// Number of requests to issue.
+    pub n: usize,
+    /// Open- or closed-loop driving.
+    pub mode: LoadMode,
+    /// Trace seed (same seed = same prompts, lengths and arrivals).
+    pub seed: u64,
+}
+
+/// Exact percentiles over one latency population (milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Percentiles {
+    /// Median (nearest-rank).
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Largest sample.
+    pub max: f64,
+    /// Number of samples.
+    pub count: usize,
+}
+
+impl Percentiles {
+    /// Compute exact nearest-rank percentiles of `xs` (all zero when
+    /// empty).
+    pub fn compute(mut xs: Vec<f64>) -> Percentiles {
+        if xs.is_empty() {
+            return Percentiles::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let n = xs.len();
+        let at = |q: f64| xs[((q * n as f64).ceil() as usize).clamp(1, n) - 1];
+        Percentiles {
+            p50: at(0.50),
+            p95: at(0.95),
+            p99: at(0.99),
+            mean: xs.iter().sum::<f64>() / n as f64,
+            max: xs[n - 1],
+            count: n,
+        }
+    }
+
+    /// JSON view (`p50_ms` … `count`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p50_ms", self.p50.into()),
+            ("p95_ms", self.p95.into()),
+            ("p99_ms", self.p99.into()),
+            ("mean_ms", self.mean.into()),
+            ("max_ms", self.max.into()),
+            ("count", self.count.into()),
+        ])
+    }
+}
+
+/// A completed loadgen run: counts plus the three headline latency
+/// populations, client-side measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests completed.
+    pub requests: usize,
+    /// Tokens streamed across all requests.
+    pub tokens: usize,
+    /// Wall-clock duration of the run, seconds.
+    pub wall_s: f64,
+    /// Time to first streamed token (includes queue wait).
+    pub ttft_ms: Percentiles,
+    /// Gaps between consecutive streamed tokens of one request.
+    pub itl_ms: Percentiles,
+    /// Full request latency, send to `done`.
+    pub e2e_ms: Percentiles,
+}
+
+impl LoadReport {
+    /// Generated-token throughput over the whole run.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// CSV view: a header and one row per metric
+    /// (`metric,count,p50_ms,p95_ms,p99_ms,mean_ms,max_ms`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("metric,count,p50_ms,p95_ms,p99_ms,mean_ms,max_ms\n");
+        for (name, p) in [
+            ("ttft", &self.ttft_ms),
+            ("itl", &self.itl_ms),
+            ("e2e", &self.e2e_ms),
+        ] {
+            out.push_str(&format!(
+                "{},{},{:.3},{:.3},{:.3},{:.3},{:.3}\n",
+                name, p.count, p.p50, p.p95, p.p99, p.mean, p.max
+            ));
+        }
+        out
+    }
+
+    /// JSON view (the serving bench embeds this in `BENCH_serving.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", self.requests.into()),
+            ("tokens", self.tokens.into()),
+            ("wall_s", self.wall_s.into()),
+            ("tokens_per_s", self.tokens_per_s().into()),
+            ("ttft", self.ttft_ms.to_json()),
+            ("itl", self.itl_ms.to_json()),
+            ("e2e", self.e2e_ms.to_json()),
+        ])
+    }
+}
+
+/// One request's client-side measurements.
+struct Sample {
+    ttft_ms: f64,
+    e2e_ms: f64,
+    itl_ms: Vec<f64>,
+    tokens: usize,
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Stream one request on `c`, timing every token event as it arrives.
+fn run_one(c: &mut Client, a: &Arrival) -> Result<Sample> {
+    let start = Instant::now();
+    let mut stream = c.generate_streamed(&a.prompt, a.max_new)?;
+    let mut ttft: Option<f64> = None;
+    let mut last: Option<Instant> = None;
+    let mut tokens: Vec<u32> = Vec::new();
+    let mut itl_ms: Vec<f64> = Vec::new();
+    for t in &mut stream {
+        let tok = t?;
+        let now = Instant::now();
+        if ttft.is_none() {
+            ttft = Some(ms(now.duration_since(start)));
+        }
+        if let Some(l) = last {
+            itl_ms.push(ms(now.duration_since(l)));
+        }
+        last = Some(now);
+        tokens.push(tok);
+    }
+    let done = stream.finish()?;
+    let e2e_ms = ms(start.elapsed());
+    ensure!(
+        done.tokens == tokens,
+        "streamed tokens diverge from the collected response ({} vs {} tokens)",
+        tokens.len(),
+        done.tokens.len()
+    );
+    Ok(Sample {
+        ttft_ms: ttft.unwrap_or(e2e_ms),
+        e2e_ms,
+        itl_ms,
+        tokens: tokens.len(),
+    })
+}
+
+/// Drive `cfg.n` requests at `cfg.addr` per `cfg.mode` and report
+/// client-side percentiles. Fails if any request fails or any stream
+/// diverges from its collected response.
+pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
+    ensure!(cfg.n > 0, "loadgen needs at least one request");
+    let lambda = match cfg.mode {
+        LoadMode::OpenLoop { lambda } => lambda,
+        // Closed loop ignores arrival times; any rate gives the same
+        // prompts and lengths for a given seed.
+        LoadMode::ClosedLoop { .. } => 1.0,
+    };
+    let trace = gen_trace(cfg.n, lambda, cfg.seed);
+    let t0 = Instant::now();
+    let samples: Vec<Sample> = match cfg.mode {
+        LoadMode::OpenLoop { .. } => {
+            let handles: Vec<_> = trace
+                .into_iter()
+                .map(|a| {
+                    let addr = cfg.addr.clone();
+                    std::thread::spawn(move || -> Result<Sample> {
+                        let now = t0.elapsed();
+                        if a.at > now {
+                            std::thread::sleep(a.at - now);
+                        }
+                        let mut c = Client::connect(&addr)?;
+                        run_one(&mut c, &a)
+                    })
+                })
+                .collect();
+            let mut out = Vec::new();
+            for h in handles {
+                out.push(h.join().map_err(|_| {
+                    Error::msg("loadgen request thread panicked")
+                })??);
+            }
+            out
+        }
+        LoadMode::ClosedLoop { concurrency } => {
+            ensure!(concurrency > 0, "closed loop needs at least one worker");
+            let trace = Arc::new(trace);
+            let next = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..concurrency)
+                .map(|_| {
+                    let addr = cfg.addr.clone();
+                    let trace = trace.clone();
+                    let next = next.clone();
+                    std::thread::spawn(move || -> Result<Vec<Sample>> {
+                        let mut c = Client::connect(&addr)?;
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= trace.len() {
+                                return Ok(out);
+                            }
+                            out.push(run_one(&mut c, &trace[i])?);
+                        }
+                    })
+                })
+                .collect();
+            let mut out = Vec::new();
+            for h in handles {
+                out.extend(h.join().map_err(|_| {
+                    Error::msg("loadgen worker thread panicked")
+                })??);
+            }
+            out
+        }
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(LoadReport {
+        requests: samples.len(),
+        tokens: samples.iter().map(|s| s.tokens).sum(),
+        wall_s,
+        ttft_ms: Percentiles::compute(samples.iter().map(|s| s.ttft_ms).collect()),
+        itl_ms: Percentiles::compute(
+            samples.iter().flat_map(|s| s.itl_ms.iter().copied()).collect(),
+        ),
+        e2e_ms: Percentiles::compute(samples.iter().map(|s| s.e2e_ms).collect()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let a = gen_trace(16, 40.0, 9);
+        let b = gen_trace(16, 40.0, 9);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at, "arrival times must be nondecreasing");
+        }
+        // The 1-in-6 long tail and the 2-5 token prompts.
+        assert!(a.iter().filter(|x| x.max_new == 32).count() >= 2);
+        assert!(a.iter().all(|x| (2..=5).contains(&x.prompt.len())));
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_population() {
+        let p = Percentiles::compute((1..=100).map(|i| i as f64).collect());
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert_eq!(p.count, 100);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+        // Monotone by construction.
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.max);
+    }
+
+    #[test]
+    fn percentiles_handle_empty_and_singleton() {
+        let e = Percentiles::compute(vec![]);
+        assert_eq!(e.count, 0);
+        assert_eq!(e.p99, 0.0);
+        let s = Percentiles::compute(vec![7.5]);
+        assert_eq!((s.p50, s.p99, s.max, s.count), (7.5, 7.5, 7.5, 1));
+    }
+
+    #[test]
+    fn csv_shape_is_parseable() {
+        let r = LoadReport {
+            requests: 3,
+            tokens: 12,
+            wall_s: 0.5,
+            ttft_ms: Percentiles::compute(vec![1.0, 2.0, 3.0]),
+            itl_ms: Percentiles::compute(vec![0.5; 9]),
+            e2e_ms: Percentiles::compute(vec![4.0, 5.0, 6.0]),
+        };
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "metric,count,p50_ms,p95_ms,p99_ms,mean_ms,max_ms");
+        for line in &lines[1..] {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells.len(), 7);
+            cells[1].parse::<usize>().unwrap();
+            for c in &cells[2..] {
+                c.parse::<f64>().unwrap();
+            }
+        }
+        assert!((r.tokens_per_s() - 24.0).abs() < 1e-9);
+        // JSON mirror carries the same headline numbers.
+        let j = r.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(3));
+        assert_eq!(j.get("ttft").get("count").as_usize(), Some(3));
+        assert_eq!(j.get("itl").get("p50_ms").as_f64(), Some(0.5));
+    }
+}

@@ -193,6 +193,10 @@ pub struct Metrics {
     pub batch_bucket_sum: AtomicU64,
     /// Time-to-first-token.
     pub ttft: Histogram,
+    /// Inter-token latency: gap between consecutive generated tokens of
+    /// the same sequence (the streaming path's second headline metric
+    /// next to TTFT; empty until a sequence produces its second token).
+    pub itl: Histogram,
     /// End-to-end request latency.
     pub e2e: Histogram,
     /// Per-decode-step engine latency.
@@ -296,6 +300,7 @@ impl Metrics {
             ("mean_batch_occupancy", self.mean_occupancy().into()),
             ("mean_bucket_util", self.mean_bucket_util().into()),
             ("ttft", self.ttft.to_json()),
+            ("itl", self.itl.to_json()),
             ("e2e", self.e2e.to_json()),
             ("step", self.step.to_json()),
             ("admission", self.admission.to_json()),
@@ -354,6 +359,10 @@ mod tests {
         assert_eq!(j.get("requests_received").as_usize(), Some(1));
         assert_eq!(j.get("tokens_generated").as_usize(), Some(7));
         assert_eq!(j.get("ttft").get("count").as_usize(), Some(1));
+        // ITL is present (and empty) even before any second token.
+        assert_eq!(j.get("itl").get("count").as_usize(), Some(0));
+        m.itl.observe_us(800);
+        assert_eq!(m.to_json().get("itl").get("count").as_usize(), Some(1));
     }
 
     #[test]

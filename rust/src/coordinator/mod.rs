@@ -13,19 +13,25 @@
 //!   token-budget reservations, backpressure instead of OOM).
 //! * [`scheduler`] — per-step decode core plus the continuous-batching
 //!   admission loop (`--scheduler continuous|static`).
-//! * [`server`] — TCP line-JSON serving front end + client.
+//! * [`server`] — nonblocking streaming TCP front end (readiness loop,
+//!   line-JSON v2 protocol with per-token events) + client.
+//! * [`loadgen`] — open/closed-loop load harness over the streaming
+//!   client (`tpaware loadgen`), reporting TTFT/ITL/e2e percentiles.
 //! * [`metrics`] — counters/histograms surfaced by the server and benches.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv_pool;
+pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{EngineBackend, EngineOptions, TpEngine};
+pub use engine::{EngineBackend, EngineConfig, EngineOptions, TpEngine};
 pub use kv_pool::{KvPool, KvPoolCfg};
-pub use request::{Request, Response};
+pub use loadgen::{LoadMode, LoadReport, LoadgenCfg};
+pub use request::{Request, Response, TokenEvent};
 pub use scheduler::{ContinuousScheduler, Scheduler};
+pub use server::{Client, ClientError, ServeConfig, Server, TokenStream};

@@ -35,6 +35,19 @@ impl Request {
     }
 }
 
+/// One generated token, emitted by the scheduler as soon as the decode
+/// step that produced it completes — the unit of the streaming serving
+/// path ([`crate::coordinator::scheduler::Scheduler::step_with`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// The originating request's id.
+    pub id: u64,
+    /// Zero-based position of this token in the generated sequence.
+    pub index: usize,
+    /// The generated token id.
+    pub token: u32,
+}
+
 /// A finished generation.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -62,6 +75,8 @@ pub struct SeqState {
     pub pending_prompt: Vec<u32>,
     /// When the first generated token was produced (TTFT).
     pub first_token_at: Option<Instant>,
+    /// When the most recent token was produced (inter-token latency).
+    pub last_token_at: Option<Instant>,
     /// This sequence's KV cache (pool-slot storage in the serving path).
     pub kv: crate::model::transformer::KvCache,
 }
@@ -85,6 +100,7 @@ impl SeqState {
             next_token: first,
             pending_prompt: pending,
             first_token_at: None,
+            last_token_at: None,
             kv,
         }
     }

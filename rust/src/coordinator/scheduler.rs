@@ -32,7 +32,7 @@
 use crate::coordinator::batcher::bucket_for;
 use crate::coordinator::kv_pool::KvPool;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response, SeqState};
+use crate::coordinator::request::{Request, Response, SeqState, TokenEvent};
 use crate::coordinator::TpEngine;
 use crate::model::transformer::{argmax, Transformer};
 use crate::simkernel::pipeline::SchedMode;
@@ -80,6 +80,15 @@ impl Scheduler {
     /// Sequences advance one token each (prefill consumes prompt tokens,
     /// decode appends generated ones).
     pub fn step(&self, active: &mut [SeqState]) {
+        self.step_with(active, &mut |_| {});
+    }
+
+    /// As [`Scheduler::step`], invoking `emit` for every token generated
+    /// this step, at the moment it exists — the hook the streaming server
+    /// routes per-token events through. Batch-path callers use
+    /// [`Scheduler::step`] (a no-op hook); the retire-time [`Response`]
+    /// still carries the full collected sequence either way.
+    pub fn step_with(&self, active: &mut [SeqState], emit: &mut dyn FnMut(TokenEvent)) {
         if active.is_empty() {
             return;
         }
@@ -124,15 +133,27 @@ impl Scheduler {
                 s.next_token = s.pending_prompt.pop().unwrap();
             } else {
                 let tok = argmax(logits.row(i));
+                let now = Instant::now();
                 if s.first_token_at.is_none() {
-                    s.first_token_at = Some(Instant::now());
+                    s.first_token_at = Some(now);
                     self.metrics
                         .ttft
                         .observe_us(s.req.arrival.elapsed().as_micros() as u64);
                 }
+                if let Some(last) = s.last_token_at {
+                    self.metrics
+                        .itl
+                        .observe_us(now.duration_since(last).as_micros() as u64);
+                }
+                s.last_token_at = Some(now);
                 s.generated.push(tok);
                 s.next_token = tok;
                 Metrics::inc(&self.metrics.tokens_generated);
+                emit(TokenEvent {
+                    id: s.req.id,
+                    index: s.generated.len() - 1,
+                    token: tok,
+                });
             }
         }
     }
@@ -309,12 +330,19 @@ impl ContinuousScheduler {
     /// occupancy, retire. Returns the requests that finished this tick
     /// (admission order).
     pub fn tick(&mut self) -> Vec<Response> {
+        self.tick_with(&mut |_| {})
+    }
+
+    /// As [`ContinuousScheduler::tick`], invoking `emit` for every token
+    /// generated this tick (see [`Scheduler::step_with`]) — the serving
+    /// loop's entry point for per-token streaming.
+    pub fn tick_with(&mut self, emit: &mut dyn FnMut(TokenEvent)) -> Vec<Response> {
         self.admit();
         self.core.metrics.set_kv(self.pool.stats());
         if self.active.is_empty() {
             return Vec::new();
         }
-        self.core.step(&mut self.active);
+        self.core.step_with(&mut self.active, emit);
         let pool = &self.pool;
         let done = self.core.retire_with(&mut self.active, &mut |s| {
             let kv = std::mem::take(&mut s.kv);
@@ -429,16 +457,13 @@ mod tests {
 
     #[test]
     fn engine_backed_scheduler_matches_host() {
-        use crate::coordinator::engine::{EngineBackend, TpEngine};
+        use crate::coordinator::engine::{EngineBackend, EngineConfig};
         let model = tiny_model();
         let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
-        let engine = TpEngine::start(
-            EngineBackend::Host,
-            layers,
-            model.cfg.activation,
-            None,
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, model.cfg.activation)
+            .layers(layers)
+            .start()
+            .unwrap();
         let engine_metrics = Arc::new(Metrics::default());
         let with_engine = Scheduler::new(model.clone(), Some(engine), engine_metrics.clone(), 4);
         let without = Scheduler::new(model, None, Arc::new(Metrics::default()), 4);
@@ -601,6 +626,44 @@ mod tests {
         };
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].tokens.len(), 7);
+    }
+
+    /// The streaming hook sees exactly the tokens the collected response
+    /// carries, in order, with per-sequence contiguous indices — and a
+    /// second generated token records inter-token latency.
+    #[test]
+    fn step_with_emits_every_token_in_order() {
+        let model = tiny_model();
+        let metrics = Arc::new(Metrics::default());
+        let core = Scheduler::new(model, None, metrics.clone(), 4);
+        let mut cs = ContinuousScheduler::new(core, pool(8, 1024), SchedMode::Continuous);
+        for r in mixed_requests(4) {
+            assert!(cs.submit(r).is_none());
+        }
+        let mut events: Vec<TokenEvent> = Vec::new();
+        let mut responses = Vec::new();
+        while !cs.is_idle() {
+            responses.extend(cs.tick_with(&mut |e| events.push(e)));
+        }
+        responses.sort_by_key(|r| r.id);
+        let total: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(events.len(), total);
+        for r in &responses {
+            let mine: Vec<&TokenEvent> =
+                events.iter().filter(|e| e.id == r.id).collect();
+            assert_eq!(mine.len(), r.tokens.len());
+            for (i, e) in mine.iter().enumerate() {
+                assert_eq!(e.index, i, "req {} token {i} out of order", r.id);
+                assert_eq!(e.token, r.tokens[i], "req {} token {i} diverged", r.id);
+            }
+        }
+        // Long requests (20 tokens) produced >= 2 tokens, so ITL samples
+        // exist; every sequence's first token never records one.
+        assert!(metrics.itl.count() > 0);
+        assert_eq!(
+            metrics.itl.count() + responses.len() as u64,
+            metrics.tokens_generated.load(Ordering::Relaxed)
+        );
     }
 
     #[test]

@@ -1,127 +1,596 @@
-//! TCP serving front end: newline-delimited JSON over a socket, a
-//! scheduler thread running the decode loop (continuous or static
-//! batching over a shared KV pool), and a matching client used by the
-//! examples and the serving bench.
+//! Nonblocking streaming TCP front end: a single readiness-loop I/O
+//! thread over `std::net` nonblocking sockets, a scheduler thread
+//! running the decode loop (continuous or static batching over a shared
+//! KV pool), and a matching client used by the examples, the loadgen
+//! harness and the serving bench.
 //!
-//! Protocol (one JSON object per line):
-//!   → `{"id": 1, "prompt": [3, 7, 9], "max_new": 8}`
-//!   ← `{"id": 1, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8}`
-//!   → `{"cmd": "metrics"}`            ← the metrics JSON
-//!   → `{"cmd": "shutdown"}`           ← `{"ok": true}` and server exit
+//! ## Architecture
+//!
+//! The I/O thread owns the listener and every connection. Each loop
+//! iteration it (1) accepts new connections up to
+//! [`ServeConfig::max_conns`], (2) reads whatever bytes are ready and
+//! slices complete newline-delimited JSON lines out of per-connection
+//! input buffers, (3) forwards generation requests to the scheduler
+//! thread over a channel, (4) drains the scheduler's per-token /
+//! completion event channel into per-connection output buffers, and
+//! (5) flushes those buffers, tolerating partial writes. Nothing in the
+//! loop blocks, so one slow reader never stalls another connection's
+//! token stream — the readiness loop is the redesign that unlocked
+//! per-token streaming (a blocking thread-per-connection handler can
+//! only write a finished response).
+//!
+//! The scheduler thread is unchanged in role (admission/step/retire
+//! with KV backpressure) but emits every generated token through
+//! [`ContinuousScheduler::tick_with`] the moment its decode step
+//! completes, instead of buffering whole generations to retire time.
+//!
+//! ## Wire protocol (one JSON object per line)
+//!
+//! Version 2 (`"v": 2` in the request) streams:
+//!   → `{"v":2, "id":1, "prompt":[3,7,9], "max_new":8, "stream":true}`
+//!   ← `{"v":2, "event":"token", "id":1, "i":0, "token":17}` (per token)
+//!   ← `{"v":2, "event":"done", "id":1, "tokens":[...], "ttft_ms":1.2,
+//!      "total_ms":9.8}`
+//!   ← `{"v":2, "event":"error", "error":"..."}` on any failure
+//!
+//! Omitting `"stream"` (or sending `false`) suppresses the token events
+//! and delivers only the `done` line. Version 1 requests (no `"v"` key)
+//! keep the legacy collected shape for old clients:
+//!   → `{"id":1, "prompt":[3,7,9], "max_new":8}`
+//!   ← `{"id":1, "tokens":[...], "ttft_ms":1.2, "total_ms":9.8}`
+//!
+//! Control commands are version-independent:
+//!   → `{"cmd":"metrics"}`   ← the metrics JSON
+//!   → `{"cmd":"shutdown"}`  ← `{"ok":true}`, then graceful drain:
+//! in-flight generations finish (bounded by
+//! [`ServeConfig::drain_timeout`]) while new requests and connections
+//! are refused with an `error` event.
 
 use crate::coordinator::kv_pool::{KvPool, KvPoolCfg};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::scheduler::{ContinuousScheduler, Scheduler};
+use crate::err;
 use crate::simkernel::pipeline::SchedMode;
-use crate::util::error::{Context as _, Result};
+use crate::util::error::{Context as _, Error, Result};
 use crate::util::json::{self, Json};
-use crate::{bail, err};
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// A submitted request with its reply channel.
-struct Submission {
-    req: Request,
-    reply: mpsc::Sender<Response>,
+/// Server construction parameters — the one struct both the CLI and the
+/// tests feed to [`Server::serve`] (replacing the positional
+/// `start`/`start_with` constructor pair).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 = OS-assigned, the bound
+    /// address is in [`Server::addr`]).
+    pub addr: String,
+    /// Batching mode (the CLI's `--scheduler continuous|static`).
+    pub mode: SchedMode,
+    /// KV pool limits bounding admission.
+    pub pool: KvPoolCfg,
+    /// Maximum simultaneously-open connections; excess connects are
+    /// refused with an `error` event.
+    pub max_conns: usize,
+    /// Connections with no in-flight request and no traffic for this
+    /// long are closed.
+    pub idle_timeout: Duration,
+    /// Upper bound on the graceful-drain phase after shutdown: in-flight
+    /// generations get this long to finish before the server exits.
+    pub drain_timeout: Duration,
 }
 
-/// The serving server: owns the scheduler thread and the TCP acceptor.
+impl ServeConfig {
+    /// A config for `addr` with the stack's defaults: continuous
+    /// batching, the default KV pool, 64 connections, 300 s idle
+    /// timeout, 10 s drain timeout.
+    pub fn new(addr: &str) -> ServeConfig {
+        ServeConfig {
+            addr: addr.to_string(),
+            mode: SchedMode::Continuous,
+            pool: KvPoolCfg::default(),
+            max_conns: 64,
+            idle_timeout: Duration::from_secs(300),
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+
+    /// Set the batching mode.
+    pub fn mode(mut self, mode: SchedMode) -> ServeConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the KV pool limits.
+    pub fn pool(mut self, pool: KvPoolCfg) -> ServeConfig {
+        self.pool = pool;
+        self
+    }
+
+    /// Set the connection limit.
+    pub fn max_conns(mut self, n: usize) -> ServeConfig {
+        self.max_conns = n;
+        self
+    }
+
+    /// Set the idle-connection timeout.
+    pub fn idle_timeout(mut self, t: Duration) -> ServeConfig {
+        self.idle_timeout = t;
+        self
+    }
+
+    /// Set the graceful-drain bound.
+    pub fn drain_timeout(mut self, t: Duration) -> ServeConfig {
+        self.drain_timeout = t;
+        self
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig::new("127.0.0.1:0")
+    }
+}
+
+/// Scheduler → I/O thread events (one channel, order-preserving, so a
+/// request's token events always precede its completion).
+enum SchedEvent {
+    /// One generated token (streamed to `"stream": true` requests).
+    Token(TokenEvent),
+    /// A finished generation (keyed by internal request id).
+    Done(Response),
+}
+
+/// The serving server: owns the scheduler thread and the I/O thread.
 pub struct Server {
     /// The bound listen address (resolved port when started with `:0`).
     pub addr: String,
-    shutdown: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    draining: Arc<AtomicBool>,
+    io_handle: Option<std::thread::JoinHandle<()>>,
     sched_handle: Option<std::thread::JoinHandle<()>>,
 }
 
-fn response_json(r: &Response) -> Json {
+fn response_json(r: &Response, client_id: u64, v2: bool) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if v2 {
+        pairs.push(("v", 2usize.into()));
+        pairs.push(("event", "done".into()));
+    }
+    pairs.push(("id", (client_id as usize).into()));
+    pairs.push((
+        "tokens",
+        Json::Arr(r.tokens.iter().map(|&t| (t as usize).into()).collect()),
+    ));
+    pairs.push(("ttft_ms", r.ttft_ms.into()));
+    pairs.push(("total_ms", r.total_ms.into()));
+    Json::obj(pairs)
+}
+
+fn token_json(client_id: u64, e: &TokenEvent) -> Json {
     Json::obj(vec![
-        ("id", (r.id as usize).into()),
-        (
-            "tokens",
-            Json::Arr(r.tokens.iter().map(|&t| (t as usize).into()).collect()),
-        ),
-        ("ttft_ms", r.ttft_ms.into()),
-        ("total_ms", r.total_ms.into()),
+        ("v", 2usize.into()),
+        ("event", "token".into()),
+        ("id", (client_id as usize).into()),
+        ("i", e.index.into()),
+        ("token", (e.token as usize).into()),
     ])
 }
 
-/// Send `resp` to its request's reply channel, if still registered.
-fn route_reply(replies: &mut Vec<(u64, mpsc::Sender<Response>)>, resp: Response) {
-    if let Some(pos) = replies.iter().position(|(id, _)| *id == resp.id) {
-        let (_, tx) = replies.swap_remove(pos);
-        let _ = tx.send(resp);
+fn error_json(msg: &str, id: Option<u64>, v2: bool) -> Json {
+    if v2 {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("v", 2usize.into()),
+            ("event", "error".into()),
+            ("error", msg.into()),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", (id as usize).into()));
+        }
+        Json::obj(pairs)
+    } else {
+        Json::obj(vec![("error", msg.into())])
+    }
+}
+
+/// One live connection owned by the I/O thread.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    /// Requests submitted from this connection and not yet completed.
+    inflight: usize,
+    last_activity: Instant,
+    /// Peer closed (EOF) or the socket errored; removed once safe.
+    gone: bool,
+}
+
+impl Conn {
+    fn push_line(&mut self, j: Json) {
+        self.outbuf.extend_from_slice(format!("{j}\n").as_bytes());
+        self.last_activity = Instant::now();
+    }
+}
+
+/// Where a request's events get routed back to.
+struct Route {
+    conn_id: u64,
+    client_id: u64,
+    stream: bool,
+    v2: bool,
+}
+
+/// The readiness loop's state (see the module docs for the iteration
+/// structure).
+struct IoLoop {
+    listener: TcpListener,
+    cfg: ServeConfig,
+    conns: Vec<Conn>,
+    routes: HashMap<u64, Route>,
+    next_conn_id: u64,
+    next_req_id: u64,
+    sub_tx: mpsc::Sender<Request>,
+    evt_rx: mpsc::Receiver<SchedEvent>,
+    metrics: Arc<Metrics>,
+    draining: Arc<AtomicBool>,
+    /// Scheduler thread died or its channel closed — exit promptly.
+    sched_gone: bool,
+}
+
+impl IoLoop {
+    fn run(mut self) {
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            let mut progress = false;
+            let draining = self.draining.load(Ordering::Relaxed);
+            if draining && drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + self.cfg.drain_timeout);
+            }
+            progress |= self.accept_ready(draining);
+            progress |= self.read_ready();
+            progress |= self.route_events();
+            progress |= self.flush_ready();
+            self.reap();
+            if self.sched_gone {
+                break;
+            }
+            if draining {
+                let idle = self.routes.is_empty()
+                    && self.conns.iter().all(|c| c.outbuf.is_empty());
+                let expired = drain_deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+                if idle || expired {
+                    break;
+                }
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+        // Dropping `sub_tx` disconnects the scheduler's submission
+        // channel; it exits once idle and shuts the engine down.
+    }
+
+    /// Accept whatever the listener has ready. Over-limit and
+    /// during-drain connects are refused with an error line (written
+    /// eagerly — the socket is fresh, so a short blocking write is
+    /// fine) and closed.
+    fn accept_ready(&mut self, draining: bool) -> bool {
+        let mut progress = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    let refuse = if draining {
+                        Some("server draining")
+                    } else if self.conns.len() >= self.cfg.max_conns {
+                        Some("connection limit reached")
+                    } else {
+                        None
+                    };
+                    if let Some(msg) = refuse {
+                        let mut s = stream;
+                        let _ = s.write_all(
+                            format!("{}\n", error_json(msg, None, true)).as_bytes(),
+                        );
+                        continue; // dropped → closed
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.next_conn_id += 1;
+                    self.conns.push(Conn {
+                        id: self.next_conn_id,
+                        stream,
+                        inbuf: Vec::new(),
+                        outbuf: Vec::new(),
+                        inflight: 0,
+                        last_activity: Instant::now(),
+                        gone: false,
+                    });
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        progress
+    }
+
+    /// Read ready bytes from every connection and process complete
+    /// lines.
+    fn read_ready(&mut self) -> bool {
+        let mut progress = false;
+        let mut buf = [0u8; 4096];
+        for i in 0..self.conns.len() {
+            loop {
+                match self.conns[i].stream.read(&mut buf) {
+                    Ok(0) => {
+                        self.conns[i].gone = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        self.conns[i].inbuf.extend_from_slice(&buf[..n]);
+                        self.conns[i].last_activity = Instant::now();
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.conns[i].gone = true;
+                        break;
+                    }
+                }
+            }
+            while let Some(pos) = self.conns[i].inbuf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.conns[i].inbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&line).trim().to_string();
+                if !line.is_empty() {
+                    progress = true;
+                    self.handle_line(i, &line);
+                }
+            }
+        }
+        progress
+    }
+
+    /// Process one complete request line from connection `i`.
+    fn handle_line(&mut self, i: usize, line: &str) {
+        let msg = match json::parse(line) {
+            Ok(m) => m,
+            Err(e) => {
+                self.conns[i].push_line(error_json(&format!("{e}"), None, true));
+                return;
+            }
+        };
+        match msg.get("cmd").as_str() {
+            Some("metrics") => {
+                let j = self.metrics.to_json();
+                self.conns[i].push_line(j);
+                return;
+            }
+            Some("shutdown") => {
+                self.draining.store(true, Ordering::Relaxed);
+                self.conns[i].push_line(Json::obj(vec![("ok", true.into())]));
+                return;
+            }
+            Some(other) => {
+                let v2 = msg.get("v").as_usize() == Some(2);
+                self.conns[i].push_line(error_json(&format!("unknown cmd {other}"), None, v2));
+                return;
+            }
+            None => {}
+        }
+        // A generation request.
+        let v = msg.get("v").as_usize();
+        let v2 = match v {
+            None => false,
+            Some(2) => true,
+            Some(other) => {
+                self.conns[i].push_line(error_json(
+                    &format!("unsupported protocol version {other}"),
+                    None,
+                    true,
+                ));
+                return;
+            }
+        };
+        let client_id = msg.get("id").as_usize().map(|v| v as u64);
+        if self.draining.load(Ordering::Relaxed) {
+            self.conns[i].push_line(error_json("server draining", client_id, v2));
+            return;
+        }
+        if self.sched_gone {
+            self.conns[i].push_line(error_json("scheduler gone", client_id, v2));
+            return;
+        }
+        let prompt: Vec<u32> = msg
+            .get("prompt")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|t| t.as_usize())
+                    .map(|t| t as u32)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let max_new = msg.get("max_new").as_usize().unwrap_or(8);
+        let stream = v2 && msg.get("stream").as_bool() == Some(true);
+        self.next_req_id += 1;
+        let internal = self.next_req_id;
+        let client_id = client_id.unwrap_or(internal);
+        if self
+            .sub_tx
+            .send(Request::new(internal, prompt, max_new))
+            .is_err()
+        {
+            self.sched_gone = true;
+            self.conns[i].push_line(error_json("scheduler gone", Some(client_id), v2));
+            return;
+        }
+        self.routes.insert(
+            internal,
+            Route {
+                conn_id: self.conns[i].id,
+                client_id,
+                stream,
+                v2,
+            },
+        );
+        self.conns[i].inflight += 1;
+    }
+
+    /// Drain the scheduler's event channel into connection outbufs.
+    fn route_events(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            match self.evt_rx.try_recv() {
+                Ok(SchedEvent::Token(e)) => {
+                    progress = true;
+                    if let Some(route) = self.routes.get(&e.id) {
+                        if route.stream {
+                            let j = token_json(route.client_id, &e);
+                            let conn_id = route.conn_id;
+                            if let Some(c) = self.conns.iter_mut().find(|c| c.id == conn_id) {
+                                c.push_line(j);
+                            }
+                        }
+                    }
+                }
+                Ok(SchedEvent::Done(resp)) => {
+                    progress = true;
+                    if let Some(route) = self.routes.remove(&resp.id) {
+                        let j = response_json(&resp, route.client_id, route.v2);
+                        if let Some(c) =
+                            self.conns.iter_mut().find(|c| c.id == route.conn_id)
+                        {
+                            c.push_line(j);
+                            c.inflight = c.inflight.saturating_sub(1);
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.sched_gone = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Flush as much buffered output as every socket accepts.
+    fn flush_ready(&mut self) -> bool {
+        let mut progress = false;
+        for c in &mut self.conns {
+            while !c.outbuf.is_empty() {
+                match c.stream.write(&c.outbuf) {
+                    Ok(0) => {
+                        c.gone = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        c.outbuf.drain(..n);
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.gone = true;
+                        break;
+                    }
+                }
+            }
+        }
+        progress
+    }
+
+    /// Remove dead and idle-timed-out connections (and their routes, so
+    /// stale events are discarded instead of written to a new
+    /// connection reusing the slot).
+    fn reap(&mut self) {
+        let idle_timeout = self.cfg.idle_timeout;
+        let mut dropped: Vec<u64> = Vec::new();
+        self.conns.retain(|c| {
+            let idle_expired =
+                c.inflight == 0 && c.outbuf.is_empty() && c.last_activity.elapsed() > idle_timeout;
+            if c.gone || idle_expired {
+                dropped.push(c.id);
+                false
+            } else {
+                true
+            }
+        });
+        if !dropped.is_empty() {
+            self.routes.retain(|_, r| !dropped.contains(&r.conn_id));
+        }
     }
 }
 
 impl Server {
-    /// Start serving on `addr` with the default KV pool and continuous
-    /// batching (use port 0 for an OS-assigned port; the bound address
-    /// is in `server.addr`).
-    pub fn start(addr: &str, scheduler: Scheduler) -> Result<Server> {
-        Server::start_with(addr, scheduler, KvPoolCfg::default(), SchedMode::Continuous)
-    }
-
-    /// As [`Server::start`], choosing the KV pool limits and the
-    /// scheduling mode (the CLI's `--scheduler continuous|static`).
-    pub fn start_with(
-        addr: &str,
-        scheduler: Scheduler,
-        pool_cfg: KvPoolCfg,
-        mode: SchedMode,
-    ) -> Result<Server> {
-        let listener = TcpListener::bind(addr).context("binding server socket")?;
+    /// Start serving `scheduler` per `cfg` — the canonical constructor
+    /// (the CLI's `serve` subcommand and the tests both build a
+    /// [`ServeConfig`] and call this).
+    pub fn serve(scheduler: Scheduler, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let bound = listener.local_addr()?.to_string();
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
+        let draining = Arc::new(AtomicBool::new(false));
+        let (sub_tx, sub_rx) = mpsc::channel::<Request>();
+        let (evt_tx, evt_rx) = mpsc::channel::<SchedEvent>();
         let metrics = scheduler.metrics.clone();
+        let pool_cfg = cfg.pool;
+        let mode = cfg.mode;
 
         // Scheduler thread: the admission/step/retire loop over live
-        // submissions, with KV capacity as the admission bound.
-        let sched_shutdown = shutdown.clone();
+        // submissions, with KV capacity as the admission bound; every
+        // generated token goes out on the event channel the moment its
+        // decode step completes.
         let sched_handle = std::thread::Builder::new()
             .name("scheduler".into())
             .spawn(move || {
                 let pool = Arc::new(KvPool::new(pool_cfg));
                 let mut sched = ContinuousScheduler::new(scheduler, pool, mode);
-                let mut replies: Vec<(u64, mpsc::Sender<Response>)> = Vec::new();
+                let mut disconnected = false;
                 loop {
                     // Enqueue new work; admission happens inside tick(),
                     // bounded by the KV pool (backpressure, not OOM).
                     loop {
                         match sub_rx.try_recv() {
-                            Ok(sub) => {
-                                replies.push((sub.req.id, sub.reply));
-                                if let Some(resp) = sched.submit(sub.req) {
-                                    route_reply(&mut replies, resp);
+                            Ok(req) => {
+                                if let Some(resp) = sched.submit(req) {
+                                    let _ = evt_tx.send(SchedEvent::Done(resp));
                                 }
                             }
                             Err(mpsc::TryRecvError::Empty) => break,
-                            Err(mpsc::TryRecvError::Disconnected) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                disconnected = true;
+                                break;
+                            }
                         }
                     }
                     if sched.is_idle() {
-                        if sched_shutdown.load(Ordering::Relaxed) {
-                            break;
+                        if disconnected {
+                            break; // I/O thread exited; nothing can arrive
                         }
                         // Idle: block briefly for the next submission.
-                        match sub_rx.recv_timeout(Duration::from_millis(10)) {
-                            Ok(sub) => {
-                                replies.push((sub.req.id, sub.reply));
-                                if let Some(resp) = sched.submit(sub.req) {
-                                    route_reply(&mut replies, resp);
+                        match sub_rx.recv_timeout(Duration::from_millis(2)) {
+                            Ok(req) => {
+                                if let Some(resp) = sched.submit(req) {
+                                    let _ = evt_tx.send(SchedEvent::Done(resp));
                                 }
                             }
-                            Err(_) => continue,
+                            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
                         }
                     }
-                    for resp in sched.tick() {
-                        route_reply(&mut replies, resp);
+                    for resp in sched.tick_with(&mut |e| {
+                        let _ = evt_tx.send(SchedEvent::Token(e));
+                    }) {
+                        let _ = evt_tx.send(SchedEvent::Done(resp));
                     }
                 }
                 if let Some(engine) = sched.into_engine() {
@@ -130,53 +599,60 @@ impl Server {
             })
             .expect("spawning scheduler thread");
 
-        // Acceptor thread: one handler thread per connection.
-        let accept_shutdown = shutdown.clone();
-        let accept_handle = std::thread::Builder::new()
-            .name("acceptor".into())
-            .spawn(move || {
-                let next_id = Arc::new(AtomicU64::new(1));
-                loop {
-                    if accept_shutdown.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let sub_tx = sub_tx.clone();
-                            let metrics = metrics.clone();
-                            let shutdown = accept_shutdown.clone();
-                            let next_id = next_id.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(
-                                    stream, sub_tx, metrics, shutdown, next_id,
-                                );
-                            });
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawning acceptor thread");
+        // I/O thread: the nonblocking readiness loop.
+        let io = IoLoop {
+            listener,
+            cfg,
+            conns: Vec::new(),
+            routes: HashMap::new(),
+            next_conn_id: 0,
+            next_req_id: 0,
+            sub_tx,
+            evt_rx,
+            metrics,
+            draining: draining.clone(),
+            sched_gone: false,
+        };
+        let io_handle = std::thread::Builder::new()
+            .name("server-io".into())
+            .spawn(move || io.run())
+            .expect("spawning server I/O thread");
 
         Ok(Server {
             addr: bound,
-            shutdown,
-            accept_handle: Some(accept_handle),
+            draining,
+            io_handle: Some(io_handle),
             sched_handle: Some(sched_handle),
         })
     }
 
+    /// Start serving on `addr` with the defaults of [`ServeConfig`].
+    #[deprecated(since = "0.2.0", note = "use Server::serve(scheduler, ServeConfig::new(addr))")]
+    pub fn start(addr: &str, scheduler: Scheduler) -> Result<Server> {
+        Server::serve(scheduler, ServeConfig::new(addr))
+    }
+
+    /// As [`Server::serve`], from positional KV pool limits and mode.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use Server::serve(scheduler, ServeConfig::new(addr).pool(..).mode(..))"
+    )]
+    pub fn start_with(
+        addr: &str,
+        scheduler: Scheduler,
+        pool_cfg: KvPoolCfg,
+        mode: SchedMode,
+    ) -> Result<Server> {
+        Server::serve(scheduler, ServeConfig::new(addr).pool(pool_cfg).mode(mode))
+    }
+
     /// Block until a client-initiated shutdown (`{"cmd": "shutdown"}`)
-    /// stops the acceptor and scheduler threads — the `serve` CLI's
-    /// main loop, so the process exits cleanly after
-    /// `client --shutdown` instead of sleeping forever.
-    /// [`Server::stop`] remains the programmatic way to stop a server
-    /// you still hold.
+    /// drains the server — the `serve` CLI's main loop, so the process
+    /// exits cleanly after `client --shutdown` instead of sleeping
+    /// forever. [`Server::stop`] remains the programmatic way to stop a
+    /// server you still hold.
     pub fn run_until_shutdown(mut self) {
-        if let Some(h) = self.accept_handle.take() {
+        if let Some(h) = self.io_handle.take() {
             let _ = h.join();
         }
         if let Some(h) = self.sched_handle.take() {
@@ -184,10 +660,11 @@ impl Server {
         }
     }
 
-    /// Signal shutdown and join the threads.
+    /// Initiate a graceful drain (in-flight requests finish, bounded by
+    /// [`ServeConfig::drain_timeout`]) and join both threads.
     pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_handle.take() {
+        self.draining.store(true, Ordering::Relaxed);
+        if let Some(h) = self.io_handle.take() {
             let _ = h.join();
         }
         if let Some(h) = self.sched_handle.take() {
@@ -196,140 +673,269 @@ impl Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    sub_tx: mpsc::Sender<Submission>,
-    metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
-    next_id: Arc<AtomicU64>,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+/// A server-side or protocol-level failure surfaced by [`Client`]
+/// request paths as a typed [`crate::util::error::Error`] payload —
+/// recover it with `e.downcast_ref::<ClientError>()` to tell a refused
+/// request apart from a garbled reply or a dropped connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientError {
+    /// The server reported an error (`error` event or field).
+    Server(String),
+    /// The reply line was not valid protocol (unparseable or an
+    /// unexpected shape).
+    Protocol(String),
+    /// The connection closed before a full reply arrived.
+    Disconnected,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Server(msg) => write!(f, "server error: {msg}"),
+            ClientError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            ClientError::Disconnected => write!(f, "server disconnected mid-reply"),
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let msg = match json::parse(trimmed) {
-            Ok(m) => m,
-            Err(e) => {
-                writeln!(out, "{}", Json::obj(vec![("error", format!("{e}").into())]))?;
-                continue;
-            }
-        };
-        match msg.get("cmd").as_str() {
-            Some("metrics") => {
-                writeln!(out, "{}", metrics.to_json())?;
-                continue;
-            }
-            Some("shutdown") => {
-                shutdown.store(true, Ordering::Relaxed);
-                writeln!(out, "{}", Json::obj(vec![("ok", true.into())]))?;
-                return Ok(());
-            }
-            Some(other) => {
-                writeln!(
-                    out,
-                    "{}",
-                    Json::obj(vec![("error", format!("unknown cmd {other}").into())])
-                )?;
-                continue;
-            }
-            None => {}
-        }
-        // A generation request.
-        let prompt: Vec<u32> = msg
-            .get("prompt")
-            .as_arr()
-            .map(|a| a.iter().filter_map(|t| t.as_usize()).map(|t| t as u32).collect())
-            .unwrap_or_default();
-        let max_new = msg.get("max_new").as_usize().unwrap_or(8);
-        let id = msg
-            .get("id")
-            .as_usize()
-            .map(|v| v as u64)
-            .unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
-        let (reply_tx, reply_rx) = mpsc::channel();
-        sub_tx
-            .send(Submission {
-                req: Request::new(id, prompt, max_new),
-                reply: reply_tx,
-            })
-            .map_err(|_| err!("scheduler gone"))?;
-        let resp = reply_rx
-            .recv()
-            .map_err(|_| err!("scheduler dropped request"))?;
-        writeln!(out, "{}", response_json(&resp))?;
     }
 }
 
-/// Blocking client for the examples and the serving bench.
+impl std::error::Error for ClientError {}
+
+/// Client-side I/O error mapping: a peer that hung up mid-conversation
+/// (EOF, RST, EPIPE — which one the OS reports is a race) is one typed
+/// [`ClientError::Disconnected`]; anything else keeps its io context.
+fn io_to_client_error(e: std::io::Error, ctx: &str) -> Error {
+    match e.kind() {
+        ErrorKind::BrokenPipe
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::UnexpectedEof => Error::from(ClientError::Disconnected),
+        _ => Error::from(e).context(ctx.to_string()),
+    }
+}
+
+/// Blocking client for the examples, the loadgen harness and the
+/// serving bench. Speaks protocol v2; [`Client::generate`] keeps the
+/// collected-response shape, [`Client::generate_streamed`] yields
+/// tokens as the server emits them.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    next_id: u64,
 }
 
 impl Client {
     /// Connect to a running server.
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to server")?;
+        stream.set_nodelay(true).ok();
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            next_id: 0,
+        })
+    }
+
+    fn send(&mut self, msg: &Json) -> Result<()> {
+        writeln!(self.writer, "{msg}").map_err(|e| io_to_client_error(e, "sending request"))
+    }
+
+    /// Read one protocol line. EOF, resets and parse failures become
+    /// typed [`ClientError`]s.
+    fn read_json(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .map_err(|e| io_to_client_error(e, "reading reply"))?;
+        if n == 0 {
+            return Err(Error::from(ClientError::Disconnected));
+        }
+        json::parse(line.trim()).map_err(|e| {
+            Error::from(ClientError::Protocol(format!("unparseable reply: {e}")))
         })
     }
 
     fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
-        writeln!(self.writer, "{msg}")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        json::parse(line.trim()).context("parsing server reply")
+        self.send(msg)?;
+        self.read_json()
     }
 
-    /// Generate `max_new` tokens from `prompt`.
-    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Response> {
-        let msg = Json::obj(vec![
+    fn gen_request(&mut self, prompt: &[u32], max_new: usize, stream: bool) -> (u64, Json) {
+        self.next_id += 1;
+        let id = self.next_id;
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("v", 2usize.into()),
+            ("id", (id as usize).into()),
             (
                 "prompt",
                 Json::Arr(prompt.iter().map(|&t| (t as usize).into()).collect()),
             ),
             ("max_new", max_new.into()),
-        ]);
-        let r = self.roundtrip(&msg)?;
-        if let Some(err) = r.get("error").as_str() {
-            bail!("server error: {err}");
+        ];
+        if stream {
+            pairs.push(("stream", true.into()));
         }
-        Ok(Response {
-            id: r.get("id").as_usize().unwrap_or(0) as u64,
-            tokens: r
-                .get("tokens")
-                .as_arr()
-                .map(|a| {
-                    a.iter()
-                        .filter_map(|t| t.as_usize())
-                        .map(|t| t as u32)
-                        .collect()
-                })
-                .unwrap_or_default(),
-            ttft_ms: r.get("ttft_ms").as_f64().unwrap_or(0.0),
-            total_ms: r.get("total_ms").as_f64().unwrap_or(0.0),
+        (id, Json::obj(pairs))
+    }
+
+    /// Generate `max_new` tokens from `prompt`, collected into one
+    /// [`Response`] (the pre-streaming call shape, kept for existing
+    /// call sites).
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Response> {
+        let (_, msg) = self.gen_request(prompt, max_new, false);
+        let r = self.roundtrip(&msg)?;
+        parse_done(&r)
+    }
+
+    /// Generate `max_new` tokens from `prompt`, yielding each token as
+    /// the server streams it. Iterate the returned [`TokenStream`] for
+    /// the tokens, then call [`TokenStream::finish`] for the final
+    /// collected [`Response`] (identical to what [`Client::generate`]
+    /// returns).
+    pub fn generate_streamed(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<TokenStream<'_>> {
+        let (_, msg) = self.gen_request(prompt, max_new, true);
+        self.send(&msg)?;
+        Ok(TokenStream {
+            client: self,
+            done: None,
+            failed: false,
         })
     }
 
     /// Fetch server metrics.
     pub fn metrics(&mut self) -> Result<Json> {
-        self.roundtrip(&Json::obj(vec![("cmd", "metrics".into())]))
+        let r = self.roundtrip(&Json::obj(vec![("cmd", "metrics".into())]))?;
+        if let Some(e) = reply_error(&r) {
+            return Err(Error::from(ClientError::Server(e)));
+        }
+        Ok(r)
     }
 
-    /// Ask the server to shut down.
+    /// Ask the server to shut down (graceful drain).
     pub fn shutdown(&mut self) -> Result<()> {
-        self.roundtrip(&Json::obj(vec![("cmd", "shutdown".into())]))?;
+        let r = self.roundtrip(&Json::obj(vec![("cmd", "shutdown".into())]))?;
+        if let Some(e) = reply_error(&r) {
+            return Err(Error::from(ClientError::Server(e)));
+        }
         Ok(())
+    }
+}
+
+/// The error message of a reply, if it carries one (v1 `error` field or
+/// v2 `error` event).
+fn reply_error(j: &Json) -> Option<String> {
+    j.get("error").as_str().map(str::to_string)
+}
+
+/// Parse a collected (`done`) reply into a [`Response`], surfacing
+/// server errors and unexpected shapes as typed [`ClientError`]s.
+fn parse_done(r: &Json) -> Result<Response> {
+    if let Some(e) = reply_error(r) {
+        return Err(Error::from(ClientError::Server(e)));
+    }
+    let is_done = match r.get("event").as_str() {
+        Some("done") => true,
+        Some(other) => {
+            return Err(Error::from(ClientError::Protocol(format!(
+                "expected done event, got {other}"
+            ))))
+        }
+        // v1 collected replies carry no event key.
+        None => r.get("tokens").as_arr().is_some(),
+    };
+    if !is_done {
+        return Err(Error::from(ClientError::Protocol(
+            "reply is neither a response nor an error".to_string(),
+        )));
+    }
+    Ok(Response {
+        id: r.get("id").as_usize().unwrap_or(0) as u64,
+        tokens: r
+            .get("tokens")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|t| t.as_usize())
+                    .map(|t| t as u32)
+                    .collect()
+            })
+            .unwrap_or_default(),
+        ttft_ms: r.get("ttft_ms").as_f64().unwrap_or(0.0),
+        total_ms: r.get("total_ms").as_f64().unwrap_or(0.0),
+    })
+}
+
+/// Iterator over one streamed generation: yields each token as its
+/// event arrives; after the iterator is exhausted, [`TokenStream::finish`]
+/// returns the final collected [`Response`].
+pub struct TokenStream<'a> {
+    client: &'a mut Client,
+    done: Option<Response>,
+    failed: bool,
+}
+
+impl Iterator for TokenStream<'_> {
+    type Item = Result<u32>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done.is_some() || self.failed {
+            return None;
+        }
+        let j = match self.client.read_json() {
+            Ok(j) => j,
+            Err(e) => {
+                self.failed = true;
+                return Some(Err(e));
+            }
+        };
+        if let Some(e) = reply_error(&j) {
+            self.failed = true;
+            return Some(Err(Error::from(ClientError::Server(e))));
+        }
+        match j.get("event").as_str() {
+            Some("token") => match j.get("token").as_usize() {
+                Some(t) => Some(Ok(t as u32)),
+                None => {
+                    self.failed = true;
+                    Some(Err(Error::from(ClientError::Protocol(
+                        "token event without token".to_string(),
+                    ))))
+                }
+            },
+            Some("done") => {
+                match parse_done(&j) {
+                    Ok(r) => self.done = Some(r),
+                    Err(e) => {
+                        self.failed = true;
+                        return Some(Err(e));
+                    }
+                }
+                None
+            }
+            other => {
+                self.failed = true;
+                Some(Err(Error::from(ClientError::Protocol(format!(
+                    "unexpected stream event {other:?}"
+                )))))
+            }
+        }
+    }
+}
+
+impl TokenStream<'_> {
+    /// Drain any remaining token events and return the final collected
+    /// [`Response`].
+    pub fn finish(mut self) -> Result<Response> {
+        for t in &mut self {
+            t?;
+        }
+        self.done
+            .take()
+            .ok_or_else(|| err!("stream ended without a done event"))
     }
 }
 
@@ -362,9 +968,13 @@ mod tests {
         Scheduler::new(model, None, Arc::new(Metrics::default()), 4)
     }
 
+    fn serve_default() -> Server {
+        Server::serve(tiny_scheduler(), ServeConfig::default()).unwrap()
+    }
+
     #[test]
     fn serve_generate_metrics_shutdown() {
-        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let server = serve_default();
         let addr = server.addr.clone();
 
         let mut c = Client::connect(&addr).unwrap();
@@ -385,9 +995,68 @@ mod tests {
         server.stop();
     }
 
+    /// Streamed tokens arrive per token, match the collected response
+    /// bit-for-bit, and the final Response matches the batch path.
+    #[test]
+    fn streamed_tokens_match_collected() {
+        let server = serve_default();
+        let addr = server.addr.clone();
+        let mut c = Client::connect(&addr).unwrap();
+        let collected = c.generate(&[4, 9], 6).unwrap();
+
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut stream = c.generate_streamed(&[4, 9], 6).unwrap();
+        for t in &mut stream {
+            streamed.push(t.unwrap());
+        }
+        let done = stream.finish().unwrap();
+        assert_eq!(streamed, collected.tokens);
+        assert_eq!(done.tokens, collected.tokens);
+        assert!(done.ttft_ms <= done.total_ms);
+
+        // Server-side ITL histogram saw the gaps (6 tokens = 5 gaps x2).
+        let m = c.metrics().unwrap();
+        assert!(m.get("itl").get("count").as_usize().unwrap() >= 5);
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
+    /// The v1 wire shape (no "v" key) still gets the legacy collected
+    /// reply, so pre-redesign clients keep working.
+    #[test]
+    fn v1_protocol_still_served() {
+        let server = serve_default();
+        let addr = server.addr.clone();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = stream;
+        writeln!(out, "{}", r#"{"id": 9, "prompt": [1, 2, 3], "max_new": 5}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("v").as_usize(), None, "v1 reply must not carry v2 envelope");
+        assert_eq!(j.get("event").as_str(), None);
+        assert_eq!(j.get("id").as_usize(), Some(9));
+        assert_eq!(j.get("tokens").as_arr().map(|a| a.len()), Some(5));
+        // Same tokens as the v2 path.
+        let mut c = Client::connect(&addr).unwrap();
+        let v2 = c.generate(&[1, 2, 3], 5).unwrap();
+        let v1_tokens: Vec<u32> = j
+            .get("tokens")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|t| t.as_usize())
+            .map(|t| t as u32)
+            .collect();
+        assert_eq!(v1_tokens, v2.tokens);
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
     #[test]
     fn concurrent_clients_are_batched() {
-        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let server = serve_default();
         let addr = server.addr.clone();
         let handles: Vec<_> = (0..4)
             .map(|i| {
@@ -417,12 +1086,13 @@ mod tests {
     #[test]
     fn modes_and_kv_pool_serve_correctly() {
         for mode in [SchedMode::Static, SchedMode::Continuous] {
-            let pool_cfg = KvPoolCfg {
-                max_seqs: 2,
-                max_tokens: 64,
-            };
-            let server =
-                Server::start_with("127.0.0.1:0", tiny_scheduler(), pool_cfg, mode).unwrap();
+            let cfg = ServeConfig::new("127.0.0.1:0")
+                .pool(KvPoolCfg {
+                    max_seqs: 2,
+                    max_tokens: 64,
+                })
+                .mode(mode);
+            let server = Server::serve(tiny_scheduler(), cfg).unwrap();
             let addr = server.addr.clone();
             let handles: Vec<_> = (0..4)
                 .map(|i| {
@@ -453,7 +1123,7 @@ mod tests {
 
     #[test]
     fn run_until_shutdown_returns_after_client_shutdown() {
-        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let server = serve_default();
         let addr = server.addr.clone();
         let waiter = std::thread::spawn(move || server.run_until_shutdown());
         let mut c = Client::connect(&addr).unwrap();
@@ -465,7 +1135,7 @@ mod tests {
 
     #[test]
     fn malformed_json_gets_error_reply() {
-        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let server = serve_default();
         let addr = server.addr.clone();
         let stream = TcpStream::connect(&addr).unwrap();
         let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -477,5 +1147,112 @@ mod tests {
         let mut c = Client::connect(&addr).unwrap();
         c.shutdown().unwrap();
         server.stop();
+    }
+
+    /// Connects past `max_conns` are refused with an error event before
+    /// any request is read; established connections keep working.
+    #[test]
+    fn connection_limit_refuses_excess() {
+        let server =
+            Server::serve(tiny_scheduler(), ServeConfig::default().max_conns(1)).unwrap();
+        let addr = server.addr.clone();
+        let mut c1 = Client::connect(&addr).unwrap();
+        c1.metrics().unwrap(); // ensure c1 is registered before c2 connects
+        let s2 = TcpStream::connect(&addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(s2).read_line(&mut line).unwrap();
+        let j = json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("event").as_str(), Some("error"));
+        assert!(
+            j.get("error").as_str().unwrap().contains("connection limit"),
+            "{line}"
+        );
+        // c1 still works.
+        assert_eq!(c1.generate(&[1], 2).unwrap().tokens.len(), 2);
+        c1.shutdown().unwrap();
+        server.stop();
+    }
+
+    /// Idle connections (no in-flight work, no traffic) are closed after
+    /// the configured timeout; the client sees a clean disconnect.
+    #[test]
+    fn idle_connections_time_out() {
+        let server = Server::serve(
+            tiny_scheduler(),
+            ServeConfig::default().idle_timeout(Duration::from_millis(50)),
+        )
+        .unwrap();
+        let addr = server.addr.clone();
+        let mut idle = Client::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        let e = idle.generate(&[1], 2).unwrap_err();
+        assert!(
+            matches!(
+                e.downcast_ref::<ClientError>(),
+                Some(ClientError::Disconnected)
+            ),
+            "{e:#}"
+        );
+        // Fresh connections still work after the reap.
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(c.generate(&[1], 2).unwrap().tokens.len(), 2);
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
+    /// Typed client errors distinguish a garbled reply and a dropped
+    /// connection from a server-reported failure.
+    #[test]
+    fn client_surfaces_typed_protocol_errors() {
+        // A "server" that answers garbage, then one that hangs up.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            // First conn: garbage line. Second conn: immediate close.
+            let (mut s, _) = listener.accept().unwrap();
+            let mut line = String::new();
+            BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+            writeln!(s, "not json at all").unwrap();
+            let (s2, _) = listener.accept().unwrap();
+            drop(s2);
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let e = c.generate(&[1], 1).unwrap_err();
+        assert!(
+            matches!(e.downcast_ref::<ClientError>(), Some(ClientError::Protocol(_))),
+            "{e:#}"
+        );
+        let mut c2 = Client::connect(&addr).unwrap();
+        let e2 = c2.generate(&[1], 1).unwrap_err();
+        assert!(
+            matches!(e2.downcast_ref::<ClientError>(), Some(ClientError::Disconnected)),
+            "{e2:#}"
+        );
+        h.join().unwrap();
+    }
+
+    /// The deprecated positional constructors stay equivalent to
+    /// `ServeConfig` for one release.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_start_shims_still_serve() {
+        let server = Server::start("127.0.0.1:0", tiny_scheduler()).unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let a = c.generate(&[1, 2, 3], 4).unwrap();
+        c.shutdown().unwrap();
+        server.stop();
+
+        let server = Server::start_with(
+            "127.0.0.1:0",
+            tiny_scheduler(),
+            KvPoolCfg::default(),
+            SchedMode::Static,
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let b = c.generate(&[1, 2, 3], 4).unwrap();
+        c.shutdown().unwrap();
+        server.stop();
+        assert_eq!(a.tokens, b.tokens);
     }
 }

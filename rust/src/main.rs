@@ -1,8 +1,9 @@
 //! `tpaware` — launcher CLI for the TP-Aware Dequantization stack.
 //!
 //! Subcommands:
-//!   serve       start the serving server (tiny transformer, TP MLPs)
+//!   serve       start the streaming serving server (tiny transformer, TP MLPs)
 //!   client      send a generation request to a running server
+//!   loadgen     drive open/closed-loop load at a server; report TTFT/ITL
 //!   tables      print the paper's tables from the calibrated model
 //!   measure     measured-mode Alg.2 vs Alg.3 on thread ranks (host/PJRT)
 //!   quantize    quantize a synthetic checkpoint and report error stats
@@ -12,11 +13,12 @@
 use std::sync::Arc;
 use tpaware::bail;
 use tpaware::ckpt::repack::{load_deployment, load_deployment_limit, repack_model, CkptManifest};
-use tpaware::coordinator::engine::{EngineBackend, EngineOptions, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::coordinator::kv_pool::KvPoolCfg;
+use tpaware::coordinator::loadgen::{self, LoadMode, LoadgenCfg};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
-use tpaware::coordinator::server::{Client, Server};
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
 use tpaware::ensure;
 use tpaware::err;
 use tpaware::gemm::GemmBackend;
@@ -62,8 +64,9 @@ fn usage() -> String {
 Usage: tpaware <subcommand> [flags]
 
 Subcommands:
-  serve      start the serving server
-  client     send a request to a running server
+  serve      start the streaming serving server
+  client     send a request to a running server (--stream for per-token)
+  loadgen    drive open/closed-loop load at a server; report TTFT/ITL/e2e
   tables     regenerate the paper's tables (modeled A100/H100)
   measure    measured Alg.2 vs Alg.3 on this machine's thread ranks
   quantize   GPTQ a synthetic layer; report error statistics
@@ -84,6 +87,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "loadgen" => cmd_loadgen(rest),
         "tables" => cmd_tables(rest),
         "measure" => cmd_measure(rest),
         "quantize" => cmd_quantize(rest),
@@ -139,6 +143,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "",
             "boot weights from a repacked checkpoint directory (see 'repack') \
              instead of re-quantizing in memory",
+        )
+        .flag("max-conns", "64", "maximum simultaneously-open connections")
+        .flag(
+            "idle-ms",
+            "300000",
+            "close connections idle (no in-flight request) this long",
+        )
+        .flag(
+            "drain-ms",
+            "10000",
+            "graceful-drain bound after shutdown: in-flight requests get \
+             this long to finish",
         );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
@@ -201,36 +217,39 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         pool_cfg.max_seqs,
         pool_cfg.max_tokens
     );
-    let opts = EngineOptions { codec, gemm };
-    let engine = match a.get("backend") {
-        "host" => Some(TpEngine::start_with_opts(
-            EngineBackend::Host,
-            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-            cfg.activation,
-            None,
-            opts,
-        )?),
-        "pjrt" => {
-            let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
-            Some(TpEngine::start_with_opts(
-                EngineBackend::Pjrt {
-                    model: cfg.name.clone(),
-                },
-                model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-                cfg.activation,
-                Some(&manifest),
-                opts,
-            )?)
-        }
-        other => bail!("unknown backend '{other}'"),
+    let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
+    let engine_cfg = EngineConfig::new(
+        match a.get("backend") {
+            "host" => EngineBackend::Host,
+            "pjrt" => EngineBackend::Pjrt {
+                model: cfg.name.clone(),
+            },
+            other => bail!("unknown backend '{other}'"),
+        },
+        cfg.activation,
+    )
+    .layers(layers)
+    .codec(codec)
+    .gemm(gemm);
+    let engine = if a.get("backend") == "pjrt" {
+        let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
+        engine_cfg.manifest(&manifest).start()?
+    } else {
+        engine_cfg.start()?
     };
     eprintln!("engine up ({} backend)", a.get("backend"));
     let metrics = Arc::new(Metrics::default());
     metrics.set_startup(weights_source, weights_ms);
-    let scheduler = Scheduler::new(model, engine, metrics, a.usize("max-batch")?);
-    let server = Server::start_with(a.get("addr"), scheduler, pool_cfg, mode)?;
+    let scheduler = Scheduler::new(model, Some(engine), metrics, a.usize("max-batch")?);
+    let serve_cfg = ServeConfig::new(a.get("addr"))
+        .mode(mode)
+        .pool(pool_cfg)
+        .max_conns(a.usize("max-conns")?)
+        .idle_timeout(std::time::Duration::from_millis(a.u64("idle-ms")?))
+        .drain_timeout(std::time::Duration::from_millis(a.u64("drain-ms")?));
+    let server = Server::serve(scheduler, serve_cfg)?;
     println!("listening on {}", server.addr);
-    // Serve until a client sends {"cmd":"shutdown"}.
+    // Serve until a client sends {"cmd":"shutdown"} (graceful drain).
     server.run_until_shutdown();
     Ok(())
 }
@@ -240,6 +259,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         .flag("addr", "127.0.0.1:7411", "server address")
         .flag("prompt", "1,2,3", "comma-separated prompt token ids")
         .flag("max-new", "8", "tokens to generate")
+        .switch("stream", "print each token as the server streams it")
         .switch("metrics", "fetch metrics instead")
         .switch("shutdown", "ask the server to shut down");
     let a = spec.parse(args)?;
@@ -258,11 +278,106 @@ fn cmd_client(args: &[String]) -> Result<()> {
         .split(',')
         .map(|t| t.trim().parse::<u32>().map_err(|_| err!("bad token")))
         .collect::<Result<_>>()?;
-    let r = c.generate(&prompt, a.usize("max-new")?)?;
+    let max_new = a.usize("max-new")?;
+    let r = if a.on("stream") {
+        use std::io::Write as _;
+        let mut stream = c.generate_streamed(&prompt, max_new)?;
+        for t in &mut stream {
+            print!("{} ", t?);
+            std::io::stdout().flush().ok();
+        }
+        println!();
+        stream.finish()?
+    } else {
+        c.generate(&prompt, max_new)?
+    };
     println!(
         "id={} tokens={:?} ttft={:.2}ms total={:.2}ms",
         r.id, r.tokens, r.ttft_ms, r.total_ms
     );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let spec = Command::new(
+        "loadgen",
+        "drive open/closed-loop load at a running server; report client-side \
+         TTFT / inter-token / e2e latency percentiles",
+    )
+    .flag("addr", "127.0.0.1:7411", "server address")
+    .flag("n", "24", "number of requests")
+    .flag("mode", "open", "driving mode: open (Poisson) | closed")
+    .flag("lambda", "30", "open loop: arrival rate, requests/second")
+    .flag("concurrency", "4", "closed loop: concurrent workers")
+    .flag("seed", "7", "trace seed (prompts, lengths, arrivals)")
+    .flag("csv", "", "also write the report as CSV to this path");
+    let a = spec.parse(args)?;
+    let mode = match a.get("mode") {
+        "open" => LoadMode::OpenLoop {
+            lambda: a.f64("lambda")?,
+        },
+        "closed" => LoadMode::ClosedLoop {
+            concurrency: a.usize("concurrency")?,
+        },
+        other => bail!("mode must be 'open' or 'closed', got '{other}'"),
+    };
+    let cfg = LoadgenCfg {
+        addr: a.get("addr").to_string(),
+        n: a.usize("n")?,
+        mode,
+        seed: a.u64("seed")?,
+    };
+    match mode {
+        LoadMode::OpenLoop { lambda } => eprintln!(
+            "loadgen: {} requests at {}, open-loop Poisson λ={lambda}/s, seed {}",
+            cfg.n, cfg.addr, cfg.seed
+        ),
+        LoadMode::ClosedLoop { concurrency } => eprintln!(
+            "loadgen: {} requests at {}, closed-loop x{concurrency}, seed {}",
+            cfg.n, cfg.addr, cfg.seed
+        ),
+    }
+    let report = loadgen::run(&cfg)?;
+    let mut t = Table::new(
+        "Client-side streaming latency (exact percentiles)",
+        &[
+            "metric",
+            "p50 (ms)",
+            "p95 (ms)",
+            "p99 (ms)",
+            "mean (ms)",
+            "max (ms)",
+            "count",
+        ],
+    );
+    for (name, p) in [
+        ("ttft", &report.ttft_ms),
+        ("itl", &report.itl_ms),
+        ("e2e", &report.e2e_ms),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", p.p50),
+            format!("{:.2}", p.p95),
+            format!("{:.2}", p.p99),
+            format!("{:.2}", p.mean),
+            format!("{:.2}", p.max),
+            p.count.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "requests={} tokens={} wall_s={:.2} tok/s={:.1}",
+        report.requests,
+        report.tokens,
+        report.wall_s,
+        report.tokens_per_s()
+    );
+    let csv_path = a.get("csv").to_string();
+    if !csv_path.is_empty() {
+        std::fs::write(&csv_path, report.to_csv())?;
+        println!("csv written to {csv_path}");
+    }
     Ok(())
 }
 
@@ -653,14 +768,15 @@ fn cmd_validate(args: &[String]) -> Result<()> {
     let mut failures = 0;
     for algo in [Algo::TpAware, Algo::Naive] {
         let d = deploy_quantized(&ckpt, &qcfg, algo, tp);
-        let engine = TpEngine::start(
+        let engine = EngineConfig::new(
             EngineBackend::Pjrt {
                 model: cfg.name.clone(),
             },
-            vec![d.clone()],
             cfg.activation,
-            Some(&manifest),
-        )?;
+        )
+        .layers(vec![d.clone()])
+        .manifest(&manifest)
+        .start()?;
         for m in manifest.m_buckets(&cfg.name, "fused", tp.size) {
             let mut rng = Xoshiro256::new(m as u64);
             let x = Matrix::randn(m, shape.k1, &mut rng);

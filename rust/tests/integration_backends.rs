@@ -5,7 +5,7 @@
 //! `measure --gemm-backend` / `serve --gemm-backend` contract).
 
 use std::sync::Arc;
-use tpaware::coordinator::engine::{EngineBackend, EngineOptions, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::request::Request;
 use tpaware::coordinator::scheduler::Scheduler;
@@ -89,17 +89,11 @@ fn backends_generate_identical_tokens_through_the_engine() {
     for backend in GemmBackend::all() {
         let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 17));
         let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
-        let engine = TpEngine::start_with_opts(
-            EngineBackend::Host,
-            layers,
-            cfg.activation,
-            None,
-            EngineOptions {
-                gemm: backend,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(layers)
+            .gemm(backend)
+            .start()
+            .unwrap();
         assert_eq!(engine.gemm_backend(), backend);
         let metrics = Arc::new(Metrics::default());
         let sched = Scheduler::new(model, Some(engine), metrics.clone(), 4);

@@ -7,10 +7,10 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 use tpaware::ckpt::repack::{load_deployment, rank_file, repack_model};
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
-use tpaware::coordinator::server::{Client, Server};
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
 use tpaware::model::config::{Activation, ModelConfig};
 use tpaware::model::transformer::Transformer;
 use tpaware::simkernel::pipeline::Algo;
@@ -92,20 +92,14 @@ fn tcp_serving_from_ckpt_matches_memory_path() {
         Transformer::synthesize_with_deployments(&cfg, Algo::TpAware, tp, seed, layers)
             .unwrap(),
     );
-    let engine = TpEngine::start_from_ckpt(
-        EngineBackend::Host,
-        &dir,
-        Algo::TpAware,
-        tp,
-        cfg.activation,
-        None,
-        tpaware::coordinator::engine::EngineOptions::default(),
-    )
-    .unwrap();
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .from_ckpt(&dir, Algo::TpAware, tp)
+        .start()
+        .unwrap();
     let metrics = Arc::new(Metrics::default());
     metrics.set_startup("ckpt", 1.0);
     let scheduler = Scheduler::new(model, Some(engine), metrics, 4);
-    let server = Server::start("127.0.0.1:0", scheduler).unwrap();
+    let server = Server::serve(scheduler, ServeConfig::new("127.0.0.1:0")).unwrap();
     let addr = server.addr.clone();
 
     let mut c = Client::connect(&addr).unwrap();

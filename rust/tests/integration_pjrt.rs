@@ -7,7 +7,7 @@
 //! artifacts directory is absent so `cargo test` stays green in a fresh
 //! checkout.
 
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::model::config::ModelConfig;
 use tpaware::model::mlp::run_mlp_sequential;
 use tpaware::model::weights::{deploy_quantized, gen_checkpoint};
@@ -49,14 +49,15 @@ fn pjrt_engine_matches_host_oracle_all_buckets() {
     for tp in [1usize, 2] {
         for algo in [Algo::TpAware, Algo::Naive] {
             let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), algo, Topology::new(tp));
-            let engine = TpEngine::start(
+            let engine = EngineConfig::new(
                 EngineBackend::Pjrt {
                     model: cfg.name.clone(),
                 },
-                vec![d.clone()],
                 cfg.activation,
-                Some(&manifest),
             )
+            .layers(vec![d.clone()])
+            .manifest(&manifest)
+            .start()
             .unwrap();
             for m in manifest.m_buckets(&cfg.name, "fused", tp) {
                 let mut rng = Xoshiro256::new(m as u64 + 1);
@@ -82,14 +83,15 @@ fn pjrt_padding_to_bucket_is_transparent() {
     let shape = cfg.mlp_shape();
     let ckpt = gen_checkpoint(shape, 78);
     let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::TpAware, Topology::new(2));
-    let engine = TpEngine::start(
+    let engine = EngineConfig::new(
         EngineBackend::Pjrt {
             model: cfg.name.clone(),
         },
-        vec![d.clone()],
         cfg.activation,
-        Some(&manifest),
     )
+    .layers(vec![d.clone()])
+    .manifest(&manifest)
+    .start()
     .unwrap();
     for odd_m in [3usize, 5, 7] {
         let mut rng = Xoshiro256::new(odd_m as u64);
@@ -112,14 +114,15 @@ fn pjrt_oversized_batch_is_an_error() {
     let shape = cfg.mlp_shape();
     let ckpt = gen_checkpoint(shape, 79);
     let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::TpAware, Topology::new(2));
-    let engine = TpEngine::start(
+    let engine = EngineConfig::new(
         EngineBackend::Pjrt {
             model: cfg.name.clone(),
         },
-        vec![d],
         cfg.activation,
-        Some(&manifest),
     )
+    .layers(vec![d])
+    .manifest(&manifest)
+    .start()
     .unwrap();
     let mut rng = Xoshiro256::new(1);
     let x = Matrix::randn(64, shape.k1, &mut rng); // > largest bucket (8)
@@ -145,14 +148,15 @@ fn pjrt_multi_layer_weights_do_not_mix() {
             )
         })
         .collect();
-    let engine = TpEngine::start(
+    let engine = EngineConfig::new(
         EngineBackend::Pjrt {
             model: cfg.name.clone(),
         },
-        layers.clone(),
         cfg.activation,
-        Some(&manifest),
     )
+    .layers(layers.clone())
+    .manifest(&manifest)
+    .start()
     .unwrap();
     let mut rng = Xoshiro256::new(2);
     let x = Matrix::randn(2, shape.k1, &mut rng);
@@ -178,14 +182,15 @@ fn pjrt_llama_scaled_naive_stages() {
     let shape = cfg.mlp_shape();
     let ckpt = gen_checkpoint(shape, 55);
     let d = deploy_quantized(&ckpt, &qcfg(cfg.group_size), Algo::Naive, Topology::new(4));
-    let engine = TpEngine::start(
+    let engine = EngineConfig::new(
         EngineBackend::Pjrt {
             model: cfg.name.clone(),
         },
-        vec![d.clone()],
         cfg.activation,
-        Some(&manifest),
     )
+    .layers(vec![d.clone()])
+    .manifest(&manifest)
+    .start()
     .unwrap();
     let mut rng = Xoshiro256::new(3);
     let x = Matrix::randn(4, shape.k1, &mut rng);

@@ -1,0 +1,185 @@
+//! Serving-layer integration: the nonblocking streaming server over
+//! real TCP. Streamed token sequences must be bit-identical to the
+//! collected batch path (and to bare `model.generate`) across both
+//! scheduler modes and GEMM backends; shutdown must drain — in-flight
+//! generations finish while new connects are refused; and the loadgen
+//! harness must report sane, strictly-ordered percentiles against a
+//! live server.
+
+use std::io::BufRead;
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
+use tpaware::coordinator::kv_pool::KvPoolCfg;
+use tpaware::coordinator::loadgen::{self, LoadMode, LoadgenCfg};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
+use tpaware::gemm::GemmBackend;
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::transformer::Transformer;
+use tpaware::simkernel::pipeline::{Algo, SchedMode};
+use tpaware::tp::topology::Topology;
+use tpaware::util::json;
+
+fn unit_model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "unit".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+        activation: Activation::Gelu,
+        group_size: 8,
+    }
+}
+
+/// Start a server over a TP=2 engine with the given scheduler mode and
+/// GEMM backend; returns the server plus the model for oracle calls.
+fn serve_with(mode: SchedMode, gemm: GemmBackend, seed: u64) -> (Server, Arc<Transformer>) {
+    let cfg = unit_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), seed));
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .gemm(gemm)
+        .start()
+        .unwrap();
+    let sched = Scheduler::new(model.clone(), Some(engine), Arc::new(Metrics::default()), 4);
+    let server = Server::serve(sched, ServeConfig::new("127.0.0.1:0").mode(mode)).unwrap();
+    (server, model)
+}
+
+/// The redesign's core invariant: per-token streaming is a *view* of
+/// the same generation — the streamed sequence, the collected batch
+/// reply and the bare model agree bit-for-bit, in every scheduler mode
+/// and on both ends of the GEMM backend spectrum.
+#[test]
+fn streamed_tokens_bit_identical_to_batch_path() {
+    let prompt = [7u32, 3, 11];
+    for mode in [SchedMode::Continuous, SchedMode::Static] {
+        for gemm in [GemmBackend::Naive, GemmBackend::TiledMt] {
+            let (server, model) = serve_with(mode, gemm, 21);
+            let expected = model.generate(&prompt, 6);
+
+            let mut c = Client::connect(&server.addr).unwrap();
+            let batch = c.generate(&prompt, 6).unwrap();
+            assert_eq!(batch.tokens, expected, "batch diverged: {mode:?} {gemm:?}");
+
+            let mut stream = c.generate_streamed(&prompt, 6).unwrap();
+            let streamed: Vec<u32> = (&mut stream).map(|t| t.unwrap()).collect();
+            let done = stream.finish().unwrap();
+            assert_eq!(streamed, expected, "stream diverged: {mode:?} {gemm:?}");
+            assert_eq!(done.tokens, expected, "done event diverged: {mode:?} {gemm:?}");
+            assert!(done.ttft_ms <= done.total_ms);
+
+            c.shutdown().unwrap();
+            server.stop();
+        }
+    }
+}
+
+/// Graceful drain: after a shutdown command, the in-flight generation
+/// streams to completion (bit-identical to the oracle) while brand-new
+/// connects are refused with a `server draining` error event.
+#[test]
+fn drain_finishes_inflight_and_refuses_new_connects() {
+    let (server, model) = serve_with(SchedMode::Continuous, GemmBackend::Tiled, 33);
+    let prompt = [5u32, 9];
+    let expected = model.generate(&prompt, 24);
+
+    // A long generation, partially consumed — in flight at shutdown.
+    let mut c = Client::connect(&server.addr).unwrap();
+    let mut stream = c.generate_streamed(&prompt, 24).unwrap();
+    let mut streamed = vec![stream.next().unwrap().unwrap(), stream.next().unwrap().unwrap()];
+
+    // A second client asks the server to shut down → drain begins.
+    let mut admin = Client::connect(&server.addr).unwrap();
+    admin.shutdown().unwrap();
+
+    // New connects are now refused at accept with an error event. Read
+    // without writing: the refusal is pushed eagerly, and writing to a
+    // closing socket could RST the line away before we see it.
+    let refused = std::net::TcpStream::connect(&server.addr).unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(refused).read_line(&mut line).unwrap();
+    let j = json::parse(&line).unwrap();
+    assert_eq!(j.get("event").as_str(), Some("error"));
+    assert!(
+        j.get("error").as_str().unwrap().contains("draining"),
+        "refusal should name the drain: {line}"
+    );
+
+    // The in-flight stream still runs to its full, correct completion.
+    for t in &mut stream {
+        streamed.push(t.unwrap());
+    }
+    let done = stream.finish().unwrap();
+    assert_eq!(streamed, expected, "drain truncated or corrupted the stream");
+    assert_eq!(done.tokens, expected);
+    server.stop();
+}
+
+/// Loadgen smoke against a live server: open loop then closed loop,
+/// with strict percentile sanity — nonzero streamed tokens, monotone
+/// p50 ≤ p95 ≤ p99 ≤ max on every metric, and TTFT p50 strictly below
+/// e2e p50 on the long-tail trace (every request streams ≥ 2 tokens,
+/// so first-token latency must undercut full-request latency).
+#[test]
+fn loadgen_percentiles_are_sane_against_live_server() {
+    let cfg = unit_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 55));
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .start()
+        .unwrap();
+    let sched = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 8);
+    let server = Server::serve(
+        sched,
+        ServeConfig::new("127.0.0.1:0").pool(KvPoolCfg {
+            max_seqs: 16,
+            max_tokens: 1024,
+        }),
+    )
+    .unwrap();
+
+    let monotone = |p: &tpaware::coordinator::loadgen::Percentiles, what: &str| {
+        assert!(
+            p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.max,
+            "{what} percentiles not monotone: {p:?}"
+        );
+        assert!(p.count > 0, "{what} measured no samples");
+    };
+
+    for mode in [
+        LoadMode::OpenLoop { lambda: 60.0 },
+        LoadMode::ClosedLoop { concurrency: 3 },
+    ] {
+        let report = loadgen::run(&LoadgenCfg {
+            addr: server.addr.clone(),
+            n: 12,
+            mode,
+            seed: 7,
+        })
+        .unwrap();
+        assert_eq!(report.requests, 12, "{mode:?} lost requests");
+        assert!(report.tokens >= 2 * report.requests, "{mode:?} streamed too few tokens");
+        monotone(&report.ttft_ms, "ttft");
+        monotone(&report.itl_ms, "itl");
+        monotone(&report.e2e_ms, "e2e");
+        assert!(
+            report.ttft_ms.p50 < report.e2e_ms.p50,
+            "{mode:?}: ttft p50 {:.3} ms must sit strictly below e2e p50 {:.3} ms",
+            report.ttft_ms.p50,
+            report.e2e_ms.p50
+        );
+        assert!(report.tokens_per_s() > 0.0);
+        // Same seed → same trace: the CSV row counts are fixed by it.
+        assert_eq!(report.e2e_ms.count, 12);
+        assert_eq!(report.itl_ms.count, report.tokens - report.requests);
+    }
+
+    let mut c = Client::connect(&server.addr).unwrap();
+    c.shutdown().unwrap();
+    server.stop();
+}

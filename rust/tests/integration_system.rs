@@ -3,12 +3,12 @@
 //! serving stack over TCP, and cross-module invariants.
 
 use std::sync::Arc;
-use tpaware::coordinator::engine::{EngineBackend, TpEngine};
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
 use tpaware::coordinator::kv_pool::{KvPool, KvPoolCfg};
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::request::Request;
 use tpaware::coordinator::scheduler::{ContinuousScheduler, Scheduler};
-use tpaware::coordinator::server::{Client, Server};
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
 use tpaware::model::config::{Activation, ModelConfig};
 use tpaware::model::mlp::{run_mlp, run_mlp_sequential};
 use tpaware::model::transformer::{KvCache, Transformer};
@@ -125,13 +125,10 @@ fn transformer_generation_invariant_under_deployment() {
     let reference = base.generate(&prompt, 6);
     for (algo, tp) in [(Algo::Naive, 2), (Algo::TpAware, 2), (Algo::TpAware, 4)] {
         let model = base.redeploy(algo, Topology::new(tp));
-        let engine = TpEngine::start(
-            EngineBackend::Host,
-            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-            cfg.activation,
-            None,
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+            .start()
+            .unwrap();
         // Generate via engine-backed decode steps.
         let mut cache = vec![KvCache::new(cfg.n_layers)];
         let mut last = 0u32;
@@ -159,16 +156,13 @@ fn transformer_generation_invariant_under_deployment() {
 fn tcp_serving_with_host_engine() {
     let cfg = unit_model_cfg();
     let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 21));
-    let engine = TpEngine::start(
-        EngineBackend::Host,
-        model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-        cfg.activation,
-        None,
-    )
-    .unwrap();
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .start()
+        .unwrap();
     let expected = model.generate(&[7, 3], 5);
     let scheduler = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 4);
-    let server = Server::start("127.0.0.1:0", scheduler).unwrap();
+    let server = Server::serve(scheduler, ServeConfig::new("127.0.0.1:0")).unwrap();
     let addr = server.addr.clone();
 
     let mut c = Client::connect(&addr).unwrap();
@@ -222,13 +216,10 @@ fn continuous_batching_end_to_end_with_kv_pool() {
             .collect()
     };
     let run = |mode: SchedMode| {
-        let engine = TpEngine::start(
-            EngineBackend::Host,
-            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-            cfg.activation,
-            None,
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+            .start()
+            .unwrap();
         let metrics = Arc::new(Metrics::default());
         let core = Scheduler::new(model.clone(), Some(engine), metrics.clone(), 4);
         let pool = Arc::new(KvPool::new(KvPoolCfg {
@@ -276,7 +267,7 @@ fn router_across_two_server_replicas() {
     let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 77));
     let mk_server = || {
         let sched = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
-        Server::start("127.0.0.1:0", sched).unwrap()
+        Server::serve(sched, ServeConfig::new("127.0.0.1:0")).unwrap()
     };
     let s1 = mk_server();
     let s2 = mk_server();
@@ -310,13 +301,10 @@ fn model_level_comm_accounting() {
     let cfg = unit_model_cfg();
     for (algo, expect_ag) in [(Algo::Naive, 2usize), (Algo::TpAware, 0)] {
         let model = Transformer::synthesize(&cfg, algo, Topology::new(2), 11);
-        let engine = TpEngine::start(
-            EngineBackend::Host,
-            model.blocks.iter().map(|b| b.mlp.clone()).collect(),
-            cfg.activation,
-            None,
-        )
-        .unwrap();
+        let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+            .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+            .start()
+            .unwrap();
         let mut cache = vec![KvCache::new(cfg.n_layers)];
         engine.reset_comm_stats();
         model.decode_step_mlp(&[1], &mut cache, &mut |l, x| engine.mlp(l, x).unwrap());

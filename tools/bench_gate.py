@@ -1,39 +1,40 @@
 #!/usr/bin/env python3
-"""CI perf-regression gate for the fused dequant-GEMM backends.
+"""CI perf-regression gate: fused dequant-GEMM backends + streamed serving.
 
-Compares the `gemm_bench` output (`bench_results/BENCH_gemm.json`,
-backend x shape GiB/s on the Algorithm-1 ordered layout) against the
-committed floors in `ci/bench_baseline.json`:
+Compares one or more bench outputs against the committed requirements in
+`ci/bench_baseline.json` (always the LAST argument):
 
-* absolute floors: measured GiB/s must be >= floor * (1 - tolerance%),
-  per (shape, backend) listed in `floors_gib_s`;
-* relative requirements: rows of `[shape, faster_backend, slower_backend]`
-  in `require_faster` assert ordering between backends measured in the
-  same run (robust to runner speed, the sharp edge of the gate).
+* `BENCH_gemm.json` (`cargo bench --bench gemm_bench`, backend x shape
+  GiB/s on the Algorithm-1 ordered layout):
+  - absolute floors: measured GiB/s must be >= floor * (1 - tolerance%),
+    per (shape, backend) listed in `floors_gib_s`;
+  - relative requirements: rows of `[shape, faster_backend,
+    slower_backend]` in `require_faster` assert ordering between
+    backends measured in the same run (robust to runner speed, the
+    sharp edge of the gate).
+* `BENCH_serving.json` (`cargo bench --bench serving_bench`, the
+  loadgen harness driven through a live streaming server): the
+  `serving_ttft` report, checked against the baseline's `serving`
+  section — `min_tokens` streamed, percentile monotonicity
+  (p50 <= p95 <= p99 <= max per metric), and `require_ttft_below_e2e`
+  (client-observed TTFT p50 strictly below e2e p50: per-token streaming
+  must deliver the first token well before the request finishes). All
+  serving checks are relative/structural, so they hold on any runner.
 
 Stdlib-only, like the other tools/ scripts.
 
-Usage: bench_gate.py BENCH_gemm.json ci/bench_baseline.json
+Usage: bench_gate.py BENCH_gemm.json [BENCH_serving.json ...] ci/bench_baseline.json
 """
 
 import json
 import sys
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    with open(sys.argv[1]) as f:
-        bench = json.load(f)
-    with open(sys.argv[2]) as f:
-        base = json.load(f)
-
+def check_gemm(bench, base, failures):
+    """Absolute floors + relative ordering for the GEMM backends."""
     gib = bench.get("gib_s", {})
     tol = float(base.get("tolerance_pct", 0.0))
-    failures = []
-
-    print(f"bench gate: mode={bench.get('mode')} m={bench.get('m')} "
+    print(f"bench gate (gemm): mode={bench.get('mode')} m={bench.get('m')} "
           f"layout={bench.get('layout')} pool_workers={bench.get('pool_workers')} "
           f"tolerance={tol:.0f}%")
     for shape, backends in sorted(base.get("floors_gib_s", {}).items()):
@@ -65,6 +66,79 @@ def main() -> int:
             failures.append(
                 f"{shape}: {fast} ({f_gib:.3f} GiB/s) does not beat "
                 f"{slow} ({s_gib:.3f} GiB/s)")
+
+
+def check_serving(report, base, failures):
+    """Structural/relative checks on the loadgen `serving_ttft` report."""
+    cfg = base.get("serving", {})
+    print(f"bench gate (serving): {report.get('requests')} requests, "
+          f"{report.get('tokens')} streamed tokens, "
+          f"{report.get('tokens_per_s', 0):.1f} tok/s")
+    min_tokens = int(cfg.get("min_tokens", 1))
+    tokens = int(report.get("tokens", 0))
+    ok = tokens >= min_tokens
+    print(f"  {'PASS' if ok else 'FAIL'} serving_ttft/tokens: {tokens} "
+          f"streamed (need >= {min_tokens})")
+    if not ok:
+        failures.append(
+            f"serving_ttft: only {tokens} streamed tokens (need >= {min_tokens})")
+
+    for metric in ("ttft", "itl", "e2e"):
+        p = report.get(metric)
+        if not p:
+            failures.append(f"serving_ttft/{metric}: missing from bench output")
+            continue
+        qs = [p.get(k, 0.0) for k in ("p50_ms", "p95_ms", "p99_ms", "max_ms")]
+        ok = all(a <= b for a, b in zip(qs, qs[1:])) and p.get("count", 0) > 0
+        print(f"  {'PASS' if ok else 'FAIL'} serving_ttft/{metric}: "
+              f"p50 {qs[0]:.2f} <= p95 {qs[1]:.2f} <= p99 {qs[2]:.2f} "
+              f"<= max {qs[3]:.2f} ms over {p.get('count', 0)} samples")
+        if not ok:
+            failures.append(
+                f"serving_ttft/{metric}: percentiles not monotone or empty ({p})")
+
+    if cfg.get("require_ttft_below_e2e"):
+        ttft = report.get("ttft", {}).get("p50_ms")
+        e2e = report.get("e2e", {}).get("p50_ms")
+        if ttft is None or e2e is None:
+            failures.append("serving_ttft: ttft/e2e p50 missing from bench output")
+        else:
+            ok = ttft < e2e
+            print(f"  {'PASS' if ok else 'FAIL'} serving_ttft: ttft p50 "
+                  f"{ttft:.2f} ms strictly below e2e p50 {e2e:.2f} ms")
+            if not ok:
+                failures.append(
+                    f"serving_ttft: ttft p50 {ttft:.2f} ms not strictly below "
+                    f"e2e p50 {e2e:.2f} ms — streaming is not delivering early")
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[-1]) as f:
+        base = json.load(f)
+
+    failures = []
+    saw_gemm = saw_serving = False
+    for path in sys.argv[1:-1]:
+        with open(path) as f:
+            bench = json.load(f)
+        if "gib_s" in bench:
+            saw_gemm = True
+            check_gemm(bench, base, failures)
+        if "serving_ttft" in bench:
+            saw_serving = True
+            check_serving(bench["serving_ttft"], base, failures)
+
+    # A baseline section with no bench file to check it is a silent
+    # hole in the gate — fail loudly instead.
+    if base.get("floors_gib_s") and not saw_gemm:
+        failures.append("no bench file with `gib_s` given, but the baseline "
+                        "has GEMM floors")
+    if base.get("serving") and not saw_serving:
+        failures.append("no bench file with `serving_ttft` given, but the "
+                        "baseline has a serving section")
 
     if failures:
         print("\nbench gate FAILED:")
