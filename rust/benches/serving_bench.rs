@@ -397,6 +397,34 @@ fn main() {
         report.ttft_ms.p50,
         report.e2e_ms.p50
     );
+    // ---- Tracing overhead: same offline run, tracer off vs on ----
+    // The obs layer's contract is one relaxed atomic load per call site
+    // when no tracer is installed, and span recording that does not
+    // halve throughput when one is. Both numbers feed the CI bench gate
+    // (`serving.trace_overhead`).
+    let engine_off = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(layers.clone())
+        .start()
+        .unwrap();
+    let off = run_offline(model.clone(), Some(engine_off), n_requests, max_new);
+    let tracer = tpaware::obs::Tracer::new(1 << 20);
+    tpaware::obs::install(&tracer);
+    let engine_on = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(layers.clone())
+        .start()
+        .unwrap();
+    let on = run_offline(model.clone(), Some(engine_on), n_requests, max_new);
+    tpaware::obs::uninstall();
+    assert!(!tracer.is_empty(), "traced run recorded no spans");
+    let trace_ratio = on.tok_per_s / off.tok_per_s;
+    println!(
+        "Tracing overhead (offline, host engine, TP=2): disabled {:.1} tok/s, \
+         enabled {:.1} tok/s ({trace_ratio:.2}x, {} spans recorded)\n",
+        off.tok_per_s,
+        on.tok_per_s,
+        tracer.len()
+    );
+
     let bench_mode = if fast { "fast" } else { "full" };
     let out = Json::obj(vec![
         ("mode", bench_mode.into()),
@@ -405,6 +433,15 @@ fn main() {
         ("algo", "tp-aware".into()),
         ("lambda", lg_lambda.into()),
         ("serving_ttft", report.to_json()),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("disabled_tok_s", off.tok_per_s.into()),
+                ("enabled_tok_s", on.tok_per_s.into()),
+                ("enabled_over_disabled", trace_ratio.into()),
+                ("spans", tracer.len().into()),
+            ]),
+        ),
     ]);
 
     let dir = tpaware::util::timer::bench_results_dir();

@@ -109,6 +109,7 @@ pub struct EngineConfig {
     source: WeightSource,
     manifest: Option<Manifest>,
     opts: EngineOptions,
+    trace: Option<Arc<crate::obs::Tracer>>,
 }
 
 impl EngineConfig {
@@ -121,6 +122,7 @@ impl EngineConfig {
             source: WeightSource::Unset,
             manifest: None,
             opts: EngineOptions::default(),
+            trace: None,
         }
     }
 
@@ -170,8 +172,21 @@ impl EngineConfig {
         self
     }
 
+    /// Attach a span tracer. [`EngineConfig::start`] installs it
+    /// **process-globally** (see [`crate::obs::install`]): tracing is a
+    /// process-wide switch, so spans from every instrumented layer —
+    /// GEMMs, collectives, scheduler ticks — flow into this tracer,
+    /// not just the engine's own rank threads.
+    pub fn trace(mut self, tracer: Arc<crate::obs::Tracer>) -> EngineConfig {
+        self.trace = Some(tracer);
+        self
+    }
+
     /// Resolve the weight source and spawn the rank pool.
     pub fn start(self) -> Result<TpEngine> {
+        if let Some(t) = &self.trace {
+            crate::obs::install(t);
+        }
         let layers = match self.source {
             WeightSource::Layers(layers) => layers,
             WeightSource::Ckpt { dir, algo, tp } => {
@@ -226,6 +241,9 @@ struct WorkerCtx {
 
 impl WorkerCtx {
     fn run_mlp(&self, layer: usize, x: &Matrix) -> Result<Matrix> {
+        let _span = crate::obs::span("rank_mlp", "engine")
+            .arg("layer", layer)
+            .arg("rank", self.rank);
         let d = &self.layers[layer];
         match (&self.exec, d.algo) {
             (Some(exec), Algo::TpAware) => {

@@ -9,6 +9,7 @@ use crate::tp::collectives::CommStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Log-bucketed latency histogram (microsecond domain, ~2× buckets).
 #[derive(Debug)]
@@ -61,7 +62,11 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log buckets: the upper edge of the
+    /// bucket holding the target sample, clamped to the recorded
+    /// maximum (the raw edge overstates tail quantiles by up to 2× —
+    /// a lone 1600 µs sample lives in the [1024, 2048) bucket, and
+    /// reporting p99 = 2048 µs would exceed every observed latency).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let buckets = self.buckets.lock().unwrap();
         let total: u64 = buckets.iter().sum();
@@ -73,9 +78,24 @@ impl Histogram {
         for (i, &c) in buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << (i + 1);
+                return (1u64 << (i + 1)).min(self.max_us.load(Ordering::Relaxed));
             }
         }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-bucket counts (bucket i = [2^i, 2^(i+1)) µs).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.lock().unwrap().clone()
+    }
+
+    /// Sum of all samples, microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample recorded so far, microseconds.
+    pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
 
@@ -175,7 +195,7 @@ pub fn kv_stats_json(s: &KvPoolStats) -> Json {
 }
 
 /// All serving metrics, shared across threads.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Requests accepted by the server/scheduler.
     pub requests_received: AtomicU64,
@@ -219,9 +239,44 @@ pub struct Metrics {
     /// the scheduler publishes it from the engine at construction.
     /// Empty without an engine).
     pub gemm_backend: Mutex<String>,
+    /// Construction time, anchoring the `uptime_s` gauge.
+    created: Instant,
+    /// Monotone snapshot counter: bumped on every [`Metrics::to_json`]
+    /// call, letting scrapers order and dedupe polled snapshots.
+    snapshot_seq: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests_received: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            engine_steps: AtomicU64::new(0),
+            batch_occupancy_sum: AtomicU64::new(0),
+            batch_bucket_sum: AtomicU64::new(0),
+            ttft: Histogram::default(),
+            itl: Histogram::default(),
+            e2e: Histogram::default(),
+            step: Histogram::default(),
+            admission: Histogram::default(),
+            comm: Mutex::new(CommStats::default()),
+            kv: Mutex::new(KvPoolStats::default()),
+            startup: Mutex::new(StartupStats::default()),
+            gemm_backend: Mutex::new(String::new()),
+            created: Instant::now(),
+            snapshot_seq: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Metrics {
+    /// Seconds elapsed since this metrics registry was created (process
+    /// uptime for the serving loop that owns it).
+    pub fn uptime_s(&self) -> f64 {
+        self.created.elapsed().as_secs_f64()
+    }
+
     /// Relaxed increment of a counter.
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
@@ -279,8 +334,12 @@ impl Metrics {
     }
 
     /// Everything as one JSON object (the `metrics` endpoint payload).
+    /// Each call bumps the monotone `snapshot_seq` counter it reports.
     pub fn to_json(&self) -> Json {
+        let seq = self.snapshot_seq.fetch_add(1, Ordering::Relaxed) + 1;
         Json::obj(vec![
+            ("snapshot_seq", (seq as usize).into()),
+            ("uptime_s", self.uptime_s().into()),
             (
                 "requests_received",
                 (self.requests_received.load(Ordering::Relaxed) as usize).into(),
@@ -311,8 +370,176 @@ impl Metrics {
                 "gemm_backend",
                 self.gemm_backend.lock().unwrap().as_str().into(),
             ),
+            ("model_drift", crate::obs::drift::global().to_json()),
         ])
     }
+}
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in h.bucket_counts().iter().enumerate() {
+        cum += c;
+        // Bucket i spans [2^i, 2^(i+1)) µs; `le` is the upper edge in
+        // seconds, cumulative per the exposition format.
+        let le = (1u64 << (i + 1)) as f64 / 1e6;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le:e}\"}} {cum}");
+    }
+    // Use the bucket total (not the count atomic) for +Inf and _count
+    // so the three families are mutually consistent under concurrent
+    // writers mid-observe.
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum {}", h.sum_us() as f64 / 1e6);
+    let _ = writeln!(out, "{name}_count {cum}");
+}
+
+/// Render the whole registry in the Prometheus text exposition format
+/// (version 0.0.4): `tpaware_`-prefixed counters and gauges, latency
+/// histograms as `_bucket`/`_sum`/`_count` families in seconds, and one
+/// `tpaware_model_drift{phase=...}` gauge per cost-model phase
+/// (measured/predicted duration ratio from the tracing layer).
+pub fn prometheus_text(m: &Metrics) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    prom_counter(
+        &mut out,
+        "tpaware_requests_received",
+        "Requests accepted by the server.",
+        m.requests_received.load(Ordering::Relaxed),
+    );
+    prom_counter(
+        &mut out,
+        "tpaware_requests_completed",
+        "Requests fully generated.",
+        m.requests_completed.load(Ordering::Relaxed),
+    );
+    prom_counter(
+        &mut out,
+        "tpaware_tokens_generated",
+        "Decode tokens produced across all requests.",
+        m.tokens_generated.load(Ordering::Relaxed),
+    );
+    prom_counter(
+        &mut out,
+        "tpaware_engine_steps",
+        "Decode steps executed.",
+        m.engine_steps.load(Ordering::Relaxed),
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_uptime_seconds",
+        "Seconds since the metrics registry was created.",
+        m.uptime_s(),
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_mean_batch_occupancy",
+        "Mean live sequences per decode step.",
+        m.mean_occupancy(),
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_mean_bucket_util",
+        "Mean useful fraction of each executed artifact bucket.",
+        m.mean_bucket_util(),
+    );
+    {
+        let kv = m.kv.lock().unwrap();
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_seqs_in_use",
+            "KV-pool sequence slots currently held.",
+            kv.seqs_in_use as f64,
+        );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_tokens_reserved",
+            "KV-pool token capacity currently reserved.",
+            kv.tokens_reserved as f64,
+        );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_token_occupancy",
+            "Reserved fraction of the KV pool's token capacity.",
+            kv.token_occupancy(),
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_rejections",
+            "Admissions deferred by KV-pool backpressure.",
+            kv.rejections,
+        );
+    }
+    {
+        let comm = m.comm.lock().unwrap();
+        prom_counter(
+            &mut out,
+            "tpaware_comm_raw_bytes",
+            "Logical bytes moved by TP collectives.",
+            comm.total_bytes() as u64,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_comm_wire_bytes",
+            "Encoded bytes moved by TP collectives.",
+            comm.total_wire_bytes() as u64,
+        );
+    }
+    prom_histogram(
+        &mut out,
+        "tpaware_ttft_seconds",
+        "Time to first token.",
+        &m.ttft,
+    );
+    prom_histogram(
+        &mut out,
+        "tpaware_itl_seconds",
+        "Inter-token latency.",
+        &m.itl,
+    );
+    prom_histogram(
+        &mut out,
+        "tpaware_e2e_seconds",
+        "End-to-end request latency.",
+        &m.e2e,
+    );
+    prom_histogram(
+        &mut out,
+        "tpaware_step_seconds",
+        "Per-decode-step engine latency.",
+        &m.step,
+    );
+    prom_histogram(
+        &mut out,
+        "tpaware_admission_seconds",
+        "Queue wait from arrival to batch admission.",
+        &m.admission,
+    );
+    let _ = writeln!(
+        out,
+        "# HELP tpaware_model_drift Measured/predicted duration ratio per cost-model phase."
+    );
+    let _ = writeln!(out, "# TYPE tpaware_model_drift gauge");
+    for (phase, d) in crate::obs::drift::global().snapshot() {
+        let _ = writeln!(out, "tpaware_model_drift{{phase=\"{phase}\"}} {}", d.ratio());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -340,7 +567,101 @@ mod tests {
     }
 
     #[test]
-    fn quantiles_monotone() {
+    fn quantile_clamps_to_recorded_max() {
+        // A lone 1600 µs sample lands in the [1024, 2048) bucket; the
+        // raw upper edge (2048) would exceed every observed latency.
+        let h = Histogram::default();
+        h.observe_us(1600);
+        assert_eq!(h.quantile_us(0.5), 1600);
+        assert_eq!(h.quantile_us(0.99), 1600);
+        assert_eq!(h.quantile_us(1.0), 1600);
+        // With a sample above the edge in a later bucket, lower
+        // quantiles still report the (unclamped) edge.
+        h.observe_us(5000);
+        assert_eq!(h.quantile_us(0.25), 2048);
+        assert_eq!(h.quantile_us(1.0), 5000);
+    }
+
+    #[test]
+    fn histogram_concurrent_writers_stay_consistent() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::default());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        h.observe_us(1 + (t * 500 + i) % 4096);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 4000);
+        assert!(h.max_us() <= 4096);
+        assert!(h.sum_us() >= 4000);
+    }
+
+    #[test]
+    fn metrics_concurrent_counters_sum_exactly() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        Metrics::inc(&m.requests_received);
+                        Metrics::add(&m.tokens_generated, 3);
+                        m.step.observe_us(100);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.requests_received.load(Ordering::Relaxed), 2000);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 6000);
+        assert_eq!(m.step.count(), 2000);
+    }
+
+    #[test]
+    fn snapshot_seq_is_monotone_and_uptime_grows() {
+        let m = Metrics::default();
+        let a = m.to_json();
+        let b = m.to_json();
+        assert_eq!(a.get("snapshot_seq").as_usize(), Some(1));
+        assert_eq!(b.get("snapshot_seq").as_usize(), Some(2));
+        let ua = a.get("uptime_s").as_f64().unwrap();
+        let ub = b.get("uptime_s").as_f64().unwrap();
+        assert!(ua >= 0.0 && ub >= ua);
+    }
+
+    #[test]
+    fn prometheus_text_exposes_families() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_received);
+        Metrics::inc(&m.requests_completed);
+        m.step.observe_us(100);
+        m.step.observe_us(3000);
+        let text = prometheus_text(&m);
+        assert!(text.ends_with('\n'));
+        assert!(text.contains("# TYPE tpaware_requests_completed counter"));
+        assert!(text.contains("tpaware_requests_completed 1"));
+        assert!(text.contains("# TYPE tpaware_step_seconds histogram"));
+        assert!(text.contains("tpaware_step_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("tpaware_step_seconds_count 2"));
+        assert!(text.contains("tpaware_step_seconds_sum 0.0031"));
+        assert!(text.contains("# TYPE tpaware_model_drift gauge"));
+        // Cumulative buckets: the 100 µs sample (bucket [64, 128)) is
+        // counted in every later bucket's value too.
+        let le_inf_once = text.matches("tpaware_step_seconds_bucket{le=\"+Inf\"}").count();
+        assert_eq!(le_inf_once, 1);
+    }
         let h = Histogram::default();
         for i in 1..1000u64 {
             h.observe_us(i);

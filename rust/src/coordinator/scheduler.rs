@@ -100,6 +100,7 @@ impl Scheduler {
             .map(|s| std::mem::take(&mut s.kv))
             .collect();
 
+        let step_span = crate::obs::span("decode_step", "sched").arg("batch", n);
         let t0 = Instant::now();
         let logits = match &self.engine {
             Some(engine) => self.model.decode_step_mlp(
@@ -114,6 +115,31 @@ impl Scheduler {
             None => self.model.decode_step(&tokens, &mut caches),
         };
         let step_us = t0.elapsed().as_micros() as u64;
+        drop(step_span);
+        if crate::obs::enabled() {
+            // Model-drift accounting: what the analytic cost model says
+            // this step's MLP stack should have cost on this host. The
+            // prediction covers only the quantized TP MLPs (the paper's
+            // subject) — attention is deliberately unmodeled, so a
+            // healthy measured/predicted ratio sits *above* 1.
+            let cfg = &self.model.cfg;
+            let backend = self
+                .engine
+                .as_ref()
+                .map(|e| e.gemm_backend())
+                .unwrap_or_default();
+            let predicted = cfg.n_layers as f64
+                * crate::simkernel::pipeline::host_mlp_latency_s(
+                    &crate::simkernel::gemm_model::HOST_CPU,
+                    cfg.mlp_shape(),
+                    n,
+                    self.model.tp.size,
+                    self.model.algo,
+                    cfg.group_size,
+                    backend,
+                );
+            crate::obs::drift::record("step", predicted, step_us as f64 * 1e-6);
+        }
         self.metrics.step.observe_us(step_us);
         Metrics::inc(&self.metrics.engine_steps);
         Metrics::add(&self.metrics.batch_occupancy_sum, n as u64);
@@ -308,6 +334,14 @@ impl ContinuousScheduler {
         if self.mode == SchedMode::Static && !self.active.is_empty() {
             return;
         }
+        // Span only when there is work to admit — the serving loop calls
+        // this every tick, and an unconditional span would flood the
+        // bounded ring with empty idle-admit entries.
+        let _span = if self.queue.is_empty() {
+            crate::obs::SpanGuard::inert()
+        } else {
+            crate::obs::span("admit", "sched").arg("queued", self.queue.len())
+        };
         let n_layers = self.core.model.cfg.n_layers;
         while self.active.len() < self.core.max_batch {
             let Some(front) = self.queue.front() else {
@@ -344,10 +378,12 @@ impl ContinuousScheduler {
         }
         self.core.step_with(&mut self.active, emit);
         let pool = &self.pool;
+        let retire_span = crate::obs::span("retire", "sched").arg("active", self.active.len());
         let done = self.core.retire_with(&mut self.active, &mut |s| {
             let kv = std::mem::take(&mut s.kv);
             pool.release(kv, s.req.kv_tokens());
         });
+        drop(retire_span);
         if !done.is_empty() {
             self.core.metrics.set_kv(self.pool.stats());
         }

@@ -41,6 +41,9 @@
 //!
 //! Control commands are version-independent:
 //!   → `{"cmd":"metrics"}`   ← the metrics JSON
+//!   → `{"cmd":"metrics_prom"}` ← `{"prom":"..."}`: the metrics as
+//! Prometheus text exposition (newlines escaped in the JSON string —
+//! scrape with `client --metrics-prom`, which prints the raw text)
 //!   → `{"cmd":"shutdown"}`  ← `{"ok":true}`, then graceful drain:
 //! in-flight generations finish (bounded by
 //! [`ServeConfig::drain_timeout`]) while new requests and connections
@@ -82,6 +85,10 @@ pub struct ServeConfig {
     /// Upper bound on the graceful-drain phase after shutdown: in-flight
     /// generations get this long to finish before the server exits.
     pub drain_timeout: Duration,
+    /// Span tracer, installed **process-globally** by [`Server::serve`]
+    /// (see [`crate::obs::install`]) so one `--trace-out` file carries
+    /// the whole accept→admit→layer→gemm/collective→done timeline.
+    pub trace: Option<Arc<crate::obs::Tracer>>,
 }
 
 impl ServeConfig {
@@ -96,6 +103,7 @@ impl ServeConfig {
             max_conns: 64,
             idle_timeout: Duration::from_secs(300),
             drain_timeout: Duration::from_secs(10),
+            trace: None,
         }
     }
 
@@ -126,6 +134,13 @@ impl ServeConfig {
     /// Set the graceful-drain bound.
     pub fn drain_timeout(mut self, t: Duration) -> ServeConfig {
         self.drain_timeout = t;
+        self
+    }
+
+    /// Attach a span tracer, installed process-globally at
+    /// [`Server::serve`] (see [`ServeConfig::trace`]).
+    pub fn trace(mut self, tracer: Arc<crate::obs::Tracer>) -> ServeConfig {
+        self.trace = Some(tracer);
         self
     }
 }
@@ -241,6 +256,16 @@ struct IoLoop {
     sched_gone: bool,
 }
 
+/// Record a completed readiness-loop phase as an `io` span. Call sites
+/// gate on the phase having made *progress* — the idle loop spins at
+/// ~2 kHz, and unconditional spans would fill the bounded ring with
+/// empty accept/read/flush entries in seconds.
+fn io_span(name: &'static str, t0: Option<Instant>) {
+    if let (Some(t0), Some(tr)) = (t0, crate::obs::installed()) {
+        tr.record_span(name, "io", t0, Instant::now(), Vec::new());
+    }
+}
+
 impl IoLoop {
     fn run(mut self) {
         let mut drain_deadline: Option<Instant> = None;
@@ -250,10 +275,31 @@ impl IoLoop {
             if draining && drain_deadline.is_none() {
                 drain_deadline = Some(Instant::now() + self.cfg.drain_timeout);
             }
-            progress |= self.accept_ready(draining);
-            progress |= self.read_ready();
-            progress |= self.route_events();
-            progress |= self.flush_ready();
+            let traced = crate::obs::enabled();
+            let t0 = traced.then(Instant::now);
+            let p = self.accept_ready(draining);
+            if p {
+                io_span("accept", t0);
+            }
+            progress |= p;
+            let t0 = traced.then(Instant::now);
+            let p = self.read_ready();
+            if p {
+                io_span("read", t0);
+            }
+            progress |= p;
+            let t0 = traced.then(Instant::now);
+            let p = self.route_events();
+            if p {
+                io_span("route", t0);
+            }
+            progress |= p;
+            let t0 = traced.then(Instant::now);
+            let p = self.flush_ready();
+            if p {
+                io_span("flush", t0);
+            }
+            progress |= p;
             self.reap();
             if self.sched_gone {
                 break;
@@ -372,6 +418,14 @@ impl IoLoop {
                 self.conns[i].push_line(j);
                 return;
             }
+            Some("metrics_prom") => {
+                // The multi-line exposition travels as one JSON string
+                // (newlines escaped by the wire encoding); the client
+                // unescapes by construction when parsing.
+                let text = crate::coordinator::metrics::prometheus_text(&self.metrics);
+                self.conns[i].push_line(Json::obj(vec![("prom", text.as_str().into())]));
+                return;
+            }
             Some("shutdown") => {
                 self.draining.store(true, Ordering::Relaxed);
                 self.conns[i].push_line(Json::obj(vec![("ok", true.into())]));
@@ -463,6 +517,28 @@ impl IoLoop {
                 Ok(SchedEvent::Done(resp)) => {
                     progress = true;
                     if let Some(route) = self.routes.remove(&resp.id) {
+                        // The request's accept→done wall time, recorded
+                        // as one manual span. It straddles this
+                        // thread's io-phase spans (and crossed threads,
+                        // so no single RAII guard could cover it), so
+                        // it goes on the synthetic "requests" track.
+                        if let Some(tr) = crate::obs::installed() {
+                            let end = Instant::now();
+                            let total = Duration::from_secs_f64(resp.total_ms.max(0.0) / 1e3);
+                            let start = end.checked_sub(total).unwrap_or(end);
+                            tr.record_span_at(
+                                crate::obs::tracer::REQUEST_TRACK,
+                                "request",
+                                "request",
+                                start,
+                                end,
+                                vec![
+                                    ("id", route.client_id.to_string()),
+                                    ("tokens", resp.tokens.len().to_string()),
+                                    ("ttft_ms", format!("{:.3}", resp.ttft_ms)),
+                                ],
+                            );
+                        }
                         let j = response_json(&resp, route.client_id, route.v2);
                         if let Some(c) =
                             self.conns.iter_mut().find(|c| c.id == route.conn_id)
@@ -535,6 +611,9 @@ impl Server {
     /// (the CLI's `serve` subcommand and the tests both build a
     /// [`ServeConfig`] and call this).
     pub fn serve(scheduler: Scheduler, cfg: ServeConfig) -> Result<Server> {
+        if let Some(t) = &cfg.trace {
+            crate::obs::install(t);
+        }
         let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let bound = listener.local_addr()?.to_string();
@@ -815,6 +894,19 @@ impl Client {
         Ok(r)
     }
 
+    /// Fetch server metrics as Prometheus text exposition (the raw
+    /// scrape body the `metrics_prom` command returns).
+    pub fn metrics_prom(&mut self) -> Result<String> {
+        let r = self.roundtrip(&Json::obj(vec![("cmd", "metrics_prom".into())]))?;
+        if let Some(e) = reply_error(&r) {
+            return Err(Error::from(ClientError::Server(e)));
+        }
+        r.get("prom")
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::from(ClientError::Protocol("reply missing prom text".into())))
+    }
+
     /// Ask the server to shut down (graceful drain).
     pub fn shutdown(&mut self) -> Result<()> {
         let r = self.roundtrip(&Json::obj(vec![("cmd", "shutdown".into())]))?;
@@ -991,6 +1083,24 @@ mod tests {
         assert_eq!(m.get("requests_completed").as_usize(), Some(1));
         assert_eq!(m.get("tokens_generated").as_usize(), Some(5));
 
+        c.shutdown().unwrap();
+        server.stop();
+    }
+
+    /// The `metrics_prom` request returns Prometheus text exposition
+    /// with histogram families and counters reflecting served traffic.
+    #[test]
+    fn metrics_prom_exposition_scrapes() {
+        let server = serve_default();
+        let addr = server.addr.clone();
+        let mut c = Client::connect(&addr).unwrap();
+        c.generate(&[1, 2], 3).unwrap();
+        let text = c.metrics_prom().unwrap();
+        assert!(text.ends_with('\n'), "exposition must end with a newline");
+        assert!(text.contains("# TYPE tpaware_step_seconds histogram"), "{text}");
+        assert!(text.contains("tpaware_step_seconds_bucket{le=\"+Inf\"}"), "{text}");
+        assert!(text.contains("tpaware_requests_completed 1"), "{text}");
+        assert!(text.contains("tpaware_uptime_seconds"), "{text}");
         c.shutdown().unwrap();
         server.stop();
     }

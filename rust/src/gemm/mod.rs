@@ -86,7 +86,40 @@ impl GemmBackend {
 /// The scalar backend picks its load schedule from the layout (ordered
 /// `g_idx` ⇒ one metadata fetch per group); the tiled backends make the
 /// same choice inside their slab-dequant stage.
+///
+/// When tracing is on ([`crate::obs::enabled`]) every call emits a
+/// `gemm` span carrying backend/shape/layout attrs and feeds the
+/// `gemm` phase of the cost-model drift accumulator; when off, the
+/// instrumentation costs one relaxed atomic load.
 pub fn dequant_matmul(backend: GemmBackend, x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    if !crate::obs::enabled() {
+        return dequant_matmul_inner(backend, x, q);
+    }
+    let (m, k, n) = (x.rows, q.k(), q.n());
+    let _span = crate::obs::span("gemm", "gemm")
+        .arg("backend", backend.label())
+        .arg("m", m)
+        .arg("k", k)
+        .arg("n", n)
+        .arg("ordered", q.gidx.is_ordered());
+    let g = q.gidx.group_size;
+    let predicted = crate::simkernel::gemm_model::fused_gemm_cpu_s(
+        &crate::simkernel::gemm_model::HOST_CPU,
+        m,
+        k,
+        n,
+        g,
+        backend,
+        &TileConfig::for_group_size(g.max(1)),
+    );
+    let t0 = std::time::Instant::now();
+    let out = dequant_matmul_inner(backend, x, q);
+    crate::obs::drift::record("gemm", predicted, t0.elapsed().as_secs_f64());
+    out
+}
+
+/// The untraced dispatch body of [`dequant_matmul`].
+fn dequant_matmul_inner(backend: GemmBackend, x: &Matrix, q: &QuantizedLinear) -> Matrix {
     if q.k() % q.gidx.group_size != 0 {
         // Ragged shard: a row shard narrower than one quantization group
         // (legal — `row_shard_quant` only requires packing-factor

@@ -34,6 +34,8 @@
 //!   the python AOT path and executes them on the request path.
 //! * [`coordinator`] — the L3 serving system: router, dynamic batcher,
 //!   scheduler, TP engine, metrics.
+//! * [`obs`] — span tracing (Chrome trace-event JSON export, Perfetto
+//!   loadable), Prometheus-facing drift accounting of the cost model.
 //! * [`util`] — offline-friendly foundations: argparse, error handling,
 //!   JSON, PRNG, bench timer/statistics, table rendering.
 //!
@@ -67,6 +69,7 @@ pub mod ckpt;
 pub mod coordinator;
 pub mod gemm;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod simkernel;

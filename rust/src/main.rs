@@ -9,6 +9,7 @@
 //!   quantize    quantize a synthetic checkpoint and report error stats
 //!   repack      offline repack: quantize once, write per-rank shard files
 //!   validate    run the cross-layer validation suite (PJRT vs host oracle)
+//!   trace-summary  self-time breakdown of a `--trace-out` Chrome trace file
 
 use std::sync::Arc;
 use tpaware::bail;
@@ -72,6 +73,7 @@ Subcommands:
   quantize   GPTQ a synthetic layer; report error statistics
   repack     offline repack: quantize once, write per-rank shard files
   validate   cross-layer validation: PJRT artifacts vs host oracle
+  trace-summary  per-span self-time breakdown of a --trace-out file
 
 Run `tpaware <subcommand> --help` for flags.
 "
@@ -93,6 +95,7 @@ fn run(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "repack" => cmd_repack(rest),
         "validate" => cmd_validate(rest),
+        "trace-summary" => cmd_trace_summary(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -155,6 +158,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "10000",
             "graceful-drain bound after shutdown: in-flight requests get \
              this long to finish",
+        )
+        .flag(
+            "trace-out",
+            "",
+            "record per-phase spans and write a Chrome trace-event JSON file \
+             here on shutdown (load in Perfetto / chrome://tracing)",
         );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
@@ -241,16 +250,33 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let metrics = Arc::new(Metrics::default());
     metrics.set_startup(weights_source, weights_ms);
     let scheduler = Scheduler::new(model, Some(engine), metrics, a.usize("max-batch")?);
-    let serve_cfg = ServeConfig::new(a.get("addr"))
+    let mut serve_cfg = ServeConfig::new(a.get("addr"))
         .mode(mode)
         .pool(pool_cfg)
         .max_conns(a.usize("max-conns")?)
         .idle_timeout(std::time::Duration::from_millis(a.u64("idle-ms")?))
         .drain_timeout(std::time::Duration::from_millis(a.u64("drain-ms")?));
+    let trace_out = a.get("trace-out").to_string();
+    let tracer = if trace_out.is_empty() {
+        None
+    } else {
+        let t = tpaware::obs::Tracer::new(262_144);
+        serve_cfg = serve_cfg.trace(t.clone());
+        eprintln!("tracing spans to {trace_out} (written on shutdown)");
+        Some(t)
+    };
     let server = Server::serve(scheduler, serve_cfg)?;
     println!("listening on {}", server.addr);
     // Serve until a client sends {"cmd":"shutdown"} (graceful drain).
     server.run_until_shutdown();
+    if let Some(t) = tracer {
+        t.write_chrome(std::path::Path::new(&trace_out))?;
+        eprintln!(
+            "trace written to {trace_out} ({} spans, {} dropped)",
+            t.len(),
+            t.dropped()
+        );
+    }
     Ok(())
 }
 
@@ -261,11 +287,19 @@ fn cmd_client(args: &[String]) -> Result<()> {
         .flag("max-new", "8", "tokens to generate")
         .switch("stream", "print each token as the server streams it")
         .switch("metrics", "fetch metrics instead")
+        .switch(
+            "metrics-prom",
+            "fetch metrics in Prometheus text exposition format instead",
+        )
         .switch("shutdown", "ask the server to shut down");
     let a = spec.parse(args)?;
     let mut c = Client::connect(a.get("addr"))?;
     if a.on("metrics") {
         println!("{}", c.metrics()?.to_pretty());
+        return Ok(());
+    }
+    if a.on("metrics-prom") {
+        print!("{}", c.metrics_prom()?);
         return Ok(());
     }
     if a.on("shutdown") {
@@ -483,10 +517,24 @@ fn cmd_measure(args: &[String]) -> Result<()> {
             "",
             "load layer-0 deployments from a repacked checkpoint directory \
              (needs both algorithms: repack with --algo both) instead of quantizing",
+        )
+        .flag(
+            "trace-out",
+            "",
+            "record per-GEMM / per-collective spans and write a Chrome \
+             trace-event JSON file here when done",
         );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
         .ok_or_else(|| err!("unknown model"))?;
+    let trace_out = a.get("trace-out").to_string();
+    let tracer = if trace_out.is_empty() {
+        None
+    } else {
+        let t = tpaware::obs::Tracer::new(262_144);
+        tpaware::obs::install(&t);
+        Some(t)
+    };
     let codec = parse_codec(a.get("comm-codec"))?;
     let gemm = parse_gemm_backend(a.get("gemm-backend"))?;
     let ckpt_dir = a.get("ckpt").to_string();
@@ -640,6 +688,58 @@ fn cmd_measure(args: &[String]) -> Result<()> {
     }
     println!("{}", t.render());
     println!("{}", ct.render());
+    if let Some(tr) = tracer {
+        tpaware::obs::uninstall();
+        tr.write_chrome(std::path::Path::new(&trace_out))?;
+        eprintln!(
+            "trace written to {trace_out} ({} spans, {} dropped)",
+            tr.len(),
+            tr.dropped()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace_summary(args: &[String]) -> Result<()> {
+    let spec = Command::new(
+        "trace-summary",
+        "per-span self-time breakdown of a Chrome trace-event JSON file",
+    )
+    .flag("file", "trace.json", "trace file written by --trace-out")
+    .flag("top", "0", "show only the top N rows by self time (0 = all)");
+    let a = spec.parse(args)?;
+    let path = a.get("file");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| err!("cannot read trace file {path}: {e}"))?;
+    let doc = tpaware::util::json::parse(&text)
+        .map_err(|e| err!("{path} is not a JSON trace: {e}"))?;
+    let rows = tpaware::obs::tracer::summarize_chrome(&doc);
+    ensure!(!rows.is_empty(), "{path} holds no duration events");
+    let wall_us: u64 = rows.iter().map(|r| r.self_us).sum();
+    let top = a.usize("top")?;
+    let shown = if top == 0 { rows.len() } else { top.min(rows.len()) };
+    let mut t = Table::new(
+        &format!("Span self-time breakdown — {path}"),
+        &["span", "cat", "count", "total (ms)", "self (ms)", "self %"],
+    );
+    for r in &rows[..shown] {
+        t.row(vec![
+            r.name.clone(),
+            r.cat.clone(),
+            r.count.to_string(),
+            format!("{:.3}", r.total_us as f64 / 1e3),
+            format!("{:.3}", r.self_us as f64 / 1e3),
+            format!("{:.1}%", 100.0 * r.self_us as f64 / wall_us.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    let dropped = doc.get("otherData").get("dropped_spans").as_usize().unwrap_or(0);
+    println!(
+        "{} span kinds, {:.3} ms total self time, {} spans dropped at capture",
+        rows.len(),
+        wall_us as f64 / 1e3,
+        dropped
+    );
     Ok(())
 }
 

@@ -297,12 +297,17 @@ impl Transformer {
         let nh = self.cfg.n_heads;
         // Embed.
         let mut x = Matrix::zeros(tokens.len(), d);
-        for (i, &t) in tokens.iter().enumerate() {
-            x.row_mut(i)
-                .copy_from_slice(self.embedding.row(t as usize));
+        {
+            let _span = crate::obs::span("embed", "model").arg("batch", tokens.len());
+            for (i, &t) in tokens.iter().enumerate() {
+                x.row_mut(i)
+                    .copy_from_slice(self.embedding.row(t as usize));
+            }
         }
         for (li, blk) in self.blocks.iter().enumerate() {
+            let _layer_span = crate::obs::span("layer", "model").arg("layer", li);
             // ---- Attention (replicated across TP ranks) ----
+            let attn_span = crate::obs::span("attn", "model").arg("layer", li);
             let mut attn_in = Matrix::zeros(x.rows, d);
             for i in 0..x.rows {
                 attn_in
@@ -342,7 +347,9 @@ impl Transformer {
             for i in 0..x.rows * d {
                 x.data[i] += attn_proj.data[i];
             }
+            drop(attn_span);
             // ---- Quantized TP MLP (the paper's subject) ----
+            let _mlp_span = crate::obs::span("mlp", "model").arg("layer", li);
             let mut mlp_in = Matrix::zeros(x.rows, d);
             for i in 0..x.rows {
                 mlp_in
@@ -358,6 +365,7 @@ impl Transformer {
             c.len += 1;
         }
         // Final norm + tied head.
+        let _logits_span = crate::obs::span("logits", "model").arg("batch", x.rows);
         let mut h = Matrix::zeros(x.rows, d);
         for i in 0..x.rows {
             h.row_mut(i)

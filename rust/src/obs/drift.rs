@@ -1,0 +1,165 @@
+//! Cost-model drift accounting: measured phase time vs
+//! [`crate::simkernel`] prediction, accumulated per phase.
+//!
+//! The paper's tables come out of an analytic cost model; serving runs
+//! on real hardware. This module closes the loop: instrumented call
+//! sites ([`crate::gemm::dequant_matmul`], the collectives, the decode
+//! step) record `(predicted_s, measured_s)` pairs whenever tracing is
+//! on, and the per-phase **measured/predicted ratio** surfaces as a
+//! `model_drift{phase=...}` gauge in the metrics JSON and Prometheus
+//! exposition. A ratio near 1.0 means the model still tracks the
+//! machine; a drifting ratio is the signal to recalibrate
+//! [`crate::simkernel::gemm_model::HOST_CPU`] (or that an optimization
+//! regressed). Recording is gated on [`crate::obs::enabled`], so the
+//! untraced hot path pays one atomic load.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Accumulated predicted/measured time for one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseDrift {
+    /// Summed model-predicted duration, seconds.
+    pub predicted_s: f64,
+    /// Summed measured duration, seconds.
+    pub measured_s: f64,
+    /// Samples accumulated.
+    pub count: u64,
+}
+
+impl PhaseDrift {
+    /// Measured/predicted ratio (1.0 = model exact; 0.0 when no
+    /// prediction has been accumulated).
+    pub fn ratio(&self) -> f64 {
+        if self.predicted_s > 0.0 {
+            self.measured_s / self.predicted_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Thread-safe per-phase drift accumulator. The process-global
+/// instance ([`global`]) is what the metrics endpoints publish;
+/// independent instances are constructible for tests.
+#[derive(Debug, Default)]
+pub struct DriftStats {
+    phases: Mutex<BTreeMap<&'static str, PhaseDrift>>,
+}
+
+impl DriftStats {
+    /// A fresh, empty accumulator.
+    pub const fn new() -> DriftStats {
+        DriftStats {
+            phases: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Fold one `(predicted, measured)` sample into `phase`.
+    pub fn record(&self, phase: &'static str, predicted_s: f64, measured_s: f64) {
+        let mut phases = self.phases.lock().unwrap_or_else(|e| e.into_inner());
+        let p = phases.entry(phase).or_default();
+        p.predicted_s += predicted_s;
+        p.measured_s += measured_s;
+        p.count += 1;
+    }
+
+    /// Current per-phase accumulators, sorted by phase name.
+    pub fn snapshot(&self) -> Vec<(&'static str, PhaseDrift)> {
+        self.phases
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect()
+    }
+
+    /// Drop all accumulated samples.
+    pub fn reset(&self) {
+        self.phases.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// JSON view: `{phase: {predicted_s, measured_s, count, ratio}}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(
+            self.snapshot()
+                .into_iter()
+                .map(|(name, p)| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("predicted_s", p.predicted_s.into()),
+                            ("measured_s", p.measured_s.into()),
+                            ("count", (p.count as usize).into()),
+                            ("ratio", p.ratio().into()),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The process-global drift accumulator (what `Metrics::to_json` and
+/// the Prometheus exposition publish).
+pub fn global() -> &'static DriftStats {
+    static GLOBAL: DriftStats = DriftStats::new();
+    &GLOBAL
+}
+
+/// Fold one sample into the global accumulator — no-op unless a tracer
+/// is installed, so untraced runs accumulate nothing and pay one
+/// atomic load.
+#[inline]
+pub fn record(phase: &'static str, predicted_s: f64, measured_s: f64) {
+    if crate::obs::enabled() {
+        global().record(phase, predicted_s, measured_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn accumulates_and_ratios() {
+        let d = DriftStats::new();
+        d.record("gemm", 1e-3, 2e-3);
+        d.record("gemm", 1e-3, 2e-3);
+        d.record("collective", 5e-4, 5e-4);
+        let snap = d.snapshot();
+        assert_eq!(snap.len(), 2);
+        let gemm = snap.iter().find(|(n, _)| *n == "gemm").unwrap().1;
+        assert_eq!(gemm.count, 2);
+        assert!((gemm.ratio() - 2.0).abs() < 1e-9);
+        let coll = snap.iter().find(|(n, _)| *n == "collective").unwrap().1;
+        assert!((coll.ratio() - 1.0).abs() < 1e-9);
+        d.reset();
+        assert!(d.snapshot().is_empty());
+    }
+
+    #[test]
+    fn empty_phase_ratio_is_zero() {
+        assert_eq!(PhaseDrift::default().ratio(), 0.0);
+    }
+
+    #[test]
+    fn json_shape_is_scrapeable() {
+        let d = DriftStats::new();
+        d.record("step", 2.0, 3.0);
+        let j = json::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(j.get("step").get("count").as_usize(), Some(1));
+        assert!((j.get("step").get("ratio").as_f64().unwrap() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gated_record_is_inert_without_tracer() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::uninstall();
+        global().reset();
+        record("gemm", 1.0, 1.0);
+        assert!(global().snapshot().is_empty());
+    }
+}

@@ -1,0 +1,139 @@
+//! Observability: span tracing, cost-model drift accounting, and the
+//! glue that lets the rest of the stack emit both with one atomic load
+//! of overhead when tracing is off.
+//!
+//! ## Design
+//!
+//! The hot path (GEMM dispatch in [`crate::gemm`], collective ops in
+//! [`crate::tp::collectives`], the decode loop in
+//! [`crate::coordinator::scheduler`]) runs in free functions and
+//! worker threads with no config handle to thread a tracer through, so
+//! the recorder is installed **process-globally**: [`install`] registers
+//! an [`Arc<Tracer>`] as the sink, [`span`] starts a span against it,
+//! and every call site pays exactly one relaxed atomic load when no
+//! tracer is installed (the common case — benches gate on this staying
+//! cheap). `EngineConfig::trace` / `ServeConfig::trace` hold the handle
+//! for the CLI and install it at start, so `--trace-out` captures the
+//! whole accept→admit→layer→gemm/collective→done timeline in one file.
+//!
+//! Spans land in a bounded ring ([`Tracer`]): when full, **new spans are
+//! dropped** (and counted) rather than evicting old ones, preserving
+//! the startup and first-request timeline that is usually the thing
+//! being debugged. Export is Chrome trace-event JSON
+//! ([`Tracer::to_chrome_json`]) — load the file at `ui.perfetto.dev` or
+//! `chrome://tracing`, or summarize it offline with
+//! `tpaware trace-summary`.
+//!
+//! [`drift`] rides on the same enable switch: when a tracer is
+//! installed, measured phase durations are accumulated against
+//! [`crate::simkernel`] cost-model predictions, and the per-phase
+//! measured/predicted ratios surface as `model_drift` gauges in the
+//! metrics JSON and Prometheus exposition.
+
+pub mod drift;
+pub mod tracer;
+
+pub use tracer::{SpanGuard, Tracer};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Fast-path switch: true iff a tracer is currently installed. Checked
+/// before touching the registry mutex so disabled call sites cost one
+/// relaxed load.
+static GLOBAL_ON: AtomicBool = AtomicBool::new(false);
+
+/// The installed tracer, if any.
+static GLOBAL: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+/// Serializes tests (and anything else) that install the process-global
+/// tracer: hold the returned guard across `install`…`uninstall` so
+/// concurrently running tests don't swap each other's sink out.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Install `tracer` as the process-global span sink. Replaces any
+/// previous tracer. Also resets the drift accumulators, so a fresh
+/// trace session starts its model-residual accounting from zero.
+pub fn install(tracer: &Arc<Tracer>) {
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(Arc::clone(tracer));
+    drift::global().reset();
+    GLOBAL_ON.store(true, Ordering::Relaxed);
+}
+
+/// Remove the process-global tracer; subsequent [`span`] calls are
+/// inert again.
+pub fn uninstall() {
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    GLOBAL_ON.store(false, Ordering::Relaxed);
+    *g = None;
+}
+
+/// Whether a process-global tracer is installed (the one-load fast
+/// path every instrumented call site checks first).
+#[inline]
+pub fn enabled() -> bool {
+    GLOBAL_ON.load(Ordering::Relaxed)
+}
+
+/// The installed tracer, if any (a clone of the registered handle).
+pub fn installed() -> Option<Arc<Tracer>> {
+    if !enabled() {
+        return None;
+    }
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Start a span named `name` in category `cat` against the installed
+/// tracer. Returns an inert guard (no allocation, no lock) when no
+/// tracer is installed — the instrumentation idiom is
+/// `let _g = obs::span("decode_step", "sched").arg("batch", n);`.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    match installed() {
+        Some(t) => t.span(name, cat),
+        None => SpanGuard::inert(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_install_routes_spans_and_uninstall_stops_them() {
+        let _guard = test_guard();
+        assert!(!enabled());
+        assert!(!span("noop", "test").is_active());
+
+        let t = Tracer::new(64);
+        install(&t);
+        assert!(enabled());
+        {
+            let _s = span("work", "test").arg("k", 1usize);
+        }
+        assert_eq!(t.len(), 1);
+
+        uninstall();
+        assert!(!enabled());
+        {
+            let _s = span("after", "test");
+        }
+        assert_eq!(t.len(), 1, "uninstalled tracer must see no new spans");
+    }
+
+    #[test]
+    fn install_resets_drift_accumulators() {
+        let _guard = test_guard();
+        let t = Tracer::new(8);
+        install(&t);
+        drift::record("gemm", 1e-3, 2e-3);
+        assert!(!drift::global().snapshot().is_empty());
+        install(&t);
+        assert!(drift::global().snapshot().is_empty());
+        uninstall();
+    }
+}

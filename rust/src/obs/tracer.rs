@@ -1,0 +1,623 @@
+//! Thread-safe span recorder with bounded ring storage and Chrome
+//! trace-event JSON export.
+//!
+//! One [`Tracer`] serves every thread in the process: spans are closed
+//! RAII-style by [`SpanGuard`] (or recorded manually with
+//! [`Tracer::record_span`] for intervals measured across threads, like
+//! a request's accept→done wall time on the I/O thread) and pushed into
+//! a mutex-guarded buffer bounded by the capacity passed to
+//! [`Tracer::new`]. On overflow **new spans are dropped and counted**
+//! ([`Tracer::dropped`]) instead of evicting old ones — the startup and
+//! first-request timeline survives, and the drop counter in the
+//! exported file says how much of the tail is missing.
+//!
+//! Timestamps are microseconds since the tracer's construction instant,
+//! and a span's duration is computed in that integer domain
+//! (`end_us - start_us`), so a child interval is always contained in
+//! its parent's after rounding — `tools/trace_check.py` relies on this
+//! to verify nesting exactly.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Process-wide numeric thread ids for trace events: `std::thread::ThreadId`
+/// has no stable integer form, so each thread draws one on first use.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's trace id (stable for the thread's lifetime).
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Track placement for manually recorded spans
+/// ([`Tracer::record_span_at`]).
+#[derive(Clone, Copy, Debug)]
+pub enum Track<'a> {
+    /// The calling thread's timeline (what [`Tracer::record_span`]
+    /// uses).
+    Caller,
+    /// A named synthetic track with a fixed id — for logical intervals
+    /// that overlap thread-local phase spans and would corrupt
+    /// per-thread nesting if recorded inline.
+    Named(u64, &'a str),
+}
+
+/// The synthetic track whole-request spans land on: per-thread tids
+/// start at 1, so id 0 never collides with a real thread.
+pub const REQUEST_TRACK: Track<'static> = Track::Named(0, "requests");
+
+/// One recorded span: a named interval on one thread, with optional
+/// key/value attributes (backend, shape, layer index, …).
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Span name (`"decode_step"`, `"gemm"`, …).
+    pub name: &'static str,
+    /// Category, used for filtering in Perfetto (`"sched"`, `"gemm"`,
+    /// `"collective"`, `"io"`, `"request"`, …).
+    pub cat: &'static str,
+    /// Recording thread's trace id.
+    pub tid: u64,
+    /// Start, µs since the tracer's epoch.
+    pub ts_us: u64,
+    /// Duration, µs (computed as `end_us - start_us` in the integer
+    /// domain, so nesting survives rounding).
+    pub dur_us: u64,
+    /// Attributes, rendered into the event's `args` object.
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// Span storage + thread-name registry, behind one lock (names are
+/// registered on a thread's first recorded span, so sharing the lock
+/// costs nothing extra).
+struct TraceBuf {
+    spans: Vec<Span>,
+    threads: BTreeMap<u64, String>,
+}
+
+/// Thread-safe span recorder. Construct with [`Tracer::new`], hand the
+/// `Arc` to [`crate::obs::install`] (or keep it private and call
+/// [`Tracer::span`] directly), export with [`Tracer::to_chrome_json`] /
+/// [`Tracer::write_chrome`].
+pub struct Tracer {
+    capacity: usize,
+    enabled: AtomicBool,
+    dropped: AtomicU64,
+    epoch: Instant,
+    buf: Mutex<TraceBuf>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A new, enabled tracer holding at most `capacity` spans.
+    pub fn new(capacity: usize) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            capacity,
+            enabled: AtomicBool::new(true),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+            buf: Mutex::new(TraceBuf {
+                spans: Vec::new(),
+                threads: BTreeMap::new(),
+            }),
+        })
+    }
+
+    /// Whether this tracer is currently recording.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Pause (`false`) or resume (`true`) recording without dropping
+    /// what's already buffered.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).spans.len()
+    }
+
+    /// True when no spans have been recorded (or all were cleared).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Discard all buffered spans and reset the drop counter (the
+    /// thread-name registry is kept — the threads still exist).
+    pub fn clear(&self) {
+        let mut buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        buf.spans.clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Start a span on the calling thread, closed when the returned
+    /// guard drops. Inert (no lock, no allocation at close) when the
+    /// tracer is disabled.
+    pub fn span(self: &Arc<Self>, name: &'static str, cat: &'static str) -> SpanGuard {
+        if !self.is_enabled() {
+            return SpanGuard::inert();
+        }
+        SpanGuard {
+            inner: Some(GuardInner {
+                tracer: Arc::clone(self),
+                name,
+                cat,
+                start: Instant::now(),
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a span from explicit start/end instants — for intervals
+    /// measured across threads (e.g. a request's accept→done time,
+    /// closed on the I/O thread from the response's wall-time fields).
+    /// The span lands on the *calling* thread's timeline.
+    pub fn record_span(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        start: Instant,
+        end: Instant,
+        args: Vec<(&'static str, String)>,
+    ) {
+        self.record_span_at(Track::Caller, name, cat, start, end, args);
+    }
+
+    /// As [`Tracer::record_span`], but with explicit track placement —
+    /// logical intervals like whole-request spans straddle the I/O
+    /// loop's phase spans, so they go on a named synthetic track
+    /// ([`REQUEST_TRACK`]) where they cannot corrupt per-thread
+    /// nesting.
+    pub fn record_span_at(
+        &self,
+        track: Track<'_>,
+        name: &'static str,
+        cat: &'static str,
+        start: Instant,
+        end: Instant,
+        args: Vec<(&'static str, String)>,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ts_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let end_us = end.saturating_duration_since(self.epoch).as_micros() as u64;
+        let mut buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        if buf.spans.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let (tid, label) = match track {
+            Track::Caller => (current_tid(), None),
+            Track::Named(tid, label) => (tid, Some(label)),
+        };
+        if !buf.threads.contains_key(&tid) {
+            let tname = match label {
+                Some(label) => label.to_string(),
+                None => std::thread::current()
+                    .name()
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("thread-{tid}")),
+            };
+            buf.threads.insert(tid, tname);
+        }
+        buf.spans.push(Span {
+            name,
+            cat,
+            tid,
+            ts_us,
+            dur_us: end_us.saturating_sub(ts_us),
+            args,
+        });
+    }
+
+    /// The buffered spans as a Chrome trace-event JSON document
+    /// (`{"traceEvents": [...]}` with `ph:"X"` duration events plus
+    /// `ph:"M"` thread-name metadata) — loadable in Perfetto or
+    /// `chrome://tracing`. The drop counter rides along in `otherData`.
+    pub fn to_chrome_json(&self) -> Json {
+        let buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        let mut events: Vec<Json> = Vec::with_capacity(buf.spans.len() + buf.threads.len());
+        for (tid, name) in &buf.threads {
+            events.push(Json::obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", 1usize.into()),
+                ("tid", (*tid as usize).into()),
+                ("args", Json::obj(vec![("name", name.as_str().into())])),
+            ]));
+        }
+        for s in &buf.spans {
+            let args = Json::obj(
+                s.args
+                    .iter()
+                    .map(|(k, v)| (*k, Json::from(v.as_str())))
+                    .collect(),
+            );
+            events.push(Json::obj(vec![
+                ("name", s.name.into()),
+                ("cat", s.cat.into()),
+                ("ph", "X".into()),
+                ("ts", (s.ts_us as usize).into()),
+                ("dur", (s.dur_us as usize).into()),
+                ("pid", 1usize.into()),
+                ("tid", (s.tid as usize).into()),
+                ("args", args),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", "ms".into()),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("dropped_spans", (self.dropped() as usize).into()),
+                    ("capacity", self.capacity.into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the Chrome trace JSON to `path` (pretty-printed; Perfetto
+    /// accepts either form).
+    pub fn write_chrome(&self, path: &std::path::Path) -> crate::Result<()> {
+        use crate::util::error::Context as _;
+        std::fs::write(path, self.to_chrome_json().to_pretty())
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Live half of an open [`SpanGuard`].
+struct GuardInner {
+    tracer: Arc<Tracer>,
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    args: Vec<(&'static str, String)>,
+}
+
+/// RAII span handle: records the enclosed interval on drop. An *inert*
+/// guard (from a disabled/absent tracer) does nothing and allocates
+/// nothing — [`SpanGuard::arg`] on it is a no-op, so call sites never
+/// branch on tracing state.
+pub struct SpanGuard {
+    inner: Option<GuardInner>,
+}
+
+impl SpanGuard {
+    /// A guard that records nothing (what disabled call sites get).
+    pub fn inert() -> SpanGuard {
+        SpanGuard { inner: None }
+    }
+
+    /// Whether this guard will record a span on drop.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Attach an attribute (rendered into the trace event's `args`).
+    /// The value is only formatted when the guard is active.
+    pub fn arg<T: std::fmt::Display>(mut self, key: &'static str, value: T) -> SpanGuard {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, value.to_string()));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            let end = Instant::now();
+            let args = inner.args;
+            inner
+                .tracer
+                .record_span(inner.name, inner.cat, inner.start, end, args);
+        }
+    }
+}
+
+/// One row of a trace self-time breakdown (see [`summarize_chrome`]).
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    /// Span name.
+    pub name: String,
+    /// Span category.
+    pub cat: String,
+    /// Occurrences.
+    pub count: u64,
+    /// Total (inclusive) time across occurrences, µs.
+    pub total_us: u64,
+    /// Self time: total minus time spent in same-thread child spans, µs.
+    pub self_us: u64,
+}
+
+/// Compute a per-(name, category) self-time breakdown from a parsed
+/// Chrome trace document (the format [`Tracer::to_chrome_json`] emits).
+/// Self time attributes each µs to the innermost enclosing span on its
+/// thread, so the rows answer "where did the time actually go" without
+/// double counting. Rows come back sorted by self time, descending.
+pub fn summarize_chrome(trace: &Json) -> Vec<SummaryRow> {
+    // Collect duration events per tid.
+    let mut per_tid: BTreeMap<u64, Vec<(u64, u64, String, String)>> = BTreeMap::new();
+    if let Some(events) = trace.get("traceEvents").as_arr() {
+        for e in events {
+            if e.get("ph").as_str() != Some("X") {
+                continue;
+            }
+            let tid = e.get("tid").as_usize().unwrap_or(0) as u64;
+            let ts = e.get("ts").as_usize().unwrap_or(0) as u64;
+            let dur = e.get("dur").as_usize().unwrap_or(0) as u64;
+            let name = e.get("name").as_str().unwrap_or("?").to_string();
+            let cat = e.get("cat").as_str().unwrap_or("").to_string();
+            per_tid.entry(tid).or_default().push((ts, dur, name, cat));
+        }
+    }
+    let mut rows: BTreeMap<(String, String), SummaryRow> = BTreeMap::new();
+    // Subtract a closed span's direct-child time from its row's self
+    // time (the full inclusive duration was credited at open).
+    fn close_span(
+        rows: &mut BTreeMap<(String, String), SummaryRow>,
+        child_us: u64,
+        name: String,
+        cat: String,
+    ) {
+        if let Some(row) = rows.get_mut(&(name, cat)) {
+            row.self_us = row.self_us.saturating_sub(child_us);
+        }
+    }
+    for (_tid, mut spans) in per_tid {
+        // Parents sort before their children: earlier start first, and
+        // at equal starts the longer (enclosing) span first.
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        // Stack of open spans: (end_us, direct-child µs so far, name, cat).
+        let mut stack: Vec<(u64, u64, String, String)> = Vec::new();
+        for (ts, dur, name, cat) in spans {
+            // Pop every open span that ended at or before this start.
+            while stack.last().is_some_and(|top| top.0 <= ts) {
+                let (_, child, n, c) = stack.pop().unwrap();
+                close_span(&mut rows, child, n, c);
+            }
+            let row = rows
+                .entry((name.clone(), cat.clone()))
+                .or_insert_with(|| SummaryRow {
+                    name: name.clone(),
+                    cat: cat.clone(),
+                    count: 0,
+                    total_us: 0,
+                    self_us: 0,
+                });
+            row.count += 1;
+            row.total_us += dur;
+            row.self_us += dur; // direct children subtracted at close
+            if let Some(parent) = stack.last_mut() {
+                parent.1 += dur;
+            }
+            stack.push((ts + dur, 0, name, cat));
+        }
+        while let Some((_, child, n, c)) = stack.pop() {
+            close_span(&mut rows, child, n, c);
+        }
+    }
+    let mut out: Vec<SummaryRow> = rows.into_values().collect();
+    out.sort_by(|a, b| b.self_us.cmp(&a.self_us));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::time::Duration;
+
+    #[test]
+    fn spans_record_with_args_and_export_valid_chrome_json() {
+        let t = Tracer::new(128);
+        {
+            let _outer = t.span("decode_step", "sched").arg("batch", 3usize);
+            std::thread::sleep(Duration::from_millis(2));
+            {
+                let _inner = t.span("gemm", "gemm").arg("backend", "tiled");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        assert_eq!(t.len(), 2);
+        let doc = t.to_chrome_json();
+        // Round-trip through the wire encoding: must stay parseable.
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 1 thread_name metadata event + 2 duration events.
+        assert_eq!(events.len(), 3);
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let gemm = xs.iter().find(|e| e.get("name").as_str() == Some("gemm")).unwrap();
+        assert_eq!(gemm.get("args").get("backend").as_str(), Some("tiled"));
+        let step = xs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("decode_step"))
+            .unwrap();
+        // Integer-domain nesting: child interval inside parent interval.
+        let (pts, pdur) = (
+            step.get("ts").as_usize().unwrap(),
+            step.get("dur").as_usize().unwrap(),
+        );
+        let (cts, cdur) = (
+            gemm.get("ts").as_usize().unwrap(),
+            gemm.get("dur").as_usize().unwrap(),
+        );
+        assert!(pts <= cts && cts + cdur <= pts + pdur);
+    }
+
+    #[test]
+    fn ring_overflow_drops_new_spans_and_counts_them() {
+        let t = Tracer::new(4);
+        for _ in 0..10 {
+            let _s = t.span("tick", "test");
+        }
+        assert_eq!(t.len(), 4, "ring keeps the earliest spans");
+        assert_eq!(t.dropped(), 6);
+        // Export stays valid JSON and reports the drops.
+        let doc = json::parse(&t.to_chrome_json().to_string()).unwrap();
+        assert_eq!(
+            doc.get("otherData").get("dropped_spans").as_usize(),
+            Some(6)
+        );
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(16);
+        t.set_enabled(false);
+        {
+            let g = t.span("off", "test");
+            assert!(!g.is_active());
+        }
+        t.record_span("manual", "test", Instant::now(), Instant::now(), vec![]);
+        assert!(t.is_empty());
+        t.set_enabled(true);
+        let _s = t.span("on", "test");
+        drop(_s);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_span_recording_is_consistent() {
+        let t = Tracer::new(100_000);
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        let _s = t.span("work", "test");
+                    }
+                })
+            })
+            .collect();
+        for h in threads {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 8 * 500);
+        assert_eq!(t.dropped(), 0);
+        // Every recording thread got a thread-name entry.
+        let doc = t.to_chrome_json();
+        let metas = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .count();
+        assert!(metas >= 8);
+    }
+
+    #[test]
+    fn record_span_places_manual_interval() {
+        let t = Tracer::new(8);
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(3));
+        t.record_span(
+            "request",
+            "request",
+            start,
+            Instant::now(),
+            vec![("id", "7".to_string())],
+        );
+        assert_eq!(t.len(), 1);
+        let doc = t.to_chrome_json();
+        let ev = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("request"))
+            .cloned()
+            .unwrap();
+        assert!(ev.get("dur").as_usize().unwrap() >= 2_000);
+        assert_eq!(ev.get("args").get("id").as_str(), Some("7"));
+    }
+
+    #[test]
+    fn named_track_places_span_off_thread_timelines() {
+        let t = Tracer::new(8);
+        let start = Instant::now();
+        t.record_span_at(REQUEST_TRACK, "request", "request", start, Instant::now(), vec![]);
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("request"))
+            .unwrap();
+        assert_eq!(ev.get("tid").as_usize(), Some(0));
+        let meta = events
+            .iter()
+            .find(|e| e.get("ph").as_str() == Some("M"))
+            .unwrap();
+        assert_eq!(meta.get("tid").as_usize(), Some(0));
+        assert_eq!(meta.get("args").get("name").as_str(), Some("requests"));
+    }
+
+    #[test]
+    fn summarize_attributes_self_time_to_innermost_span() {
+        // Hand-built trace: step [0, 100) containing gemm [10, 40) and
+        // gemm [50, 90), one of which contains pack [55, 65).
+        let mk = |name: &str, ts: usize, dur: usize| {
+            Json::obj(vec![
+                ("name", name.into()),
+                ("cat", "t".into()),
+                ("ph", "X".into()),
+                ("ts", ts.into()),
+                ("dur", dur.into()),
+                ("pid", 1usize.into()),
+                ("tid", 1usize.into()),
+            ])
+        };
+        let trace = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![
+                mk("step", 0, 100),
+                mk("gemm", 10, 30),
+                mk("gemm", 50, 40),
+                mk("pack", 55, 10),
+            ]),
+        )]);
+        let rows = summarize_chrome(&trace);
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(get("step").count, 1);
+        assert_eq!(get("step").total_us, 100);
+        assert_eq!(get("step").self_us, 100 - 30 - 40);
+        assert_eq!(get("gemm").count, 2);
+        assert_eq!(get("gemm").total_us, 70);
+        assert_eq!(get("gemm").self_us, 70 - 10);
+        assert_eq!(get("pack").self_us, 10);
+        // Sorted by self time descending.
+        assert!(rows[0].self_us >= rows[rows.len() - 1].self_us);
+    }
+}

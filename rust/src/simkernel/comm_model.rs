@@ -12,6 +12,7 @@
 //! memory-bound streaming passes over raw + wire bytes (zero for the
 //! identity codec, which launches no extra kernels).
 
+use crate::simkernel::gemm_model::CpuSpec;
 use crate::simkernel::gpu::GpuSpec;
 use crate::tp::codec::CodecSpec;
 
@@ -75,6 +76,60 @@ pub fn allreduce_codec_s(
     gpu.fabric.allreduce_s(codec.wire_bytes(payload_elems), ranks)
         + coll_overhead_s(gpu, ranks)
         + codec_overhead_s(gpu, payload_elems, codec)
+}
+
+/// Fixed host-side cost of one collective on the thread-rank runtime
+/// ([`crate::tp::collectives`]): two barrier crossings (deposit→read,
+/// read→exit) plus scheduler wakeup jitter. Calibrated loosely against
+/// a contended condvar round trip on a shared CI core — like the
+/// [`CpuSpec`] numbers, this anchors the `model_drift` gauges rather
+/// than promising exact wall time.
+pub const HOST_COLL_OVERHEAD_S: f64 = 4e-6;
+
+/// Host (thread-rank, shared-memory) AllGather of a per-rank shard of
+/// `shard_bytes` across `ranks`: each rank writes its shard into the
+/// shared slot once and reads all `ranks` shards back out, so
+/// `(ranks + 1) · shard_bytes` move through the cache hierarchy.
+pub fn host_allgather_s(cpu: &CpuSpec, shard_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    ((ranks + 1) * shard_bytes) as f64 / cpu.cache_bw + HOST_COLL_OVERHEAD_S
+}
+
+/// Host AllReduce of a per-rank payload of `payload_bytes` across
+/// `ranks`: write once, read `ranks` payloads, and chain
+/// `(ranks − 1) · payload_bytes / 4` scalar adds through the
+/// accumulator — whichever of the copy stream and the add chain is
+/// slower bounds the op.
+pub fn host_allreduce_s(cpu: &CpuSpec, payload_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let moved = ((ranks + 1) * payload_bytes) as f64;
+    let adds = (ranks.saturating_sub(1) * (payload_bytes / 4)) as f64;
+    (moved / cpu.cache_bw).max(adds / cpu.scalar_flops) + HOST_COLL_OVERHEAD_S
+}
+
+/// Host ReduceScatter of a per-rank input of `payload_bytes`: same
+/// reduce arithmetic as [`host_allreduce_s`] but each rank only reads
+/// back its own `payload_bytes / ranks` slice of every input.
+pub fn host_reduce_scatter_s(cpu: &CpuSpec, payload_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let moved = (payload_bytes + payload_bytes) as f64; // write own + read p slices
+    let adds = (ranks.saturating_sub(1) * (payload_bytes / ranks / 4)) as f64;
+    (moved / cpu.cache_bw).max(adds / cpu.scalar_flops) + HOST_COLL_OVERHEAD_S
+}
+
+/// Host broadcast of `payload_bytes` from the root: the root writes
+/// once and `ranks − 1` peers read it back.
+pub fn host_broadcast_s(cpu: &CpuSpec, payload_bytes: usize, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    (ranks * payload_bytes) as f64 / cpu.cache_bw + HOST_COLL_OVERHEAD_S
 }
 
 /// Straggler / rank-convergence penalty of a *blocking* global sync point
@@ -159,6 +214,20 @@ mod tests {
         let fp32 = allreduce_codec_s(&A100, 8, 4, CodecSpec::Fp32);
         let int8 = allreduce_codec_s(&A100, 8, 4, CodecSpec::Int8 { group: 64 });
         assert!(int8 > fp32, "int8 {int8} vs fp32 {fp32}");
+    }
+
+    #[test]
+    fn host_collectives_free_at_one_rank_and_grow_with_width() {
+        use crate::simkernel::gemm_model::HOST_CPU;
+        assert_eq!(host_allgather_s(&HOST_CPU, 1 << 16, 1), 0.0);
+        assert_eq!(host_allreduce_s(&HOST_CPU, 1 << 16, 1), 0.0);
+        assert_eq!(host_reduce_scatter_s(&HOST_CPU, 1 << 16, 1), 0.0);
+        assert_eq!(host_broadcast_s(&HOST_CPU, 1 << 16, 1), 0.0);
+        let ag2 = host_allgather_s(&HOST_CPU, 1 << 16, 2);
+        let ag4 = host_allgather_s(&HOST_CPU, 1 << 16, 4);
+        assert!(ag2 > 0.0 && ag4 > ag2);
+        // Even a tiny collective pays the barrier overhead floor.
+        assert!(host_allreduce_s(&HOST_CPU, 4, 2) >= HOST_COLL_OVERHEAD_S);
     }
 
     #[test]

@@ -234,6 +234,45 @@ pub fn mlp_latency_codec(
     b
 }
 
+/// Modeled wall time of one *host* (thread-rank) MLP forward — the
+/// measured path's per-layer unit, priced from the same
+/// [`crate::simkernel::gemm_model::CpuSpec`] calibration the fused-GEMM
+/// model uses. Per rank: fused dequant-GEMM1, the naive algorithm's
+/// AllGather + `Y1[:, P2]` gather + chunk copy, fused dequant-GEMM2,
+/// and the epilogue AllReduce, with collectives priced by the
+/// shared-memory model in [`comm_model`]. This is what the `layer` and
+/// `step` `model_drift` gauges compare measured spans against (the step
+/// gauge adds nothing for attention, which the cost model deliberately
+/// does not cover — a healthy step ratio therefore sits *above* 1).
+pub fn host_mlp_latency_s(
+    cpu: &crate::simkernel::gemm_model::CpuSpec,
+    shape: MlpShape,
+    m: usize,
+    tp: usize,
+    algo: Algo,
+    group_size: usize,
+    backend: crate::gemm::GemmBackend,
+) -> f64 {
+    assert!(tp >= 1);
+    assert_eq!(shape.n1 % tp, 0, "N1 must divide across ranks");
+    let n1_local = shape.n1 / tp;
+    let tile = crate::gemm::TileConfig::for_group_size(group_size.max(1));
+    let mut s = gemm_model::fused_gemm_cpu_s(cpu, m, shape.k1, n1_local, group_size, backend, &tile)
+        + gemm_model::fused_gemm_cpu_s(cpu, m, n1_local, shape.n2, group_size, backend, &tile);
+    // Row-TP epilogue: AllReduce of the M×N2 f32 partials.
+    s += comm_model::host_allreduce_s(cpu, m * shape.n2 * 4, tp);
+    if algo == Algo::Naive {
+        // AllGather of the M×N1/p f32 shard, the global Y1[:, P2]
+        // gather (read + write M×N1 f32), and the local chunk copy.
+        s += comm_model::host_allgather_s(cpu, m * n1_local * 4, tp);
+        s += (2 * m * shape.n1 * 4) as f64 / cpu.cache_bw;
+        if tp > 1 {
+            s += (2 * m * n1_local * 4) as f64 / cpu.cache_bw;
+        }
+    }
+    s
+}
+
 /// Convenience: modeled speedup of TP-Aware over Naive for one cell.
 pub fn speedup(gpu: &GpuSpec, shape: MlpShape, m: usize, tp: usize, dtype: WeightDtype) -> f64 {
     let naive = mlp_latency(gpu, shape, m, tp, Algo::Naive, dtype, false).total_s();
@@ -677,6 +716,28 @@ mod tests {
         }
         assert_eq!(SchedMode::by_name("cont"), Some(SchedMode::Continuous));
         assert!(SchedMode::by_name("eager").is_none());
+    }
+
+    #[test]
+    fn host_mlp_prediction_positive_and_algo_ordered() {
+        use crate::gemm::GemmBackend;
+        use crate::simkernel::gemm_model::HOST_CPU;
+        let shape = MlpShape {
+            k1: 256,
+            n1: 1024,
+            n2: 256,
+        };
+        for backend in [GemmBackend::Naive, GemmBackend::Tiled, GemmBackend::TiledMt] {
+            let naive = host_mlp_latency_s(&HOST_CPU, shape, 4, 2, Algo::Naive, 32, backend);
+            let aware = host_mlp_latency_s(&HOST_CPU, shape, 4, 2, Algo::TpAware, 32, backend);
+            assert!(aware > 0.0, "{backend:?}");
+            // The naive path pays the AllGather + reorder + chunk on top
+            // of identical compute, so it must price strictly higher.
+            assert!(naive > aware, "{backend:?}: {naive} vs {aware}");
+        }
+        // TP=1 pays no collectives but still prices the GEMMs.
+        let tp1 = host_mlp_latency_s(&HOST_CPU, shape, 1, 1, Algo::TpAware, 32, GemmBackend::Tiled);
+        assert!(tp1 > 0.0);
     }
 
     #[test]

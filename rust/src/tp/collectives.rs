@@ -209,6 +209,7 @@ impl RankComm {
 
     /// Synchronize all ranks.
     pub fn barrier(&self) {
+        let _span = crate::obs::span("barrier", "collective").arg("ranks", self.size());
         if self.rank == 0 {
             self.shared.stats.lock().unwrap().barrier_calls += 1;
         }
@@ -225,6 +226,10 @@ impl RankComm {
         if p == 1 {
             return local.to_vec();
         }
+        let _span = crate::obs::span("all_gather", "collective")
+            .arg("elems", local.len())
+            .arg("ranks", p);
+        let t0 = _span.is_active().then(std::time::Instant::now);
         let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait(); // all deposits visible
         let mut out = Vec::with_capacity(local.len() * p);
@@ -239,6 +244,17 @@ impl RankComm {
             s.allgather_wire_bytes += wire * (p - 1) * p;
         }
         self.shared.barrier.wait(); // safe to overwrite slots next op
+        if let (Some(t0), 0) = (t0, self.rank) {
+            crate::obs::drift::record(
+                "collective",
+                crate::simkernel::comm_model::host_allgather_s(
+                    &crate::simkernel::gemm_model::HOST_CPU,
+                    local.len() * 4,
+                    p,
+                ),
+                t0.elapsed().as_secs_f64(),
+            );
+        }
         out
     }
 
@@ -251,6 +267,10 @@ impl RankComm {
         if p == 1 {
             return local.to_vec();
         }
+        let _span = crate::obs::span("all_reduce_sum", "collective")
+            .arg("elems", local.len())
+            .arg("ranks", p);
+        let t0 = _span.is_active().then(std::time::Instant::now);
         let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait();
         let mut out = vec![0.0f32; local.len()];
@@ -270,6 +290,17 @@ impl RankComm {
             s.allreduce_wire_bytes += (wire * 2 * (p - 1) / p) * p;
         }
         self.shared.barrier.wait();
+        if let (Some(t0), 0) = (t0, self.rank) {
+            crate::obs::drift::record(
+                "collective",
+                crate::simkernel::comm_model::host_allreduce_s(
+                    &crate::simkernel::gemm_model::HOST_CPU,
+                    local.len() * 4,
+                    p,
+                ),
+                t0.elapsed().as_secs_f64(),
+            );
+        }
         out
     }
 
@@ -282,6 +313,10 @@ impl RankComm {
             return local.to_vec();
         }
         assert_eq!(local.len() % p, 0, "reduce_scatter payload must divide");
+        let _span = crate::obs::span("reduce_scatter_sum", "collective")
+            .arg("elems", local.len())
+            .arg("ranks", p);
+        let t0 = _span.is_active().then(std::time::Instant::now);
         let chunk = local.len() / p;
         let wire = self.shared.deposit(self.rank, local);
         self.shared.barrier.wait();
@@ -301,6 +336,17 @@ impl RankComm {
             s.reduce_scatter_wire_bytes += (wire * (p - 1) / p) * p;
         }
         self.shared.barrier.wait();
+        if let (Some(t0), 0) = (t0, self.rank) {
+            crate::obs::drift::record(
+                "collective",
+                crate::simkernel::comm_model::host_reduce_scatter_s(
+                    &crate::simkernel::gemm_model::HOST_CPU,
+                    local.len() * 4,
+                    p,
+                ),
+                t0.elapsed().as_secs_f64(),
+            );
+        }
         out
     }
 
@@ -312,6 +358,10 @@ impl RankComm {
         if p == 1 {
             return buf.to_vec();
         }
+        let _span = crate::obs::span("broadcast", "collective")
+            .arg("elems", buf.len())
+            .arg("ranks", p);
+        let t0 = _span.is_active().then(std::time::Instant::now);
         let mut wire = 0;
         if self.rank == root {
             wire = self.shared.deposit(root, buf);
@@ -328,6 +378,17 @@ impl RankComm {
             s.broadcast_wire_bytes += wire * (p - 1);
         }
         self.shared.barrier.wait();
+        if let (Some(t0), 0) = (t0, self.rank) {
+            crate::obs::drift::record(
+                "collective",
+                crate::simkernel::comm_model::host_broadcast_s(
+                    &crate::simkernel::gemm_model::HOST_CPU,
+                    out.len() * 4,
+                    p,
+                ),
+                t0.elapsed().as_secs_f64(),
+            );
+        }
         out
     }
 }

@@ -1,0 +1,153 @@
+//! Observability integration: one streamed request against a live TP=2
+//! server with a tracer installed must produce a Chrome trace-event
+//! JSON whose spans cover the whole request lifecycle —
+//! accept → admit → decode_step → layer → gemm / collective → request —
+//! with per-layer child spans accounting for the bulk of each decode
+//! step, and the Prometheus exposition carrying live model-drift
+//! gauges while the trace is on.
+
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::scheduler::Scheduler;
+use tpaware::coordinator::server::{Client, ServeConfig, Server};
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::transformer::Transformer;
+use tpaware::obs;
+use tpaware::simkernel::pipeline::Algo;
+use tpaware::tp::topology::Topology;
+use tpaware::util::json;
+
+fn unit_model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "unit".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+        activation: Activation::Gelu,
+        group_size: 8,
+    }
+}
+
+#[test]
+fn live_server_trace_covers_full_request_lifecycle() {
+    let _guard = obs::test_guard();
+    let tracer = obs::Tracer::new(65_536);
+
+    let cfg = unit_model_cfg();
+    let model =
+        Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 11));
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .trace(tracer.clone())
+        .start()
+        .unwrap();
+    let sched = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 4);
+    let server = Server::serve(
+        sched,
+        ServeConfig::new("127.0.0.1:0").trace(tracer.clone()),
+    )
+    .unwrap();
+
+    let mut c = Client::connect(&server.addr).unwrap();
+    let mut stream = c.generate_streamed(&[3, 1, 4], 6).unwrap();
+    let streamed: Vec<u32> = (&mut stream).map(|t| t.unwrap()).collect();
+    assert_eq!(streamed.len(), 6);
+    let done = stream.finish().unwrap();
+    assert_eq!(done.tokens, streamed);
+
+    // While tracing is on, drift gauges are live in the Prometheus view.
+    let prom = c.metrics_prom().unwrap();
+    assert!(
+        prom.contains("tpaware_model_drift{phase=\"gemm\"}"),
+        "gemm drift gauge missing:\n{prom}"
+    );
+    assert!(
+        prom.contains("tpaware_model_drift{phase=\"step\"}"),
+        "step drift gauge missing:\n{prom}"
+    );
+
+    c.shutdown().unwrap();
+    server.stop();
+    obs::uninstall();
+
+    // Round-trip through the serialized representation, as a trace
+    // viewer (or tools/trace_check.py) would read it.
+    let doc = json::parse(&tracer.to_chrome_json().to_string()).unwrap();
+    let events = doc.get("traceEvents").as_arr().unwrap().clone();
+    assert!(!events.is_empty());
+    let mut names = std::collections::BTreeSet::new();
+    let mut saw_thread_meta = false;
+    for e in &events {
+        match e.get("ph").as_str() {
+            Some("X") => {
+                names.insert(e.get("name").as_str().unwrap().to_string());
+                assert!(e.get("dur").as_usize().is_some(), "X event without dur: {e}");
+            }
+            Some("M") => saw_thread_meta = true,
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(saw_thread_meta, "thread_name metadata events missing");
+    for want in [
+        "accept",
+        "read",
+        "flush",
+        "admit",
+        "decode_step",
+        "retire",
+        "embed",
+        "layer",
+        "attn",
+        "mlp",
+        "logits",
+        "rank_mlp",
+        "gemm",
+        "all_reduce_sum",
+        "request",
+    ] {
+        assert!(names.contains(want), "span '{want}' missing; got {names:?}");
+    }
+
+    // Per-layer child spans must account for the bulk of each decode
+    // step (self time = step minus its children, aggregated).
+    let rows = obs::tracer::summarize_chrome(&doc);
+    let step = rows.iter().find(|r| r.name == "decode_step").unwrap();
+    assert!(step.count >= 6, "expected ≥6 decode steps, got {}", step.count);
+    assert!(
+        (step.self_us as f64) <= 0.2 * step.total_us as f64,
+        "decode_step self {} µs of {} µs total — children must cover ≥80%",
+        step.self_us,
+        step.total_us
+    );
+    assert_eq!(tracer.dropped(), 0, "ring must not overflow on one request");
+}
+
+/// Tracing is strictly opt-in: with no tracer installed a full request
+/// records nothing, and the drift accumulators stay empty.
+#[test]
+fn untraced_server_records_no_spans() {
+    let _guard = obs::test_guard();
+    obs::uninstall();
+
+    let cfg = unit_model_cfg();
+    let model =
+        Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 12));
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .start()
+        .unwrap();
+    let sched = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 4);
+    let server = Server::serve(sched, ServeConfig::new("127.0.0.1:0")).unwrap();
+    obs::drift::global().reset();
+
+    let mut c = Client::connect(&server.addr).unwrap();
+    assert_eq!(c.generate(&[5, 2], 4).unwrap().tokens.len(), 4);
+    c.shutdown().unwrap();
+    server.stop();
+
+    assert!(obs::drift::global().snapshot().is_empty());
+}

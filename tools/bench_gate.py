@@ -20,6 +20,12 @@ Compares one or more bench outputs against the committed requirements in
   (client-observed TTFT p50 strictly below e2e p50: per-token streaming
   must deliver the first token well before the request finishes). All
   serving checks are relative/structural, so they hold on any runner.
+* `BENCH_serving.json` also carries a `trace_overhead` section (the same
+  offline run with the span tracer off vs on), checked against the
+  baseline's `trace_overhead` floors: `min_disabled_tok_s` (the untraced
+  hot path must stay fast -- the obs layer's one-atomic-load contract)
+  and `min_enabled_over_disabled` (recording spans must not halve
+  throughput).
 
 Stdlib-only, like the other tools/ scripts.
 
@@ -112,6 +118,35 @@ def check_serving(report, base, failures):
                     f"e2e p50 {e2e:.2f} ms — streaming is not delivering early")
 
 
+def check_trace_overhead(overhead, base, failures):
+    """Tracing-off floor + tracing-on relative throughput."""
+    cfg = base.get("trace_overhead", {})
+    disabled = float(overhead.get("disabled_tok_s", 0.0))
+    enabled = float(overhead.get("enabled_tok_s", 0.0))
+    ratio = float(overhead.get("enabled_over_disabled", 0.0))
+    print(f"bench gate (trace overhead): disabled {disabled:.1f} tok/s, "
+          f"enabled {enabled:.1f} tok/s ({ratio:.2f}x, "
+          f"{overhead.get('spans', 0)} spans)")
+
+    floor = float(cfg.get("min_disabled_tok_s", 0.0))
+    ok = disabled >= floor
+    print(f"  {'PASS' if ok else 'FAIL'} trace_overhead/disabled: "
+          f"{disabled:.1f} tok/s (need >= {floor:.1f})")
+    if not ok:
+        failures.append(
+            f"trace_overhead: disabled-tracing run at {disabled:.1f} tok/s "
+            f"below floor {floor:.1f} -- the untraced hot path regressed")
+
+    min_ratio = float(cfg.get("min_enabled_over_disabled", 0.0))
+    ok = ratio >= min_ratio
+    print(f"  {'PASS' if ok else 'FAIL'} trace_overhead/ratio: {ratio:.2f}x "
+          f"(need >= {min_ratio:.2f}x)")
+    if not ok:
+        failures.append(
+            f"trace_overhead: enabled/disabled ratio {ratio:.2f}x below "
+            f"{min_ratio:.2f}x -- span recording costs too much")
+
+
 def main() -> int:
     if len(sys.argv) < 3:
         print(__doc__)
@@ -120,7 +155,7 @@ def main() -> int:
         base = json.load(f)
 
     failures = []
-    saw_gemm = saw_serving = False
+    saw_gemm = saw_serving = saw_trace = False
     for path in sys.argv[1:-1]:
         with open(path) as f:
             bench = json.load(f)
@@ -130,6 +165,9 @@ def main() -> int:
         if "serving_ttft" in bench:
             saw_serving = True
             check_serving(bench["serving_ttft"], base, failures)
+        if "trace_overhead" in bench:
+            saw_trace = True
+            check_trace_overhead(bench["trace_overhead"], base, failures)
 
     # A baseline section with no bench file to check it is a silent
     # hole in the gate — fail loudly instead.
@@ -139,6 +177,9 @@ def main() -> int:
     if base.get("serving") and not saw_serving:
         failures.append("no bench file with `serving_ttft` given, but the "
                         "baseline has a serving section")
+    if base.get("trace_overhead") and not saw_trace:
+        failures.append("no bench file with `trace_overhead` given, but the "
+                        "baseline has a trace_overhead section")
 
     if failures:
         print("\nbench gate FAILED:")

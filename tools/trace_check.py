@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""CI validator for Chrome trace-event JSON files written by `--trace-out`.
+
+Checks (stdlib-only, like the other tools/ scripts):
+
+* top-level shape: a `traceEvents` list of `ph:"X"` duration events
+  (integer `ts`/`dur` microseconds, `name`, `cat`, `pid`, `tid`) plus
+  `ph:"M"` thread_name metadata, and an `otherData` capture summary;
+* per-thread span nesting: sorted by (ts asc, dur desc), every span must
+  close inside its enclosing span (2 us slack) -- partial overlap means
+  the recorder emitted a corrupt timeline. `request`-category spans are
+  async overlays on a synthetic track (concurrent requests legitimately
+  overlap in time), so they are exempt from nesting;
+* content: at least one `decode_step` span, at least one `gemm` span and
+  one collective-category span (the hot path is actually instrumented,
+  not just the server loop);
+* coverage: direct children of `decode_step` spans must account for at
+  least 90% of total decode-step time -- the per-layer/per-collective
+  breakdown explains the step instead of leaving it a black box;
+* no spans dropped at capture (the ring was sized for the run).
+
+Usage: trace_check.py TRACE.json
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+SLACK_US = 2
+MIN_STEP_COVERAGE = 0.90
+
+
+def check_events(events, failures):
+    """Schema-check every event; return the duration spans."""
+    spans = []
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") != "thread_name":
+                failures.append(f"event {i}: unexpected metadata {e.get('name')!r}")
+            continue
+        if ph != "X":
+            failures.append(f"event {i}: unexpected phase {ph!r}")
+            continue
+        missing = [k for k in ("name", "cat", "ts", "dur", "pid", "tid") if k not in e]
+        if missing:
+            failures.append(f"event {i} ({e.get('name')!r}): missing {missing}")
+            continue
+        if not isinstance(e["ts"], int) or not isinstance(e["dur"], int):
+            failures.append(f"event {i} ({e['name']!r}): ts/dur must be integer us")
+            continue
+        spans.append(e)
+    return spans
+
+
+def check_nesting(spans, failures):
+    """Per-thread containment + decode_step direct-child coverage."""
+    by_tid = defaultdict(list)
+    for e in spans:
+        if e["cat"] == "request":
+            continue  # async overlay track; overlaps are expected
+        by_tid[e["tid"]].append(e)
+
+    step_total_us = 0
+    step_child_us = 0
+    for tid, evs in sorted(by_tid.items()):
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []  # frames: [name, end_us, dur_us, direct_child_us]
+
+        def pop(frame):
+            nonlocal step_total_us, step_child_us
+            if frame[0] == "decode_step":
+                step_total_us += frame[2]
+                step_child_us += frame[3]
+
+        for e in evs:
+            start, end = e["ts"], e["ts"] + e["dur"]
+            while stack and start >= stack[-1][1]:
+                pop(stack.pop())
+            if stack and end > stack[-1][1] + SLACK_US:
+                failures.append(
+                    f"tid {tid}: span {e['name']!r} [{start}, {end}) overlaps the "
+                    f"end of enclosing {stack[-1][0]!r} at {stack[-1][1]}")
+            if stack:
+                stack[-1][3] += e["dur"]
+            stack.append([e["name"], end, e["dur"], 0])
+        while stack:
+            pop(stack.pop())
+    return step_total_us, step_child_us
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        doc = json.load(f)
+
+    failures = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print("trace check FAILED: traceEvents missing or empty")
+        return 1
+
+    spans = check_events(events, failures)
+    names = defaultdict(int)
+    cats = defaultdict(int)
+    for e in spans:
+        names[e["name"]] += 1
+        cats[e["cat"]] += 1
+    print(f"trace check: {len(spans)} spans, {len(names)} kinds over "
+          f"{len({e['tid'] for e in spans})} threads")
+
+    for what, count in (("decode_step span", names.get("decode_step", 0)),
+                        ("gemm span", names.get("gemm", 0)),
+                        ("collective-category span", cats.get("collective", 0))):
+        ok = count >= 1
+        print(f"  {'PASS' if ok else 'FAIL'} >=1 {what}: {count}")
+        if not ok:
+            failures.append(f"no {what} in trace")
+
+    step_total_us, step_child_us = check_nesting(spans, failures)
+    if step_total_us > 0:
+        cov = step_child_us / step_total_us
+        ok = cov >= MIN_STEP_COVERAGE
+        print(f"  {'PASS' if ok else 'FAIL'} decode_step child coverage: "
+              f"{cov:.1%} of {step_total_us} us "
+              f"(need >= {MIN_STEP_COVERAGE:.0%})")
+        if not ok:
+            failures.append(
+                f"decode_step children cover only {cov:.1%} of step time")
+
+    dropped = doc.get("otherData", {}).get("dropped_spans", 0)
+    ok = dropped == 0
+    print(f"  {'PASS' if ok else 'FAIL'} dropped spans at capture: {dropped}")
+    if not ok:
+        failures.append(f"{dropped} spans dropped -- ring undersized for this run")
+
+    if failures:
+        print("\ntrace check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("trace check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
