@@ -141,6 +141,70 @@ fn run_mode(
     r
 }
 
+/// A shared-prefix burst — the shape the paged pool serves best: every
+/// request carries the same `prefix_tokens`-token prompt prefix plus a
+/// two-token private tail. A slab pool reserves each request's worst
+/// case in full; the paged pool charges the shared prefix blocks once
+/// and grows tails by the block.
+fn shared_prefix_workload(
+    n: usize,
+    prefix_tokens: usize,
+    max_new: usize,
+) -> Vec<(Vec<u32>, usize)> {
+    let mut rng = Xoshiro256::new(99);
+    let prefix: Vec<u32> = (0..prefix_tokens).map(|_| rng.below(512) as u32).collect();
+    (0..n)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.push(i as u32 % 500);
+            p.push((i as u32 + 7) % 500);
+            (p, max_new)
+        })
+        .collect()
+}
+
+struct KvCmpResult {
+    tok_per_s: f64,
+    rejections: u64,
+    peak_tokens: usize,
+    shared_joins: u64,
+    tokens: Vec<Vec<u32>>,
+}
+
+/// Drain the workload through a continuous scheduler on the given pool
+/// and report admission behaviour plus the exact token streams (the
+/// paged-vs-slab identity check). Host model path, no engine threads —
+/// the counters under comparison are fully deterministic.
+fn run_kv_cmp(
+    model: Arc<Transformer>,
+    workload: &[(Vec<u32>, usize)],
+    max_batch: usize,
+    pool_cfg: KvPoolCfg,
+) -> KvCmpResult {
+    let metrics = Arc::new(Metrics::default());
+    let core = Scheduler::new(model, None, metrics, max_batch);
+    let pool = Arc::new(KvPool::new(pool_cfg));
+    let mut sched = ContinuousScheduler::new(core, pool.clone(), SchedMode::Continuous);
+    let reqs: Vec<Request> = workload
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| Request::new(i as u64, p.clone(), *n))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let resps = sched.run_all(reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(resps.len(), workload.len());
+    let stats = pool.stats();
+    let tokens: Vec<Vec<u32>> = resps.into_iter().map(|r| r.tokens).collect();
+    KvCmpResult {
+        tok_per_s: tokens.iter().map(Vec::len).sum::<usize>() as f64 / wall,
+        rejections: stats.rejections,
+        peak_tokens: stats.peak_tokens,
+        shared_joins: stats.shared_joins,
+        tokens,
+    }
+}
+
 fn main() {
     let cfg = ModelConfig::tiny();
     let fast = std::env::var("TPAWARE_BENCH_FAST").as_deref() == Ok("1");
@@ -277,6 +341,7 @@ fn main() {
     let pool_cfg = KvPoolCfg {
         max_seqs: 32,
         max_tokens: 2048,
+        ..Default::default()
     };
     let mut mt = Table::new(
         &format!(
@@ -350,6 +415,83 @@ fn main() {
          (the acceptance bar is >= 1.2x on this mixed-length workload)"
     );
 
+    // ---- Paged KV vs slab reservations: shared-prefix burst, tight pool ----
+    // Same scheduler, same workload, same token budget — only the pool's
+    // accounting differs. The slab reserves every request's worst case
+    // (prompt + max_new) at admission; the paged pool charges 8-token
+    // blocks as they are actually touched and counts the shared prompt
+    // prefix once. The gate input asserts the paged pool admits the burst
+    // with fewer step-wait rejections and a lower KV peak while streaming
+    // bit-identical tokens.
+    let (pv_n, pv_prefix, pv_new) = (8usize, 32usize, 4usize);
+    let pv_workload = shared_prefix_workload(pv_n, pv_prefix, pv_new);
+    let worst = pv_workload.iter().map(|(p, n)| p.len() + n).max().unwrap();
+    let pv_budget = worst * 4 + 8; // room for 4 slab residents, not 5
+    let pv_slab = run_kv_cmp(
+        model.clone(),
+        &pv_workload,
+        max_batch,
+        KvPoolCfg {
+            max_seqs: 16,
+            max_tokens: pv_budget,
+            ..Default::default()
+        },
+    );
+    let pv_paged = run_kv_cmp(
+        model.clone(),
+        &pv_workload,
+        max_batch,
+        KvPoolCfg {
+            max_seqs: 16,
+            max_tokens: pv_budget,
+            block_tokens: 8,
+            paged: true,
+        },
+    );
+    let kv_tokens_equal = pv_slab.tokens == pv_paged.tokens;
+    let mut kt = Table::new(
+        &format!(
+            "KV accounting (continuous, TP=2, {pv_n} requests sharing a \
+             {pv_prefix}-token prefix, budget {pv_budget} tokens)"
+        ),
+        &["kv pool", "tok/s", "rejections", "kv peak (tok)", "shared joins"],
+    );
+    let mut kv_csv = String::from("kv_pool,tok_per_s,rejections,kv_peak_tokens,shared_joins\n");
+    for (name, r) in [("slab", &pv_slab), ("paged", &pv_paged)] {
+        kt.row(vec![
+            name.into(),
+            format!("{:.1}", r.tok_per_s),
+            r.rejections.to_string(),
+            r.peak_tokens.to_string(),
+            r.shared_joins.to_string(),
+        ]);
+        kv_csv.push_str(&format!(
+            "{name},{:.2},{},{},{}\n",
+            r.tok_per_s, r.rejections, r.peak_tokens, r.shared_joins
+        ));
+    }
+    println!("{}", kt.render());
+    println!(
+        "(identical token streams in both rows: {kv_tokens_equal}. Rejections \
+         count step-waits under backpressure, not dropped requests.)\n"
+    );
+    assert!(kv_tokens_equal, "paged pool changed the generated tokens");
+    assert!(
+        pv_paged.rejections < pv_slab.rejections,
+        "paged pool must admit the shared-prefix burst with fewer step-waits \
+         (paged {} vs slab {})",
+        pv_paged.rejections,
+        pv_slab.rejections
+    );
+    assert!(
+        pv_paged.peak_tokens < pv_slab.peak_tokens,
+        "paged pool must hold a lower KV peak than slab worst-case reservations \
+         (paged {} vs slab {})",
+        pv_paged.peak_tokens,
+        pv_slab.peak_tokens
+    );
+    assert!(pv_paged.shared_joins > 0, "prefix blocks were never shared");
+
     // ---- Streamed serving under load: live-server TTFT/ITL ----
     // The same tiny model, but served through the real nonblocking server
     // and driven by the loadgen harness over TCP — client-observed TTFT,
@@ -369,6 +511,7 @@ fn main() {
         n: lg_n,
         mode: LoadMode::OpenLoop { lambda: lg_lambda },
         seed: 7,
+        prefix_tokens: 0,
     })
     .expect("loadgen run");
     server.stop();
@@ -434,6 +577,17 @@ fn main() {
         ("lambda", lg_lambda.into()),
         ("serving_ttft", report.to_json()),
         (
+            "kv_paged",
+            Json::obj(vec![
+                ("slab_rejections", (pv_slab.rejections as usize).into()),
+                ("paged_rejections", (pv_paged.rejections as usize).into()),
+                ("slab_peak_tokens", pv_slab.peak_tokens.into()),
+                ("paged_peak_tokens", pv_paged.peak_tokens.into()),
+                ("paged_shared_joins", (pv_paged.shared_joins as usize).into()),
+                ("tokens_equal", kv_tokens_equal.into()),
+            ]),
+        ),
+        (
             "trace_overhead",
             Json::obj(vec![
                 ("disabled_tok_s", off.tok_per_s.into()),
@@ -451,9 +605,11 @@ fn main() {
     std::fs::write(dir.join("serving_bench.csv"), csv).ok();
     std::fs::write(dir.join("serving_modes.csv"), mode_csv).ok();
     std::fs::write(dir.join("serving_gemm_backends.csv"), gemm_csv).ok();
+    std::fs::write(dir.join("serving_kv_paged.csv"), kv_csv).ok();
     println!(
         "CSV written to {}: serving_bench.csv, serving_modes.csv, \
-         serving_gemm_backends.csv and serving_loadgen.csv; gate input to {}",
+         serving_gemm_backends.csv, serving_kv_paged.csv and \
+         serving_loadgen.csv; gate input to {}",
         dir.display(),
         dir.join("BENCH_serving.json").display()
     );

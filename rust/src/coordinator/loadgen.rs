@@ -55,7 +55,24 @@ pub struct Arrival {
 /// (the realistic serving mix static batching handles worst), prompts
 /// 2–5 tokens. Deterministic in `seed`.
 pub fn gen_trace(n: usize, lambda: f64, seed: u64) -> Vec<Arrival> {
+    gen_trace_shared(n, lambda, seed, 0)
+}
+
+/// [`gen_trace`] with every prompt prefixed by the same
+/// `prefix_tokens`-token system prompt (deterministic in `seed`). With
+/// `prefix_tokens == 0` this is exactly `gen_trace`. The shared prefix
+/// is what exercises the paged KV pool's prefix-reuse path: each
+/// admission after the first joins the prefix's blocks instead of
+/// allocating fresh ones, and the first divergent append past the
+/// prefix takes a copy-on-write block.
+pub fn gen_trace_shared(
+    n: usize,
+    lambda: f64,
+    seed: u64,
+    prefix_tokens: usize,
+) -> Vec<Arrival> {
     let mut rng = Xoshiro256::new(seed);
+    let prefix: Vec<u32> = (0..prefix_tokens).map(|_| rng.below(512) as u32).collect();
     let mut t = 0.0f64;
     (0..n)
         .map(|i| {
@@ -63,9 +80,11 @@ pub fn gen_trace(n: usize, lambda: f64, seed: u64) -> Vec<Arrival> {
             let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
             t += -u.ln() / lambda;
             let plen = 2 + rng.below(4);
+            let mut prompt = prefix.clone();
+            prompt.extend((0..plen).map(|_| rng.below(512) as u32));
             Arrival {
                 at: Duration::from_secs_f64(t),
-                prompt: (0..plen).map(|_| rng.below(512) as u32).collect(),
+                prompt,
                 max_new: if i % 6 == 0 { 32 } else { 2 },
             }
         })
@@ -99,6 +118,9 @@ pub struct LoadgenCfg {
     pub mode: LoadMode,
     /// Trace seed (same seed = same prompts, lengths and arrivals).
     pub seed: u64,
+    /// Shared prompt-prefix length in tokens (0 = fully independent
+    /// prompts). See [`gen_trace_shared`].
+    pub prefix_tokens: usize,
 }
 
 /// Exact percentiles over one latency population (milliseconds).
@@ -269,7 +291,7 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
         // prompts and lengths for a given seed.
         LoadMode::ClosedLoop { .. } => 1.0,
     };
-    let trace = gen_trace(cfg.n, lambda, cfg.seed);
+    let trace = gen_trace_shared(cfg.n, lambda, cfg.seed, cfg.prefix_tokens);
     let t0 = Instant::now();
     let samples: Vec<Sample> = match cfg.mode {
         LoadMode::OpenLoop { .. } => {
@@ -359,6 +381,28 @@ mod tests {
         // The 1-in-6 long tail and the 2-5 token prompts.
         assert!(a.iter().filter(|x| x.max_new == 32).count() >= 2);
         assert!(a.iter().all(|x| (2..=5).contains(&x.prompt.len())));
+    }
+
+    #[test]
+    fn shared_prefix_trace_shares_exactly_the_prefix() {
+        let a = gen_trace_shared(12, 40.0, 11, 8);
+        let b = gen_trace_shared(12, 40.0, 11, 8);
+        assert_eq!(a.len(), 12);
+        let prefix = &a[0].prompt[..8];
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "deterministic in seed");
+            assert_eq!(&x.prompt[..8], prefix, "every prompt opens with the prefix");
+            assert!((10..=13).contains(&x.prompt.len()), "prefix + 2-5 tail tokens");
+        }
+        // Tails still vary: not every prompt is identical.
+        assert!(a.iter().any(|x| x.prompt != a[0].prompt));
+        // Zero prefix is exactly the plain trace.
+        let plain = gen_trace(12, 40.0, 11);
+        let zero = gen_trace_shared(12, 40.0, 11, 0);
+        for (x, y) in plain.iter().zip(&zero) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
     }
 
     #[test]

@@ -191,6 +191,17 @@ pub fn kv_stats_json(s: &KvPoolStats) -> Json {
         ("acquires", (s.acquires as usize).into()),
         ("releases", (s.releases as usize).into()),
         ("rejections", (s.rejections as usize).into()),
+        ("block_tokens", s.block_tokens.into()),
+        ("total_blocks", s.total_blocks.into()),
+        ("blocks_in_use", s.blocks_in_use.into()),
+        ("peak_blocks", s.peak_blocks.into()),
+        ("cached_blocks", s.cached_blocks.into()),
+        ("block_occupancy", s.block_occupancy().into()),
+        ("shared_joins", (s.shared_joins as usize).into()),
+        ("prefix_cache_hits", (s.prefix_cache_hits as usize).into()),
+        ("cow_copies", (s.cow_copies as usize).into()),
+        ("growth_stalls", (s.growth_stalls as usize).into()),
+        ("preemptions", (s.preemptions as usize).into()),
     ])
 }
 
@@ -485,6 +496,60 @@ pub fn prometheus_text(m: &Metrics) -> String {
             "Admissions deferred by KV-pool backpressure.",
             kv.rejections,
         );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_blocks_in_use",
+            "Paged KV blocks currently referenced by live sequences.",
+            kv.blocks_in_use as f64,
+        );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_peak_blocks",
+            "High-water mark of paged KV blocks in use.",
+            kv.peak_blocks as f64,
+        );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_block_occupancy",
+            "In-use fraction of the paged KV pool's blocks.",
+            kv.block_occupancy(),
+        );
+        prom_gauge(
+            &mut out,
+            "tpaware_kv_cached_blocks",
+            "Retired-but-keyed blocks held in the prefix cache.",
+            kv.cached_blocks as f64,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_shared_joins",
+            "Admissions that joined a live block via a shared prefix.",
+            kv.shared_joins,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_prefix_cache_hits",
+            "Admissions that revived a block from the prefix cache.",
+            kv.prefix_cache_hits,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_cow_copies",
+            "Copy-on-write block copies on divergent appends.",
+            kv.cow_copies,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_growth_stalls",
+            "Decode appends deferred because no block was available.",
+            kv.growth_stalls,
+        );
+        prom_counter(
+            &mut out,
+            "tpaware_kv_preemptions",
+            "Sequences preempted for recompute to break a block deadlock.",
+            kv.preemptions,
+        );
     }
     {
         let comm = m.comm.lock().unwrap();
@@ -662,6 +727,9 @@ mod tests {
         let le_inf_once = text.matches("tpaware_step_seconds_bucket{le=\"+Inf\"}").count();
         assert_eq!(le_inf_once, 1);
     }
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
         let h = Histogram::default();
         for i in 1..1000u64 {
             h.observe_us(i);
@@ -763,6 +831,16 @@ mod tests {
             rejections: 2,
             max_seqs: 8,
             max_tokens: 100,
+            block_tokens: 10,
+            total_blocks: 10,
+            blocks_in_use: 7,
+            peak_blocks: 9,
+            cached_blocks: 1,
+            shared_joins: 5,
+            prefix_cache_hits: 4,
+            cow_copies: 3,
+            growth_stalls: 2,
+            preemptions: 1,
         });
         m.admission.observe_us(250);
         let j = m.to_json();
@@ -773,6 +851,33 @@ mod tests {
         assert_eq!(kv.get("peak_tokens").as_usize(), Some(90));
         assert_eq!(kv.get("rejections").as_usize(), Some(2));
         assert!((kv.get("token_occupancy").as_f64().unwrap() - 0.7).abs() < 1e-12);
+        assert_eq!(kv.get("blocks_in_use").as_usize(), Some(7));
+        assert_eq!(kv.get("peak_blocks").as_usize(), Some(9));
+        assert_eq!(kv.get("cached_blocks").as_usize(), Some(1));
+        assert!((kv.get("block_occupancy").as_f64().unwrap() - 0.7).abs() < 1e-12);
+        assert_eq!(kv.get("shared_joins").as_usize(), Some(5));
+        assert_eq!(kv.get("prefix_cache_hits").as_usize(), Some(4));
+        assert_eq!(kv.get("cow_copies").as_usize(), Some(3));
+        assert_eq!(kv.get("growth_stalls").as_usize(), Some(2));
+        assert_eq!(kv.get("preemptions").as_usize(), Some(1));
         assert_eq!(j.get("admission").get("count").as_usize(), Some(1));
+    }
+
+    /// Regression: a zero-capacity snapshot (the default before any
+    /// pool publishes, or a misconfigured pool) must render finite
+    /// occupancies — `0`, never `NaN` — in both the metrics JSON and
+    /// the Prometheus exposition.
+    #[test]
+    fn kv_zero_capacity_occupancy_is_finite_in_prometheus_text() {
+        let m = Metrics::default();
+        let text = prometheus_text(&m);
+        assert!(text.contains("tpaware_kv_token_occupancy 0\n"));
+        assert!(text.contains("tpaware_kv_block_occupancy 0\n"));
+        assert!(text.contains("tpaware_kv_shared_joins 0\n"));
+        assert!(text.contains("tpaware_kv_cow_copies 0\n"));
+        assert!(!text.contains("NaN"), "no gauge may render NaN");
+        let j = m.to_json();
+        assert_eq!(j.get("kv").get("token_occupancy").as_f64(), Some(0.0));
+        assert_eq!(j.get("kv").get("block_occupancy").as_f64(), Some(0.0));
     }
 }

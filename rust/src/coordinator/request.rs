@@ -79,6 +79,10 @@ pub struct SeqState {
     pub last_token_at: Option<Instant>,
     /// This sequence's KV cache (pool-slot storage in the serving path).
     pub kv: crate::model::transformer::KvCache,
+    /// Set when the paged KV pool could not back this sequence's next
+    /// append (growth stall): the scheduler skips it for the step and
+    /// retries once capacity frees up.
+    pub stalled: bool,
 }
 
 impl SeqState {
@@ -102,6 +106,7 @@ impl SeqState {
             first_token_at: None,
             last_token_at: None,
             kv,
+            stalled: false,
         }
     }
 

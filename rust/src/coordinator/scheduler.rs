@@ -89,15 +89,23 @@ impl Scheduler {
     /// [`Scheduler::step`] (a no-op hook); the retire-time [`Response`]
     /// still carries the full collected sequence either way.
     pub fn step_with(&self, active: &mut [SeqState], emit: &mut dyn FnMut(TokenEvent)) {
-        if active.is_empty() {
+        // Stalled sequences (paged pool could not back their next
+        // append) sit the step out; everyone else advances.
+        let idx: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.stalled)
+            .map(|(i, _)| i)
+            .take(self.max_batch)
+            .collect();
+        if idx.is_empty() {
             return;
         }
-        let n = active.len().min(self.max_batch);
-        let (batch, _rest) = active.split_at_mut(n);
-        let tokens: Vec<u32> = batch.iter().map(|s| s.next_token).collect();
-        let mut caches: Vec<crate::model::transformer::KvCache> = batch
-            .iter_mut()
-            .map(|s| std::mem::take(&mut s.kv))
+        let n = idx.len();
+        let tokens: Vec<u32> = idx.iter().map(|&i| active[i].next_token).collect();
+        let mut caches: Vec<crate::model::transformer::KvCache> = idx
+            .iter()
+            .map(|&i| std::mem::take(&mut active[i].kv))
             .collect();
 
         let step_span = crate::obs::span("decode_step", "sched").arg("batch", n);
@@ -153,12 +161,13 @@ impl Scheduler {
             self.metrics.set_comm(engine.comm_stats());
         }
 
-        for (i, s) in batch.iter_mut().enumerate() {
-            s.kv = std::mem::take(&mut caches[i]);
+        for (j, &i) in idx.iter().enumerate() {
+            let s = &mut active[i];
+            s.kv = std::mem::take(&mut caches[j]);
             if s.prefilling() {
                 s.next_token = s.pending_prompt.pop().unwrap();
             } else {
-                let tok = argmax(logits.row(i));
+                let tok = argmax(logits.row(j));
                 let now = Instant::now();
                 if s.first_token_at.is_none() {
                     s.first_token_at = Some(now);
@@ -267,6 +276,11 @@ pub struct ContinuousScheduler {
     mode: SchedMode,
     queue: VecDeque<Request>,
     active: Vec<SeqState>,
+    /// Tokens already generated (and streamed) by sequences the paged
+    /// pool preempted for recompute, keyed by request id: prepended to
+    /// the response at retirement, and offsetting stream indices so
+    /// resumed sequences continue numbering where they left off.
+    preempted: std::collections::HashMap<u64, Vec<u32>>,
 }
 
 impl ContinuousScheduler {
@@ -279,6 +293,7 @@ impl ContinuousScheduler {
             mode,
             queue: VecDeque::new(),
             active: Vec::new(),
+            preempted: std::collections::HashMap::new(),
         }
     }
 
@@ -309,8 +324,8 @@ impl ContinuousScheduler {
     /// to what the budget can cover.
     pub fn submit(&mut self, mut req: Request) -> Option<Response> {
         Metrics::inc(&self.core.metrics.requests_received);
-        let budget = self.pool.cfg().max_tokens;
-        if req.prompt.len() + 1 > budget {
+        let budget = self.pool.token_budget();
+        if !self.pool.admissible(req.prompt.len()) {
             Metrics::inc(&self.core.metrics.requests_completed);
             let total_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
             return Some(Response {
@@ -347,8 +362,7 @@ impl ContinuousScheduler {
             let Some(front) = self.queue.front() else {
                 break;
             };
-            let tokens = front.kv_tokens();
-            let Some(kv) = self.pool.try_acquire(tokens, n_layers) else {
+            let Some(kv) = self.pool.try_admit(&front.prompt, front.max_new, n_layers) else {
                 break; // backpressure: front stays queued, FIFO preserved
             };
             let req = self.queue.pop_front().expect("front checked above");
@@ -367,6 +381,48 @@ impl ContinuousScheduler {
         self.tick_with(&mut |_| {})
     }
 
+    /// Paged mode, pre-step: back every active sequence's next append
+    /// with a block ([`KvPool::ensure_append`] — copy-on-write out of
+    /// shared blocks, fresh allocation past the table's end). Sequences
+    /// the pool cannot grow are marked stalled and sit the step out.
+    /// When *every* sequence stalls the tick would make no progress, so
+    /// the youngest sequence is **preempted**: its blocks are released
+    /// and it is requeued at the queue front as a recompute request
+    /// (prompt = original prompt + tokens generated so far — greedy
+    /// decode is deterministic, so the resumed sequence reproduces its
+    /// stream exactly; already-emitted tokens are stashed and merged
+    /// back into the final response).
+    fn ensure_growth(&mut self) {
+        loop {
+            let mut any_ready = false;
+            for s in &mut self.active {
+                let next = s.kv.len;
+                let ok = self.pool.ensure_append(&mut s.kv, next, s.req.prompt.len());
+                s.stalled = !ok;
+                any_ready |= ok;
+            }
+            if any_ready || self.active.is_empty() {
+                return;
+            }
+            let mut victim = self.active.pop().expect("checked non-empty");
+            self.pool.note_preemption();
+            let mut prompt = victim.req.prompt.clone();
+            prompt.extend(victim.generated.iter().copied());
+            let remaining = victim.req.max_new - victim.generated.len();
+            let mut stash = self.preempted.remove(&victim.req.id).unwrap_or_default();
+            stash.append(&mut victim.generated);
+            self.preempted.insert(victim.req.id, stash);
+            let kv = std::mem::take(&mut victim.kv);
+            self.pool.release(kv, victim.req.kv_tokens());
+            self.queue.push_front(Request {
+                id: victim.req.id,
+                prompt,
+                max_new: remaining,
+                arrival: victim.req.arrival,
+            });
+        }
+    }
+
     /// As [`ContinuousScheduler::tick`], invoking `emit` for every token
     /// generated this tick (see [`Scheduler::step_with`]) — the serving
     /// loop's entry point for per-token streaming.
@@ -376,14 +432,34 @@ impl ContinuousScheduler {
         if self.active.is_empty() {
             return Vec::new();
         }
-        self.core.step_with(&mut self.active, emit);
+        if self.pool.paged() {
+            self.ensure_growth();
+            if self.active.is_empty() {
+                return Vec::new(); // everyone preempted; re-admit next tick
+            }
+        }
+        let preempted = &self.preempted;
+        self.core.step_with(&mut self.active, &mut |mut e| {
+            if let Some(prefix) = preempted.get(&e.id) {
+                e.index += prefix.len(); // resumed stream keeps numbering
+            }
+            emit(e);
+        });
         let pool = &self.pool;
         let retire_span = crate::obs::span("retire", "sched").arg("active", self.active.len());
-        let done = self.core.retire_with(&mut self.active, &mut |s| {
+        let mut done = self.core.retire_with(&mut self.active, &mut |s| {
             let kv = std::mem::take(&mut s.kv);
             pool.release(kv, s.req.kv_tokens());
         });
         drop(retire_span);
+        if !self.preempted.is_empty() {
+            for r in &mut done {
+                if let Some(mut prefix) = self.preempted.remove(&r.id) {
+                    prefix.extend(std::mem::take(&mut r.tokens));
+                    r.tokens = prefix;
+                }
+            }
+        }
         if !done.is_empty() {
             self.core.metrics.set_kv(self.pool.stats());
         }
@@ -446,6 +522,16 @@ mod tests {
         Arc::new(KvPool::new(KvPoolCfg {
             max_seqs,
             max_tokens,
+            ..Default::default()
+        }))
+    }
+
+    fn paged_pool(max_seqs: usize, max_tokens: usize, block_tokens: usize) -> Arc<KvPool> {
+        Arc::new(KvPool::new(KvPoolCfg {
+            max_seqs,
+            max_tokens,
+            block_tokens,
+            paged: true,
         }))
     }
 
@@ -700,6 +786,143 @@ mod tests {
             metrics.itl.count() + responses.len() as u64,
             metrics.tokens_generated.load(Ordering::Relaxed)
         );
+    }
+
+    /// Paged and slab pools must generate bit-identical tokens in both
+    /// scheduler modes: paging is allocator accounting, never semantics.
+    #[test]
+    fn paged_pool_matches_slab_generation() {
+        let model = tiny_model();
+        let run = |paged: bool, mode| {
+            let p: Arc<KvPool> = if paged {
+                paged_pool(64, 4096, 8)
+            } else {
+                pool(64, 4096)
+            };
+            let core = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
+            let mut cs = ContinuousScheduler::new(core, p, mode);
+            cs.run_all(mixed_requests(8))
+        };
+        for mode in [SchedMode::Continuous, SchedMode::Static] {
+            let slab = run(false, mode);
+            let paged = run(true, mode);
+            assert_eq!(slab.len(), paged.len());
+            for (a, b) in slab.iter().zip(&paged) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.tokens, b.tokens, "req {} diverged slab vs paged", a.id);
+            }
+        }
+    }
+
+    /// A batch of identical prompts must share prompt blocks at
+    /// admission and copy-on-write out of the shared tail on the first
+    /// divergent append — while still producing exactly the solo
+    /// generation for every request.
+    #[test]
+    fn shared_prefix_batch_shares_then_cows() {
+        let model = tiny_model();
+        let p = paged_pool(8, 512, 4);
+        let core = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
+        let mut cs = ContinuousScheduler::new(core, p.clone(), SchedMode::Continuous);
+        let prompt = vec![3u32, 1, 4, 1, 5, 9]; // one full block + a shared partial tail
+        let reqs: Vec<Request> = (0..4).map(|i| Request::new(i, prompt.clone(), 6)).collect();
+        let out = cs.run_all(reqs);
+        assert_eq!(out.len(), 4);
+        let solo = model.generate(&prompt, 6);
+        for r in &out {
+            assert_eq!(r.tokens, solo, "req {} diverged from solo", r.id);
+        }
+        let s = p.stats();
+        assert!(s.shared_joins > 0, "identical prompts must share blocks");
+        assert!(s.cow_copies > 0, "divergent appends into the shared tail must CoW");
+        assert_eq!(s.blocks_in_use, 0);
+        assert_eq!(s.seqs_in_use, 0);
+        p.validate().unwrap();
+    }
+
+    /// A pool far smaller than the workload's worst case forces growth
+    /// stalls and recompute preemption — and the responses must still
+    /// be exactly the unconstrained generations (preemption replays
+    /// deterministically).
+    #[test]
+    fn tiny_paged_pool_preempts_and_completes_exactly() {
+        let model = tiny_model();
+        let p = paged_pool(4, 8, 2); // 4 blocks of 2 tokens
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request::new(i, vec![i as u32 + 1, 7], 5))
+            .collect();
+        let baseline: Vec<Vec<u32>> =
+            reqs.iter().map(|r| model.generate(&r.prompt, 5)).collect();
+        let core = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 4);
+        let mut cs = ContinuousScheduler::new(core, p.clone(), SchedMode::Continuous);
+        let out = cs.run_all(reqs);
+        assert_eq!(out.len(), 3);
+        for (r, want) in out.iter().zip(&baseline) {
+            assert_eq!(&r.tokens, want, "req {} tokens must survive preemption", r.id);
+        }
+        let s = p.stats();
+        assert!(s.growth_stalls > 0, "tiny pool must stall growth");
+        assert_eq!(s.blocks_in_use, 0, "every block returned");
+        assert_eq!(s.seqs_in_use, 0);
+        p.validate().unwrap();
+    }
+
+    /// Paged admission charges prompt blocks only, so on a long-tail
+    /// workload it admits more concurrency up front than slab's
+    /// worst-case reservations: on the first tick, slab fits two
+    /// 23-token reservations into a 50-token budget and rejects the
+    /// third, while paged admits everything — and both still drain to
+    /// bit-identical outputs.
+    #[test]
+    fn paged_admits_more_than_slab_on_long_tail() {
+        let model = tiny_model();
+        let reqs = || -> Vec<Request> {
+            let longs = (0..4).map(|i| Request::new(i, vec![1, 2, 3], 20));
+            let shorts = (4..8).map(|i| Request::new(i, vec![4, 5, 6], 2));
+            longs.chain(shorts).collect()
+        };
+        let run = |paged: bool| {
+            let p: Arc<KvPool> = if paged {
+                paged_pool(8, 50, 4)
+            } else {
+                pool(8, 50)
+            };
+            let core = Scheduler::new(model.clone(), None, Arc::new(Metrics::default()), 8);
+            let mut cs = ContinuousScheduler::new(core, p.clone(), SchedMode::Continuous);
+            for r in reqs() {
+                assert!(cs.submit(r).is_none());
+            }
+            cs.tick();
+            let first_tick = (cs.active_len(), p.stats().rejections);
+            let mut out = Vec::new();
+            while !cs.is_idle() {
+                out.extend(cs.tick());
+            }
+            out.sort_by_key(|r| r.id);
+            (out, first_tick, p)
+        };
+        let (slab_out, (slab_active, slab_rej), _) = run(false);
+        // Slab: 23 + 23 = 46 fits the 50-token budget, the third
+        // long's 23 does not — front blocked, one rejection counted.
+        assert_eq!(slab_active, 2);
+        assert_eq!(slab_rej, 1);
+        // Paged: every admission charges one 4-token prompt block plus
+        // one projected block — all eight requests admit immediately.
+        let (paged_out, (paged_active, paged_rej), p) = run(true);
+        assert_eq!(paged_active, 8);
+        assert_eq!(paged_rej, 0);
+        // Identical outputs despite any growth stalls / preemptions the
+        // tight pool forces during the drain.
+        assert_eq!(slab_out.len(), 8);
+        assert_eq!(paged_out.len(), 8);
+        for (a, b) in slab_out.iter().zip(&paged_out) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {} diverged slab vs paged", a.id);
+        }
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 0);
+        assert_eq!(s.seqs_in_use, 0);
+        p.validate().unwrap();
     }
 
     #[test]

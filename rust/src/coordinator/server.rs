@@ -1200,6 +1200,7 @@ mod tests {
                 .pool(KvPoolCfg {
                     max_seqs: 2,
                     max_tokens: 64,
+                    ..Default::default()
                 })
                 .mode(mode);
             let server = Server::serve(tiny_scheduler(), cfg).unwrap();

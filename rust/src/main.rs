@@ -133,6 +133,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("scheduler", "continuous", "batching mode: continuous | static")
         .flag("kv-seqs", "64", "KV pool: max resident sequences")
         .flag("kv-tokens", "16384", "KV pool: total cached-token budget")
+        .flag("kv-block", "16", "paged KV pool: tokens per block")
+        .flag(
+            "kv-paged",
+            "off",
+            "KV accounting mode: on (paged blocks, prefix reuse + CoW) | \
+             off (slab reservations)",
+        )
         .flag("seed", "42", "weight synthesis seed")
         .flag("artifacts", "artifacts", "artifacts directory")
         .flag("comm-codec", "fp32", "wire codec: fp32 | bf16 | int8[:G] | int4[:G]")
@@ -174,10 +181,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let gemm = parse_gemm_backend(a.get("gemm-backend"))?;
     let mode = SchedMode::by_name(a.get("scheduler"))
         .ok_or_else(|| err!("scheduler must be 'continuous' or 'static'"))?;
+    let paged = match a.get("kv-paged") {
+        "on" => true,
+        "off" => false,
+        other => bail!("kv-paged must be 'on' or 'off', got '{other}'"),
+    };
     let pool_cfg = KvPoolCfg {
         max_seqs: a.usize("kv-seqs")?,
         max_tokens: a.usize("kv-tokens")?,
+        block_tokens: a.usize("kv-block")?,
+        paged,
     };
+    ensure!(
+        !paged || pool_cfg.block_tokens > 0,
+        "--kv-block must be at least 1 token in paged mode"
+    );
+    ensure!(
+        !paged || pool_cfg.max_tokens >= pool_cfg.block_tokens,
+        "--kv-tokens ({}) must cover at least one --kv-block ({}) block",
+        pool_cfg.max_tokens,
+        pool_cfg.block_tokens
+    );
     let seed = a.u64("seed")?;
     let ckpt_dir = a.get("ckpt").to_string();
     let t0 = std::time::Instant::now();
@@ -214,7 +238,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let weights_ms = t0.elapsed().as_secs_f64() * 1e3;
     eprintln!(
         "weights {weights_source} in {weights_ms:.1} ms — {} ({} layers, d={}, ff={}), \
-         algo={algo:?}, tp={}, codec={}, gemm={}, scheduler={} (kv pool: {} seqs / {} tokens)",
+         algo={algo:?}, tp={}, codec={}, gemm={}, scheduler={} (kv pool: {} seqs / {} tokens, {})",
         cfg.name,
         cfg.n_layers,
         cfg.d_model,
@@ -224,7 +248,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         gemm.label(),
         mode.label(),
         pool_cfg.max_seqs,
-        pool_cfg.max_tokens
+        pool_cfg.max_tokens,
+        if paged {
+            format!("paged x{}-token blocks", pool_cfg.block_tokens)
+        } else {
+            "slab".to_string()
+        }
     );
     let layers: Vec<_> = model.blocks.iter().map(|b| b.mlp.clone()).collect();
     let engine_cfg = EngineConfig::new(
@@ -344,6 +373,12 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     .flag("lambda", "30", "open loop: arrival rate, requests/second")
     .flag("concurrency", "4", "closed loop: concurrent workers")
     .flag("seed", "7", "trace seed (prompts, lengths, arrivals)")
+    .flag(
+        "prefix-tokens",
+        "0",
+        "prepend this many shared system-prompt tokens to every request \
+         (exercises paged-KV prefix reuse; 0 = independent prompts)",
+    )
     .flag("csv", "", "also write the report as CSV to this path");
     let a = spec.parse(args)?;
     let mode = match a.get("mode") {
@@ -360,6 +395,7 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         n: a.usize("n")?,
         mode,
         seed: a.u64("seed")?,
+        prefix_tokens: a.usize("prefix-tokens")?,
     };
     match mode {
         LoadMode::OpenLoop { lambda } => eprintln!(

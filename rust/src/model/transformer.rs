@@ -76,6 +76,12 @@ pub struct KvCache {
     pub layers: Vec<(Vec<f32>, Vec<f32>)>,
     /// Tokens cached so far (rows per layer buffer).
     pub len: usize,
+    /// Paged-pool block table: the id of the logical KV block backing
+    /// each `block_tokens`-sized span of this sequence, in order. Empty
+    /// for slab-mode (and unpooled) caches. Owned by the
+    /// [`crate::coordinator::kv_pool::KvPool`] accounting layer — the
+    /// decode path never reads it.
+    pub block_table: Vec<u32>,
 }
 
 impl KvCache {
@@ -84,6 +90,7 @@ impl KvCache {
         KvCache {
             layers: vec![(Vec::new(), Vec::new()); n_layers],
             len: 0,
+            block_table: Vec::new(),
         }
     }
 
@@ -98,6 +105,7 @@ impl KvCache {
             v.clear();
         }
         self.len = 0;
+        self.block_table.clear();
     }
 
     /// Bytes held (for cache-manager accounting).

@@ -1,0 +1,309 @@
+//! Paged-KV integration: the block allocator under randomized attack,
+//! and the paged scheduler path proven bit-identical to slab.
+//!
+//! Three layers of proof:
+//!   1. A randomized allocator-invariant harness (500+ seeded cases,
+//!      replayable via `TPAWARE_PROPTEST_SEED`) drives random
+//!      admit / append / fork-prefix / retire interleavings over up to
+//!      64 live sequences and checks, after *every* operation, that
+//!      blocks are conserved, refcounts equal reachability from the
+//!      block tables the harness holds, occupancy never exceeds
+//!      capacity, and a terminal drain returns every block.
+//!   2. Paged admission must be invisible to generation: token streams
+//!      bit-identical to the slab pool and to bare `model.generate`
+//!      across scheduler modes x GEMM backends x TP degrees.
+//!   3. A shared-prefix batch must actually share (joins > 0), diverge
+//!      by copy-on-write (copies > 0), revive cached prefix blocks on a
+//!      second wave — and still match the solo oracle throughout.
+
+use std::sync::Arc;
+use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
+use tpaware::coordinator::kv_pool::{KvPool, KvPoolCfg};
+use tpaware::coordinator::metrics::Metrics;
+use tpaware::coordinator::request::{Request, Response};
+use tpaware::coordinator::scheduler::{ContinuousScheduler, Scheduler};
+use tpaware::gemm::GemmBackend;
+use tpaware::model::config::{Activation, ModelConfig};
+use tpaware::model::transformer::{KvCache, Transformer};
+use tpaware::simkernel::pipeline::{Algo, SchedMode};
+use tpaware::tp::topology::Topology;
+use tpaware::util::proptest_lite::forall;
+
+/// The randomized allocator-invariant harness — the paged pool's main
+/// line of defence. Each case builds a randomly-shaped pool (block
+/// size, capacity, sequence slots up to 64) and interleaves:
+///   - admit: a fresh prompt from a small base-tag set, so prefixes
+///     collide and the sharing paths actually run;
+///   - fork-prefix: a new sequence whose prompt extends (or truncates)
+///     a live sequence's prompt — whole shared blocks join, divergent
+///     tails split;
+///   - append: one decode step on a live sequence (growth / CoW /
+///     unkey), tolerating growth stalls under pressure;
+///   - retire: release a live sequence's blocks.
+/// After every operation the pool's own `validate()` must pass and the
+/// refcount snapshot must equal reachability counted from the block
+/// tables this harness holds. After the terminal drain, every block
+/// must be back (free or prefix-cached) and all gauges at zero.
+#[test]
+fn randomized_allocator_invariants_hold() {
+    forall("paged allocator invariants", 500, |g| {
+        let block = 1 + g.below(6); // 1..=6 tokens per block
+        let total = 4 + g.below(28); // 4..=31 blocks
+        let max_seqs = 1 + g.below(64); // 1..=64 sequence slots
+        let pool = KvPool::new(KvPoolCfg {
+            max_seqs,
+            max_tokens: block * total,
+            block_tokens: block,
+            paged: true,
+        });
+        // (cache, prompt, next append index)
+        let mut live: Vec<(KvCache, Vec<u32>, usize)> = Vec::new();
+        let mut fresh_tag = 10_000u32; // distinct tokens for forked tails
+        for _ in 0..48 {
+            match g.below(5) {
+                0 | 1 => {
+                    // Admit a fresh prompt. Base tags are drawn from a
+                    // tiny set so independent admissions still share
+                    // prefix-chunk keys.
+                    let base = g.below(4) as u32;
+                    let plen = 1 + g.below(3 * block);
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|i| base * 1000 + i as u32).collect();
+                    if let Some(kv) = pool.try_admit(&prompt, 4, 1) {
+                        live.push((kv, prompt, plen));
+                    }
+                }
+                2 => {
+                    // Fork-prefix: extend (or cut back) a live prompt.
+                    if !live.is_empty() {
+                        let i = g.below(live.len());
+                        let mut prompt = live[i].1.clone();
+                        prompt.truncate(1 + g.below(prompt.len()));
+                        for _ in 0..g.below(3) {
+                            prompt.push(fresh_tag);
+                            fresh_tag += 1;
+                        }
+                        let plen = prompt.len();
+                        if let Some(kv) = pool.try_admit(&prompt, 4, 1) {
+                            live.push((kv, prompt, plen));
+                        }
+                    }
+                }
+                3 => {
+                    // Append one decode position (may CoW a shared
+                    // tail, unkey a sole-owned one, or grow a block).
+                    if !live.is_empty() {
+                        let i = g.below(live.len());
+                        let (kv, prompt, len) = &mut live[i];
+                        if pool.ensure_append(kv, *len, prompt.len()) {
+                            *len += 1;
+                        }
+                    }
+                }
+                _ => {
+                    // Retire.
+                    if !live.is_empty() {
+                        let i = g.below(live.len());
+                        let (kv, _, _) = live.swap_remove(i);
+                        pool.release(kv, 0);
+                    }
+                }
+            }
+
+            // Invariants, after every single operation.
+            pool.validate().unwrap();
+            let refs = pool.block_refs();
+            let mut counted = vec![0u32; refs.len()];
+            for (kv, _, _) in &live {
+                for &id in &kv.block_table {
+                    counted[id as usize] += 1;
+                }
+            }
+            assert_eq!(refs, counted, "refcounts must equal reachability");
+            let s = pool.stats();
+            assert!(s.blocks_in_use <= s.total_blocks, "occupancy over capacity");
+            assert_eq!(s.seqs_in_use, live.len(), "slot gauge drifted");
+        }
+
+        // Terminal drain: every block must come home.
+        for (kv, _, _) in live.drain(..) {
+            pool.release(kv, 0);
+        }
+        pool.validate().unwrap();
+        let s = pool.stats();
+        assert_eq!(s.blocks_in_use, 0, "drain must return every block");
+        assert_eq!(s.seqs_in_use, 0);
+        assert_eq!(s.tokens_reserved, 0);
+        assert_eq!(s.acquires, s.releases);
+        assert!(pool.block_refs().iter().all(|&r| r == 0));
+    });
+}
+
+fn tiny_model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "unit".into(),
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+        activation: Activation::Gelu,
+        group_size: 8,
+    }
+}
+
+/// A request mix that exercises every paged path at once: an identical
+/// twin pair (block joins, then the CoW split on the first divergent
+/// append), a prompt sharing one full block, unshared prompts, and a
+/// long tail that grows well past its prompt blocks.
+fn identity_requests() -> Vec<Request> {
+    let prefix = [3u32, 1, 4, 1, 5, 9];
+    vec![
+        Request::new(0, prefix.to_vec(), 6),
+        Request::new(1, prefix.to_vec(), 6),
+        Request::new(2, [&prefix[..4], &[7, 7]].concat(), 8),
+        Request::new(3, vec![2, 6, 5], 4),
+        Request::new(4, vec![8, 8, 8, 8, 8], 12),
+        Request::new(5, vec![1], 2),
+    ]
+}
+
+/// Run the batch through a `ContinuousScheduler` over a live host
+/// engine with the given GEMM backend, then shut the engine down.
+fn run_with_pool(
+    model: &Arc<Transformer>,
+    gemm: GemmBackend,
+    mode: SchedMode,
+    pool: KvPoolCfg,
+    reqs: Vec<Request>,
+) -> Vec<Response> {
+    let engine = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .gemm(gemm)
+        .start()
+        .unwrap();
+    let core = Scheduler::new(model.clone(), Some(engine), Arc::new(Metrics::default()), 4);
+    let mut cs = ContinuousScheduler::new(core, Arc::new(KvPool::new(pool)), mode);
+    let out = cs.run_all(reqs);
+    if let Some(engine) = cs.into_engine() {
+        engine.shutdown();
+    }
+    out
+}
+
+/// Paged admission is pure accounting: for every TP degree, scheduler
+/// mode and GEMM backend, the paged pool must stream exactly the slab
+/// pool's tokens — and both must match bare `model.generate`.
+#[test]
+fn paged_matches_slab_and_oracle_across_modes_backends_tp() {
+    let slab = KvPoolCfg {
+        max_seqs: 16,
+        max_tokens: 4096,
+        ..Default::default()
+    };
+    let paged = KvPoolCfg {
+        max_seqs: 16,
+        max_tokens: 4096,
+        block_tokens: 4,
+        paged: true,
+    };
+    for tp in [1usize, 2, 4] {
+        let cfg = tiny_model_cfg();
+        let model =
+            Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(tp), 21));
+        let oracle: Vec<Vec<u32>> = identity_requests()
+            .iter()
+            .map(|r| model.generate(&r.prompt, r.max_new))
+            .collect();
+        for mode in [SchedMode::Continuous, SchedMode::Static] {
+            for gemm in [GemmBackend::Naive, GemmBackend::TiledMt] {
+                let s = run_with_pool(&model, gemm, mode, slab, identity_requests());
+                let p = run_with_pool(&model, gemm, mode, paged, identity_requests());
+                assert_eq!(s.len(), p.len(), "tp={tp} {mode:?} {gemm:?} lost requests");
+                for ((a, b), want) in s.iter().zip(&p).zip(&oracle) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "req {} diverged slab vs paged: tp={tp} {mode:?} {gemm:?}",
+                        a.id
+                    );
+                    assert_eq!(
+                        &b.tokens, want,
+                        "req {} diverged from oracle: tp={tp} {mode:?} {gemm:?}",
+                        b.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The copy-on-write story end to end, over a live TP=2 engine: a
+/// shared-prefix batch joins blocks at admission, splits by CoW on the
+/// first divergent append, returns its keyed prefix blocks to the
+/// cache at retire — and a second wave of the same prompts revives
+/// them. Token streams must equal the solo oracle in both waves.
+#[test]
+fn shared_prefix_cow_batch_is_bit_identical_and_revives_cached_prefixes() {
+    let cfg = tiny_model_cfg();
+    let model = Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 33));
+    let engine = EngineConfig::new(EngineBackend::Host, Activation::Gelu)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .gemm(GemmBackend::TiledMt)
+        .start()
+        .unwrap();
+    let core = Scheduler::new(model.clone(), Some(engine), Arc::new(Metrics::default()), 4);
+    let pool = Arc::new(KvPool::new(KvPoolCfg {
+        max_seqs: 8,
+        max_tokens: 512,
+        block_tokens: 4,
+        paged: true,
+    }));
+    let mut cs = ContinuousScheduler::new(core, pool.clone(), SchedMode::Continuous);
+
+    // Twin pair (full share incl. the partial tail block), a one-block
+    // sharer with its own tail, and a prompt that is exactly the
+    // shared block.
+    let mk = |wave: u64| {
+        vec![
+            Request::new(wave * 10, vec![3, 1, 4, 1, 5, 9], 6),
+            Request::new(wave * 10 + 1, vec![3, 1, 4, 1, 5, 9], 6),
+            Request::new(wave * 10 + 2, vec![3, 1, 4, 1, 7, 7, 7], 6),
+            Request::new(wave * 10 + 3, vec![3, 1, 4, 1], 6),
+        ]
+    };
+    let oracle: Vec<Vec<u32>> = mk(0)
+        .iter()
+        .map(|r| model.generate(&r.prompt, r.max_new))
+        .collect();
+
+    let out = cs.run_all(mk(0));
+    assert_eq!(out.len(), 4);
+    for (r, want) in out.iter().zip(&oracle) {
+        assert_eq!(&r.tokens, want, "wave 1 req {} diverged from solo", r.id);
+    }
+    let s1 = pool.stats();
+    assert!(s1.shared_joins > 0, "twin prompts must join shared blocks");
+    assert!(s1.cow_copies > 0, "divergent append off a shared tail must CoW");
+    pool.validate().unwrap();
+    assert_eq!(pool.stats().blocks_in_use, 0, "wave 1 must drain");
+
+    // Same prompts again: the keyed prefix blocks were cached at
+    // retire, so this wave must revive rather than re-allocate.
+    let out2 = cs.run_all(mk(1));
+    for (r, want) in out2.iter().zip(&oracle) {
+        assert_eq!(&r.tokens, want, "wave 2 req {} diverged from solo", r.id);
+    }
+    let s2 = pool.stats();
+    assert!(
+        s2.prefix_cache_hits > s1.prefix_cache_hits,
+        "second wave must revive cached prefix blocks"
+    );
+    pool.validate().unwrap();
+    assert_eq!(pool.stats().blocks_in_use, 0, "wave 2 must drain");
+
+    if let Some(engine) = cs.into_engine() {
+        engine.shutdown();
+    }
+}

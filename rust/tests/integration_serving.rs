@@ -139,6 +139,7 @@ fn loadgen_percentiles_are_sane_against_live_server() {
         ServeConfig::new("127.0.0.1:0").pool(KvPoolCfg {
             max_seqs: 16,
             max_tokens: 1024,
+            ..Default::default()
         }),
     )
     .unwrap();
@@ -160,6 +161,7 @@ fn loadgen_percentiles_are_sane_against_live_server() {
             n: 12,
             mode,
             seed: 7,
+            prefix_tokens: 0,
         })
         .unwrap();
         assert_eq!(report.requests, 12, "{mode:?} lost requests");

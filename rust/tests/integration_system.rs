@@ -225,6 +225,7 @@ fn continuous_batching_end_to_end_with_kv_pool() {
         let pool = Arc::new(KvPool::new(KvPoolCfg {
             max_seqs: 4,
             max_tokens: 48,
+            ..Default::default()
         }));
         let mut sched = ContinuousScheduler::new(core, pool.clone(), mode);
         let resps = sched.run_all(reqs());

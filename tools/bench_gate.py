@@ -26,6 +26,14 @@ Compares one or more bench outputs against the committed requirements in
   hot path must stay fast -- the obs layer's one-atomic-load contract)
   and `min_enabled_over_disabled` (recording spans must not halve
   throughput).
+* `BENCH_serving.json` also carries a `kv_paged` section (a shared-prefix
+  burst drained through the same continuous scheduler on a slab pool and
+  on a paged pool with the same token budget), checked against the
+  baseline's `kv_paged` section: the paged pool must admit with strictly
+  fewer step-wait rejections and a strictly lower KV peak than the slab,
+  share at least `min_shared_joins` prefix blocks, and stream
+  bit-identical tokens (`tokens_equal`). All relative — deterministic
+  scheduler counters, no wall-clock dependence.
 
 Stdlib-only, like the other tools/ scripts.
 
@@ -147,6 +155,50 @@ def check_trace_overhead(overhead, base, failures):
             f"{min_ratio:.2f}x -- span recording costs too much")
 
 
+def check_kv_paged(cmp, base, failures):
+    """Paged-vs-slab KV admission: relative, deterministic counters."""
+    cfg = base.get("kv_paged", {})
+    slab_rej = int(cmp.get("slab_rejections", -1))
+    paged_rej = int(cmp.get("paged_rejections", -1))
+    slab_peak = int(cmp.get("slab_peak_tokens", -1))
+    paged_peak = int(cmp.get("paged_peak_tokens", -1))
+    print(f"bench gate (kv paged): slab {slab_rej} rejections / peak "
+          f"{slab_peak} tok, paged {paged_rej} rejections / peak "
+          f"{paged_peak} tok")
+
+    ok = cmp.get("tokens_equal") is True
+    print(f"  {'PASS' if ok else 'FAIL'} kv_paged/tokens_equal: "
+          f"{cmp.get('tokens_equal')}")
+    if not ok:
+        failures.append("kv_paged: paged pool changed the generated tokens")
+
+    ok = 0 <= paged_rej < slab_rej
+    print(f"  {'PASS' if ok else 'FAIL'} kv_paged/rejections: paged "
+          f"{paged_rej} strictly below slab {slab_rej}")
+    if not ok:
+        failures.append(
+            f"kv_paged: paged pool rejected {paged_rej} step-waits vs slab "
+            f"{slab_rej} — block accounting is not admitting more")
+
+    ok = 0 <= paged_peak < slab_peak
+    print(f"  {'PASS' if ok else 'FAIL'} kv_paged/peak: paged {paged_peak} "
+          f"tok strictly below slab {slab_peak} tok")
+    if not ok:
+        failures.append(
+            f"kv_paged: paged KV peak {paged_peak} not below slab peak "
+            f"{slab_peak} — prefix sharing is not saving memory")
+
+    min_joins = int(cfg.get("min_shared_joins", 1))
+    joins = int(cmp.get("paged_shared_joins", 0))
+    ok = joins >= min_joins
+    print(f"  {'PASS' if ok else 'FAIL'} kv_paged/shared_joins: {joins} "
+          f"(need >= {min_joins})")
+    if not ok:
+        failures.append(
+            f"kv_paged: only {joins} shared prefix-block joins "
+            f"(need >= {min_joins})")
+
+
 def main() -> int:
     if len(sys.argv) < 3:
         print(__doc__)
@@ -155,7 +207,7 @@ def main() -> int:
         base = json.load(f)
 
     failures = []
-    saw_gemm = saw_serving = saw_trace = False
+    saw_gemm = saw_serving = saw_trace = saw_kv_paged = False
     for path in sys.argv[1:-1]:
         with open(path) as f:
             bench = json.load(f)
@@ -168,6 +220,9 @@ def main() -> int:
         if "trace_overhead" in bench:
             saw_trace = True
             check_trace_overhead(bench["trace_overhead"], base, failures)
+        if "kv_paged" in bench:
+            saw_kv_paged = True
+            check_kv_paged(bench["kv_paged"], base, failures)
 
     # A baseline section with no bench file to check it is a silent
     # hole in the gate — fail loudly instead.
@@ -180,6 +235,9 @@ def main() -> int:
     if base.get("trace_overhead") and not saw_trace:
         failures.append("no bench file with `trace_overhead` given, but the "
                         "baseline has a trace_overhead section")
+    if base.get("kv_paged") and not saw_kv_paged:
+        failures.append("no bench file with `kv_paged` given, but the "
+                        "baseline has a kv_paged section")
 
     if failures:
         print("\nbench gate FAILED:")
