@@ -568,6 +568,34 @@ fn main() {
         tracer.len()
     );
 
+    // ---- Event-log overhead: same offline run, log off vs on ----
+    // Same contract as the tracer: a disabled emit site is one relaxed
+    // atomic load (asserted allocation-free by integration_obs), and
+    // recording structured lifecycle events must not halve throughput.
+    // Both numbers feed the CI bench gate (`serving.log_overhead`).
+    let engine_log_off = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(layers.clone())
+        .start()
+        .unwrap();
+    let log_off = run_offline(model.clone(), Some(engine_log_off), n_requests, max_new);
+    let elog = tpaware::obs::EventLog::new(1 << 16);
+    tpaware::obs::log::install(&elog);
+    let engine_log_on = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(layers.clone())
+        .start()
+        .unwrap();
+    let log_on = run_offline(model.clone(), Some(engine_log_on), n_requests, max_new);
+    tpaware::obs::log::uninstall();
+    assert!(!elog.is_empty(), "logged run recorded no lifecycle events");
+    let log_ratio = log_on.tok_per_s / log_off.tok_per_s;
+    println!(
+        "Event-log overhead (offline, host engine, TP=2): disabled {:.1} tok/s, \
+         enabled {:.1} tok/s ({log_ratio:.2}x, {} events recorded)\n",
+        log_off.tok_per_s,
+        log_on.tok_per_s,
+        elog.len()
+    );
+
     let bench_mode = if fast { "fast" } else { "full" };
     let out = Json::obj(vec![
         ("mode", bench_mode.into()),
@@ -596,20 +624,35 @@ fn main() {
                 ("spans", tracer.len().into()),
             ]),
         ),
+        (
+            "log_overhead",
+            Json::obj(vec![
+                ("disabled_tok_s", log_off.tok_per_s.into()),
+                ("enabled_tok_s", log_on.tok_per_s.into()),
+                ("enabled_over_disabled", log_ratio.into()),
+                ("events", elog.len().into()),
+            ]),
+        ),
     ]);
 
     let dir = tpaware::util::timer::bench_results_dir();
     std::fs::create_dir_all(&dir).ok();
     std::fs::write(dir.join("BENCH_serving.json"), out.to_pretty()).ok();
     std::fs::write(dir.join("serving_loadgen.csv"), report.to_csv()).ok();
+    std::fs::write(
+        dir.join("serving_loadgen_requests.csv"),
+        report.to_request_csv(),
+    )
+    .ok();
     std::fs::write(dir.join("serving_bench.csv"), csv).ok();
     std::fs::write(dir.join("serving_modes.csv"), mode_csv).ok();
     std::fs::write(dir.join("serving_gemm_backends.csv"), gemm_csv).ok();
     std::fs::write(dir.join("serving_kv_paged.csv"), kv_csv).ok();
     println!(
         "CSV written to {}: serving_bench.csv, serving_modes.csv, \
-         serving_gemm_backends.csv, serving_kv_paged.csv and \
-         serving_loadgen.csv; gate input to {}",
+         serving_gemm_backends.csv, serving_kv_paged.csv, \
+         serving_loadgen.csv and serving_loadgen_requests.csv; \
+         gate input to {}",
         dir.display(),
         dir.join("BENCH_serving.json").display()
     );

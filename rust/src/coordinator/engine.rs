@@ -110,6 +110,7 @@ pub struct EngineConfig {
     manifest: Option<Manifest>,
     opts: EngineOptions,
     trace: Option<Arc<crate::obs::Tracer>>,
+    log: Option<Arc<crate::obs::EventLog>>,
 }
 
 impl EngineConfig {
@@ -123,6 +124,7 @@ impl EngineConfig {
             manifest: None,
             opts: EngineOptions::default(),
             trace: None,
+            log: None,
         }
     }
 
@@ -182,10 +184,22 @@ impl EngineConfig {
         self
     }
 
+    /// Attach a structured event log. [`EngineConfig::start`] installs
+    /// it process-globally (see [`crate::obs::log::install`]), giving
+    /// offline and bench runs the same request-lifecycle event stream
+    /// the serving path records.
+    pub fn log(mut self, log: Arc<crate::obs::EventLog>) -> EngineConfig {
+        self.log = Some(log);
+        self
+    }
+
     /// Resolve the weight source and spawn the rank pool.
     pub fn start(self) -> Result<TpEngine> {
         if let Some(t) = &self.trace {
             crate::obs::install(t);
+        }
+        if let Some(l) = &self.log {
+            crate::obs::log::install(l);
         }
         let layers = match self.source {
             WeightSource::Layers(layers) => layers,

@@ -41,8 +41,16 @@
 //! [`KvPool::validate`] checks the allocator's conservation and
 //! refcount invariants (the randomized harness in
 //! `tests/integration_kv_paged.rs` calls it after every operation).
+//!
+//! Allocation decisions are also **attributable**: [`KvPool::try_admit`]
+//! and [`KvPool::ensure_append`] take the client-visible request id and
+//! emit `prefix_hit` / `cow_copy` / `growth_stall` events into the
+//! structured event log ([`crate::obs::log`]) when one is installed, so
+//! a postmortem can say *which request* stalled or copied, not just how
+//! many times the pool did.
 
 use crate::model::transformer::KvCache;
+use crate::obs::log::{emit, EventKind};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -367,7 +375,15 @@ impl KvPool {
     /// free/evictable block as the projected next-step need. On failure
     /// counts a rejection and returns `None` (backpressure); the
     /// returned cache's [`KvCache::block_table`] records the blocks.
-    pub fn try_admit(&self, prompt: &[u32], max_new: usize, n_layers: usize) -> Option<KvCache> {
+    /// `req` is the client-visible request id, stamped on any
+    /// `prefix_hit` event this admission emits.
+    pub fn try_admit(
+        &self,
+        req: u64,
+        prompt: &[u32],
+        max_new: usize,
+        n_layers: usize,
+    ) -> Option<KvCache> {
         if !self.cfg.paged {
             return self.try_acquire(prompt.len() + max_new, n_layers);
         }
@@ -454,6 +470,9 @@ impl KvPool {
             .into_iter()
             .map(|x| x.expect("every chunk resolved"))
             .collect();
+        if hits > 0 {
+            emit(req, EventKind::PrefixHit { blocks: hits });
+        }
         Some(kv)
     }
 
@@ -467,8 +486,16 @@ impl KvPool {
     /// block whose content is about to diverge from its prefix key;
     /// appends past the table's end allocate a fresh block. Returns
     /// `false` (and counts a growth stall) when no block can be
-    /// allocated — the sequence must skip this step.
-    pub fn ensure_append(&self, kv: &mut KvCache, next_index: usize, prompt_len: usize) -> bool {
+    /// allocated — the sequence must skip this step. `req` is the
+    /// client-visible request id, stamped on any `growth_stall` /
+    /// `cow_copy` event this call emits.
+    pub fn ensure_append(
+        &self,
+        req: u64,
+        kv: &mut KvCache,
+        next_index: usize,
+        prompt_len: usize,
+    ) -> bool {
         if !self.cfg.paged || next_index < prompt_len {
             return true;
         }
@@ -479,6 +506,7 @@ impl KvPool {
         while kv.block_table.len() <= bi {
             let Some(id) = alloc_block(st) else {
                 st.stats.growth_stalls += 1;
+                emit(req, EventKind::GrowthStall);
                 return false;
             };
             st.blocks[id as usize] = Block { refs: 1, key: None };
@@ -490,12 +518,14 @@ impl KvPool {
             // Shared tail: take a private copy before diverging.
             let Some(new_id) = alloc_block(st) else {
                 st.stats.growth_stalls += 1;
+                emit(req, EventKind::GrowthStall);
                 return false;
             };
             st.blocks[new_id as usize] = Block { refs: 1, key: None };
             st.blocks[id as usize].refs -= 1;
             note_block_live(&mut st.stats, b);
             st.stats.cow_copies += 1;
+            emit(req, EventKind::CowCopy);
             kv.block_table[bi] = new_id;
         } else if let Some(k) = st.blocks[id as usize].key.take() {
             // Sole owner appending into a keyed block: its content is
@@ -785,7 +815,7 @@ mod tests {
         let pool = KvPool::new(pcfg(4, 64, 4));
         // 5-token prompt -> 2 chunks (one full, one partial); max_new
         // is NOT charged up front.
-        let kv = pool.try_admit(&[1, 2, 3, 4, 5], 40, 2).unwrap();
+        let kv = pool.try_admit(1, &[1, 2, 3, 4, 5], 40, 2).unwrap();
         assert_eq!(kv.layers.len(), 2);
         assert_eq!(kv.block_table.len(), 2);
         let s = pool.stats();
@@ -802,8 +832,8 @@ mod tests {
     fn identical_prompts_share_blocks() {
         let pool = KvPool::new(pcfg(4, 64, 4));
         let prompt = [7u32, 8, 9, 10, 11, 12];
-        let a = pool.try_admit(&prompt, 8, 1).unwrap();
-        let b = pool.try_admit(&prompt, 8, 1).unwrap();
+        let a = pool.try_admit(1, &prompt, 8, 1).unwrap();
+        let b = pool.try_admit(1, &prompt, 8, 1).unwrap();
         assert_eq!(a.block_table, b.block_table, "identical prefixes share");
         let s = pool.stats();
         assert_eq!(s.blocks_in_use, 2, "shared blocks are counted once");
@@ -822,12 +852,12 @@ mod tests {
     fn divergent_append_takes_cow_copy() {
         let pool = KvPool::new(pcfg(4, 64, 4));
         let prompt = [1u32, 2, 3, 4, 5]; // 2 chunks, tail is partial
-        let mut a = pool.try_admit(&prompt, 8, 1).unwrap();
-        let mut b = pool.try_admit(&prompt, 8, 1).unwrap();
+        let mut a = pool.try_admit(1, &prompt, 8, 1).unwrap();
+        let mut b = pool.try_admit(1, &prompt, 8, 1).unwrap();
         let shared_tail = a.block_table[1];
         // First divergent append (position 5 = prompt_len) on a: the
         // tail block is shared, so a must copy.
-        assert!(pool.ensure_append(&mut a, 5, prompt.len()));
+        assert!(pool.ensure_append(1, &mut a, 5, prompt.len()));
         let s = pool.stats();
         assert_eq!(s.cow_copies, 1);
         assert_ne!(a.block_table[1], b.block_table[1]);
@@ -835,7 +865,7 @@ mod tests {
         assert_eq!(pool.block_refs()[shared_tail as usize], 1);
         pool.validate().unwrap();
         // b now appends as sole owner: no copy, block just loses its key.
-        assert!(pool.ensure_append(&mut b, 5, prompt.len()));
+        assert!(pool.ensure_append(1, &mut b, 5, prompt.len()));
         assert_eq!(pool.stats().cow_copies, 1);
         assert_eq!(b.block_table[1], shared_tail);
         pool.validate().unwrap();
@@ -848,10 +878,10 @@ mod tests {
     fn prefill_positions_never_allocate() {
         let pool = KvPool::new(pcfg(2, 32, 4));
         let prompt = [1u32, 2, 3, 4, 5, 6];
-        let mut kv = pool.try_admit(&prompt, 4, 1).unwrap();
+        let mut kv = pool.try_admit(1, &prompt, 4, 1).unwrap();
         let before = pool.stats();
         for i in 0..prompt.len() {
-            assert!(pool.ensure_append(&mut kv, i, prompt.len()));
+            assert!(pool.ensure_append(1, &mut kv, i, prompt.len()));
         }
         let after = pool.stats();
         assert_eq!(before.blocks_in_use, after.blocks_in_use);
@@ -863,16 +893,16 @@ mod tests {
     fn growth_allocates_on_demand_and_stalls_when_full() {
         // 3 blocks of 4 tokens.
         let pool = KvPool::new(pcfg(2, 12, 4));
-        let mut kv = pool.try_admit(&[1, 2, 3, 4], 20, 1).unwrap();
+        let mut kv = pool.try_admit(1, &[1, 2, 3, 4], 20, 1).unwrap();
         assert_eq!(kv.block_table.len(), 1);
         // Appends walk into blocks 2 and 3 as decode progresses.
         for i in 4..12 {
-            assert!(pool.ensure_append(&mut kv, i, 4), "append {i} must fit");
+            assert!(pool.ensure_append(1, &mut kv, i, 4), "append {i} must fit");
         }
         assert_eq!(kv.block_table.len(), 3);
         assert_eq!(pool.stats().blocks_in_use, 3);
         // Pool exhausted: the 13th token has nowhere to go.
-        assert!(!pool.ensure_append(&mut kv, 12, 4));
+        assert!(!pool.ensure_append(1, &mut kv, 12, 4));
         assert_eq!(pool.stats().growth_stalls, 1);
         pool.validate().unwrap();
         pool.release(kv, 0);
@@ -884,14 +914,14 @@ mod tests {
     fn retired_prefix_blocks_are_revived_from_cache() {
         let pool = KvPool::new(pcfg(2, 64, 4));
         let prompt = [9u32, 9, 9, 9, 5, 5, 5, 5]; // two full chunks
-        let kv = pool.try_admit(&prompt, 4, 1).unwrap();
+        let kv = pool.try_admit(1, &prompt, 4, 1).unwrap();
         let table = kv.block_table.clone();
         pool.release(kv, 0);
         let s = pool.stats();
         assert_eq!(s.blocks_in_use, 0);
         assert_eq!(s.cached_blocks, 2, "keyed blocks linger in the cache");
         pool.validate().unwrap();
-        let kv2 = pool.try_admit(&prompt, 4, 1).unwrap();
+        let kv2 = pool.try_admit(1, &prompt, 4, 1).unwrap();
         assert_eq!(kv2.block_table, table, "same blocks revived");
         assert_eq!(pool.stats().prefix_cache_hits, 2);
         pool.validate().unwrap();
@@ -903,13 +933,13 @@ mod tests {
         let pool = KvPool::new(pcfg(1, 8, 4)); // 2 blocks
         assert!(pool.admissible(7), "7 prompt tokens + 1 fits 2 blocks");
         assert!(!pool.admissible(8), "needs a third block for token 9");
-        let kv = pool.try_admit(&[1, 2, 3, 4], 4, 1).unwrap();
+        let kv = pool.try_admit(1, &[1, 2, 3, 4], 4, 1).unwrap();
         // Slot limit: max_seqs = 1.
-        assert!(pool.try_admit(&[5], 1, 1).is_none());
+        assert!(pool.try_admit(1, &[5], 1, 1).is_none());
         assert_eq!(pool.stats().rejections, 1);
         pool.release(kv, 0);
         // Block pressure: a 5-token prompt needs 2 blocks + 1 projected.
-        let a = pool.try_admit(&[1], 1, 1).unwrap();
+        let a = pool.try_admit(1, &[1], 1, 1).unwrap();
         drop(a);
         pool.validate().unwrap();
     }
@@ -946,7 +976,7 @@ mod tests {
                         let prompt: Vec<u32> =
                             (0..plen).map(|i| base * 100 + i as u32).collect();
                         if live.len() < 8 {
-                            if let Some(kv) = pool.try_admit(&prompt, 8, 1) {
+                            if let Some(kv) = pool.try_admit(1, &prompt, 8, 1) {
                                 live.push((kv, plen, plen));
                             }
                         }
@@ -955,7 +985,7 @@ mod tests {
                         if !live.is_empty() {
                             let i = g.below(live.len());
                             let (kv, plen, len) = &mut live[i];
-                            if pool.ensure_append(kv, *len, *plen) {
+                            if pool.ensure_append(1, kv, *len, *plen) {
                                 *len += 1;
                             }
                         }

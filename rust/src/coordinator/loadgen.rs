@@ -173,6 +173,21 @@ impl Percentiles {
     }
 }
 
+/// One request's client-side row, keyed by the wire request id the
+/// server echoed — the join key against server-side event logs
+/// (`admit`/`retire` events carry the same id) and postmortem bundles.
+#[derive(Clone, Copy, Debug)]
+pub struct PerRequest {
+    /// The request id stamped on the wire (unique across the run).
+    pub id: u64,
+    /// Tokens streamed for this request.
+    pub tokens: usize,
+    /// Client-side time to first token, milliseconds.
+    pub ttft_ms: f64,
+    /// Client-side end-to-end latency, milliseconds.
+    pub e2e_ms: f64,
+}
+
 /// A completed loadgen run: counts plus the three headline latency
 /// populations, client-side measured.
 #[derive(Clone, Debug)]
@@ -189,6 +204,8 @@ pub struct LoadReport {
     pub itl_ms: Percentiles,
     /// Full request latency, send to `done`.
     pub e2e_ms: Percentiles,
+    /// Per-request rows sorted by id (see [`PerRequest`]).
+    pub per_request: Vec<PerRequest>,
 }
 
 impl LoadReport {
@@ -218,6 +235,22 @@ impl LoadReport {
         out
     }
 
+    /// Per-request CSV view, one row per request keyed by wire id
+    /// (`id,tokens,ttft_ms,e2e_ms`) — the client half of an
+    /// observability join: the `id` column matches the `req` field of
+    /// the server's structured event log and the request ids inside a
+    /// postmortem bundle.
+    pub fn to_request_csv(&self) -> String {
+        let mut out = String::from("id,tokens,ttft_ms,e2e_ms\n");
+        for r in &self.per_request {
+            out.push_str(&format!(
+                "{},{},{:.3},{:.3}\n",
+                r.id, r.tokens, r.ttft_ms, r.e2e_ms
+            ));
+        }
+        out
+    }
+
     /// JSON view (the serving bench embeds this in `BENCH_serving.json`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -234,6 +267,7 @@ impl LoadReport {
 
 /// One request's client-side measurements.
 struct Sample {
+    id: u64,
     ttft_ms: f64,
     e2e_ms: f64,
     itl_ms: Vec<f64>,
@@ -244,10 +278,13 @@ fn ms(d: Duration) -> f64 {
     d.as_secs_f64() * 1e3
 }
 
-/// Stream one request on `c`, timing every token event as it arrives.
-fn run_one(c: &mut Client, a: &Arrival) -> Result<Sample> {
+/// Stream one request on `c` under the caller-chosen request id
+/// (stamped on the wire and echoed by the server, so this row joins
+/// against server-side event logs and postmortem bundles), timing every
+/// token event as it arrives.
+fn run_one(c: &mut Client, id: u64, a: &Arrival) -> Result<Sample> {
     let start = Instant::now();
-    let mut stream = c.generate_streamed(&a.prompt, a.max_new)?;
+    let mut stream = c.generate_streamed_as(id, &a.prompt, a.max_new)?;
     let mut ttft: Option<f64> = None;
     let mut last: Option<Instant> = None;
     let mut tokens: Vec<u32> = Vec::new();
@@ -273,6 +310,7 @@ fn run_one(c: &mut Client, a: &Arrival) -> Result<Sample> {
         done.tokens.len()
     );
     Ok(Sample {
+        id,
         ttft_ms: ttft.unwrap_or(e2e_ms),
         e2e_ms,
         itl_ms,
@@ -297,7 +335,8 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
         LoadMode::OpenLoop { .. } => {
             let handles: Vec<_> = trace
                 .into_iter()
-                .map(|a| {
+                .enumerate()
+                .map(|(i, a)| {
                     let addr = cfg.addr.clone();
                     std::thread::spawn(move || -> Result<Sample> {
                         let now = t0.elapsed();
@@ -305,7 +344,7 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
                             std::thread::sleep(a.at - now);
                         }
                         let mut c = Client::connect(&addr)?;
-                        run_one(&mut c, &a)
+                        run_one(&mut c, i as u64 + 1, &a)
                     })
                 })
                 .collect();
@@ -334,7 +373,7 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
                             if i >= trace.len() {
                                 return Ok(out);
                             }
-                            out.push(run_one(&mut c, &trace[i])?);
+                            out.push(run_one(&mut c, i as u64 + 1, &trace[i])?);
                         }
                     })
                 })
@@ -349,6 +388,16 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
         }
     };
     let wall_s = t0.elapsed().as_secs_f64();
+    let mut per_request: Vec<PerRequest> = samples
+        .iter()
+        .map(|s| PerRequest {
+            id: s.id,
+            tokens: s.tokens,
+            ttft_ms: s.ttft_ms,
+            e2e_ms: s.e2e_ms,
+        })
+        .collect();
+    per_request.sort_by_key(|r| r.id);
     Ok(LoadReport {
         requests: samples.len(),
         tokens: samples.iter().map(|s| s.tokens).sum(),
@@ -358,6 +407,7 @@ pub fn run(cfg: &LoadgenCfg) -> Result<LoadReport> {
             samples.iter().flat_map(|s| s.itl_ms.iter().copied()).collect(),
         ),
         e2e_ms: Percentiles::compute(samples.iter().map(|s| s.e2e_ms).collect()),
+        per_request,
     })
 }
 
@@ -436,6 +486,20 @@ mod tests {
             ttft_ms: Percentiles::compute(vec![1.0, 2.0, 3.0]),
             itl_ms: Percentiles::compute(vec![0.5; 9]),
             e2e_ms: Percentiles::compute(vec![4.0, 5.0, 6.0]),
+            per_request: vec![
+                PerRequest {
+                    id: 2,
+                    tokens: 4,
+                    ttft_ms: 2.0,
+                    e2e_ms: 5.0,
+                },
+                PerRequest {
+                    id: 1,
+                    tokens: 4,
+                    ttft_ms: 1.0,
+                    e2e_ms: 4.0,
+                },
+            ],
         };
         let csv = r.to_csv();
         let lines: Vec<&str> = csv.trim().lines().collect();
@@ -455,5 +519,15 @@ mod tests {
         assert_eq!(j.get("requests").as_usize(), Some(3));
         assert_eq!(j.get("ttft").get("count").as_usize(), Some(3));
         assert_eq!(j.get("itl").get("p50_ms").as_f64(), Some(0.5));
+        // Per-request CSV: header + one row per request, id-keyed.
+        let rcsv = r.to_request_csv();
+        let rlines: Vec<&str> = rcsv.trim().lines().collect();
+        assert_eq!(rlines[0], "id,tokens,ttft_ms,e2e_ms");
+        assert_eq!(rlines.len(), 3);
+        for line in &rlines[1..] {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells.len(), 4);
+            cells[0].parse::<u64>().unwrap();
+        }
     }
 }

@@ -382,6 +382,12 @@ impl Metrics {
                 self.gemm_backend.lock().unwrap().as_str().into(),
             ),
             ("model_drift", crate::obs::drift::global().to_json()),
+            (
+                "slo",
+                crate::obs::slo::installed()
+                    .map(|t| t.snapshot().to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -422,9 +428,13 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
 
 /// Render the whole registry in the Prometheus text exposition format
 /// (version 0.0.4): `tpaware_`-prefixed counters and gauges, latency
-/// histograms as `_bucket`/`_sum`/`_count` families in seconds, and one
-/// `tpaware_model_drift{phase=...}` gauge per cost-model phase
-/// (measured/predicted duration ratio from the tracing layer).
+/// histograms as `_bucket`/`_sum`/`_count` families in seconds,
+/// `tpaware_slo_*` burn-rate gauges (zero without an installed
+/// [`crate::obs::slo`] tracker, so the family set is scrape-stable),
+/// and one `tpaware_model_drift{phase=...}` gauge per cost-model phase
+/// (measured/predicted duration ratio from the tracing layer). Every
+/// family is preceded by its `# HELP` and `# TYPE` lines — the
+/// roundtrip test parses the exposition and asserts it.
 pub fn prometheus_text(m: &Metrics) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
@@ -596,6 +606,52 @@ pub fn prometheus_text(m: &Metrics) -> String {
         "Queue wait from arrival to batch admission.",
         &m.admission,
     );
+    // SLO burn rates: always exposed (zero without an installed
+    // tracker) so dashboards and alert rules see a stable family set.
+    let slo = crate::obs::slo::installed().map(|t| t.snapshot());
+    let obj = |s: &Option<crate::obs::slo::SloSnapshot>,
+               pick: fn(&crate::obs::slo::SloSnapshot) -> (f64, u64)| {
+        s.as_ref().map(pick).unwrap_or((0.0, 0))
+    };
+    let (ttft_burn, ttft_n) = obj(&slo, |s| (s.ttft.burn_rate, s.ttft.samples));
+    let (itl_burn, itl_n) = obj(&slo, |s| (s.itl.burn_rate, s.itl.samples));
+    let (err_burn, err_n) = obj(&slo, |s| (s.error.burn_rate, s.error.samples));
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_ttft_burn_rate",
+        "TTFT error-budget burn rate over the sliding window.",
+        ttft_burn,
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_itl_burn_rate",
+        "Inter-token-latency error-budget burn rate over the sliding window.",
+        itl_burn,
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_error_burn_rate",
+        "Request-error budget burn rate over the sliding window.",
+        err_burn,
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_ttft_window_samples",
+        "TTFT samples in the current SLO window.",
+        ttft_n as f64,
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_itl_window_samples",
+        "Inter-token-latency samples in the current SLO window.",
+        itl_n as f64,
+    );
+    prom_gauge(
+        &mut out,
+        "tpaware_slo_error_window_samples",
+        "Request outcomes in the current SLO window.",
+        err_n as f64,
+    );
     let _ = writeln!(
         out,
         "# HELP tpaware_model_drift Measured/predicted duration ratio per cost-model phase."
@@ -726,6 +782,87 @@ mod tests {
         // counted in every later bucket's value too.
         let le_inf_once = text.matches("tpaware_step_seconds_bucket{le=\"+Inf\"}").count();
         assert_eq!(le_inf_once, 1);
+    }
+
+    /// Parser roundtrip over the full exposition: every sample family
+    /// (histogram `_bucket`/`_sum`/`_count` suffixes stripped, labels
+    /// dropped) must be declared by both a `# HELP` and a `# TYPE`
+    /// line — a scraper-visible invariant, not a formatting nicety.
+    #[test]
+    fn every_exposed_family_has_help_and_type() {
+        use std::collections::HashSet;
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_received);
+        m.ttft.observe_us(900);
+        m.set_kv(KvPoolStats::default());
+        let text = prometheus_text(&m);
+        let mut help: HashSet<String> = HashSet::new();
+        let mut typ: HashSet<String> = HashSet::new();
+        let mut families: HashSet<String> = HashSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                help.insert(rest.split_whitespace().next().unwrap().to_string());
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                typ.insert(rest.split_whitespace().next().unwrap().to_string());
+            } else if !line.trim().is_empty() {
+                let name = line
+                    .split(|c| c == '{' || c == ' ')
+                    .next()
+                    .expect("sample line has a name");
+                let fam = name
+                    .strip_suffix("_bucket")
+                    .or_else(|| name.strip_suffix("_sum"))
+                    .or_else(|| name.strip_suffix("_count"))
+                    .unwrap_or(name);
+                families.insert(fam.to_string());
+            }
+        }
+        assert!(!families.is_empty());
+        for f in &families {
+            assert!(help.contains(f), "family {f} lacks a # HELP line");
+            assert!(typ.contains(f), "family {f} lacks a # TYPE line");
+        }
+        // The SLO gauges are part of the stable family set even with no
+        // tracker installed.
+        for f in [
+            "tpaware_slo_ttft_burn_rate",
+            "tpaware_slo_itl_burn_rate",
+            "tpaware_slo_error_burn_rate",
+        ] {
+            assert!(families.contains(f), "missing stable family {f}");
+        }
+    }
+
+    /// With an installed tracker, recorded violations surface as
+    /// nonzero burn-rate gauges in the exposition and an `slo` object
+    /// in the metrics JSON; without one, the gauges are zero and the
+    /// JSON entry is null.
+    #[test]
+    fn slo_gauges_reflect_installed_tracker() {
+        let _guard = crate::obs::test_guard();
+        let m = Metrics::default();
+        let t = crate::obs::SloTracker::new(crate::obs::SloCfg {
+            ttft_ms: 10.0,
+            ..Default::default()
+        });
+        crate::obs::slo::install(&t);
+        t.record_ttft_ms(50.0); // violation: 1/1 over a 0.01 budget
+        let text = prometheus_text(&m);
+        assert!(text.contains("tpaware_slo_ttft_window_samples 1"), "{text}");
+        let burn: f64 = text
+            .lines()
+            .find(|l| l.starts_with("tpaware_slo_ttft_burn_rate "))
+            .and_then(|l| l.split(' ').nth(1))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(burn > 1.0, "one violating sample must burn, got {burn}");
+        let j = m.to_json();
+        assert_eq!(j.get("slo").get("ttft").get("violations").as_usize(), Some(1));
+        crate::obs::slo::uninstall();
+        let text = prometheus_text(&m);
+        assert!(text.contains("tpaware_slo_ttft_burn_rate 0\n"), "{text}");
+        assert!(matches!(m.to_json().get("slo"), &Json::Null));
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! * [`server`] — nonblocking streaming TCP front end (readiness loop,
 //!   line-JSON v2 protocol with per-token events) + client.
 //! * [`loadgen`] — open/closed-loop load harness over the streaming
-//!   client (`tpaware loadgen`), reporting TTFT/ITL/e2e percentiles.
-//! * [`metrics`] — counters/histograms surfaced by the server and benches.
+//!   client (`tpaware loadgen`), reporting TTFT/ITL/e2e percentiles and
+//!   per-request rows keyed by the wire request id (the join key
+//!   against server-side event logs and postmortem bundles).
+//! * [`metrics`] — counters/histograms surfaced by the server and
+//!   benches, including `tpaware_slo_*` burn-rate gauges.
 
 pub mod batcher;
 pub mod engine;
@@ -31,7 +34,7 @@ pub mod server;
 
 pub use engine::{EngineBackend, EngineConfig, EngineOptions, TpEngine};
 pub use kv_pool::{KvPool, KvPoolCfg};
-pub use loadgen::{LoadMode, LoadReport, LoadgenCfg};
+pub use loadgen::{LoadMode, LoadReport, LoadgenCfg, PerRequest};
 pub use request::{Request, Response, TokenEvent};
 pub use scheduler::{ContinuousScheduler, Scheduler};
 pub use server::{Client, ClientError, ServeConfig, Server, TokenStream};

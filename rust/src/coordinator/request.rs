@@ -7,6 +7,12 @@ use std::time::Instant;
 pub struct Request {
     /// Caller-assigned request id (echoed in the [`Response`]).
     pub id: u64,
+    /// Client-visible correlation id: the id the *caller* supplied on
+    /// the wire, threaded through the scheduler and KV pool into every
+    /// structured log event ([`crate::obs::log`]) so loadgen CSV rows,
+    /// server event logs and postmortem bundles all join on one key.
+    /// Defaults to `id` for offline/batch callers.
+    pub client_id: u64,
     /// Prompt token ids (byte-level tokenizer upstream).
     pub prompt: Vec<u32>,
     /// Number of tokens to generate.
@@ -16,14 +22,23 @@ pub struct Request {
 }
 
 impl Request {
-    /// Build a request arriving now.
+    /// Build a request arriving now. The client correlation id defaults
+    /// to `id`; servers override it with [`Request::with_client_id`]
+    /// when the caller supplied one on the wire.
     pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
         Request {
             id,
+            client_id: id,
             prompt,
             max_new,
             arrival: Instant::now(),
         }
+    }
+
+    /// Override the client-visible correlation id (builder-style).
+    pub fn with_client_id(mut self, client_id: u64) -> Request {
+        self.client_id = client_id;
+        self
     }
 
     /// Worst-case KV tokens this request can occupy: one cache row per
@@ -144,6 +159,15 @@ mod tests {
         let s = SeqState::new(Request::new(2, vec![], 1), 1);
         assert_eq!(s.next_token, 0);
         assert!(!s.prefilling());
+    }
+
+    #[test]
+    fn client_id_defaults_to_id_and_overrides() {
+        let r = Request::new(7, vec![1], 1);
+        assert_eq!(r.client_id, 7);
+        let r = r.with_client_id(42);
+        assert_eq!(r.client_id, 42);
+        assert_eq!(r.id, 7);
     }
 
     #[test]

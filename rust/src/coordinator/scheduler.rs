@@ -35,6 +35,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response, SeqState, TokenEvent};
 use crate::coordinator::TpEngine;
 use crate::model::transformer::{argmax, Transformer};
+use crate::obs::log::{emit, EventKind};
+use crate::obs::slo;
 use crate::simkernel::pipeline::SchedMode;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -171,14 +173,14 @@ impl Scheduler {
                 let now = Instant::now();
                 if s.first_token_at.is_none() {
                     s.first_token_at = Some(now);
-                    self.metrics
-                        .ttft
-                        .observe_us(s.req.arrival.elapsed().as_micros() as u64);
+                    let ttft_us = s.req.arrival.elapsed().as_micros() as u64;
+                    self.metrics.ttft.observe_us(ttft_us);
+                    slo::record_ttft_ms(ttft_us as f64 / 1e3);
                 }
                 if let Some(last) = s.last_token_at {
-                    self.metrics
-                        .itl
-                        .observe_us(now.duration_since(last).as_micros() as u64);
+                    let itl_us = now.duration_since(last).as_micros() as u64;
+                    self.metrics.itl.observe_us(itl_us);
+                    slo::record_itl_ms(itl_us as f64 / 1e3);
                 }
                 s.last_token_at = Some(now);
                 s.generated.push(tok);
@@ -223,6 +225,15 @@ impl Scheduler {
                     .unwrap_or(total_ms);
                 self.metrics.e2e.observe_ms(total_ms);
                 Metrics::inc(&self.metrics.requests_completed);
+                emit(
+                    s.req.client_id,
+                    EventKind::Retire {
+                        tokens: s.generated.len(),
+                        ttft_us: (ttft_ms * 1e3) as u64,
+                        e2e_us: (total_ms * 1e3) as u64,
+                    },
+                );
+                slo::record_outcome(true);
                 reclaim(s);
                 done.push(Response {
                     id: s.req.id,
@@ -327,6 +338,8 @@ impl ContinuousScheduler {
         let budget = self.pool.token_budget();
         if !self.pool.admissible(req.prompt.len()) {
             Metrics::inc(&self.core.metrics.requests_completed);
+            emit(req.client_id, EventKind::Reject { reason: "oversized" });
+            slo::record_outcome(false);
             let total_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
             return Some(Response {
                 id: req.id,
@@ -362,14 +375,16 @@ impl ContinuousScheduler {
             let Some(front) = self.queue.front() else {
                 break;
             };
-            let Some(kv) = self.pool.try_admit(&front.prompt, front.max_new, n_layers) else {
+            let Some(kv) =
+                self.pool
+                    .try_admit(front.client_id, &front.prompt, front.max_new, n_layers)
+            else {
                 break; // backpressure: front stays queued, FIFO preserved
             };
             let req = self.queue.pop_front().expect("front checked above");
-            self.core
-                .metrics
-                .admission
-                .observe_us(req.arrival.elapsed().as_micros() as u64);
+            let queue_us = req.arrival.elapsed().as_micros() as u64;
+            self.core.metrics.admission.observe_us(queue_us);
+            emit(req.client_id, EventKind::Admit { queue_us });
             self.active.push(SeqState::with_cache(req, kv));
         }
     }
@@ -397,7 +412,9 @@ impl ContinuousScheduler {
             let mut any_ready = false;
             for s in &mut self.active {
                 let next = s.kv.len;
-                let ok = self.pool.ensure_append(&mut s.kv, next, s.req.prompt.len());
+                let ok = self
+                    .pool
+                    .ensure_append(s.req.client_id, &mut s.kv, next, s.req.prompt.len());
                 s.stalled = !ok;
                 any_ready |= ok;
             }
@@ -406,6 +423,12 @@ impl ContinuousScheduler {
             }
             let mut victim = self.active.pop().expect("checked non-empty");
             self.pool.note_preemption();
+            emit(
+                victim.req.client_id,
+                EventKind::Preempt {
+                    tokens: victim.generated.len(),
+                },
+            );
             let mut prompt = victim.req.prompt.clone();
             prompt.extend(victim.generated.iter().copied());
             let remaining = victim.req.max_new - victim.generated.len();
@@ -416,6 +439,7 @@ impl ContinuousScheduler {
             self.pool.release(kv, victim.req.kv_tokens());
             self.queue.push_front(Request {
                 id: victim.req.id,
+                client_id: victim.req.client_id,
                 prompt,
                 max_new: remaining,
                 arrival: victim.req.arrival,

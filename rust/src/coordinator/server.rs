@@ -54,6 +54,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::scheduler::{ContinuousScheduler, Scheduler};
 use crate::err;
+use crate::obs::log::{emit, EventKind};
 use crate::simkernel::pipeline::SchedMode;
 use crate::util::error::{Context as _, Error, Result};
 use crate::util::json::{self, Json};
@@ -89,6 +90,20 @@ pub struct ServeConfig {
     /// (see [`crate::obs::install`]) so one `--trace-out` file carries
     /// the whole accept→admit→layer→gemm/collective→done timeline.
     pub trace: Option<Arc<crate::obs::Tracer>>,
+    /// Structured event log, installed process-globally by
+    /// [`Server::serve`] (see [`crate::obs::log::install`]): request
+    /// lifecycle events (admit/reject/stall/preempt/retire…) keyed by
+    /// the client-visible request id.
+    pub log: Option<Arc<crate::obs::EventLog>>,
+    /// SLO tracker, installed process-globally by [`Server::serve`]
+    /// (see [`crate::obs::slo::install`]): sliding-window burn-rate
+    /// gauges exported as `tpaware_slo_*`.
+    pub slo: Option<Arc<crate::obs::SloTracker>>,
+    /// Flight recorder: the I/O loop polls its anomaly triggers (SLO
+    /// burn, drift, KV stall/rejection bursts) every ~250 ms and
+    /// snapshots a postmortem bundle on breach; the `dump` wire command
+    /// captures one on demand.
+    pub flight: Option<Arc<crate::obs::FlightRecorder>>,
 }
 
 impl ServeConfig {
@@ -104,6 +119,9 @@ impl ServeConfig {
             idle_timeout: Duration::from_secs(300),
             drain_timeout: Duration::from_secs(10),
             trace: None,
+            log: None,
+            slo: None,
+            flight: None,
         }
     }
 
@@ -142,6 +160,61 @@ impl ServeConfig {
     pub fn trace(mut self, tracer: Arc<crate::obs::Tracer>) -> ServeConfig {
         self.trace = Some(tracer);
         self
+    }
+
+    /// Attach a structured event log, installed process-globally at
+    /// [`Server::serve`] (see [`ServeConfig::log`]).
+    pub fn log(mut self, log: Arc<crate::obs::EventLog>) -> ServeConfig {
+        self.log = Some(log);
+        self
+    }
+
+    /// Attach an SLO tracker, installed process-globally at
+    /// [`Server::serve`] (see [`ServeConfig::slo`]).
+    pub fn slo(mut self, slo: Arc<crate::obs::SloTracker>) -> ServeConfig {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Attach a flight recorder (see [`ServeConfig::flight`]).
+    pub fn flight(mut self, flight: Arc<crate::obs::FlightRecorder>) -> ServeConfig {
+        self.flight = Some(flight);
+        self
+    }
+
+    /// A JSON summary of this config, embedded in postmortem bundles as
+    /// `config.json` so a captured anomaly is attributable to the
+    /// serving parameters that produced it.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("addr", self.addr.as_str().into()),
+            ("mode", format!("{:?}", self.mode).as_str().into()),
+            ("max_conns", self.max_conns.into()),
+            ("idle_timeout_s", self.idle_timeout.as_secs_f64().into()),
+            ("drain_timeout_s", self.drain_timeout.as_secs_f64().into()),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("max_seqs", self.pool.max_seqs.into()),
+                    ("max_tokens", self.pool.max_tokens.into()),
+                    ("block_tokens", self.pool.block_tokens.into()),
+                    ("paged", self.pool.paged.into()),
+                ]),
+            ),
+        ];
+        if let Some(slo) = &self.slo {
+            let c = slo.cfg();
+            pairs.push((
+                "slo",
+                Json::obj(vec![
+                    ("ttft_ms", c.ttft_ms.into()),
+                    ("itl_ms", c.itl_ms.into()),
+                    ("error_budget", c.error_budget.into()),
+                    ("window_s", c.window_s.into()),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -254,6 +327,12 @@ struct IoLoop {
     draining: Arc<AtomicBool>,
     /// Scheduler thread died or its channel closed — exit promptly.
     sched_gone: bool,
+    /// Config summary embedded in postmortem bundles.
+    config_json: Json,
+    /// Last flight-recorder trigger poll (checked every ~250 ms).
+    last_flight_check: Instant,
+    /// The one-shot `drain` event has been emitted.
+    drain_logged: bool,
 }
 
 /// Record a completed readiness-loop phase as an `io` span. Call sites
@@ -274,6 +353,20 @@ impl IoLoop {
             let draining = self.draining.load(Ordering::Relaxed);
             if draining && drain_deadline.is_none() {
                 drain_deadline = Some(Instant::now() + self.cfg.drain_timeout);
+            }
+            if draining && !self.drain_logged {
+                self.drain_logged = true;
+                emit(0, EventKind::Drain);
+            }
+            if self.cfg.flight.is_some()
+                && self.last_flight_check.elapsed() >= Duration::from_millis(250)
+            {
+                self.last_flight_check = Instant::now();
+                if let Some(f) = &self.cfg.flight {
+                    if let Some(p) = f.maybe_capture(&self.metrics, &self.config_json) {
+                        eprintln!("postmortem captured: {}", p.display());
+                    }
+                }
             }
             let traced = crate::obs::enabled();
             let t0 = traced.then(Instant::now);
@@ -431,6 +524,21 @@ impl IoLoop {
                 self.conns[i].push_line(Json::obj(vec![("ok", true.into())]));
                 return;
             }
+            Some("dump") => {
+                // On-demand postmortem capture (`tpaware postmortem`).
+                let j = match &self.cfg.flight {
+                    Some(f) => match f.capture("dump", &self.metrics, &self.config_json) {
+                        Ok(p) => Json::obj(vec![
+                            ("ok", true.into()),
+                            ("postmortem", p.display().to_string().into()),
+                        ]),
+                        Err(e) => error_json(&format!("{e}"), None, true),
+                    },
+                    None => error_json("no flight recorder configured", None, true),
+                };
+                self.conns[i].push_line(j);
+                return;
+            }
             Some(other) => {
                 let v2 = msg.get("v").as_usize() == Some(2);
                 self.conns[i].push_line(error_json(&format!("unknown cmd {other}"), None, v2));
@@ -454,6 +562,12 @@ impl IoLoop {
         };
         let client_id = msg.get("id").as_usize().map(|v| v as u64);
         if self.draining.load(Ordering::Relaxed) {
+            emit(
+                client_id.unwrap_or(0),
+                EventKind::Reject {
+                    reason: "draining",
+                },
+            );
             self.conns[i].push_line(error_json("server draining", client_id, v2));
             return;
         }
@@ -478,7 +592,7 @@ impl IoLoop {
         let client_id = client_id.unwrap_or(internal);
         if self
             .sub_tx
-            .send(Request::new(internal, prompt, max_new))
+            .send(Request::new(internal, prompt, max_new).with_client_id(client_id))
             .is_err()
         {
             self.sched_gone = true;
@@ -614,6 +728,12 @@ impl Server {
         if let Some(t) = &cfg.trace {
             crate::obs::install(t);
         }
+        if let Some(l) = &cfg.log {
+            crate::obs::log::install(l);
+        }
+        if let Some(s) = &cfg.slo {
+            crate::obs::slo::install(s);
+        }
         let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let bound = listener.local_addr()?.to_string();
@@ -679,6 +799,7 @@ impl Server {
             .expect("spawning scheduler thread");
 
         // I/O thread: the nonblocking readiness loop.
+        let config_json = cfg.to_json();
         let io = IoLoop {
             listener,
             cfg,
@@ -691,6 +812,9 @@ impl Server {
             metrics,
             draining: draining.clone(),
             sched_gone: false,
+            config_json,
+            last_flight_check: Instant::now(),
+            drain_logged: false,
         };
         let io_handle = std::thread::Builder::new()
             .name("server-io".into())
@@ -839,9 +963,7 @@ impl Client {
         self.read_json()
     }
 
-    fn gen_request(&mut self, prompt: &[u32], max_new: usize, stream: bool) -> (u64, Json) {
-        self.next_id += 1;
-        let id = self.next_id;
+    fn gen_request(&mut self, id: u64, prompt: &[u32], max_new: usize, stream: bool) -> Json {
         let mut pairs: Vec<(&str, Json)> = vec![
             ("v", 2usize.into()),
             ("id", (id as usize).into()),
@@ -854,14 +976,15 @@ impl Client {
         if stream {
             pairs.push(("stream", true.into()));
         }
-        (id, Json::obj(pairs))
+        Json::obj(pairs)
     }
 
     /// Generate `max_new` tokens from `prompt`, collected into one
     /// [`Response`] (the pre-streaming call shape, kept for existing
     /// call sites).
     pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Response> {
-        let (_, msg) = self.gen_request(prompt, max_new, false);
+        self.next_id += 1;
+        let msg = self.gen_request(self.next_id, prompt, max_new, false);
         let r = self.roundtrip(&msg)?;
         parse_done(&r)
     }
@@ -876,12 +999,41 @@ impl Client {
         prompt: &[u32],
         max_new: usize,
     ) -> Result<TokenStream<'_>> {
-        let (_, msg) = self.gen_request(prompt, max_new, true);
+        self.next_id += 1;
+        self.generate_streamed_as(self.next_id, prompt, max_new)
+    }
+
+    /// As [`Client::generate_streamed`], with a **caller-chosen**
+    /// request id. The server echoes the id in every token/done event
+    /// and threads it through the structured event log, so a caller
+    /// that assigns globally-unique ids (the loadgen harness stamps one
+    /// per trace entry) can join its client-side measurements against
+    /// server-side event logs and postmortem bundles.
+    pub fn generate_streamed_as(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<TokenStream<'_>> {
+        let msg = self.gen_request(id, prompt, max_new, true);
         self.send(&msg)?;
         Ok(TokenStream {
             client: self,
             done: None,
             failed: false,
+        })
+    }
+
+    /// Ask the server to capture an on-demand postmortem bundle (the
+    /// `dump` wire command), returning the bundle directory path on the
+    /// server's filesystem.
+    pub fn dump(&mut self) -> Result<String> {
+        let r = self.roundtrip(&Json::obj(vec![("cmd", "dump".into())]))?;
+        if let Some(e) = reply_error(&r) {
+            return Err(Error::from(ClientError::Server(e)));
+        }
+        r.get("postmortem").as_str().map(str::to_string).ok_or_else(|| {
+            Error::from(ClientError::Protocol("reply missing postmortem path".into()))
         })
     }
 
@@ -1242,6 +1394,21 @@ mod tests {
         assert_eq!(r.tokens.len(), 2);
         c.shutdown().unwrap();
         waiter.join().unwrap();
+    }
+
+    /// `dump` on a server with no flight recorder is a typed server
+    /// error, not a hang or a protocol break.
+    #[test]
+    fn dump_without_flight_recorder_errors() {
+        let server = serve_default();
+        let mut c = Client::connect(&server.addr.clone()).unwrap();
+        let e = c.dump().unwrap_err();
+        assert!(
+            matches!(e.downcast_ref::<ClientError>(), Some(ClientError::Server(_))),
+            "{e:#}"
+        );
+        c.shutdown().unwrap();
+        server.stop();
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   repack      offline repack: quantize once, write per-rank shard files
 //!   validate    run the cross-layer validation suite (PJRT vs host oracle)
 //!   trace-summary  self-time breakdown of a `--trace-out` Chrome trace file
+//!   postmortem  ask a running server to snapshot a postmortem bundle now
 
 use std::sync::Arc;
 use tpaware::bail;
@@ -74,6 +75,7 @@ Subcommands:
   repack     offline repack: quantize once, write per-rank shard files
   validate   cross-layer validation: PJRT artifacts vs host oracle
   trace-summary  per-span self-time breakdown of a --trace-out file
+  postmortem  ask a running server to snapshot a postmortem bundle now
 
 Run `tpaware <subcommand> --help` for flags.
 "
@@ -96,6 +98,7 @@ fn run(args: &[String]) -> Result<()> {
         "repack" => cmd_repack(rest),
         "validate" => cmd_validate(rest),
         "trace-summary" => cmd_trace_summary(rest),
+        "postmortem" => cmd_postmortem(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -171,6 +174,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "",
             "record per-phase spans and write a Chrome trace-event JSON file \
              here on shutdown (load in Perfetto / chrome://tracing)",
+        )
+        .flag(
+            "event-log",
+            "65536",
+            "structured request-event ring capacity (admit/reject/stall/\
+             retire... as JSONL in postmortems); 0 disables logging",
+        )
+        .flag("slo-ttft-ms", "500", "SLO: time-to-first-token objective, ms")
+        .flag("slo-itl-ms", "200", "SLO: inter-token latency objective, ms")
+        .flag(
+            "slo-error-rate",
+            "0.01",
+            "SLO: violation budget per objective (burn rate 1.0 = spending \
+             exactly this fraction of the sliding window)",
+        )
+        .flag(
+            "postmortem-dir",
+            "postmortems",
+            "directory for anomaly-triggered postmortem bundles (SLO burn, \
+             drift breach, stall/reject bursts; also the `dump` wire \
+             command); empty disables capture",
         );
     let a = spec.parse(args)?;
     let cfg = ModelConfig::by_name(a.get("model"))
@@ -294,6 +318,47 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         eprintln!("tracing spans to {trace_out} (written on shutdown)");
         Some(t)
     };
+    let log_cap = a.usize("event-log")?;
+    if log_cap > 0 {
+        serve_cfg = serve_cfg.log(tpaware::obs::EventLog::new(log_cap));
+    }
+    let slo_cfg = tpaware::obs::SloCfg {
+        ttft_ms: a.f64("slo-ttft-ms")?,
+        itl_ms: a.f64("slo-itl-ms")?,
+        error_budget: a.f64("slo-error-rate")?,
+        ..Default::default()
+    };
+    ensure!(
+        slo_cfg.error_budget > 0.0 && slo_cfg.error_budget <= 1.0,
+        "--slo-error-rate must be in (0, 1], got {}",
+        slo_cfg.error_budget
+    );
+    serve_cfg = serve_cfg.slo(tpaware::obs::SloTracker::new(slo_cfg));
+    let pm_dir = a.get("postmortem-dir").to_string();
+    serve_cfg = serve_cfg.flight(tpaware::obs::FlightRecorder::new(
+        tpaware::obs::FlightCfg {
+            dir: if pm_dir.is_empty() {
+                None
+            } else {
+                Some(std::path::PathBuf::from(&pm_dir))
+            },
+            ..Default::default()
+        },
+    ));
+    eprintln!(
+        "slo: ttft {} ms / itl {} ms / budget {} over {}s window; event log {}; \
+         postmortems {}",
+        slo_cfg.ttft_ms,
+        slo_cfg.itl_ms,
+        slo_cfg.error_budget,
+        slo_cfg.window_s,
+        if log_cap > 0 {
+            format!("x{log_cap} events")
+        } else {
+            "off".to_string()
+        },
+        if pm_dir.is_empty() { "off" } else { &pm_dir }
+    );
     let server = Server::serve(scheduler, serve_cfg)?;
     println!("listening on {}", server.addr);
     // Serve until a client sends {"cmd":"shutdown"} (graceful drain).
@@ -379,7 +444,13 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         "prepend this many shared system-prompt tokens to every request \
          (exercises paged-KV prefix reuse; 0 = independent prompts)",
     )
-    .flag("csv", "", "also write the report as CSV to this path");
+    .flag("csv", "", "also write the report as CSV to this path")
+    .flag(
+        "per-request-csv",
+        "",
+        "also write one row per request (id,tokens,ttft_ms,e2e_ms) to this \
+         path; ids match the server's event log and postmortem bundles",
+    );
     let a = spec.parse(args)?;
     let mode = match a.get("mode") {
         "open" => LoadMode::OpenLoop {
@@ -448,6 +519,26 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         std::fs::write(&csv_path, report.to_csv())?;
         println!("csv written to {csv_path}");
     }
+    let req_csv_path = a.get("per-request-csv").to_string();
+    if !req_csv_path.is_empty() {
+        std::fs::write(&req_csv_path, report.to_request_csv())?;
+        println!("per-request csv written to {req_csv_path}");
+    }
+    Ok(())
+}
+
+fn cmd_postmortem(args: &[String]) -> Result<()> {
+    let spec = Command::new(
+        "postmortem",
+        "ask a running server to snapshot a postmortem bundle now (requires \
+         the server to have a --postmortem-dir)",
+    )
+    .flag("addr", "127.0.0.1:7411", "server address");
+    let a = spec.parse(args)?;
+    let mut c = Client::connect(a.get("addr"))?;
+    let path = c.dump()?;
+    println!("postmortem bundle written to {path}");
+    println!("validate with: python3 tools/postmortem_check.py {path}");
     Ok(())
 }
 

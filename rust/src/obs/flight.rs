@@ -1,0 +1,452 @@
+//! Always-on flight recorder: anomaly-triggered postmortem capture.
+//!
+//! The tracer ring, the event log and the SLO windows already hold the
+//! recent past; this module decides **when that past is worth keeping**
+//! and snapshots it as a self-contained postmortem bundle — a directory
+//! holding the Chrome trace (`trace.json`), the structured event tail
+//! (`events.jsonl`), a full metrics snapshot (`metrics.json`), the
+//! serving configuration (`config.json`) and a `manifest.json` tying
+//! them together with the trigger reason and a wall-clock stamp. A
+//! bundle is what `tools/postmortem_check.py` validates and what a
+//! loadgen CSV row joins against via the request ids shared by the
+//! event log and the trace's `requests` track.
+//!
+//! Triggers ([`FlightRecorder::check_triggers`]):
+//! - **SLO burn**: the worst objective's burn rate
+//!   ([`crate::obs::slo::SloSnapshot::max_burn`]) crosses
+//!   [`FlightCfg::burn_threshold`];
+//! - **drift breach**: any cost-model phase with enough samples shows a
+//!   measured/predicted ratio above [`FlightCfg::drift_ratio_max`];
+//! - **stall/rejection burst**: KV growth stalls or admission
+//!   rejections grew by more than a burst threshold since the last
+//!   check.
+//!
+//! Auto-captures are rate-limited by [`FlightCfg::min_interval_s`];
+//! on-demand captures (the server's `dump` wire command, the
+//! `tpaware postmortem` CLI) bypass the trigger logic and call
+//! [`FlightRecorder::capture`] directly.
+
+use crate::coordinator::kv_pool::KvPoolStats;
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::Json;
+use crate::Result;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Flight-recorder policy: where bundles land and what fires a capture.
+#[derive(Clone, Debug)]
+pub struct FlightCfg {
+    /// Postmortem output directory; `None` disables capture (triggers
+    /// still evaluate, for tests and gauges).
+    pub dir: Option<PathBuf>,
+    /// Worst-objective SLO burn rate at or above which a capture
+    /// fires (burn 1.0 = consuming the error budget exactly).
+    pub burn_threshold: f64,
+    /// Measured/predicted cost-model ratio above which a phase counts
+    /// as breached (generous: the `step` phase sits above 1 by design).
+    pub drift_ratio_max: f64,
+    /// Minimum drift samples before a phase's ratio is trusted.
+    pub drift_min_count: u64,
+    /// New KV growth stalls between checks that count as a burst.
+    pub stall_burst: u64,
+    /// New KV admission rejections between checks that count as a
+    /// burst.
+    pub reject_burst: u64,
+    /// Cooldown between automatic captures, seconds.
+    pub min_interval_s: f64,
+    /// Maximum events copied into a bundle's `events.jsonl`.
+    pub events_tail: usize,
+}
+
+impl Default for FlightCfg {
+    fn default() -> Self {
+        FlightCfg {
+            dir: None,
+            burn_threshold: 2.0,
+            drift_ratio_max: 20.0,
+            drift_min_count: 16,
+            stall_burst: 8,
+            reject_burst: 64,
+            min_interval_s: 5.0,
+            events_tail: 4096,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct FlightState {
+    last_stalls: u64,
+    last_rejections: u64,
+    last_capture: Option<Instant>,
+    seq: u64,
+    captures: u64,
+    last_reason: String,
+    last_path: Option<PathBuf>,
+}
+
+/// The recorder: trigger bookkeeping plus bundle capture. Cheap to
+/// construct and always on — the expensive work (serializing the
+/// trace/events/metrics) happens only at capture time.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cfg: FlightCfg,
+    state: Mutex<FlightState>,
+}
+
+impl FlightRecorder {
+    /// A recorder with the given policy.
+    pub fn new(cfg: FlightCfg) -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder {
+            cfg,
+            state: Mutex::new(FlightState::default()),
+        })
+    }
+
+    /// The recorder's policy.
+    pub fn cfg(&self) -> &FlightCfg {
+        &self.cfg
+    }
+
+    /// Bundles captured so far (auto + on-demand).
+    pub fn captures(&self) -> u64 {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).captures
+    }
+
+    /// The most recent capture's path, if any.
+    pub fn last_bundle(&self) -> Option<PathBuf> {
+        self.state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .last_path
+            .clone()
+    }
+
+    /// Evaluate the anomaly triggers against the current KV stats, SLO
+    /// windows and drift accumulators. Returns the trigger reason when
+    /// one fires. Stall/rejection counters are delta-tracked between
+    /// calls, so call this periodically from one place.
+    pub fn check_triggers(&self, kv: &KvPoolStats) -> Option<String> {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let stall_delta = kv.growth_stalls.saturating_sub(s.last_stalls);
+        let reject_delta = kv.rejections.saturating_sub(s.last_rejections);
+        s.last_stalls = kv.growth_stalls;
+        s.last_rejections = kv.rejections;
+        drop(s);
+
+        if let Some(t) = crate::obs::slo::installed() {
+            let burn = t.snapshot().max_burn();
+            if burn >= self.cfg.burn_threshold {
+                return Some(format!("slo_burn:{burn:.2}"));
+            }
+        }
+        for (phase, d) in crate::obs::drift::global().snapshot() {
+            if d.count >= self.cfg.drift_min_count && d.ratio() > self.cfg.drift_ratio_max {
+                return Some(format!("drift:{phase}:{:.1}", d.ratio()));
+            }
+        }
+        if self.cfg.stall_burst > 0 && stall_delta >= self.cfg.stall_burst {
+            return Some(format!("stall_burst:{stall_delta}"));
+        }
+        if self.cfg.reject_burst > 0 && reject_delta >= self.cfg.reject_burst {
+            return Some(format!("reject_burst:{reject_delta}"));
+        }
+        None
+    }
+
+    /// Periodic entry point for the serving loop: evaluate triggers
+    /// and, if one fires, capture a bundle (subject to the configured
+    /// cooldown and an output directory being set). Returns the new
+    /// bundle's path when one was written.
+    pub fn maybe_capture(&self, metrics: &Metrics, config: &Json) -> Option<PathBuf> {
+        self.cfg.dir.as_ref()?;
+        let kv = *metrics.kv.lock().unwrap_or_else(|e| e.into_inner());
+        let reason = self.check_triggers(&kv)?;
+        {
+            let s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(last) = s.last_capture {
+                if last.elapsed().as_secs_f64() < self.cfg.min_interval_s {
+                    return None;
+                }
+            }
+        }
+        self.capture(&reason, metrics, config).ok()
+    }
+
+    /// Snapshot a postmortem bundle now, unconditionally. Writes
+    /// `<dir>/pm-<seq>-<reason>/{manifest,trace,metrics,config}.json`
+    /// plus `events.jsonl`, and returns the bundle directory. Errors
+    /// when no output directory is configured or a write fails.
+    pub fn capture(&self, reason: &str, metrics: &Metrics, config: &Json) -> Result<PathBuf> {
+        let dir = match &self.cfg.dir {
+            Some(d) => d.clone(),
+            None => crate::bail!("flight recorder has no postmortem directory configured"),
+        };
+        let seq = {
+            let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            s.seq += 1;
+            s.seq
+        };
+        let slug = sanitize(reason);
+        let bundle = dir.join(format!("pm-{seq:04}-{slug}"));
+        std::fs::create_dir_all(&bundle)
+            .map_err(|e| crate::err!("create postmortem dir {}: {e}", bundle.display()))?;
+
+        // Trace: the installed tracer's full Chrome JSON, or an empty
+        // trace so the bundle shape is stable without one.
+        let (trace_json, spans, dropped_spans) = match crate::obs::installed() {
+            Some(t) => {
+                let spans = t.len();
+                let dropped = t.dropped();
+                (t.to_chrome_json(), spans, dropped)
+            }
+            None => (
+                Json::obj(vec![("traceEvents", Json::Arr(Vec::new()))]),
+                0,
+                0,
+            ),
+        };
+        write_file(&bundle.join("trace.json"), &trace_json.to_pretty())?;
+
+        // Events: the configured tail of the installed log as JSONL.
+        let (events, dropped_events) = match crate::obs::log::installed() {
+            Some(l) => (l.tail(self.cfg.events_tail), l.dropped()),
+            None => (Vec::new(), 0),
+        };
+        let mut jsonl = String::new();
+        for e in &events {
+            jsonl.push_str(&e.to_json().to_string());
+            jsonl.push('\n');
+        }
+        write_file(&bundle.join("events.jsonl"), &jsonl)?;
+
+        write_file(&bundle.join("metrics.json"), &metrics.to_json().to_pretty())?;
+        write_file(&bundle.join("config.json"), &config.to_pretty())?;
+
+        let unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let manifest = Json::obj(vec![
+            ("reason", reason.into()),
+            ("seq", (seq as usize).into()),
+            ("unix_ms", (unix_ms as usize).into()),
+            ("events", events.len().into()),
+            ("dropped_events", (dropped_events as usize).into()),
+            ("spans", spans.into()),
+            ("dropped_spans", (dropped_spans as usize).into()),
+            (
+                "files",
+                Json::obj(vec![
+                    ("trace", "trace.json".into()),
+                    ("events", "events.jsonl".into()),
+                    ("metrics", "metrics.json".into()),
+                    ("config", "config.json".into()),
+                ]),
+            ),
+        ]);
+        write_file(&bundle.join("manifest.json"), &manifest.to_pretty())?;
+
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.captures += 1;
+        s.last_capture = Some(Instant::now());
+        s.last_reason = reason.to_string();
+        s.last_path = Some(bundle.clone());
+        Ok(bundle)
+    }
+}
+
+fn write_file(path: &Path, contents: &str) -> Result<()> {
+    std::fs::write(path, contents)
+        .map_err(|e| crate::err!("write {}: {e}", path.display()))
+}
+
+/// Filesystem-safe slug of a trigger reason.
+fn sanitize(reason: &str) -> String {
+    let mut s: String = reason
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    s.truncate(48);
+    if s.is_empty() {
+        s.push_str("manual");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tpaware-flight-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn stall_burst_trigger_is_delta_based() {
+        let fr = FlightRecorder::new(FlightCfg {
+            stall_burst: 4,
+            reject_burst: 0,
+            ..FlightCfg::default()
+        });
+        let mut kv = KvPoolStats {
+            growth_stalls: 3,
+            ..Default::default()
+        };
+        assert!(fr.check_triggers(&kv).is_none(), "3 new stalls < burst 4");
+        kv.growth_stalls = 9; // +6 since last check
+        let reason = fr.check_triggers(&kv).expect("burst fires");
+        assert!(reason.starts_with("stall_burst:"), "{reason}");
+        assert!(
+            fr.check_triggers(&kv).is_none(),
+            "no new stalls, no re-trigger"
+        );
+    }
+
+    #[test]
+    fn reject_burst_trigger_fires() {
+        let fr = FlightRecorder::new(FlightCfg {
+            stall_burst: 0,
+            reject_burst: 10,
+            ..FlightCfg::default()
+        });
+        let kv = KvPoolStats {
+            rejections: 25,
+            ..Default::default()
+        };
+        let reason = fr.check_triggers(&kv).expect("burst fires");
+        assert!(reason.starts_with("reject_burst:"), "{reason}");
+    }
+
+    #[test]
+    fn slo_burn_trigger_fires_through_installed_tracker() {
+        let _guard = crate::obs::test_guard();
+        let t = crate::obs::slo::SloTracker::new(crate::obs::slo::SloCfg {
+            ttft_ms: 1.0,
+            itl_ms: 0.0,
+            error_budget: 0.1,
+            window_s: 3600.0,
+        });
+        crate::obs::slo::install(&t);
+        for _ in 0..10 {
+            t.record_ttft_ms(100.0); // 100% violating over a 10% budget
+        }
+        let fr = FlightRecorder::new(FlightCfg {
+            burn_threshold: 2.0,
+            stall_burst: 0,
+            reject_burst: 0,
+            ..FlightCfg::default()
+        });
+        let reason = fr.check_triggers(&KvPoolStats::default()).expect("burn");
+        assert!(reason.starts_with("slo_burn:"), "{reason}");
+        crate::obs::slo::uninstall();
+    }
+
+    #[test]
+    fn capture_writes_a_complete_bundle() {
+        let _guard = crate::obs::test_guard();
+        let dir = tmp_dir("bundle");
+        let log = crate::obs::log::EventLog::new(64);
+        crate::obs::log::install(&log);
+        crate::obs::log::emit(42, crate::obs::log::EventKind::Admit { queue_us: 10 });
+        crate::obs::log::emit(
+            42,
+            crate::obs::log::EventKind::Retire {
+                tokens: 4,
+                ttft_us: 900,
+                e2e_us: 2000,
+            },
+        );
+
+        let fr = FlightRecorder::new(FlightCfg {
+            dir: Some(dir.clone()),
+            ..FlightCfg::default()
+        });
+        let metrics = Metrics::default();
+        Metrics::inc(&metrics.requests_received);
+        let config = Json::obj(vec![("addr", "127.0.0.1:0".into())]);
+        let bundle = fr.capture("dump", &metrics, &config).unwrap();
+        assert!(bundle.starts_with(&dir));
+        assert_eq!(fr.captures(), 1);
+        assert_eq!(fr.last_bundle().as_deref(), Some(bundle.as_path()));
+
+        let manifest =
+            json::parse(&std::fs::read_to_string(bundle.join("manifest.json")).unwrap()).unwrap();
+        assert_eq!(manifest.get("reason").as_str(), Some("dump"));
+        assert_eq!(manifest.get("events").as_usize(), Some(2));
+        let trace =
+            json::parse(&std::fs::read_to_string(bundle.join("trace.json")).unwrap()).unwrap();
+        assert!(matches!(trace.get("traceEvents"), Json::Arr(_)));
+        let events = std::fs::read_to_string(bundle.join("events.jsonl")).unwrap();
+        assert_eq!(events.lines().count(), 2);
+        let first = json::parse(events.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("req").as_usize(), Some(42));
+        let m =
+            json::parse(&std::fs::read_to_string(bundle.join("metrics.json")).unwrap()).unwrap();
+        assert_eq!(m.get("requests_received").as_usize(), Some(1));
+        let c = json::parse(&std::fs::read_to_string(bundle.join("config.json")).unwrap()).unwrap();
+        assert_eq!(c.get("addr").as_str(), Some("127.0.0.1:0"));
+
+        crate::obs::log::uninstall();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capture_without_dir_errors() {
+        let fr = FlightRecorder::new(FlightCfg::default());
+        let err = fr
+            .capture("dump", &Metrics::default(), &Json::Null)
+            .unwrap_err();
+        assert!(format!("{err}").contains("no postmortem directory"));
+    }
+
+    #[test]
+    fn maybe_capture_honors_cooldown() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::slo::uninstall();
+        let dir = tmp_dir("cooldown");
+        let fr = FlightRecorder::new(FlightCfg {
+            dir: Some(dir.clone()),
+            stall_burst: 1,
+            reject_burst: 0,
+            min_interval_s: 3600.0,
+            ..FlightCfg::default()
+        });
+        let metrics = Metrics::default();
+        metrics.set_kv(KvPoolStats {
+            growth_stalls: 5,
+            ..Default::default()
+        });
+        let cfg = Json::Null;
+        assert!(fr.maybe_capture(&metrics, &cfg).is_some(), "first fires");
+        metrics.set_kv(KvPoolStats {
+            growth_stalls: 50,
+            ..Default::default()
+        });
+        assert!(
+            fr.maybe_capture(&metrics, &cfg).is_none(),
+            "cooldown suppresses the second"
+        );
+        assert_eq!(fr.captures(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reason_slug_is_filesystem_safe() {
+        assert_eq!(sanitize("slo_burn:2.50"), "slo_burn_2_50");
+        assert_eq!(sanitize(""), "manual");
+    }
+}

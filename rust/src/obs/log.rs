@@ -1,0 +1,416 @@
+//! Structured request-lifecycle event log: the "what happened to
+//! request N" companion to the span tracer.
+//!
+//! The tracer answers *where time went*; this log answers *what the
+//! scheduler and KV pool decided* — one typed [`Event`] per lifecycle
+//! transition (admit, reject, growth stall, preemption, copy-on-write,
+//! prefix hit, drain, retire), each stamped with the **client-visible
+//! request id** threaded from [`crate::coordinator::server`] through
+//! [`crate::coordinator::scheduler`] into
+//! [`crate::coordinator::kv_pool`]. Export is JSONL — one compact JSON
+//! object per line — so a postmortem bundle's `events.jsonl` greps and
+//! joins directly against loadgen's per-request CSV.
+//!
+//! Like the tracer, the log is installed process-globally ([`install`])
+//! and every emit site pays exactly one relaxed atomic load when no log
+//! is installed; [`EventKind`] carries no heap data (`&'static str`
+//! reasons), so a disabled [`emit`] allocates nothing. Storage is a
+//! bounded ring with the same overflow policy as the tracer: when full,
+//! **new events are dropped** (and counted) rather than evicting the
+//! old ones, preserving the admission-time history that a postmortem
+//! usually needs.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A typed request-lifecycle transition. Variants carry only
+/// stack-resident payloads so constructing one never allocates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The request entered the running batch; `queue_us` is the
+    /// arrival→admission wait.
+    Admit {
+        /// Microseconds spent queued before admission.
+        queue_us: u64,
+    },
+    /// The request was refused outright (never admitted).
+    Reject {
+        /// Why it was refused, e.g. `"oversized"` or `"draining"`.
+        reason: &'static str,
+    },
+    /// A paged sequence could not grow by one block this decode step.
+    GrowthStall,
+    /// The sequence was preempted (blocks released, requeued for
+    /// deterministic recompute).
+    Preempt {
+        /// Generated tokens stashed for replay at re-admission.
+        tokens: usize,
+    },
+    /// A shared block took a private copy before a divergent append.
+    CowCopy,
+    /// Admission referenced live shared blocks and/or revived cached
+    /// prefix blocks instead of allocating.
+    PrefixHit {
+        /// Prompt blocks satisfied by sharing or revival.
+        blocks: usize,
+    },
+    /// The server began draining (refusing new work); request id 0.
+    Drain,
+    /// The request completed and released its resources.
+    Retire {
+        /// Tokens generated.
+        tokens: usize,
+        /// Send→first-token latency, microseconds.
+        ttft_us: u64,
+        /// Send→done latency, microseconds.
+        e2e_us: u64,
+    },
+}
+
+impl EventKind {
+    /// The event's wire name (the JSONL `"event"` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admit { .. } => "admit",
+            EventKind::Reject { .. } => "reject",
+            EventKind::GrowthStall => "growth_stall",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::CowCopy => "cow_copy",
+            EventKind::PrefixHit { .. } => "prefix_hit",
+            EventKind::Drain => "drain",
+            EventKind::Retire { .. } => "retire",
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Microseconds since the log's construction.
+    pub ts_us: u64,
+    /// Client-visible request id (0 for process-scoped events like
+    /// [`EventKind::Drain`]).
+    pub req: u64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// The event as one compact JSON object (a JSONL line without the
+    /// trailing newline).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("ts_us", (self.ts_us as usize).into()),
+            ("req", (self.req as usize).into()),
+            ("event", self.kind.name().into()),
+        ];
+        match &self.kind {
+            EventKind::Admit { queue_us } => {
+                fields.push(("queue_us", (*queue_us as usize).into()));
+            }
+            EventKind::Reject { reason } => fields.push(("reason", (*reason).into())),
+            EventKind::Preempt { tokens } => fields.push(("tokens", (*tokens).into())),
+            EventKind::PrefixHit { blocks } => fields.push(("blocks", (*blocks).into())),
+            EventKind::Retire {
+                tokens,
+                ttft_us,
+                e2e_us,
+            } => {
+                fields.push(("tokens", (*tokens).into()));
+                fields.push(("ttft_us", (*ttft_us as usize).into()));
+                fields.push(("e2e_us", (*e2e_us as usize).into()));
+            }
+            EventKind::GrowthStall | EventKind::CowCopy | EventKind::Drain => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Thread-safe, capacity-bounded structured event log. When the ring
+/// is full, new events are dropped and counted ([`EventLog::dropped`]),
+/// preserving the oldest (usually most diagnostic) history.
+#[derive(Debug)]
+pub struct EventLog {
+    capacity: usize,
+    epoch: Instant,
+    dropped: AtomicU64,
+    buf: Mutex<Vec<Event>>,
+}
+
+impl EventLog {
+    /// A fresh log holding at most `capacity` events.
+    pub fn new(capacity: usize) -> Arc<EventLog> {
+        assert!(capacity > 0, "EventLog capacity must be positive");
+        Arc::new(EventLog {
+            capacity,
+            epoch: Instant::now(),
+            dropped: AtomicU64::new(0),
+            buf: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Maximum events retained.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Whether no events have been recorded (or all were cleared).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drop all held events and reset the drop counter.
+    pub fn clear(&self) {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Record one event for request `req`, stamped now.
+    pub fn record(&self, req: u64, kind: EventKind) {
+        let ts_us = Instant::now()
+            .saturating_duration_since(self.epoch)
+            .as_micros() as u64;
+        let mut buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        if buf.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.push(Event { ts_us, req, kind });
+    }
+
+    /// A snapshot of every held event, in record order.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// The last `n` held events, in record order.
+    pub fn tail(&self, n: usize) -> Vec<Event> {
+        let buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        let start = buf.len().saturating_sub(n);
+        buf[start..].to_vec()
+    }
+
+    /// The whole log as JSONL (one compact object per line, trailing
+    /// newline included when non-empty).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.snapshot() {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Fast-path switch: true iff an event log is installed.
+static LOG_ON: AtomicBool = AtomicBool::new(false);
+
+/// The installed log, if any.
+static LOG: Mutex<Option<Arc<EventLog>>> = Mutex::new(None);
+
+/// Install `log` as the process-global event sink. Replaces any
+/// previous log.
+pub fn install(log: &Arc<EventLog>) {
+    let mut g = LOG.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(Arc::clone(log));
+    LOG_ON.store(true, Ordering::Relaxed);
+}
+
+/// Remove the process-global event log; subsequent [`emit`] calls are
+/// inert again.
+pub fn uninstall() {
+    let mut g = LOG.lock().unwrap_or_else(|e| e.into_inner());
+    LOG_ON.store(false, Ordering::Relaxed);
+    *g = None;
+}
+
+/// Whether an event log is installed (the one-relaxed-load fast path
+/// every emit site checks first).
+#[inline]
+pub fn enabled() -> bool {
+    LOG_ON.load(Ordering::Relaxed)
+}
+
+/// The installed log, if any (a clone of the registered handle).
+pub fn installed() -> Option<Arc<EventLog>> {
+    if !enabled() {
+        return None;
+    }
+    LOG.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Emit one lifecycle event against the installed log — a no-op
+/// costing one relaxed atomic load (and zero allocation) when no log
+/// is installed.
+#[inline]
+pub fn emit(req: u64, kind: EventKind) {
+    if !enabled() {
+        return;
+    }
+    if let Some(log) = installed() {
+        log.record(req, kind);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn records_and_serializes_typed_events() {
+        let log = EventLog::new(16);
+        log.record(7, EventKind::Admit { queue_us: 120 });
+        log.record(7, EventKind::PrefixHit { blocks: 2 });
+        log.record(
+            7,
+            EventKind::Retire {
+                tokens: 5,
+                ttft_us: 900,
+                e2e_us: 4200,
+            },
+        );
+        assert_eq!(log.len(), 3);
+        let lines: Vec<&str> = log.to_jsonl().lines().collect();
+        assert_eq!(lines.len(), 3);
+        let admit = json::parse(lines[0]).unwrap();
+        assert_eq!(admit.get("event").as_str(), Some("admit"));
+        assert_eq!(admit.get("req").as_usize(), Some(7));
+        assert_eq!(admit.get("queue_us").as_usize(), Some(120));
+        let retire = json::parse(lines[2]).unwrap();
+        assert_eq!(retire.get("event").as_str(), Some("retire"));
+        assert_eq!(retire.get("tokens").as_usize(), Some(5));
+        assert_eq!(retire.get("ttft_us").as_usize(), Some(900));
+        assert_eq!(retire.get("e2e_us").as_usize(), Some(4200));
+    }
+
+    #[test]
+    fn timestamps_are_monotone_nondecreasing() {
+        let log = EventLog::new(64);
+        for i in 0..50 {
+            log.record(i, EventKind::GrowthStall);
+        }
+        let snap = log.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_new_and_counts() {
+        let log = EventLog::new(4);
+        for i in 0..10u64 {
+            log.record(i, EventKind::CowCopy);
+        }
+        assert_eq!(log.len(), 4, "old events preserved, new dropped");
+        assert_eq!(log.dropped(), 6);
+        let reqs: Vec<u64> = log.snapshot().iter().map(|e| e.req).collect();
+        assert_eq!(reqs, vec![0, 1, 2, 3], "the FIRST four survive");
+        log.clear();
+        assert!(log.is_empty());
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn tail_returns_most_recent() {
+        let log = EventLog::new(16);
+        for i in 0..6u64 {
+            log.record(i, EventKind::Drain);
+        }
+        let t = log.tail(2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].req, 4);
+        assert_eq!(t[1].req, 5);
+        assert_eq!(log.tail(100).len(), 6);
+    }
+
+    #[test]
+    fn concurrency_exactness_under_8_writers() {
+        let log = EventLog::new(100_000);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let l = Arc::clone(&log);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    l.record(t * 1000 + i, EventKind::Admit { queue_us: i });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.len(), 8 * 500, "no event lost under contention");
+        assert_eq!(log.dropped(), 0);
+        // Per-writer exactness: each writer's 500 distinct ids all land.
+        let snap = log.snapshot();
+        for t in 0..8u64 {
+            let n = snap
+                .iter()
+                .filter(|e| e.req / 1000 == t && e.req % 1000 < 500)
+                .count();
+            assert_eq!(n, 500, "writer {t} lost events");
+        }
+    }
+
+    #[test]
+    fn global_install_routes_events_and_uninstall_stops_them() {
+        let _guard = crate::obs::test_guard();
+        uninstall();
+        assert!(!enabled());
+        emit(1, EventKind::Drain);
+
+        let log = EventLog::new(8);
+        install(&log);
+        assert!(enabled());
+        emit(2, EventKind::Admit { queue_us: 1 });
+        assert_eq!(log.len(), 1);
+
+        uninstall();
+        emit(3, EventKind::Drain);
+        assert_eq!(log.len(), 1, "uninstalled log must see no new events");
+    }
+
+    #[test]
+    fn event_names_cover_all_variants() {
+        let kinds = [
+            EventKind::Admit { queue_us: 0 },
+            EventKind::Reject { reason: "oversized" },
+            EventKind::GrowthStall,
+            EventKind::Preempt { tokens: 0 },
+            EventKind::CowCopy,
+            EventKind::PrefixHit { blocks: 0 },
+            EventKind::Drain,
+            EventKind::Retire {
+                tokens: 0,
+                ttft_us: 0,
+                e2e_us: 0,
+            },
+        ];
+        let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "admit",
+                "reject",
+                "growth_stall",
+                "preempt",
+                "cow_copy",
+                "prefix_hit",
+                "drain",
+                "retire"
+            ]
+        );
+    }
+}

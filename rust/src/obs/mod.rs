@@ -29,10 +29,36 @@
 //! [`crate::simkernel`] cost-model predictions, and the per-phase
 //! measured/predicted ratios surface as `model_drift` gauges in the
 //! metrics JSON and Prometheus exposition.
+//!
+//! ## The postmortem tier
+//!
+//! Three more sinks follow the same install/enabled/one-relaxed-load
+//! pattern (each owns its own switch, so tracing, event logging and SLO
+//! tracking enable independently):
+//!
+//! * [`log`] — a bounded structured **event log**: typed lifecycle
+//!   events (admit, reject, growth_stall, preempt, cow_copy,
+//!   prefix_hit, drain, retire) keyed by the client-visible request id,
+//!   exported as JSONL;
+//! * [`slo`] — declarative latency objectives (TTFT / inter-token /
+//!   error rate) with sliding-window **burn-rate** gauges, exported as
+//!   `tpaware_slo_*`;
+//! * [`flight`] — the always-on **flight recorder**: watches SLO burn,
+//!   drift ratios and KV stall/rejection bursts, and snapshots a
+//!   self-contained postmortem bundle (trace + event tail + metrics +
+//!   config) on trigger or on demand (`dump` wire command,
+//!   `tpaware postmortem`).
 
 pub mod drift;
+pub mod flight;
+pub mod log;
+pub mod slo;
+
 pub mod tracer;
 
+pub use flight::{FlightCfg, FlightRecorder};
+pub use log::{Event, EventKind, EventLog};
+pub use slo::{SloCfg, SloTracker};
 pub use tracer::{SpanGuard, Tracer};
 
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,0 +1,426 @@
+//! Declarative latency objectives with sliding-window burn-rate
+//! gauges.
+//!
+//! A service-level objective here is "at most `error_budget` of
+//! requests may violate threshold X over the trailing window". The
+//! tracker keeps one sliding window per objective — TTFT, inter-token
+//! latency, and request outcome (error rate) — and publishes each
+//! window's **burn rate**: the observed violating fraction divided by
+//! the budget. Burn 1.0 means the objective is being consumed exactly
+//! as budgeted; burn ≥ the flight recorder's threshold
+//! ([`crate::obs::flight`]) triggers a postmortem capture, and all
+//! three gauges export as `tpaware_slo_*` families in
+//! [`crate::coordinator::metrics::prometheus_text`] and as an `slo`
+//! object in the metrics JSON.
+//!
+//! Objectives come from the CLI (`--slo-ttft-ms`, `--slo-itl-ms`,
+//! `--slo-error-rate` on `serve`); a threshold of 0 disables that
+//! objective (its burn rate reads 0). Like the tracer and event log,
+//! the tracker installs process-globally and disabled record sites pay
+//! one relaxed atomic load.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Declarative objective thresholds. A latency threshold of 0 disables
+/// that objective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloCfg {
+    /// Send→first-token objective, milliseconds (0 = off).
+    pub ttft_ms: f64,
+    /// Inter-token-gap objective, milliseconds (0 = off).
+    pub itl_ms: f64,
+    /// Allowed violating fraction per window — the error budget shared
+    /// by all three objectives (e.g. 0.01 = 1%).
+    pub error_budget: f64,
+    /// Sliding-window length, seconds.
+    pub window_s: f64,
+}
+
+impl Default for SloCfg {
+    fn default() -> Self {
+        SloCfg {
+            ttft_ms: 500.0,
+            itl_ms: 200.0,
+            error_budget: 0.01,
+            window_s: 60.0,
+        }
+    }
+}
+
+/// Per-window sample cap: bounds memory under sustained load; oldest
+/// samples fall off first (they would age out of the window anyway).
+const WINDOW_CAP: usize = 65_536;
+
+/// One objective's sliding window of `(ts_us, violated)` samples.
+#[derive(Debug, Default)]
+struct Window {
+    samples: VecDeque<(u64, bool)>,
+}
+
+impl Window {
+    fn push(&mut self, ts_us: u64, violated: bool, window_us: u64) {
+        self.prune(ts_us, window_us);
+        if self.samples.len() >= WINDOW_CAP {
+            self.samples.pop_front();
+        }
+        self.samples.push_back((ts_us, violated));
+    }
+
+    fn prune(&mut self, now_us: u64, window_us: u64) {
+        let horizon = now_us.saturating_sub(window_us);
+        while let Some(&(ts, _)) = self.samples.front() {
+            if ts < horizon {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn counts(&self) -> (u64, u64) {
+        let total = self.samples.len() as u64;
+        let violations = self.samples.iter().filter(|(_, v)| *v).count() as u64;
+        (total, violations)
+    }
+}
+
+/// One objective's published state.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ObjectiveSnapshot {
+    /// The configured threshold (ms for latency objectives, the budget
+    /// itself for the error objective).
+    pub objective: f64,
+    /// Samples currently inside the window.
+    pub samples: u64,
+    /// Samples violating the objective inside the window.
+    pub violations: u64,
+    /// `(violations / samples) / error_budget` — 0 with no samples or
+    /// a disabled objective.
+    pub burn_rate: f64,
+}
+
+impl ObjectiveSnapshot {
+    fn from_window(objective: f64, w: &Window, budget: f64) -> ObjectiveSnapshot {
+        let (samples, violations) = w.counts();
+        let burn_rate = if objective <= 0.0 || samples == 0 || budget <= 0.0 {
+            0.0
+        } else {
+            (violations as f64 / samples as f64) / budget
+        };
+        ObjectiveSnapshot {
+            objective,
+            samples,
+            violations,
+            burn_rate,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("objective", self.objective.into()),
+            ("samples", (self.samples as usize).into()),
+            ("violations", (self.violations as usize).into()),
+            ("burn_rate", self.burn_rate.into()),
+        ])
+    }
+}
+
+/// All three objectives' published state.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloSnapshot {
+    /// Send→first-token objective state.
+    pub ttft: ObjectiveSnapshot,
+    /// Inter-token-gap objective state.
+    pub itl: ObjectiveSnapshot,
+    /// Request-outcome (error-rate) objective state.
+    pub error: ObjectiveSnapshot,
+}
+
+impl SloSnapshot {
+    /// The worst burn rate across the three objectives — what the
+    /// flight recorder compares against its trigger threshold.
+    pub fn max_burn(&self) -> f64 {
+        self.ttft
+            .burn_rate
+            .max(self.itl.burn_rate)
+            .max(self.error.burn_rate)
+    }
+
+    /// JSON view: `{ttft: {...}, itl: {...}, error: {...}}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", self.ttft.to_json()),
+            ("itl", self.itl.to_json()),
+            ("error", self.error.to_json()),
+        ])
+    }
+}
+
+/// Thread-safe sliding-window SLO tracker.
+#[derive(Debug)]
+pub struct SloTracker {
+    cfg: SloCfg,
+    epoch: Instant,
+    state: Mutex<SloState>,
+}
+
+#[derive(Debug, Default)]
+struct SloState {
+    ttft: Window,
+    itl: Window,
+    errors: Window,
+}
+
+impl SloTracker {
+    /// A fresh tracker with the given objectives.
+    pub fn new(cfg: SloCfg) -> Arc<SloTracker> {
+        Arc::new(SloTracker {
+            cfg,
+            epoch: Instant::now(),
+            state: Mutex::new(SloState::default()),
+        })
+    }
+
+    /// The configured objectives.
+    pub fn cfg(&self) -> SloCfg {
+        self.cfg
+    }
+
+    fn now_us(&self) -> u64 {
+        Instant::now()
+            .saturating_duration_since(self.epoch)
+            .as_micros() as u64
+    }
+
+    fn window_us(&self) -> u64 {
+        (self.cfg.window_s * 1e6) as u64
+    }
+
+    /// Fold one send→first-token latency sample.
+    pub fn record_ttft_ms(&self, v_ms: f64) {
+        if self.cfg.ttft_ms <= 0.0 {
+            return;
+        }
+        let now = self.now_us();
+        let w = self.window_us();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.ttft.push(now, v_ms > self.cfg.ttft_ms, w);
+    }
+
+    /// Fold one inter-token-gap sample.
+    pub fn record_itl_ms(&self, v_ms: f64) {
+        if self.cfg.itl_ms <= 0.0 {
+            return;
+        }
+        let now = self.now_us();
+        let w = self.window_us();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.itl.push(now, v_ms > self.cfg.itl_ms, w);
+    }
+
+    /// Fold one request outcome (`ok = false` for a rejection or
+    /// server-side error).
+    pub fn record_outcome(&self, ok: bool) {
+        let now = self.now_us();
+        let w = self.window_us();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.errors.push(now, !ok, w);
+    }
+
+    /// Current windowed state of all three objectives (windows pruned
+    /// to now before counting).
+    pub fn snapshot(&self) -> SloSnapshot {
+        let now = self.now_us();
+        let w = self.window_us();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.ttft.prune(now, w);
+        s.itl.prune(now, w);
+        s.errors.prune(now, w);
+        let b = self.cfg.error_budget;
+        SloSnapshot {
+            ttft: ObjectiveSnapshot::from_window(self.cfg.ttft_ms, &s.ttft, b),
+            itl: ObjectiveSnapshot::from_window(self.cfg.itl_ms, &s.itl, b),
+            // The error objective's threshold IS the budget: a window
+            // erroring at exactly the budget burns at 1.0.
+            error: ObjectiveSnapshot::from_window(b, &s.errors, b),
+        }
+    }
+}
+
+/// Fast-path switch: true iff an SLO tracker is installed.
+static SLO_ON: AtomicBool = AtomicBool::new(false);
+
+/// The installed tracker, if any.
+static SLO: Mutex<Option<Arc<SloTracker>>> = Mutex::new(None);
+
+/// Install `tracker` as the process-global SLO sink. Replaces any
+/// previous tracker.
+pub fn install(tracker: &Arc<SloTracker>) {
+    let mut g = SLO.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(Arc::clone(tracker));
+    SLO_ON.store(true, Ordering::Relaxed);
+}
+
+/// Remove the process-global tracker; subsequent record calls are
+/// inert again.
+pub fn uninstall() {
+    let mut g = SLO.lock().unwrap_or_else(|e| e.into_inner());
+    SLO_ON.store(false, Ordering::Relaxed);
+    *g = None;
+}
+
+/// Whether an SLO tracker is installed (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    SLO_ON.load(Ordering::Relaxed)
+}
+
+/// The installed tracker, if any (a clone of the registered handle).
+pub fn installed() -> Option<Arc<SloTracker>> {
+    if !enabled() {
+        return None;
+    }
+    SLO.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Record a TTFT sample against the installed tracker — one relaxed
+/// load when none is installed.
+#[inline]
+pub fn record_ttft_ms(v_ms: f64) {
+    if let Some(t) = installed() {
+        t.record_ttft_ms(v_ms);
+    }
+}
+
+/// Record an inter-token-gap sample against the installed tracker.
+#[inline]
+pub fn record_itl_ms(v_ms: f64) {
+    if let Some(t) = installed() {
+        t.record_itl_ms(v_ms);
+    }
+}
+
+/// Record a request outcome against the installed tracker.
+#[inline]
+pub fn record_outcome(ok: bool) {
+    if let Some(t) = installed() {
+        t.record_outcome(ok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloCfg {
+        SloCfg {
+            ttft_ms: 100.0,
+            itl_ms: 50.0,
+            error_budget: 0.1,
+            window_s: 3600.0,
+        }
+    }
+
+    #[test]
+    fn burn_rate_is_violating_fraction_over_budget() {
+        let t = SloTracker::new(cfg());
+        // 2 of 10 TTFT samples violate the 100ms objective: 20%
+        // violating over a 10% budget ⇒ burn 2.0.
+        for i in 0..10 {
+            t.record_ttft_ms(if i < 2 { 200.0 } else { 10.0 });
+        }
+        let s = t.snapshot();
+        assert_eq!(s.ttft.samples, 10);
+        assert_eq!(s.ttft.violations, 2);
+        assert!((s.ttft.burn_rate - 2.0).abs() < 1e-9);
+        assert_eq!(s.itl.samples, 0);
+        assert_eq!(s.max_burn(), s.ttft.burn_rate);
+    }
+
+    #[test]
+    fn error_objective_burns_at_one_when_erroring_at_budget() {
+        let t = SloTracker::new(cfg());
+        // 1 error in 10 outcomes at a 10% budget ⇒ burn exactly 1.0.
+        for i in 0..10 {
+            t.record_outcome(i != 0);
+        }
+        let s = t.snapshot();
+        assert_eq!(s.error.violations, 1);
+        assert!((s.error.burn_rate - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disabled_objective_records_nothing_and_burns_zero() {
+        let t = SloTracker::new(SloCfg {
+            ttft_ms: 0.0,
+            ..cfg()
+        });
+        t.record_ttft_ms(1e9);
+        let s = t.snapshot();
+        assert_eq!(s.ttft.samples, 0);
+        assert_eq!(s.ttft.burn_rate, 0.0);
+    }
+
+    #[test]
+    fn empty_window_burns_zero() {
+        let t = SloTracker::new(cfg());
+        let s = t.snapshot();
+        assert_eq!(s.max_burn(), 0.0);
+        assert_eq!(s.ttft.samples, 0);
+    }
+
+    #[test]
+    fn old_samples_age_out_of_the_window() {
+        let t = SloTracker::new(SloCfg {
+            window_s: 0.0, // degenerate window: everything ages out
+            ..cfg()
+        });
+        t.record_itl_ms(500.0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let s = t.snapshot();
+        assert_eq!(s.itl.samples, 0, "window_s=0 retains nothing");
+    }
+
+    #[test]
+    fn window_cap_bounds_memory() {
+        let t = SloTracker::new(cfg());
+        for _ in 0..(WINDOW_CAP + 100) {
+            t.record_outcome(true);
+        }
+        let s = t.snapshot();
+        assert!(s.error.samples as usize <= WINDOW_CAP);
+    }
+
+    #[test]
+    fn json_shape_is_scrapeable() {
+        let t = SloTracker::new(cfg());
+        t.record_ttft_ms(200.0);
+        let j = crate::util::json::parse(&t.snapshot().to_json().to_string()).unwrap();
+        assert_eq!(j.get("ttft").get("violations").as_usize(), Some(1));
+        assert!(j.get("error").get("burn_rate").as_f64().is_some());
+    }
+
+    #[test]
+    fn global_install_routes_samples_and_uninstall_stops_them() {
+        let _guard = crate::obs::test_guard();
+        uninstall();
+        assert!(!enabled());
+        record_ttft_ms(1e9); // inert
+
+        let t = SloTracker::new(cfg());
+        install(&t);
+        record_ttft_ms(200.0);
+        record_outcome(false);
+        let s = t.snapshot();
+        assert_eq!(s.ttft.samples, 1);
+        assert_eq!(s.error.violations, 1);
+
+        uninstall();
+        record_ttft_ms(200.0);
+        assert_eq!(t.snapshot().ttft.samples, 1);
+    }
+}

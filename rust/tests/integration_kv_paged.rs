@@ -69,7 +69,7 @@ fn randomized_allocator_invariants_hold() {
                     let plen = 1 + g.below(3 * block);
                     let prompt: Vec<u32> =
                         (0..plen).map(|i| base * 1000 + i as u32).collect();
-                    if let Some(kv) = pool.try_admit(&prompt, 4, 1) {
+                    if let Some(kv) = pool.try_admit(1, &prompt, 4, 1) {
                         live.push((kv, prompt, plen));
                     }
                 }
@@ -84,7 +84,7 @@ fn randomized_allocator_invariants_hold() {
                             fresh_tag += 1;
                         }
                         let plen = prompt.len();
-                        if let Some(kv) = pool.try_admit(&prompt, 4, 1) {
+                        if let Some(kv) = pool.try_admit(1, &prompt, 4, 1) {
                             live.push((kv, prompt, plen));
                         }
                     }
@@ -95,7 +95,7 @@ fn randomized_allocator_invariants_hold() {
                     if !live.is_empty() {
                         let i = g.below(live.len());
                         let (kv, prompt, len) = &mut live[i];
-                        if pool.ensure_append(kv, *len, prompt.len()) {
+                        if pool.ensure_append(1, kv, *len, prompt.len()) {
                             *len += 1;
                         }
                     }

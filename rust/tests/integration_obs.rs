@@ -6,8 +6,11 @@
 //! step, and the Prometheus exposition carrying live model-drift
 //! gauges while the trace is on.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::sync::Arc;
 use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
+use tpaware::coordinator::kv_pool::KvPoolCfg;
 use tpaware::coordinator::metrics::Metrics;
 use tpaware::coordinator::scheduler::Scheduler;
 use tpaware::coordinator::server::{Client, ServeConfig, Server};
@@ -17,6 +20,30 @@ use tpaware::obs;
 use tpaware::simkernel::pipeline::Algo;
 use tpaware::tp::topology::Topology;
 use tpaware::util::json;
+
+/// Counting allocator: lets the disabled-path test assert that an
+/// uninstalled event log's `emit` performs zero heap allocations.
+struct CountingAlloc;
+
+thread_local! {
+    // const-initialized and non-Drop, so reading it from inside
+    // `alloc` neither allocates nor registers a destructor.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn unit_model_cfg() -> ModelConfig {
     ModelConfig {
@@ -150,4 +177,162 @@ fn untraced_server_records_no_spans() {
     server.stop();
 
     assert!(obs::drift::global().snapshot().is_empty());
+}
+
+/// With no event log installed, `emit` must cost one relaxed load and
+/// nothing else — in particular, zero heap allocations — so leaving
+/// the hooks compiled into the scheduler and KV pool is free.
+#[test]
+fn disabled_event_log_emit_allocates_nothing() {
+    let _guard = obs::test_guard();
+    obs::log::uninstall();
+    let before = ALLOCS.with(|c| c.get());
+    for i in 0..10_000u64 {
+        obs::log::emit(
+            i,
+            obs::EventKind::Retire {
+                tokens: 3,
+                ttft_us: 900,
+                e2e_us: 4200,
+            },
+        );
+        obs::log::emit(i, obs::EventKind::Reject { reason: "draining" });
+        obs::log::emit(i, obs::EventKind::GrowthStall);
+    }
+    let after = ALLOCS.with(|c| c.get());
+    assert_eq!(after - before, 0, "disabled emit must not allocate");
+}
+
+/// The postmortem path end-to-end: concurrent streamed requests on a
+/// deliberately tiny paged KV pool force growth stalls; the flight
+/// recorder (stall-burst trigger) auto-captures a bundle from the
+/// serving loop, the `dump` wire command captures another on demand,
+/// and one request id correlates across the event log, the Prometheus
+/// SLO gauges and the bundle on disk.
+#[test]
+fn growth_stall_triggers_postmortem_bundle_with_joined_ids() {
+    let _guard = obs::test_guard();
+    let dir = std::env::temp_dir().join(format!("tpaware-obs-pm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let tracer = obs::Tracer::new(65_536);
+    let log = obs::EventLog::new(4096);
+    let slo = obs::SloTracker::new(obs::slo::SloCfg::default());
+    let flight = obs::FlightRecorder::new(obs::flight::FlightCfg {
+        dir: Some(dir.clone()),
+        stall_burst: 1,
+        reject_burst: 0,
+        burn_threshold: f64::INFINITY,
+        drift_ratio_max: f64::INFINITY,
+        min_interval_s: 0.0,
+        ..Default::default()
+    });
+
+    let cfg = unit_model_cfg();
+    let model =
+        Arc::new(Transformer::synthesize(&cfg, Algo::TpAware, Topology::new(2), 13));
+    let engine = EngineConfig::new(EngineBackend::Host, cfg.activation)
+        .layers(model.blocks.iter().map(|b| b.mlp.clone()).collect())
+        .start()
+        .unwrap();
+    let sched = Scheduler::new(model, Some(engine), Arc::new(Metrics::default()), 4);
+    // 4 blocks of 2 tokens total: any two of the three 8-token
+    // sequences below oversubscribe the pool, forcing stalls and
+    // preemption while each request still fits (and finishes) alone.
+    let server = Server::serve(
+        sched,
+        ServeConfig::new("127.0.0.1:0")
+            .pool(KvPoolCfg {
+                max_seqs: 4,
+                max_tokens: 8,
+                block_tokens: 2,
+                paged: true,
+            })
+            .trace(tracer.clone())
+            .log(log.clone())
+            .slo(slo.clone())
+            .flight(flight.clone()),
+    )
+    .unwrap();
+
+    let mut c1 = Client::connect(&server.addr).unwrap();
+    let mut c2 = Client::connect(&server.addr).unwrap();
+    let mut c3 = Client::connect(&server.addr).unwrap();
+    let mut s1 = c1.generate_streamed_as(101, &[1, 2], 6).unwrap();
+    let mut s2 = c2.generate_streamed_as(202, &[3, 4], 6).unwrap();
+    let mut s3 = c3.generate_streamed_as(303, &[5, 6], 6).unwrap();
+    let n1 = (&mut s1).map(|t| t.unwrap()).count();
+    let d1 = s1.finish().unwrap();
+    let n2 = (&mut s2).map(|t| t.unwrap()).count();
+    let d2 = s2.finish().unwrap();
+    let n3 = (&mut s3).map(|t| t.unwrap()).count();
+    let d3 = s3.finish().unwrap();
+    assert_eq!((n1, n2, n3), (6, 6, 6));
+    // The server echoes the client-supplied ids on the done events.
+    assert_eq!((d1.id, d2.id, d3.id), (101, 202, 303));
+
+    // Wait for the serving loop's periodic trigger check to capture.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while flight.captures() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(
+        flight.captures() >= 1,
+        "stall burst must auto-capture a postmortem within 30s"
+    );
+
+    // SLO windows saw the three requests; gauges are live over the wire.
+    let snap = slo.snapshot();
+    assert!(snap.ttft.samples >= 3, "ttft window: {snap:?}");
+    assert!(snap.error.samples >= 3, "outcome window: {snap:?}");
+    let prom = c1.metrics_prom().unwrap();
+    assert!(prom.contains("# TYPE tpaware_slo_ttft_burn_rate gauge"), "{prom}");
+    let samples_line = prom
+        .lines()
+        .find(|l| l.starts_with("tpaware_slo_ttft_window_samples "))
+        .expect("ttft samples gauge exported");
+    let n: f64 = samples_line.split(' ').nth(1).unwrap().parse().unwrap();
+    assert!(n >= 3.0, "exported window samples: {samples_line}");
+
+    // On-demand capture over the wire, then validate the bundle.
+    let path = c1.dump().unwrap();
+    let bundle = std::path::PathBuf::from(&path);
+    assert!(bundle.starts_with(&dir), "bundle {path} outside {dir:?}");
+    let manifest =
+        json::parse(&std::fs::read_to_string(bundle.join("manifest.json")).unwrap()).unwrap();
+    assert_eq!(manifest.get("reason").as_str(), Some("dump"));
+    assert!(manifest.get("events").as_usize().unwrap() > 0);
+    let events = std::fs::read_to_string(bundle.join("events.jsonl")).unwrap();
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut retired = std::collections::BTreeSet::new();
+    for line in events.lines() {
+        let e = json::parse(line).unwrap();
+        let kind = e.get("event").as_str().unwrap().to_string();
+        if kind == "retire" {
+            retired.insert(e.get("req").as_usize().unwrap());
+        }
+        kinds.insert(kind);
+    }
+    for want in ["admit", "growth_stall", "preempt", "retire"] {
+        assert!(kinds.contains(want), "event '{want}' missing; got {kinds:?}");
+    }
+    for id in [101, 202, 303] {
+        assert!(retired.contains(&id), "request {id} has no retire event");
+    }
+    let trace =
+        json::parse(&std::fs::read_to_string(bundle.join("trace.json")).unwrap()).unwrap();
+    assert!(!trace.get("traceEvents").as_arr().unwrap().is_empty());
+    let m = json::parse(&std::fs::read_to_string(bundle.join("metrics.json")).unwrap()).unwrap();
+    assert!(m.get("slo").get("ttft").get("samples").as_usize().unwrap() >= 3);
+    let conf =
+        json::parse(&std::fs::read_to_string(bundle.join("config.json")).unwrap()).unwrap();
+    assert_eq!(conf.get("pool").get("paged").as_bool(), Some(true));
+
+    c1.shutdown().unwrap();
+    server.stop();
+    obs::uninstall();
+    obs::log::uninstall();
+    obs::slo::uninstall();
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -26,6 +26,11 @@ Compares one or more bench outputs against the committed requirements in
   hot path must stay fast -- the obs layer's one-atomic-load contract)
   and `min_enabled_over_disabled` (recording spans must not halve
   throughput).
+* `BENCH_serving.json` also carries a `log_overhead` section (the same
+  offline run with the structured event log off vs on), checked against
+  the baseline's `log_overhead` floors with the same shape as
+  `trace_overhead`: `min_disabled_tok_s` and
+  `min_enabled_over_disabled`.
 * `BENCH_serving.json` also carries a `kv_paged` section (a shared-prefix
   burst drained through the same continuous scheduler on a slab pool and
   on a paged pool with the same token budget), checked against the
@@ -155,6 +160,35 @@ def check_trace_overhead(overhead, base, failures):
             f"{min_ratio:.2f}x -- span recording costs too much")
 
 
+def check_log_overhead(overhead, base, failures):
+    """Event-log-off floor + log-on relative throughput."""
+    cfg = base.get("log_overhead", {})
+    disabled = float(overhead.get("disabled_tok_s", 0.0))
+    enabled = float(overhead.get("enabled_tok_s", 0.0))
+    ratio = float(overhead.get("enabled_over_disabled", 0.0))
+    print(f"bench gate (log overhead): disabled {disabled:.1f} tok/s, "
+          f"enabled {enabled:.1f} tok/s ({ratio:.2f}x, "
+          f"{overhead.get('events', 0)} events)")
+
+    floor = float(cfg.get("min_disabled_tok_s", 0.0))
+    ok = disabled >= floor
+    print(f"  {'PASS' if ok else 'FAIL'} log_overhead/disabled: "
+          f"{disabled:.1f} tok/s (need >= {floor:.1f})")
+    if not ok:
+        failures.append(
+            f"log_overhead: disabled-logging run at {disabled:.1f} tok/s "
+            f"below floor {floor:.1f} -- the unlogged hot path regressed")
+
+    min_ratio = float(cfg.get("min_enabled_over_disabled", 0.0))
+    ok = ratio >= min_ratio
+    print(f"  {'PASS' if ok else 'FAIL'} log_overhead/ratio: {ratio:.2f}x "
+          f"(need >= {min_ratio:.2f}x)")
+    if not ok:
+        failures.append(
+            f"log_overhead: enabled/disabled ratio {ratio:.2f}x below "
+            f"{min_ratio:.2f}x -- event recording costs too much")
+
+
 def check_kv_paged(cmp, base, failures):
     """Paged-vs-slab KV admission: relative, deterministic counters."""
     cfg = base.get("kv_paged", {})
@@ -207,7 +241,7 @@ def main() -> int:
         base = json.load(f)
 
     failures = []
-    saw_gemm = saw_serving = saw_trace = saw_kv_paged = False
+    saw_gemm = saw_serving = saw_trace = saw_log = saw_kv_paged = False
     for path in sys.argv[1:-1]:
         with open(path) as f:
             bench = json.load(f)
@@ -220,6 +254,9 @@ def main() -> int:
         if "trace_overhead" in bench:
             saw_trace = True
             check_trace_overhead(bench["trace_overhead"], base, failures)
+        if "log_overhead" in bench:
+            saw_log = True
+            check_log_overhead(bench["log_overhead"], base, failures)
         if "kv_paged" in bench:
             saw_kv_paged = True
             check_kv_paged(bench["kv_paged"], base, failures)
@@ -235,6 +272,9 @@ def main() -> int:
     if base.get("trace_overhead") and not saw_trace:
         failures.append("no bench file with `trace_overhead` given, but the "
                         "baseline has a trace_overhead section")
+    if base.get("log_overhead") and not saw_log:
+        failures.append("no bench file with `log_overhead` given, but the "
+                        "baseline has a log_overhead section")
     if base.get("kv_paged") and not saw_kv_paged:
         failures.append("no bench file with `kv_paged` given, but the "
                         "baseline has a kv_paged section")

@@ -1,0 +1,261 @@
+#!/usr/bin/env python3
+"""CI validator for postmortem bundles written by the flight recorder.
+
+A bundle is a directory `pm-<seq>-<reason>/` captured by the serving
+loop (anomaly trigger) or the `dump` wire command / `tpaware
+postmortem` CLI. Checks (stdlib-only, like the other tools/ scripts):
+
+* `manifest.json`: required keys (`reason`, `seq`, `unix_ms`, `events`,
+  `dropped_events`, `spans`, `dropped_spans`, `files`), and every file
+  the manifest names exists in the bundle;
+* `events.jsonl`: every line parses as one JSON object with integer
+  `ts_us`, integer `req` and a known `event` name; timestamps are
+  monotone nondecreasing; the line count matches the manifest;
+* request-id cross-reference: every `retire` event's request id also
+  has an `admit` event in the tail -- the lifecycle is joinable, not
+  truncated mid-request (the manifest's `dropped_events` must be 0 for
+  this check to be strict, so it is skipped when events were dropped);
+* `trace.json`: parses with a `traceEvents` list (deep span validation
+  is tools/trace_check.py's job);
+* `metrics.json` / `config.json`: parse as JSON objects; when the
+  metrics carry an `slo` section, each objective exposes `samples`,
+  `violations` and `burn_rate`;
+* optionally, a loadgen per-request CSV (`--per-request-csv` output,
+  columns `id,tokens,ttft_ms,e2e_ms`): at least one CSV request id must
+  appear in the bundle's event log, proving client rows join
+  server-side postmortems.
+
+Usage: postmortem_check.py BUNDLE_DIR [LOADGEN_REQUESTS.csv]
+"""
+
+import json
+import os
+import sys
+
+EVENT_NAMES = {
+    "admit",
+    "reject",
+    "growth_stall",
+    "preempt",
+    "cow_copy",
+    "prefix_hit",
+    "drain",
+    "retire",
+}
+
+MANIFEST_KEYS = (
+    "reason",
+    "seq",
+    "unix_ms",
+    "events",
+    "dropped_events",
+    "spans",
+    "dropped_spans",
+    "files",
+)
+
+
+def load_json(bundle, name, failures):
+    path = os.path.join(bundle, name)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        failures.append(f"{name}: cannot read ({e})")
+    except json.JSONDecodeError as e:
+        failures.append(f"{name}: not valid JSON ({e})")
+    return None
+
+
+def check_manifest(bundle, manifest, failures):
+    missing = [k for k in MANIFEST_KEYS if k not in manifest]
+    ok = not missing
+    print(f"  {'PASS' if ok else 'FAIL'} manifest keys "
+          f"(reason={manifest.get('reason')!r}, seq={manifest.get('seq')})")
+    if not ok:
+        failures.append(f"manifest.json: missing keys {missing}")
+    for kind, fname in sorted(manifest.get("files", {}).items()):
+        present = os.path.exists(os.path.join(bundle, fname))
+        print(f"  {'PASS' if present else 'FAIL'} file {kind}: {fname}")
+        if not present:
+            failures.append(f"manifest names {fname} ({kind}) but it is absent")
+
+
+def check_events(bundle, manifest, failures):
+    """Parse events.jsonl; return {event_name: count} and the id sets."""
+    path = os.path.join(bundle, "events.jsonl")
+    counts = {}
+    ids = {"admit": set(), "retire": set(), "all": set()}
+    last_ts = -1
+    monotone = True
+    n = 0
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        failures.append(f"events.jsonl: cannot read ({e})")
+        return counts, ids
+    for i, line in enumerate(lines):
+        try:
+            e = json.loads(line)
+        except json.JSONDecodeError:
+            failures.append(f"events.jsonl line {i + 1}: not valid JSON")
+            continue
+        n += 1
+        name = e.get("event")
+        if name not in EVENT_NAMES:
+            failures.append(f"events.jsonl line {i + 1}: unknown event {name!r}")
+            continue
+        if not isinstance(e.get("ts_us"), int) or not isinstance(e.get("req"), int):
+            failures.append(
+                f"events.jsonl line {i + 1} ({name}): ts_us/req must be integers")
+            continue
+        if e["ts_us"] < last_ts:
+            monotone = False
+        last_ts = e["ts_us"]
+        counts[name] = counts.get(name, 0) + 1
+        ids["all"].add(e["req"])
+        if name in ids:
+            ids[name].add(e["req"])
+    print(f"  {'PASS' if monotone else 'FAIL'} events.jsonl: {n} events, "
+          f"timestamps monotone: {monotone}")
+    if not monotone:
+        failures.append("events.jsonl: timestamps are not monotone nondecreasing")
+    want = manifest.get("events")
+    ok = want == n
+    print(f"  {'PASS' if ok else 'FAIL'} event count matches manifest: "
+          f"{n} vs {want}")
+    if not ok:
+        failures.append(f"events.jsonl holds {n} events, manifest says {want}")
+    return counts, ids
+
+
+def check_lifecycle(manifest, counts, ids, failures):
+    """Retired requests must be joinable back to their admission."""
+    if manifest.get("dropped_events", 0) != 0:
+        print("  SKIP lifecycle join: events were dropped at the ring, "
+              "the tail may truncate admissions")
+        return
+    orphans = sorted(ids["retire"] - ids["admit"])
+    ok = not orphans
+    print(f"  {'PASS' if ok else 'FAIL'} lifecycle join: "
+          f"{len(ids['retire'])} retired ids all admitted "
+          f"({len(orphans)} orphans)")
+    if not ok:
+        failures.append(
+            f"retire events for requests {orphans[:8]} have no admit event")
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"  event mix: {summary or 'empty'}")
+
+
+def check_trace(bundle, failures):
+    doc = load_json(bundle, "trace.json", failures)
+    if doc is None:
+        return
+    ok = isinstance(doc.get("traceEvents"), list)
+    print(f"  {'PASS' if ok else 'FAIL'} trace.json: traceEvents list "
+          f"({len(doc.get('traceEvents', []))} events)")
+    if not ok:
+        failures.append("trace.json: traceEvents missing or not a list")
+
+
+def check_metrics(bundle, failures):
+    doc = load_json(bundle, "metrics.json", failures)
+    if doc is None:
+        return
+    if not isinstance(doc, dict):
+        failures.append("metrics.json: not a JSON object")
+        return
+    slo = doc.get("slo")
+    if slo is None:
+        print("  PASS metrics.json parses (no slo section installed)")
+        return
+    bad = []
+    for objective in ("ttft", "itl", "error"):
+        o = slo.get(objective, {})
+        for k in ("objective", "samples", "violations", "burn_rate"):
+            if k not in o:
+                bad.append(f"{objective}.{k}")
+    ok = not bad
+    print(f"  {'PASS' if ok else 'FAIL'} metrics.json slo section "
+          f"(ttft burn {slo.get('ttft', {}).get('burn_rate')})")
+    if not ok:
+        failures.append(f"metrics.json: slo section missing {bad}")
+
+
+def check_config(bundle, failures):
+    doc = load_json(bundle, "config.json", failures)
+    if doc is None:
+        return
+    ok = isinstance(doc, dict)
+    print(f"  {'PASS' if ok else 'FAIL'} config.json parses "
+          f"(addr={doc.get('addr') if ok else None!r})")
+    if not ok:
+        failures.append("config.json: not a JSON object")
+
+
+def check_csv_join(csv_path, ids, failures):
+    try:
+        with open(csv_path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        failures.append(f"{csv_path}: cannot read ({e})")
+        return
+    if not lines or lines[0].split(",")[0] != "id":
+        failures.append(f"{csv_path}: missing `id,...` header")
+        return
+    csv_ids = set()
+    for i, line in enumerate(lines[1:]):
+        cell = line.split(",")[0]
+        try:
+            csv_ids.add(int(cell))
+        except ValueError:
+            failures.append(f"{csv_path} line {i + 2}: id {cell!r} not an integer")
+    joined = csv_ids & ids["all"]
+    ok = bool(joined)
+    print(f"  {'PASS' if ok else 'FAIL'} loadgen join: {len(joined)} of "
+          f"{len(csv_ids)} CSV request ids appear in the event log")
+    if not ok:
+        failures.append(
+            f"{csv_path}: none of {len(csv_ids)} request ids appear in the "
+            f"bundle's events.jsonl")
+
+
+def main() -> int:
+    if len(sys.argv) not in (2, 3):
+        print(__doc__)
+        return 2
+    bundle = sys.argv[1]
+    if not os.path.isdir(bundle):
+        print(f"postmortem check FAILED: {bundle} is not a directory")
+        return 1
+
+    failures = []
+    print(f"postmortem check: {bundle}")
+    manifest = load_json(bundle, "manifest.json", failures)
+    if manifest is None:
+        print("\npostmortem check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+
+    check_manifest(bundle, manifest, failures)
+    counts, ids = check_events(bundle, manifest, failures)
+    check_lifecycle(manifest, counts, ids, failures)
+    check_trace(bundle, failures)
+    check_metrics(bundle, failures)
+    check_config(bundle, failures)
+    if len(sys.argv) == 3:
+        check_csv_join(sys.argv[2], ids, failures)
+
+    if failures:
+        print("\npostmortem check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("postmortem check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
