@@ -1,21 +1,25 @@
 //! Fused dequant-GEMM backend sweep: `naive` (scalar) vs `tiled` vs
-//! `tiled-mt` across the scaled paper MLP shapes, both weight layouts,
-//! decode batch sizes — with the simkernel CPU-tiling model printed next
-//! to the measured numbers.
+//! `tiled-mt` vs `simd` vs `simd-mt` across the scaled paper MLP shapes,
+//! both weight layouts, decode batch sizes — with the simkernel
+//! CPU-tiling model printed next to the measured numbers.
 //!
-//! Every backend is first checked **bit-identical** to the scalar
-//! baseline (exact equality — the backend contract), then timed. The
-//! bench asserts the acceptance bar in-process (`tiled-mt` beats `naive`
-//! on the granite MLP shape) and emits:
+//! Every backend is first checked against the scalar baseline **per its
+//! contract tier** before timing: exact equality for the bit-identical
+//! tier, the documented `simd_abs_bound` for the vector tier. The bench
+//! asserts the scalar acceptance bar in-process (`tiled-mt` beats
+//! `naive` on the granite MLP shape — the `simd ≥ 1.5× tiled` bar is
+//! enforced by `tools/bench_gate.py`, which knows whether the runner has
+//! native vector features) and emits:
 //!
 //! * `bench_results/gemm_bench.csv` — the full sweep;
 //! * `bench_results/BENCH_gemm.json` — backend × shape GiB/s on the
-//!   deployment (Algorithm-1 ordered) layout, consumed by the CI
+//!   deployment (Algorithm-1 ordered) layout plus the detected CPU
+//!   feature label (`features_detected`), consumed by the CI
 //!   `bench-gate` job against `ci/bench_baseline.json`.
 //!
 //! Run: `cargo bench --bench gemm_bench`
 
-use tpaware::gemm::{dequant_matmul, GemmBackend, TileConfig};
+use tpaware::gemm::{dequant_abs_max, dequant_matmul, simd_abs_bound, GemmBackend, TileConfig};
 use tpaware::quant::gidx::GroupIndex;
 use tpaware::quant::gptq::QuantizedLinear;
 use tpaware::quant::pack::pack;
@@ -93,15 +97,27 @@ fn main() {
                     x0
                 };
                 // The backend contract, checked before timing: exact
-                // equality with the scalar baseline.
+                // equality with the scalar baseline for the
+                // bit-identical tier, the documented tolerance bound for
+                // the simd tier.
                 let base = dequant_matmul(GemmBackend::Naive, &x, layer);
-                for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+                let x_max = x.data.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+                let bound = simd_abs_bound(layer.k(), x_max, dequant_abs_max(layer));
+                for b in GemmBackend::all() {
                     let got = dequant_matmul(b, &x, layer);
-                    assert_eq!(
-                        got.max_abs_diff(&base),
-                        0.0,
-                        "{name} {layout} m={m}: {b:?} is not bit-identical"
-                    );
+                    let diff = got.max_abs_diff(&base);
+                    if b.bit_identical() {
+                        assert_eq!(
+                            diff, 0.0,
+                            "{name} {layout} m={m}: {b:?} is not bit-identical"
+                        );
+                    } else {
+                        assert!(
+                            diff <= bound,
+                            "{name} {layout} m={m}: {b:?} outside the tolerance \
+                             contract ({diff:e} > {bound:e})"
+                        );
+                    }
                 }
                 for b in GemmBackend::all() {
                     let s = bench(&bcfg, || {
@@ -155,6 +171,17 @@ fn main() {
          {naive_gibs:.2} GiB/s ({:.2}x) — acceptance bar (tiled-mt > naive) holds\n",
         mt_gibs / naive_gibs
     );
+    // The simd/tiled ratio is informational here; the 1.5× floor lives
+    // in bench_gate.py, gated on `features_detected` being native (on a
+    // scalar-fallback host simd == tiled by construction).
+    let features = tpaware::gemm::simd::detected_features();
+    let tiled_gibs = lookup(&granite.1, "tiled");
+    let simd_gibs = lookup(&granite.1, "simd");
+    println!(
+        "granite-mlp-w1 ordered, M={m_gate}: simd {simd_gibs:.2} GiB/s vs tiled \
+         {tiled_gibs:.2} GiB/s ({:.2}x), cpu features: {features}\n",
+        simd_gibs / tiled_gibs
+    );
 
     // BENCH_gemm.json for the CI bench-gate job.
     let shape_objs: Vec<(&str, Json)> = gate
@@ -172,6 +199,7 @@ fn main() {
         ("m", m_gate.into()),
         ("group_size", g.into()),
         ("pool_workers", pool_workers.into()),
+        ("features_detected", features.into()),
         ("gib_s", Json::obj(shape_objs)),
     ]);
     let dir = tpaware::util::timer::bench_results_dir();

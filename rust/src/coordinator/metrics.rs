@@ -245,11 +245,18 @@ pub struct Metrics {
     /// [`Metrics::set_startup`]; empty source string until then).
     pub startup: Mutex<StartupStats>,
     /// Label of the compute path executing the engine's GEMMs
-    /// (`naive` | `tiled` | `tiled-mt` for host engines, `pjrt` for
+    /// (`naive` | `tiled` | `tiled-mt` | `simd` | `simd-mt` for host
+    /// engines, `pjrt` for
     /// compiled-kernel engines; set by [`Metrics::set_gemm_backend`] —
     /// the scheduler publishes it from the engine at construction.
     /// Empty without an engine).
     pub gemm_backend: Mutex<String>,
+    /// Detected CPU vector features driving the `simd` GEMM tier
+    /// (`avx2+fma` | `neon` | `scalar` | `scalar(forced)`; set alongside
+    /// [`Metrics::set_gemm_backend`] by the scheduler at construction so
+    /// a `gemm_backend: simd` reading is interpretable per host. Empty
+    /// without an engine).
+    pub cpu_features: Mutex<String>,
     /// Construction time, anchoring the `uptime_s` gauge.
     created: Instant,
     /// Monotone snapshot counter: bumped on every [`Metrics::to_json`]
@@ -275,6 +282,7 @@ impl Default for Metrics {
             kv: Mutex::new(KvPoolStats::default()),
             startup: Mutex::new(StartupStats::default()),
             gemm_backend: Mutex::new(String::new()),
+            cpu_features: Mutex::new(String::new()),
             created: Instant::now(),
             snapshot_seq: AtomicU64::new(0),
         }
@@ -312,6 +320,12 @@ impl Metrics {
     /// Record the engine's GEMM backend label for the metrics endpoint.
     pub fn set_gemm_backend(&self, label: &str) {
         *self.gemm_backend.lock().unwrap() = label.to_string();
+    }
+
+    /// Record the detected CPU vector-feature label for the metrics
+    /// endpoint (see [`crate::gemm::simd::detected_features`]).
+    pub fn set_cpu_features(&self, label: &str) {
+        *self.cpu_features.lock().unwrap() = label.to_string();
     }
 
     /// Record how the serving weights were materialized at boot
@@ -380,6 +394,10 @@ impl Metrics {
             (
                 "gemm_backend",
                 self.gemm_backend.lock().unwrap().as_str().into(),
+            ),
+            (
+                "cpu_features",
+                self.cpu_features.lock().unwrap().as_str().into(),
             ),
             ("model_drift", crate::obs::drift::global().to_json()),
             (
@@ -934,6 +952,14 @@ mod tests {
         assert_eq!(m.to_json().get("gemm_backend").as_str(), Some(""));
         m.set_gemm_backend("tiled-mt");
         assert_eq!(m.to_json().get("gemm_backend").as_str(), Some("tiled-mt"));
+    }
+
+    #[test]
+    fn cpu_features_label_surfaces() {
+        let m = Metrics::default();
+        assert_eq!(m.to_json().get("cpu_features").as_str(), Some(""));
+        m.set_cpu_features("avx2+fma");
+        assert_eq!(m.to_json().get("cpu_features").as_str(), Some("avx2+fma"));
     }
 
     #[test]

@@ -67,8 +67,11 @@ impl Scheduler {
         if let Some(e) = &engine {
             // Surface the engine's compute path in the metrics endpoint
             // so serving runs are attributable to a config: the host
-            // GemmBackend label, or "pjrt" for compiled-kernel engines.
+            // GemmBackend label, or "pjrt" for compiled-kernel engines,
+            // plus the detected vector features so a `simd` reading is
+            // interpretable per host.
             metrics.set_gemm_backend(e.gemm_backend_label());
+            metrics.set_cpu_features(crate::gemm::simd::detected_features());
         }
         Scheduler {
             model,

@@ -231,14 +231,33 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Parse a non-empty `TPAWARE_GEMM_THREADS` value: a base-10 worker
+/// count (`0` disables the workers — callers still execute inline),
+/// clamped to [`MAX_WORKERS`].
+///
+/// Unparseable values are a **loud startup panic**, not a silent fall
+/// back to the autodetected default: a typo'd `TPAWARE_GEMM_THREADS=eight`
+/// used to quietly run the machine-dependent default, which is exactly
+/// the misconfiguration the variable exists to pin down.
+fn parse_workers(raw: &str) -> usize {
+    match raw.trim().parse::<usize>() {
+        Ok(n) => n.min(MAX_WORKERS),
+        Err(e) => panic!(
+            "invalid TPAWARE_GEMM_THREADS value {raw:?}: {e} \
+             (expected a non-negative integer; 0 disables the pool workers)"
+        ),
+    }
+}
+
 /// Default worker count for the [`global`] pool: `TPAWARE_GEMM_THREADS`
-/// if set (0 disables the workers), else `available_parallelism − 1`
+/// if set and non-empty (0 disables the workers; anything unparseable
+/// panics — see [`parse_workers`]), else `available_parallelism − 1`
 /// (the caller is the +1th executor), clamped to `1..=`[`MAX_WORKERS`].
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("TPAWARE_GEMM_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            return n.min(MAX_WORKERS);
-        }
+    match std::env::var("TPAWARE_GEMM_THREADS") {
+        // An empty value means "unset" (e.g. `TPAWARE_GEMM_THREADS= cmd`).
+        Ok(v) if !v.trim().is_empty() => return parse_workers(&v),
+        _ => {}
     }
     let avail = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -333,5 +352,26 @@ mod tests {
     fn default_workers_is_bounded() {
         let w = default_workers();
         assert!(w <= MAX_WORKERS);
+    }
+
+    #[test]
+    fn worker_env_parses_valid_values() {
+        assert_eq!(parse_workers("0"), 0);
+        assert_eq!(parse_workers("3"), 3);
+        assert_eq!(parse_workers(" 5 "), 5);
+        // Oversized requests clamp instead of oversubscribing.
+        assert_eq!(parse_workers("9999"), MAX_WORKERS);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid TPAWARE_GEMM_THREADS")]
+    fn worker_env_typo_is_a_loud_error() {
+        parse_workers("eight");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid TPAWARE_GEMM_THREADS")]
+    fn worker_env_negative_is_a_loud_error() {
+        parse_workers("-2");
     }
 }

@@ -1,0 +1,650 @@
+//! Vectorized fused dequant-GEMM — the `simd` / `simd-mt` backends.
+//!
+//! Same three-level MC × KC × NC blocking and group-aligned slab dequant
+//! as [`crate::gemm::tiled`] (the dequant stage is literally
+//! [`tiled::dequant_slab`]), but the register micro-tile is widened to
+//! the host's vector lane width and the inner update runs on fused
+//! multiply-add intrinsics:
+//!
+//! * **x86-64 AVX2+FMA** — `MR × 16` micro-tile: two `__m256`
+//!   accumulators per row, `_mm256_fmadd_ps` per channel.
+//! * **AArch64 NEON** — `MR × 8` micro-tile: two `float32x4_t`
+//!   accumulators per row, `vfmaq_f32` per channel.
+//!
+//! # Runtime feature detection
+//!
+//! The vector tier is probed once per process
+//! (`is_x86_feature_detected!("avx2")` + `("fma")` on x86-64,
+//! `is_aarch64_feature_detected!("neon")` on AArch64) and cached. On
+//! hosts with neither tier — or when [`FORCE_SCALAR_ENV`]
+//! (`TPAWARE_FORCE_SCALAR`) is set to anything but `0`/empty — the
+//! drivers dispatch to the scalar [`tiled`] path, so `simd` is
+//! selectable everywhere and merely loses the speedup on old hardware.
+//! The override is re-read on every call (one `env::var` per GEMM, noise
+//! next to the GEMM itself), so tests and the CI forced-scalar matrix
+//! leg can flip it without restarting the process; the hardware probe
+//! stays cached.
+//!
+//! # Equivalence contract (tolerance-bounded, not bit-identical)
+//!
+//! Unlike `naive`/`tiled`/`tiled-mt`, the vector kernels are **not**
+//! bit-identical to the scalar ones: the accumulation still visits
+//! channels in strictly increasing order with one accumulator per output
+//! element, but each `acc += x·ŵ` step is a *fused* multiply-add — one
+//! rounding where the scalar kernel's separate multiply and add take
+//! two. The outputs therefore agree only to the documented bound
+//! [`crate::gemm::simd_abs_bound`] (see `gemm/mod.rs` for the
+//! derivation), which every equivalence test and `gemm_bench`'s
+//! pre-timing check enforce in place of `==`.
+//!
+//! Two exactness properties *are* kept:
+//!
+//! * **Ragged edges are scalar.** Tiles narrower than the vector width
+//!   or shorter than `MR` run [`tiled::micro_edge`], so every `unsafe`
+//!   vector load/store is full-width and in-bounds by construction — no
+//!   masked tails, nothing for the CI sanitizer lane to forgive.
+//! * **`simd-mt` is bit-identical to `simd`.** The multi-threaded
+//!   driver shards the same disjoint NC-column tiles the single-threaded
+//!   driver iterates, each computed by the same kernel at the same
+//!   blocking — so threading never widens the tolerance.
+
+use crate::gemm::pool::{self, WorkerPool};
+use crate::gemm::tiled::{self, TileConfig};
+use crate::quant::gptq::QuantizedLinear;
+use crate::tensor::Matrix;
+use std::sync::{Mutex, OnceLock};
+
+/// Environment variable that forces the scalar fallback when set to any
+/// value other than `0`/empty — the feature-detection override the CI
+/// backend matrix uses to exercise the fallback path on new hardware.
+pub const FORCE_SCALAR_ENV: &str = "TPAWARE_FORCE_SCALAR";
+
+/// Vector capability tier the `simd` backends dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// x86-64 with AVX2 and FMA: 8-lane f32 vectors, fused multiply-add.
+    Avx2Fma,
+    /// AArch64 with NEON: 4-lane f32 vectors, fused multiply-add.
+    Neon,
+    /// No usable vector tier (or [`FORCE_SCALAR_ENV`] set): dispatch to
+    /// the scalar [`tiled`] kernels.
+    Scalar,
+}
+
+/// One-time hardware probe (ignores the env override).
+fn probe_hardware() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdLevel::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The cached hardware tier, before the env override.
+fn hardware_level() -> SimdLevel {
+    static HW: OnceLock<SimdLevel> = OnceLock::new();
+    *HW.get_or_init(probe_hardware)
+}
+
+/// Whether [`FORCE_SCALAR_ENV`] currently requests the scalar fallback.
+fn force_scalar() -> bool {
+    match std::env::var(FORCE_SCALAR_ENV) {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    }
+}
+
+/// The tier the `simd` backends will use for a call made now: the cached
+/// hardware probe, downgraded to [`SimdLevel::Scalar`] while
+/// [`FORCE_SCALAR_ENV`] is set.
+pub fn active_level() -> SimdLevel {
+    if force_scalar() {
+        SimdLevel::Scalar
+    } else {
+        hardware_level()
+    }
+}
+
+/// Human-readable label of the active tier for metrics / bench JSON:
+/// `avx2+fma`, `neon`, `scalar`, or `scalar(forced)` (vector hardware
+/// present but [`FORCE_SCALAR_ENV`] set). The bench gate treats exactly
+/// `avx2+fma` and `neon` as native.
+pub fn detected_features() -> &'static str {
+    match (active_level(), hardware_level()) {
+        (SimdLevel::Avx2Fma, _) => "avx2+fma",
+        (SimdLevel::Neon, _) => "neon",
+        (SimdLevel::Scalar, SimdLevel::Scalar) => "scalar",
+        (SimdLevel::Scalar, _) => "scalar(forced)",
+    }
+}
+
+/// Vector micro-tile width (columns) for a tier: two vector registers'
+/// worth of f32 lanes, matching the two-accumulator micro-kernels.
+fn vector_nr(level: SimdLevel) -> usize {
+    match level {
+        SimdLevel::Avx2Fma => 16,
+        SimdLevel::Neon => 8,
+        SimdLevel::Scalar => tiled::NR,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::gemm::tiled::MR;
+    use crate::tensor::Matrix;
+    use std::arch::x86_64::*;
+
+    /// AVX2+FMA `MR × 16` micro-tile:
+    /// `out[i0..i0+MR, j0..j0+16] += X[i0..i0+MR, kb0..kb1] · slab`.
+    ///
+    /// Channels ascend exactly as in the scalar kernel; the only numeric
+    /// difference is the fused multiply-add (one rounding per term).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 and FMA at runtime, and guarantee
+    /// the full micro-tile is in bounds: `i0 + MR` rows in `x`/`out` and
+    /// `j0 + 16 <= nb`, with `slab` holding `(kb1 - kb0) × nb` values
+    /// and `out` holding `rows × nb`. The block driver only takes this
+    /// path for full tiles, so the unaligned loads/stores never cross
+    /// the slab or output end.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+    pub(super) unsafe fn micro_full_avx2(
+        x: &Matrix,
+        slab: &[f32],
+        out: &mut [f32],
+        nb: usize,
+        i0: usize,
+        j0: usize,
+        kb0: usize,
+        kb1: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let off = (i0 + r) * nb + j0;
+            accr[0] = _mm256_loadu_ps(out.as_ptr().add(off));
+            accr[1] = _mm256_loadu_ps(out.as_ptr().add(off + 8));
+        }
+        for kk in kb0..kb1 {
+            let soff = (kk - kb0) * nb + j0;
+            let s0 = _mm256_loadu_ps(slab.as_ptr().add(soff));
+            let s1 = _mm256_loadu_ps(slab.as_ptr().add(soff + 8));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let xv = _mm256_set1_ps(x.at(i0 + r, kk));
+                accr[0] = _mm256_fmadd_ps(xv, s0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(xv, s1, accr[1]);
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let off = (i0 + r) * nb + j0;
+            _mm256_storeu_ps(out.as_mut_ptr().add(off), accr[0]);
+            _mm256_storeu_ps(out.as_mut_ptr().add(off + 8), accr[1]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use crate::gemm::tiled::MR;
+    use crate::tensor::Matrix;
+    use std::arch::aarch64::*;
+
+    /// NEON `MR × 8` micro-tile:
+    /// `out[i0..i0+MR, j0..j0+8] += X[i0..i0+MR, kb0..kb1] · slab`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified NEON at runtime, and guarantee the full
+    /// micro-tile is in bounds: `i0 + MR` rows in `x`/`out` and
+    /// `j0 + 8 <= nb`, with `slab` holding `(kb1 - kb0) × nb` values
+    /// and `out` holding `rows × nb`.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+    pub(super) unsafe fn micro_full_neon(
+        x: &Matrix,
+        slab: &[f32],
+        out: &mut [f32],
+        nb: usize,
+        i0: usize,
+        j0: usize,
+        kb0: usize,
+        kb1: usize,
+    ) {
+        let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let off = (i0 + r) * nb + j0;
+            accr[0] = vld1q_f32(out.as_ptr().add(off));
+            accr[1] = vld1q_f32(out.as_ptr().add(off + 4));
+        }
+        for kk in kb0..kb1 {
+            let soff = (kk - kb0) * nb + j0;
+            let s0 = vld1q_f32(slab.as_ptr().add(soff));
+            let s1 = vld1q_f32(slab.as_ptr().add(soff + 4));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let xv = vdupq_n_f32(x.at(i0 + r, kk));
+                accr[0] = vfmaq_f32(accr[0], xv, s0);
+                accr[1] = vfmaq_f32(accr[1], xv, s1);
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let off = (i0 + r) * nb + j0;
+            vst1q_f32(out.as_mut_ptr().add(off), accr[0]);
+            vst1q_f32(out.as_mut_ptr().add(off + 4), accr[1]);
+        }
+    }
+}
+
+/// Dispatch one full vector micro-tile for `level` (never
+/// [`SimdLevel::Scalar`] — the drivers fall back before reaching here).
+#[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+fn micro_full_simd(
+    level: SimdLevel,
+    x: &Matrix,
+    slab: &[f32],
+    out: &mut [f32],
+    nb: usize,
+    i0: usize,
+    j0: usize,
+    kb0: usize,
+    kb1: usize,
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level == Avx2Fma` only after the runtime probe
+        // succeeded; the block driver guarantees full-tile bounds (see
+        // the kernel's safety contract).
+        SimdLevel::Avx2Fma => unsafe {
+            x86::micro_full_avx2(x, slab, out, nb, i0, j0, kb0, kb1)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, for the NEON probe.
+        SimdLevel::Neon => unsafe { arm::micro_full_neon(x, slab, out, nb, i0, j0, kb0, kb1) },
+        _ => {
+            // The scalar tier never reaches the vector grid, and a
+            // cross-architecture tier cannot be probed; keep the scalar
+            // edge kernel as a defensive fallback rather than UB.
+            let mut jj = 0;
+            while jj < vector_nr(level) {
+                let w = tiled::NR.min(vector_nr(level) - jj);
+                tiled::micro_edge(x, slab, out, nb, i0, tiled::MR, j0 + jj, w, kb0, kb1);
+                jj += w;
+            }
+        }
+    }
+}
+
+/// `out[i0..i1, :] += X[i0..i1, kb0..kb1] · slab` over the lane-widened
+/// micro-tile grid: full `MR × vector_nr` tiles run the vector kernel,
+/// ragged edges run the scalar [`tiled::micro_edge`] in `≤ NR` strips.
+#[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
+fn gemm_block_simd(
+    level: SimdLevel,
+    x: &Matrix,
+    slab: &[f32],
+    out: &mut [f32],
+    nb: usize,
+    i0: usize,
+    i1: usize,
+    kb0: usize,
+    kb1: usize,
+) {
+    let nrv = vector_nr(level);
+    let mut j0 = 0;
+    while j0 < nb {
+        let nr = nrv.min(nb - j0);
+        let mut i = i0;
+        while i < i1 {
+            let mr = tiled::MR.min(i1 - i);
+            if mr == tiled::MR && nr == nrv {
+                micro_full_simd(level, x, slab, out, nb, i, j0, kb0, kb1);
+            } else {
+                // Ragged edge: scalar micro-kernel in ≤ NR-wide strips,
+                // so no vector load ever needs masking.
+                let mut jj = 0;
+                while jj < nr {
+                    let w = tiled::NR.min(nr - jj);
+                    tiled::micro_edge(x, slab, out, nb, i, mr, j0 + jj, w, kb0, kb1);
+                    jj += w;
+                }
+            }
+            i += mr;
+        }
+        j0 += nr;
+    }
+}
+
+/// Compute the `[0..m) × [n0, n1)` output block into `out` (row-major,
+/// pre-zeroed) — [`tiled`]'s block driver with the vector GEMM stage.
+#[allow(clippy::too_many_arguments)] // block driver: all args are hot scalars
+fn simd_block(
+    level: SimdLevel,
+    x: &Matrix,
+    q: &QuantizedLinear,
+    cfg: &TileConfig,
+    n0: usize,
+    n1: usize,
+    out: &mut [f32],
+    slab: &mut [f32],
+) {
+    let (m, k) = (x.rows, q.k());
+    let nb = n1 - n0;
+    let g_size = q.gidx.group_size;
+    let ordered = q.gidx.is_ordered();
+    let kc = cfg.kc_groups * g_size;
+    let slab = &mut slab[..kc.min(k) * nb];
+    let mut kb0 = 0;
+    while kb0 < k {
+        let kb1 = (kb0 + kc).min(k);
+        tiled::dequant_slab(q, ordered, kb0, kb1, n0, n1, slab);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + cfg.mc).min(m);
+            gemm_block_simd(level, x, slab, out, nb, i0, i1, kb0, kb1);
+            i0 = i1;
+        }
+        kb0 = kb1;
+    }
+}
+
+/// Vectorized fused dequant+GEMM with explicit blocking,
+/// single-threaded. Falls back to [`tiled::dequant_matmul_tiled_cfg`]
+/// when no vector tier is active (then bit-identical to the scalar
+/// backends; otherwise tolerance-bounded — see the module docs).
+pub fn dequant_matmul_simd_cfg(x: &Matrix, q: &QuantizedLinear, cfg: &TileConfig) -> Matrix {
+    let level = active_level();
+    if level == SimdLevel::Scalar {
+        return tiled::dequant_matmul_tiled_cfg(x, q, cfg);
+    }
+    cfg.validate();
+    let (m, k, n) = tiled::check_shapes(x, q);
+    let mut c = Matrix::zeros(m, n);
+    let nc = cfg.nc.min(n.max(1));
+    let mut block = vec![0.0f32; m * nc];
+    let kc = cfg.kc_groups * q.gidx.group_size;
+    let mut slab = vec![0.0f32; kc.min(k) * nc];
+    let mut n0 = 0;
+    while n0 < n {
+        let n1 = (n0 + cfg.nc).min(n);
+        let nb = n1 - n0;
+        let out = &mut block[..m * nb];
+        out.fill(0.0);
+        simd_block(level, x, q, cfg, n0, n1, out, &mut slab);
+        for i in 0..m {
+            c.row_mut(i)[n0..n1].copy_from_slice(&out[i * nb..(i + 1) * nb]);
+        }
+        n0 = n1;
+    }
+    c
+}
+
+/// Vectorized fused dequant+GEMM with explicit blocking and an explicit
+/// worker pool: disjoint NC-column tiles sharded across `pool` plus the
+/// calling thread. Bit-identical to [`dequant_matmul_simd_cfg`] at the
+/// same blocking for any pool size (each tile runs the same kernel over
+/// the same columns), so threading never widens the tolerance contract.
+pub fn dequant_matmul_simd_mt_with(
+    x: &Matrix,
+    q: &QuantizedLinear,
+    cfg: &TileConfig,
+    workers: &WorkerPool,
+) -> Matrix {
+    let level = active_level();
+    if level == SimdLevel::Scalar {
+        return tiled::dequant_matmul_tiled_mt_with(x, q, cfg, workers);
+    }
+    cfg.validate();
+    let (m, _, n) = tiled::check_shapes(x, q);
+    if n == 0 || m == 0 {
+        return Matrix::zeros(m, n);
+    }
+    let n_tasks = (n + cfg.nc - 1) / cfg.nc;
+    let blocks = Mutex::new(Vec::<(usize, Vec<f32>)>::with_capacity(n_tasks));
+    let kc = cfg.kc_groups * q.gidx.group_size;
+    workers.run(n_tasks, &|t| {
+        let n0 = t * cfg.nc;
+        let n1 = (n0 + cfg.nc).min(n);
+        let mut out = vec![0.0f32; m * (n1 - n0)];
+        // Per-task scratch, as in the tiled driver: tasks run
+        // concurrently, so the slab cannot be shared.
+        let mut slab = vec![0.0f32; kc.min(q.k()) * (n1 - n0)];
+        simd_block(level, x, q, cfg, n0, n1, &mut out, &mut slab);
+        blocks.lock().unwrap().push((t, out));
+    });
+    let mut c = Matrix::zeros(m, n);
+    for (t, out) in blocks.into_inner().unwrap() {
+        let n0 = t * cfg.nc;
+        let n1 = (n0 + cfg.nc).min(n);
+        let nb = n1 - n0;
+        for i in 0..m {
+            c.row_mut(i)[n0..n1].copy_from_slice(&out[i * nb..(i + 1) * nb]);
+        }
+    }
+    c
+}
+
+/// Vectorized fused dequant+GEMM with the default host blocking for the
+/// layer's group size, single-threaded (the `simd` backend).
+pub fn dequant_matmul_simd(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    let cfg = TileConfig::for_group_size(q.gidx.group_size);
+    dequant_matmul_simd_cfg(x, q, &cfg)
+}
+
+/// Vectorized fused dequant+GEMM on the shared [`pool::global`] worker
+/// pool (the `simd-mt` backend), blocked for the layer's group size.
+pub fn dequant_matmul_simd_mt(x: &Matrix, q: &QuantizedLinear) -> Matrix {
+    let cfg = TileConfig::for_group_size(q.gidx.group_size);
+    dequant_matmul_simd_mt_with(x, q, &cfg, pool::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::fused::dequant_matmul_naive;
+    use crate::gemm::{dequant_abs_max, simd_abs_bound};
+    use crate::quant::gptq::{quantize_gptq, GptqConfig};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::forall;
+
+    /// Serializes tests in this module: some flip [`FORCE_SCALAR_ENV`],
+    /// and the bit-equality assertions below assume the tier is stable
+    /// across the calls they compare.
+    fn env_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    fn quantize(k: usize, n: usize, g: usize, rng: &mut Xoshiro256) -> QuantizedLinear {
+        let w = Matrix::randn(k, n, rng);
+        let xc = Matrix::randn(32, k, rng);
+        let cfg = GptqConfig {
+            group_size: g,
+            act_order: true,
+            ..Default::default()
+        };
+        quantize_gptq(&w, &xc, &cfg)
+    }
+
+    fn max_abs(x: &Matrix) -> f32 {
+        x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// `|a − b| ≤ simd_abs_bound` elementwise — the documented contract.
+    fn assert_within_bound(a: &Matrix, b: &Matrix, x: &Matrix, q: &QuantizedLinear, what: &str) {
+        let bound = simd_abs_bound(q.k(), max_abs(x), dequant_abs_max(q));
+        let diff = a.max_abs_diff(b);
+        assert!(
+            diff <= bound,
+            "{what}: max abs diff {diff:e} exceeds bound {bound:e}"
+        );
+    }
+
+    #[test]
+    fn simd_matches_scalar_within_bound_both_layouts() {
+        let _g = env_lock().lock().unwrap();
+        forall("simd within bound of scalar, both layouts", 25, |rng| {
+            // Group sizes deliberately not divisible by the 16/8-lane
+            // micro-tile width (8, 16, 24 — 24 ragged on both arches).
+            let g = 8 * (1 + rng.below(3));
+            let k = g * (1 + rng.below(5));
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(6);
+            let q = quantize(k, n, g, rng);
+            let x = Matrix::randn(m, k, rng);
+            let cfg = TileConfig {
+                mc: 1 + rng.below(8),
+                kc_groups: 1 + rng.below(4),
+                nc: 1 + rng.below(40),
+            };
+            let expect = dequant_matmul_naive(&x, &q);
+            let got = dequant_matmul_simd_cfg(&x, &q, &cfg);
+            assert_within_bound(&got, &expect, &x, &q, "unordered layout");
+            let (p, q_opt) = q.reorder();
+            let xp = crate::quant::perm::apply_cols(&x, &p);
+            let expect_o = dequant_matmul_naive(&xp, &q_opt);
+            let got_o = dequant_matmul_simd_cfg(&xp, &q_opt, &cfg);
+            assert_within_bound(&got_o, &expect_o, &xp, &q_opt, "ordered layout");
+        });
+    }
+
+    #[test]
+    fn simd_mt_is_bit_identical_to_simd_st_for_all_pool_sizes() {
+        let _g = env_lock().lock().unwrap();
+        let mut rng = Xoshiro256::new(21);
+        let q = quantize(64, 50, 8, &mut rng);
+        let (_, q_opt) = q.reorder();
+        let x = Matrix::randn(5, 64, &mut rng);
+        let cfg = TileConfig {
+            mc: 3,
+            kc_groups: 2,
+            nc: 7,
+        };
+        let expect = dequant_matmul_simd_cfg(&x, &q_opt, &cfg);
+        for workers in 1..=8 {
+            let pool = WorkerPool::new(workers);
+            let got = dequant_matmul_simd_mt_with(&x, &q_opt, &cfg, &pool);
+            assert_eq!(got.rows, expect.rows);
+            assert_eq!(got.cols, expect.cols);
+            for (i, (a, b)) in got.data.iter().zip(expect.data.iter()).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "pool size {workers}: element {i} differs: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_edges_and_lane_unaligned_shapes() {
+        let _g = env_lock().lock().unwrap();
+        // N values ragged against 16 and 8 lanes, M below MR, K a single
+        // group of 24 (not a lane multiple on either arch).
+        let mut rng = Xoshiro256::new(22);
+        for n in [1usize, 7, 13, 17, 31] {
+            let q = quantize(24, n, 24, &mut rng);
+            let x = Matrix::randn(3, 24, &mut rng);
+            let expect = dequant_matmul_naive(&x, &q);
+            for cfg in [
+                TileConfig {
+                    mc: 1,
+                    kc_groups: 1,
+                    nc: 1,
+                },
+                TileConfig {
+                    mc: 100,
+                    kc_groups: 100,
+                    nc: 100,
+                },
+                TileConfig::host_default(),
+            ] {
+                let got = dequant_matmul_simd_cfg(&x, &q, &cfg);
+                assert_within_bound(&got, &expect, &x, &q, &format!("n={n} {cfg:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_agrees_with_vectorized_within_bound() {
+        let _g = env_lock().lock().unwrap();
+        let mut rng = Xoshiro256::new(23);
+        let q = quantize(64, 33, 16, &mut rng);
+        let (_, q_opt) = q.reorder();
+        let x = Matrix::randn(4, 64, &mut rng);
+        let vectorized = dequant_matmul_simd(&x, &q_opt);
+        std::env::set_var(FORCE_SCALAR_ENV, "1");
+        assert_eq!(active_level(), SimdLevel::Scalar);
+        let forced = dequant_matmul_simd(&x, &q_opt);
+        let forced_mt = dequant_matmul_simd_mt(&x, &q_opt);
+        std::env::remove_var(FORCE_SCALAR_ENV);
+        // Forced-scalar simd IS the tiled path: bit-identical to it.
+        let tiled_ref = tiled::dequant_matmul_tiled(&x, &q_opt);
+        for (i, (a, b)) in forced.data.iter().zip(tiled_ref.data.iter()).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "forced vs tiled: element {i}");
+        }
+        assert_eq!(forced_mt.max_abs_diff(&tiled_ref), 0.0);
+        // And the vectorized result agrees within the documented bound.
+        assert_within_bound(&vectorized, &forced, &x, &q_opt, "vector vs forced scalar");
+    }
+
+    #[test]
+    fn force_scalar_env_values_and_feature_labels() {
+        let _g = env_lock().lock().unwrap();
+        std::env::remove_var(FORCE_SCALAR_ENV);
+        let native = active_level();
+        assert_eq!(native, hardware_level());
+        let label = detected_features();
+        assert!(
+            ["avx2+fma", "neon", "scalar"].contains(&label),
+            "unexpected label {label}"
+        );
+        std::env::set_var(FORCE_SCALAR_ENV, "0");
+        assert_eq!(active_level(), native, "0 must not force scalar");
+        std::env::set_var(FORCE_SCALAR_ENV, "1");
+        assert_eq!(active_level(), SimdLevel::Scalar);
+        if native != SimdLevel::Scalar {
+            assert_eq!(detected_features(), "scalar(forced)");
+        }
+        std::env::remove_var(FORCE_SCALAR_ENV);
+    }
+
+    #[test]
+    fn row_shard_group_offsets_respected() {
+        // Same regression the tiled tests guard: row shards carry
+        // globally offset group ids in g_idx, which the shared slab
+        // dequant must read.
+        let _g = env_lock().lock().unwrap();
+        use crate::tp::sharding::row_shard_quant;
+        use crate::tp::topology::Topology;
+        let mut rng = Xoshiro256::new(24);
+        let q = quantize(64, 34, 8, &mut rng);
+        let (_, q_opt) = q.reorder();
+        let topo = Topology::new(4);
+        for rank in 0..4 {
+            let shard = row_shard_quant(&q_opt, topo, rank);
+            let x = Matrix::randn(4, shard.k(), &mut rng);
+            let expect = dequant_matmul_naive(&x, &shard);
+            let got = dequant_matmul_simd(&x, &shard);
+            assert_within_bound(&got, &expect, &x, &shard, &format!("rank {rank}"));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "GEMM shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut rng = Xoshiro256::new(25);
+        let q = quantize(16, 4, 8, &mut rng);
+        let x = Matrix::randn(1, 8, &mut rng);
+        dequant_matmul_simd(&x, &q);
+    }
+}

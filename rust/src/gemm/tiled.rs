@@ -36,11 +36,12 @@ use crate::quant::gptq::QuantizedLinear;
 use crate::tensor::Matrix;
 use std::sync::Mutex;
 
-/// Micro-tile rows (register accumulator height).
-const MR: usize = 4;
+/// Micro-tile rows (register accumulator height). Shared with the
+/// vectorized micro-kernel in [`crate::gemm::simd`].
+pub(crate) const MR: usize = 4;
 /// Micro-tile columns (register accumulator width — one or two SIMD
 /// vectors of f32 after vectorization).
-const NR: usize = 8;
+pub(crate) const NR: usize = 8;
 
 /// Cache-blocking parameters for the tiled kernel.
 ///
@@ -92,7 +93,7 @@ impl TileConfig {
     }
 
     /// Panics on degenerate blocking (any dimension of zero).
-    fn validate(&self) {
+    pub(crate) fn validate(&self) {
         assert!(
             self.mc >= 1 && self.kc_groups >= 1 && self.nc >= 1,
             "TileConfig dimensions must be >= 1, got {self:?}"
@@ -103,8 +104,9 @@ impl TileConfig {
 /// Dequantize the `[kb0, kb1) × [n0, n1)` slab of `q` into `slab`
 /// (row-major, `nb = n1 − n0` columns). On an ordered layout the
 /// (scale, zero) rows are fetched once per group run; otherwise per
-/// channel via `g_idx`.
-fn dequant_slab(
+/// channel via `g_idx`. Shared with [`crate::gemm::simd`], which reuses
+/// this exact dequant stage and only swaps the GEMM micro-kernel.
+pub(crate) fn dequant_slab(
     q: &QuantizedLinear,
     ordered: bool,
     kb0: usize,
@@ -186,10 +188,13 @@ fn micro_full(
 }
 
 /// Ragged-edge micro-tile (`mr ≤ MR`, `nr ≤ NR` — down to 1×1): same
-/// accumulation order as [`micro_full`], dynamic bounds.
+/// accumulation order as [`micro_full`], dynamic bounds. Also the edge
+/// kernel of [`crate::gemm::simd`] — ragged tiles never touch the
+/// vector intrinsics, so the `unsafe` loads are full-width by
+/// construction.
 #[inline]
 #[allow(clippy::too_many_arguments)] // inner-loop kernel: all args are hot scalars
-fn micro_edge(
+pub(crate) fn micro_edge(
     x: &Matrix,
     slab: &[f32],
     out: &mut [f32],
@@ -286,8 +291,9 @@ fn tiled_block(
     }
 }
 
-/// Shape checks shared by the drivers; returns `(m, k, n)`.
-fn check_shapes(x: &Matrix, q: &QuantizedLinear) -> (usize, usize, usize) {
+/// Shape checks shared by the drivers (including [`crate::gemm::simd`]);
+/// returns `(m, k, n)`.
+pub(crate) fn check_shapes(x: &Matrix, q: &QuantizedLinear) -> (usize, usize, usize) {
     assert_eq!(x.cols, q.k(), "GEMM shape mismatch");
     assert_eq!(
         q.k() % q.gidx.group_size,

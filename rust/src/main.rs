@@ -122,7 +122,9 @@ fn parse_codec(s: &str) -> Result<CodecSpec> {
 
 fn parse_gemm_backend(s: &str) -> Result<GemmBackend> {
     GemmBackend::by_name(s)
-        .ok_or_else(|| err!("gemm backend must be naive | tiled | tiled-mt, got '{s}'"))
+        .ok_or_else(|| {
+            err!("gemm backend must be naive | tiled | tiled-mt | simd | simd-mt, got '{s}'")
+        })
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
@@ -149,7 +151,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag(
             "gemm-backend",
             "tiled",
-            "host fused dequant-GEMM backend: naive | tiled | tiled-mt",
+            "host fused dequant-GEMM backend: naive | tiled | tiled-mt | simd | simd-mt",
         )
         .flag(
             "ckpt",
@@ -637,7 +639,7 @@ fn cmd_measure(args: &[String]) -> Result<()> {
         .flag(
             "gemm-backend",
             "tiled",
-            "host fused dequant-GEMM backend: naive | tiled | tiled-mt",
+            "host fused dequant-GEMM backend: naive | tiled | tiled-mt | simd | simd-mt",
         )
         .flag(
             "ckpt",

@@ -375,22 +375,27 @@ mod tests {
     }
 
     #[test]
-    fn forward_with_is_bit_identical_across_backends() {
+    fn forward_with_honors_the_backend_equivalence_contract() {
         let ckpt = gen_checkpoint(small_shape(), 9);
         let q = quantize_gptq(&ckpt.w1, &ckpt.calib, &cfg());
         let (_, qr) = q.reorder();
-        let shard = LayerShard::Quant(qr);
+        let shard = LayerShard::Quant(qr.clone());
         let mut rng = Xoshiro256::new(10);
         let x = Matrix::randn(4, 32, &mut rng);
         let base = shard.forward_with(&x, GemmBackend::Naive);
+        let x_max = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let bound =
+            crate::gemm::simd_abs_bound(qr.k(), x_max, crate::gemm::dequant_abs_max(&qr));
         for b in GemmBackend::all() {
-            assert_eq!(
-                shard.forward_with(&x, b).max_abs_diff(&base),
-                0.0,
-                "{b:?} diverged from the scalar backend"
-            );
+            let diff = shard.forward_with(&x, b).max_abs_diff(&base);
+            if b.bit_identical() {
+                assert_eq!(diff, 0.0, "{b:?} diverged from the scalar backend");
+            } else {
+                // simd tier: tolerance-bounded, never compared with ==.
+                assert!(diff <= bound, "{b:?}: {diff:e} > bound {bound:e}");
+            }
         }
-        // The default backend is one of the three, so it inherits equality.
+        // The default backend is bit-identical, so it inherits equality.
         assert_eq!(shard.forward(&x).max_abs_diff(&base), 0.0);
     }
 

@@ -72,15 +72,22 @@ pub struct CpuSpec {
     /// Cache-hierarchy bandwidth for blocked working sets, bytes/s
     /// (per worker).
     pub cache_bw: f64,
-    /// Vectorized f32 FMA throughput per worker, FLOP/s — what the
-    /// register-tiled micro-kernel sustains (accumulators live in SIMD
-    /// registers, the compiler vectorizes the NR-wide inner loop).
+    /// Vector-unit f32 FMA throughput per worker, FLOP/s — what the
+    /// lane-widened `simd` micro-kernel sustains with explicit
+    /// `_mm256_fmadd_ps`/`vfmaq_f32` intrinsics. The rate the drift
+    /// detector holds the `simd` backends to.
     pub flops: f64,
-    /// Scalar FMA throughput, FLOP/s — what the channel-major scalar
-    /// kernel sustains: every FMA round-trips its accumulator through
-    /// the cache (load-add-store chain), so it runs far below
-    /// [`CpuSpec::flops`]. This gap, not the DRAM stream, is why tiling
-    /// wins even on cache-resident shapes.
+    /// Register-tiled *scalar* kernel throughput, FLOP/s — what the
+    /// `tiled` micro-kernel sustains: accumulators live in registers and
+    /// the compiler autovectorizes the NR-wide inner loop at baseline
+    /// codegen (no AVX2/FMA), so it lands well above
+    /// [`CpuSpec::scalar_flops`] but below the explicit-FMA
+    /// [`CpuSpec::flops`] — the gap the `simd` backend exists to close.
+    pub tiled_flops: f64,
+    /// Channel-major scalar kernel throughput, FLOP/s — every FMA
+    /// round-trips its accumulator through the cache (load-add-store
+    /// chain), so it runs far below both tiled rates. This gap, not the
+    /// DRAM stream, is why tiling wins even on cache-resident shapes.
     pub scalar_flops: f64,
     /// Worker-thread count available to `tiled-mt` (the caller adds one).
     pub workers: usize,
@@ -94,6 +101,7 @@ pub const HOST_CPU: CpuSpec = CpuSpec {
     dram_bw: 16e9,
     cache_bw: 80e9,
     flops: 16e9,
+    tiled_flops: 6e9,
     scalar_flops: 2e9,
     workers: 8,
     cache_bytes: 2 << 20,
@@ -110,14 +118,17 @@ pub fn fused_weight_bytes_host(k: usize, n: usize, group_size: usize) -> f64 {
 /// Modeled latency of one fused dequant-GEMM `M×K · K×N` on the host
 /// CPU under the given backend and (for the tiled backends) blocking.
 ///
-/// The backends differ in *accumulator traffic*: the scalar kernel
-/// rescans the full `M×N` output once per input channel (`K` passes
-/// through whatever level holds it), while the tiled kernels hold an
-/// `MR×NR` register tile and revisit each output element once per
-/// K-block (`⌈K/KC⌉` passes) and each `X` element once per N-block.
-/// `tiled-mt` divides the per-worker terms by the effective parallelism
-/// `min(workers + 1, N-tiles)` — the DRAM weight stream is shared and
-/// does not scale.
+/// The backends differ in *accumulator traffic* and *issue rate*: the
+/// scalar kernel rescans the full `M×N` output once per input channel
+/// (`K` passes through whatever level holds it), while the tiled
+/// kernels hold an `MR×NR` register tile and revisit each output
+/// element once per K-block (`⌈K/KC⌉` passes) and each `X` element once
+/// per N-block. The `simd` backends share the tiled traffic shape but
+/// issue at the vector-FMA rate [`CpuSpec::flops`] instead of
+/// [`CpuSpec::tiled_flops`] — so the drift detector holds each backend
+/// to its own roofline. The `-mt` variants divide the per-worker terms
+/// by the effective parallelism `min(workers + 1, N-tiles)` — the DRAM
+/// weight stream is shared and does not scale.
 pub fn fused_gemm_cpu_s(
     spec: &CpuSpec,
     m: usize,
@@ -143,20 +154,26 @@ pub fn fused_gemm_cpu_s(
             };
             (weight_s + acc_traffic / acc_bw).max(flops / spec.scalar_flops)
         }
-        GemmBackend::Tiled | GemmBackend::TiledMt => {
+        GemmBackend::Tiled | GemmBackend::TiledMt | GemmBackend::Simd | GemmBackend::SimdMt => {
             let kc = (tile.kc_groups * group_size).max(1);
             let k_passes = (k as f64 / kc as f64).ceil();
             let n_tiles = (n as f64 / tile.nc as f64).ceil();
             // C spilled/reloaded once per K-block; X re-read per N-tile.
-            let blocked_traffic =
-                2.0 * c_bytes * k_passes + (m * k * 4) as f64 * n_tiles;
-            let p = if backend == GemmBackend::TiledMt {
+            let blocked_traffic = 2.0 * c_bytes * k_passes + (m * k * 4) as f64 * n_tiles;
+            let mt = matches!(backend, GemmBackend::TiledMt | GemmBackend::SimdMt);
+            let p = if mt {
                 ((spec.workers + 1) as f64).min(n_tiles).max(1.0)
             } else {
                 1.0
             };
-            (weight_s + blocked_traffic / spec.cache_bw / p)
-                .max(flops / (spec.flops * p))
+            // Each tier is held to its own issue rate: explicit vector
+            // FMA for `simd`, autovectorized scalar codegen for `tiled`.
+            let rate = if matches!(backend, GemmBackend::Simd | GemmBackend::SimdMt) {
+                spec.flops
+            } else {
+                spec.tiled_flops
+            };
+            (weight_s + blocked_traffic / spec.cache_bw / p).max(flops / (rate * p))
         }
     }
 }
@@ -209,11 +226,18 @@ mod tests {
         let naive = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::Naive, &tile);
         let tiled = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::Tiled, &tile);
         let mt = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::TiledMt, &tile);
+        let simd = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::Simd, &tile);
+        let simd_mt = fused_gemm_cpu_s(&HOST_CPU, m, k, n, g, GemmBackend::SimdMt, &tile);
         assert!(tiled < naive, "tiled {tiled} vs naive {naive}");
         assert!(mt < tiled, "tiled-mt {mt} vs tiled {tiled}");
+        // The vector tier prices below its scalar counterpart at equal
+        // traffic — the gap the drift detector now expects `simd` to hit.
+        assert!(simd < tiled, "simd {simd} vs tiled {tiled}");
+        assert!(simd_mt < mt, "simd-mt {simd_mt} vs tiled-mt {mt}");
         // The shared weight stream is a floor no parallelism removes.
         let floor = fused_weight_bytes_host(k, n, g) / HOST_CPU.dram_bw;
         assert!(mt >= floor);
+        assert!(simd_mt >= floor);
     }
 
     #[test]
@@ -229,6 +253,9 @@ mod tests {
         let st = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::Tiled, &tile);
         let mt = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::TiledMt, &tile);
         assert_eq!(st, mt);
+        let s_st = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::Simd, &tile);
+        let s_mt = fused_gemm_cpu_s(&HOST_CPU, 8, 256, 1024, 32, GemmBackend::SimdMt, &tile);
+        assert_eq!(s_st, s_mt);
     }
 
     #[test]

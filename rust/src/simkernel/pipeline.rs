@@ -993,7 +993,7 @@ mod tests {
             n1: 1024,
             n2: 256,
         };
-        for backend in [GemmBackend::Naive, GemmBackend::Tiled, GemmBackend::TiledMt] {
+        for backend in GemmBackend::all() {
             let naive = host_mlp_latency_s(&HOST_CPU, shape, 4, 2, Algo::Naive, 32, backend);
             let aware = host_mlp_latency_s(&HOST_CPU, shape, 4, 2, Algo::TpAware, 32, backend);
             assert!(aware > 0.0, "{backend:?}");

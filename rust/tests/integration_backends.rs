@@ -1,8 +1,12 @@
-//! System-level GEMM-backend equivalence: every backend (`naive`,
-//! `tiled`, `tiled-mt`) must produce **bit-identical** MLP outputs
-//! through the threaded TP path — and therefore identical generated
-//! token streams through the full scheduler/engine stack (the
-//! `measure --gemm-backend` / `serve --gemm-backend` contract).
+//! System-level GEMM-backend equivalence, two tiers: the scalar
+//! backends (`naive`, `tiled`, `tiled-mt`) must produce **bit-identical**
+//! MLP outputs through the threaded TP path, and the vector backends
+//! (`simd`, `simd-mt`) must agree within the tolerance contract
+//! documented in `gemm/mod.rs` (`simd_abs_bound`) — and every backend
+//! must generate identical token streams through the full
+//! scheduler/engine stack (the `measure --gemm-backend` /
+//! `serve --gemm-backend` contract: greedy argmax absorbs sub-tolerance
+//! logit perturbations).
 
 use std::sync::Arc;
 use tpaware::coordinator::engine::{EngineBackend, EngineConfig};
@@ -29,15 +33,21 @@ fn qcfg() -> GptqConfig {
 }
 
 /// The measure path (`run_mlp_with_opts`, what `measure --gemm-backend`
-/// times): exact equality across backends, every TP width, both
-/// algorithms.
+/// times): exact equality across the bit-identical tier, tolerance-
+/// bounded agreement for the simd tier, every TP width, both algorithms.
 #[test]
-fn backends_bit_identical_through_measure_path() {
+fn backends_equivalent_through_measure_path() {
     let shape = MlpShape {
         k1: 32,
         n1: 64,
         n2: 32,
     };
+    // Per-GEMM, the documented contract is `simd_abs_bound(k, …)` ≈
+    // 8·k·ε·|x|·|ŵ| ~ 1e-4 at these shapes (k ≤ 64, O(1) magnitudes).
+    // Two chained GEMMs plus a TP allreduce of per-rank partials stay
+    // comfortably under 1e-3, while a real kernel bug (wrong channel,
+    // wrong group) shows up at O(1).
+    const SIMD_MLP_TOL: f32 = 1e-3;
     let ckpt = gen_checkpoint(shape, 41);
     let mut rng = Xoshiro256::new(42);
     let x = Matrix::randn(4, 32, &mut rng);
@@ -52,7 +62,12 @@ fn backends_bit_identical_through_measure_path() {
                 &group,
                 GemmBackend::Naive,
             );
-            for b in [GemmBackend::Tiled, GemmBackend::TiledMt] {
+            for b in [
+                GemmBackend::Tiled,
+                GemmBackend::TiledMt,
+                GemmBackend::Simd,
+                GemmBackend::SimdMt,
+            ] {
                 let (y, _) = tpaware::model::mlp::run_mlp_with_opts(
                     &d,
                     &x,
@@ -60,11 +75,18 @@ fn backends_bit_identical_through_measure_path() {
                     &group,
                     b,
                 );
-                assert_eq!(
-                    y.max_abs_diff(&base),
-                    0.0,
-                    "tp={tp} {algo:?} {b:?} diverged from the scalar backend"
-                );
+                let diff = y.max_abs_diff(&base);
+                if b.bit_identical() {
+                    assert_eq!(
+                        diff, 0.0,
+                        "tp={tp} {algo:?} {b:?} diverged from the scalar backend"
+                    );
+                } else {
+                    assert!(
+                        diff <= SIMD_MLP_TOL,
+                        "tp={tp} {algo:?} {b:?}: {diff:e} > {SIMD_MLP_TOL:e}"
+                    );
+                }
             }
         }
     }
@@ -97,11 +119,15 @@ fn backends_generate_identical_tokens_through_the_engine() {
         assert_eq!(engine.gemm_backend(), backend);
         let metrics = Arc::new(Metrics::default());
         let sched = Scheduler::new(model, Some(engine), metrics.clone(), 4);
-        // The scheduler publishes the engine's backend to the metrics
-        // endpoint (what `serve` surfaces as `gemm_backend`).
-        assert_eq!(
-            metrics.to_json().get("gemm_backend").as_str(),
-            Some(backend.label())
+        // The scheduler publishes the engine's backend and the detected
+        // vector features to the metrics endpoint (what `serve` surfaces
+        // as `gemm_backend` / `cpu_features`).
+        let mj = metrics.to_json();
+        assert_eq!(mj.get("gemm_backend").as_str(), Some(backend.label()));
+        let feats = mj.get("cpu_features").as_str().unwrap_or_default();
+        assert!(
+            ["avx2+fma", "neon", "scalar", "scalar(forced)"].contains(&feats),
+            "unexpected cpu_features label {feats:?}"
         );
         let reqs: Vec<Request> = (0..3)
             .map(|i| Request::new(i as u64, vec![1 + i as u32, 5, 9], 6))

@@ -11,7 +11,15 @@ Compares one or more bench outputs against the committed requirements in
   - relative requirements: rows of `[shape, faster_backend,
     slower_backend]` in `require_faster` assert ordering between
     backends measured in the same run (robust to runner speed, the
-    sharp edge of the gate).
+    sharp edge of the gate);
+  - native-only speedups: rows of `[shape, fast_backend, slow_backend,
+    min_ratio]` in `require_speedup_native` assert `fast >= min_ratio *
+    slow`, but ONLY when the bench's `features_detected` field reports a
+    native vector tier (`avx2+fma` or `neon`). On scalar-fallback or
+    forced-scalar runners the simd backends dispatch to the tiled path
+    by design, so the ratio is meaningless there and the check prints a
+    SKIP instead (the run is still interpretable from
+    `features_detected`).
 * `BENCH_serving.json` (`cargo bench --bench serving_bench`, the
   loadgen harness driven through a live streaming server): the
   `serving_ttft` report, checked against the baseline's `serving`
@@ -49,13 +57,17 @@ import json
 import sys
 
 
+NATIVE_FEATURES = ("avx2+fma", "neon")
+
+
 def check_gemm(bench, base, failures):
     """Absolute floors + relative ordering for the GEMM backends."""
     gib = bench.get("gib_s", {})
     tol = float(base.get("tolerance_pct", 0.0))
+    features = bench.get("features_detected", "")
     print(f"bench gate (gemm): mode={bench.get('mode')} m={bench.get('m')} "
           f"layout={bench.get('layout')} pool_workers={bench.get('pool_workers')} "
-          f"tolerance={tol:.0f}%")
+          f"features={features or '?'} tolerance={tol:.0f}%")
     for shape, backends in sorted(base.get("floors_gib_s", {}).items()):
         for backend, floor in sorted(backends.items()):
             measured = gib.get(shape, {}).get(backend)
@@ -85,6 +97,27 @@ def check_gemm(bench, base, failures):
             failures.append(
                 f"{shape}: {fast} ({f_gib:.3f} GiB/s) does not beat "
                 f"{slow} ({s_gib:.3f} GiB/s)")
+
+    for shape, fast, slow, min_ratio in base.get("require_speedup_native", []):
+        if features not in NATIVE_FEATURES:
+            print(f"  SKIP {shape}: {fast} >= {min_ratio}x {slow} "
+                  f"(no native vector tier: features={features or '?'})")
+            continue
+        f_gib = gib.get(shape, {}).get(fast)
+        s_gib = gib.get(shape, {}).get(slow)
+        if f_gib is None or s_gib is None:
+            failures.append(f"{shape}: {fast} or {slow} missing from bench output")
+            continue
+        ratio = f_gib / s_gib if s_gib else float("inf")
+        ok = ratio >= float(min_ratio)
+        print(f"  {'PASS' if ok else 'FAIL'} {shape}: {fast} {f_gib:.3f} GiB/s "
+              f"vs {slow} {s_gib:.3f} GiB/s ({ratio:.2f}x, need >= {min_ratio}x "
+              f"on {features})")
+        if not ok:
+            failures.append(
+                f"{shape}: {fast} ({f_gib:.3f} GiB/s) is only {ratio:.2f}x "
+                f"{slow} ({s_gib:.3f} GiB/s), need >= {min_ratio}x with "
+                f"native features {features}")
 
 
 def check_serving(report, base, failures):
